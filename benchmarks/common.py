@@ -1,0 +1,27 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def timeit(fn, *args, warmup: int = 1, reps: int = 3) -> float:
+    """Median wall seconds (fn must block, e.g. via block_until_ready)."""
+    for _ in range(warmup):
+        fn(*args)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn(*args)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def block(x):
+    return jax.block_until_ready(x)
+
+
+def emit(name: str, seconds: float, derived: str = ""):
+    print(f"{name},{seconds * 1e6:.1f},{derived}")

@@ -1,0 +1,46 @@
+"""Paper §B.2.1 / Fig. 6: rounding ablation.
+
+Simple / Greedy / Optround(greedy+local-search), each applied to (a) raw |W|
+and (b) the entropy-regularized Dykstra solution.  Claims validated: greedy
+cuts error vs simple; local search cuts it further (~50%); rounding the
+entropy solution beats rounding |W| directly.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import dykstra_log, greedy_round, local_search, objective, simple_round
+from repro.core.exact import lp_exact
+
+PATTERNS = [(4, 8), (8, 16), (16, 32)]
+BLOCKS = 16
+
+
+def run():
+    rng = np.random.default_rng(1)
+    for n, m in PATTERNS:
+        w = np.abs(rng.normal(size=(BLOCKS, m, m))).astype(np.float32)
+        wj = jnp.asarray(w)
+        opts = np.array([lp_exact(b, n)[1] for b in w])
+        entropy = dykstra_log(wj, n, iters=300)
+
+        def err(masks):
+            vals = np.array([float(objective(masks[i], w[i])) for i in range(BLOCKS)])
+            return float(np.mean((opts - vals) / opts))
+
+        cases = {
+            "direct_simple": simple_round(wj, n),
+            "direct_greedy": greedy_round(wj, n),
+            "direct_optround": local_search(greedy_round(wj, n), wj, n, 10),
+            "entropy_simple": simple_round(entropy, n),
+            "entropy_greedy": greedy_round(entropy, n),
+            "entropy_optround": local_search(greedy_round(entropy, n), wj, n, 10),
+        }
+        for name, masks in cases.items():
+            emit(f"ablation_{n}:{m}_{name}", 0.0, f"rel_err={err(np.array(masks)):.5f}")
+
+
+if __name__ == "__main__":
+    run()

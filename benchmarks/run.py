@@ -1,0 +1,51 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.  Mapping (DESIGN.md §6):
+  solver_quality     -> Fig. 3   (rel. error vs exact across N:M)
+  rounding_ablation  -> Fig. 6   (simple/greedy/optround x direct/entropy)
+  solver_runtime     -> Tab. 1/3 (runtime scaling; CPU columns)
+  reconstruction     -> Tab. 4   (layer-wise error, std vs transposable)
+  pruning_quality    -> Tab. 2   (end-to-end one-shot pruning, miniature)
+  finetune_recovery  -> Fig. 5   (sparse fine-tuning recovery)
+  spmm_traffic       -> Fig. 4   (TPU bandwidth model + kernel check)
+"""
+from __future__ import annotations
+
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        finetune_recovery,
+        pruning_quality,
+        reconstruction,
+        rounding_ablation,
+        solver_quality,
+        solver_runtime,
+        spmm_traffic,
+    )
+
+    print("name,us_per_call,derived")
+    for mod in (
+        solver_quality,
+        rounding_ablation,
+        solver_runtime,
+        reconstruction,
+        pruning_quality,
+        finetune_recovery,
+        spmm_traffic,
+    ):
+        t0 = time.time()
+        try:
+            mod.run()
+            print(f"bench_{mod.__name__.split('.')[-1]}_wall,"
+                  f"{(time.time() - t0) * 1e6:.0f},ok")
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            print(f"bench_{mod.__name__.split('.')[-1]}_wall,"
+                  f"{(time.time() - t0) * 1e6:.0f},ERROR:{type(e).__name__}")
+
+
+if __name__ == "__main__":
+    main()

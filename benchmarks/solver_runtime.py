@@ -1,0 +1,44 @@
+"""Paper Tab. 1/3: solver runtime scaling with matrix size (CPU here; the
+GPU/TPU columns of the paper become the roofline analysis of the Pallas
+kernels in EXPERIMENTS.md §Roofline).
+
+Rows: full TSENOR (XLA path), Dykstra only, rounding only, 2-Approximation,
+Bi-NM — per matrix size, transposable 8:16.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import block, emit, timeit
+from repro.core import SolverConfig, dykstra_log, solve_blocks
+from repro.core.baselines import bi_nm, two_approx
+from repro.core.blocks import to_blocks
+from repro.core.rounding import round_blocks
+
+SIZES = [512, 1024, 2048]
+N, M = 8, 16
+
+
+def run():
+    rng = np.random.default_rng(0)
+    for size in SIZES:
+        w = np.abs(rng.normal(size=(size, size))).astype(np.float32)
+        blocks = to_blocks(jnp.asarray(w), M)
+        nblk = blocks.shape[0]
+
+        t = timeit(lambda b: block(solve_blocks(b, N, SolverConfig(iters=300))), blocks)
+        emit(f"runtime_{size}_tsenor", t, f"blocks={nblk}")
+        t = timeit(lambda b: block(dykstra_log(b, N, iters=300)), blocks)
+        emit(f"runtime_{size}_dykstra", t, f"blocks={nblk}")
+        s = dykstra_log(blocks, N, iters=300)
+        t = timeit(lambda s, b: block(round_blocks(s, b, N, 10)), s, blocks)
+        emit(f"runtime_{size}_rounding", t, f"blocks={nblk}")
+        t = timeit(lambda b: block(two_approx(b, N)), blocks)
+        emit(f"runtime_{size}_2approx", t, f"blocks={nblk}")
+        t = timeit(lambda b: block(bi_nm(b, N)), blocks)
+        emit(f"runtime_{size}_binm", t, f"blocks={nblk}")
+
+
+if __name__ == "__main__":
+    run()

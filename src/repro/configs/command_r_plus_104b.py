@@ -1,0 +1,21 @@
+"""command-r-plus-104b [dense]: 64L d12288 96H (GQA kv=8) ff33792
+vocab=256000, no biases.  256k vocab exercises the vocab-sharded loss path.
+[hf:CohereForAI/c4ai-command-r-plus; unverified]
+"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="command-r-plus-104b", family="dense",
+        num_layers=64, d_model=12288, num_heads=96, num_kv_heads=8,
+        d_ff=33792, vocab_size=256000, head_dim=128, rope_theta=75e4,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="command-r-plus-smoke", family="dense",
+        num_layers=2, d_model=96, num_heads=6, num_kv_heads=2,
+        d_ff=192, vocab_size=512, head_dim=16, remat="none", dtype="float32",
+    )

@@ -1,0 +1,20 @@
+"""llama3.2-1b [dense] — the paper\'s own eval family (Tab. 5): 16L d2048
+32H (GQA kv=8) ff8192 vocab=128256.  Used by the pruning benchmarks.
+"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama3.2-1b", family="dense",
+        num_layers=16, d_model=2048, num_heads=32, num_kv_heads=8,
+        d_ff=8192, vocab_size=128256, head_dim=64, rope_theta=5e5,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="llama3.2-1b-smoke", family="dense",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+        d_ff=128, vocab_size=512, head_dim=16, remat="none", dtype="float32",
+    )

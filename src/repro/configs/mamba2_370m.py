@@ -1,0 +1,21 @@
+"""mamba2-370m [ssm]: 48L d1024, attention-free, ssm_state=128,
+vocab=50280.  SSD (state-space duality) blocks.  [arXiv:2405.21060; unverified]
+"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-370m", family="ssm",
+        num_layers=48, d_model=1024, num_heads=0, num_kv_heads=0,
+        d_ff=0, vocab_size=50280, ssm_state=128, ssm_head_dim=64,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-370m-smoke", family="ssm",
+        num_layers=2, d_model=64, num_heads=0, num_kv_heads=0,
+        d_ff=0, vocab_size=512, ssm_state=16, ssm_head_dim=16, ssm_chunk=16,
+        remat="none", dtype="float32",
+    )

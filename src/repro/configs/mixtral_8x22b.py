@@ -1,0 +1,24 @@
+"""mixtral-8x22b [moe]: 56L d6144 48H (GQA kv=8) ff16384 vocab=32768,
+8 experts top-2, sliding-window attention.  SWA ring cache makes the
+long_500k decode cell run (DESIGN.md §4).  [arXiv:2401.04088; hf]
+"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mixtral-8x22b", family="moe",
+        num_layers=56, d_model=6144, num_heads=48, num_kv_heads=8,
+        d_ff=16384, vocab_size=32768, head_dim=128,
+        num_experts=8, top_k=2, sliding_window=4096, rope_theta=1e6,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="mixtral-smoke", family="moe",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+        d_ff=96, vocab_size=512, head_dim=16,
+        num_experts=4, top_k=2, sliding_window=16, moe_group=64,
+        remat="none", dtype="float32",
+    )

@@ -1,0 +1,22 @@
+"""musicgen-large [audio]: 48L d2048 32H (MHA kv=32) ff8192 vocab=2048,
+decoder-only over EnCodec tokens; the EnCodec frontend is a STUB
+(input_specs provides frame embeddings).  [arXiv:2306.05284; hf]
+"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-large", family="audio",
+        num_layers=48, d_model=2048, num_heads=32, num_kv_heads=32,
+        d_ff=8192, vocab_size=2048, head_dim=64, frontend="audio",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-smoke", family="audio",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+        d_ff=128, vocab_size=256, head_dim=16, frontend="audio",
+        remat="none", dtype="float32",
+    )

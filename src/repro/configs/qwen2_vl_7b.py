@@ -1,0 +1,24 @@
+"""qwen2-vl-7b [vlm]: 28L d3584 28H (GQA kv=4) ff18944 vocab=152064.
+M-RoPE (sections 16/24/24 over head_dim/2=64), dynamic-resolution vision
+frontend STUBBED (input_specs feeds patch embeddings).  [arXiv:2409.12191; hf]
+"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-7b", family="vlm",
+        num_layers=28, d_model=3584, num_heads=28, num_kv_heads=4,
+        d_ff=18944, vocab_size=152064, head_dim=128,
+        rope_theta=1e6, mrope_sections=(16, 24, 24), frontend="vision",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-7b-smoke", family="vlm",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+        d_ff=128, vocab_size=512, head_dim=16,
+        mrope_sections=(2, 3, 3), frontend="vision", remat="none",
+        dtype="float32",
+    )

@@ -1,0 +1,23 @@
+"""qwen3-moe-235b-a22b [moe]: 94L d4096 64H (GQA kv=4, head_dim 128)
+per-expert ff1536, vocab=151936, 128 experts top-8.
+[hf:Qwen/Qwen3-30B-A3B scaled per assignment; hf]
+"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-moe-235b-a22b", family="moe",
+        num_layers=94, d_model=4096, num_heads=64, num_kv_heads=4,
+        d_ff=1536, vocab_size=151936, head_dim=128,
+        num_experts=128, top_k=8, rope_theta=1e6,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-moe-smoke", family="moe",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+        d_ff=96, vocab_size=512, head_dim=16,
+        num_experts=8, top_k=2, moe_group=64, remat="none", dtype="float32",
+    )

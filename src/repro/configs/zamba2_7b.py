@@ -1,0 +1,24 @@
+"""zamba2-7b [hybrid]: 81L d3584 Mamba2 blocks (ssm_state=64) with a
+shared-weight attention+MLP block (32H MHA, ff14336) applied every 6 layers.
+vocab=32000.  [arXiv:2411.15242; unverified]
+"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-7b", family="hybrid",
+        num_layers=81, d_model=3584, num_heads=32, num_kv_heads=32,
+        d_ff=14336, vocab_size=32000, head_dim=112,
+        ssm_state=64, ssm_head_dim=64, hybrid_attn_every=6,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-7b-smoke", family="hybrid",
+        num_layers=5, d_model=64, num_heads=4, num_kv_heads=4,
+        d_ff=128, vocab_size=512, head_dim=16,
+        ssm_state=16, ssm_head_dim=16, ssm_chunk=16, hybrid_attn_every=2,
+        remat="none", dtype="float32",
+    )

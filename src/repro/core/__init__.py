@@ -1,0 +1,27 @@
+"""TSENOR core: transposable N:M mask solver (paper Sections 3.1-3.3)."""
+from repro.core.solver import (
+    SolverConfig,
+    transposable_nm_mask,
+    solve_blocks,
+    nm_mask,
+    is_transposable_nm,
+    objective,
+    relative_error,
+)
+from repro.core.dykstra import dykstra_log
+from repro.core.rounding import greedy_round, local_search, round_blocks, simple_round
+
+__all__ = [
+    "SolverConfig",
+    "transposable_nm_mask",
+    "solve_blocks",
+    "nm_mask",
+    "is_transposable_nm",
+    "objective",
+    "relative_error",
+    "dykstra_log",
+    "greedy_round",
+    "local_search",
+    "round_blocks",
+    "simple_round",
+]

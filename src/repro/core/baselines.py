@@ -1,0 +1,69 @@
+"""Baseline transposable-mask methods the paper compares against (Sec. 5.1).
+
+* 2-Approximation [Hubara et al. 2021]: greedy insertion directly on |W|.
+* Bi-NM [Zhang et al. 2023]: row-wise N:M followed by column-wise N:M.
+* MaxK ("Max1000"): best of K random feasible transposable masks.
+
+All operate on (B, M, M) block batches and return boolean masks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.rounding import _cap_counts, greedy_round
+
+
+def two_approx(w_abs_blocks: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Greedy on raw magnitudes — provably within 2x of optimal."""
+    return greedy_round(w_abs_blocks, n)
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def bi_nm(w_abs_blocks: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Row-wise N:M on W, then column-wise N:M on the row-masked W."""
+    s = jnp.asarray(w_abs_blocks, jnp.float32)
+    b, m, _ = s.shape
+    # Row-wise top-N (per block row).
+    r_rank = jnp.argsort(jnp.argsort(-s, axis=2), axis=2)
+    m1 = r_rank < n
+    masked = jnp.where(m1, s, -jnp.inf)
+    # Column-wise top-N of survivors.
+    c_rank = jnp.argsort(jnp.argsort(-masked, axis=1), axis=1)
+    m2 = c_rank < n
+    both = m1 & m2
+    return _cap_counts(both, s, n)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "k"))
+def max_k_random(
+    key: jax.Array, w_abs_blocks: jnp.ndarray, n: int, k: int = 1000
+) -> jnp.ndarray:
+    """Best of K random feasible masks (the paper's "Max1000" baseline).
+
+    A feasible transposable mask is produced by conjugating the circulant
+    base pattern C[i, j] = ((i + j) mod M < N) — which has exactly N ones per
+    row and column — with independent random row and column permutations.
+    """
+    s = jnp.asarray(w_abs_blocks, jnp.float32)
+    b, m, _ = s.shape
+    ar = jnp.arange(m)
+    base = ((ar[:, None] + ar[None, :]) % m) < n  # (M, M), row/col sums == N
+
+    def one_sample(key):
+        kr, kc = jax.random.split(key)
+        pr = jax.random.permutation(kr, m)  # row relabeling
+        pc = jax.random.permutation(kc, m)  # col relabeling
+        mask = base[pr][:, pc]
+        return mask
+
+    def best_for_block(key, w):
+        keys = jax.random.split(key, k)
+        masks = jax.vmap(one_sample)(keys)  # (K, M, M)
+        vals = jnp.einsum("kij,ij->k", masks.astype(jnp.float32), w)
+        return masks[jnp.argmax(vals)]
+
+    keys = jax.random.split(key, b)
+    return jax.vmap(best_for_block)(keys, s)

@@ -1,0 +1,52 @@
+"""Block partitioning utilities for transposable N:M sparsity.
+
+The transposable N:M constraint acts independently on each M x M block of a
+weight matrix (paper Sec. 3.1).  All solvers in this package therefore operate
+on a batched tensor of shape (B, M, M); these helpers convert between the 2-D
+weight-matrix view and the block-batch view, with zero-padding for matrices
+whose dimensions are not multiples of M.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pad_to_multiple(w: jnp.ndarray, m: int) -> tuple[jnp.ndarray, tuple[int, int]]:
+    """Zero-pad a 2-D matrix so both dims are multiples of ``m``.
+
+    Returns the padded matrix and the original (rows, cols).  Padding with
+    zeros is safe for mask search: zero-magnitude entries are never preferred
+    over real entries by any of the solvers, and the mask is cropped back.
+    """
+    r, c = w.shape
+    pr = (-r) % m
+    pc = (-c) % m
+    if pr or pc:
+        w = jnp.pad(w, ((0, pr), (0, pc)))
+    return w, (r, c)
+
+
+def to_blocks(w: jnp.ndarray, m: int) -> jnp.ndarray:
+    """(R, C) -> (B, M, M) with B = (R/M)*(C/M).  R, C must divide by M."""
+    r, c = w.shape
+    assert r % m == 0 and c % m == 0, (r, c, m)
+    return (
+        w.reshape(r // m, m, c // m, m)
+        .transpose(0, 2, 1, 3)
+        .reshape(-1, m, m)
+    )
+
+
+def from_blocks(blocks: jnp.ndarray, shape: tuple[int, int]) -> jnp.ndarray:
+    """Inverse of :func:`to_blocks`; ``shape`` is the (padded) matrix shape."""
+    r, c = shape
+    m = blocks.shape[-1]
+    return (
+        blocks.reshape(r // m, c // m, m, m)
+        .transpose(0, 2, 1, 3)
+        .reshape(r, c)
+    )
+
+
+def crop(w: jnp.ndarray, shape: tuple[int, int]) -> jnp.ndarray:
+    return w[: shape[0], : shape[1]]

@@ -1,0 +1,98 @@
+"""Entropy-regularized optimal-transport solver via Dykstra's algorithm.
+
+Implements Algorithm 1 of the paper in log-space (paper Appendix A.2) over a
+batch of M x M blocks.  Each block solves
+
+    max_S  <S, |W|> + (1/tau) H(S)
+    s.t.   S 1 = N 1,  S^T 1 = N 1,  0 <= S <= 1,
+
+which is the KL/Bregman projection of exp(tau |W|) onto the intersection of
+the row-marginal, column-marginal and capacity constraint sets.  Only the dual
+variable of the capacity constraint needs to be tracked (Appendix A.1.1).
+
+All operations are element-wise or row/column logsumexp reductions, fully
+vectorized over the block batch — this is the paper's core "tensor-based"
+design and maps directly onto the TPU VPU.  A fused Pallas kernel with the
+same semantics lives in ``repro.kernels.dykstra``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _log_normalize(log_s: jnp.ndarray, axis: int, log_n: jnp.ndarray) -> jnp.ndarray:
+    """KL projection onto {sum_axis exp(log_s) = N}, in log space."""
+    lse = jax.scipy.special.logsumexp(log_s, axis=axis, keepdims=True)
+    return log_s - lse + log_n
+
+
+@functools.partial(jax.jit, static_argnames=("n", "iters"))
+def dykstra_log(
+    w_abs: jnp.ndarray,
+    n: int,
+    iters: int = 300,
+    tau: float | jnp.ndarray = None,
+) -> jnp.ndarray:
+    """Run Dykstra's algorithm on a batch of blocks.
+
+    Args:
+      w_abs: (B, M, M) non-negative scores (|W| or importance scores).
+      n: target row/column sum N of the transposable N:M pattern.
+      iters: number of Dykstra iterations (paper default T=300).
+      tau: entropy regularization strength.  Defaults to the paper's rule
+        tau = 5 / (0.005-quantile scale): we use tau such that
+        tau * max|W| ~= 200, i.e. tau = 200 / max|W| per block — equivalent to
+        the paper's 0.005*max|W| *temperature* (their tau multiplies |W|; a
+        temperature of 0.005*max means tau = 1/(0.005*max) = 200/max).
+
+    Returns:
+      (B, M, M) fractional solution S in [0, 1] with row/col sums ~= N.
+    """
+    w_abs = jnp.asarray(w_abs, jnp.float32)
+    b, m, _ = w_abs.shape
+    if tau is None:
+        scale = jnp.max(w_abs, axis=(1, 2), keepdims=True)
+        tau = 200.0 / jnp.maximum(scale, 1e-30)
+    log_n = jnp.log(jnp.asarray(n, jnp.float32))
+
+    log_s0 = tau * w_abs
+    log_q0 = jnp.zeros_like(log_s0)
+
+    def body(_, carry):
+        log_s, log_q = carry
+        # Projection onto C1 (row sums = N) then C2 (col sums = N).
+        log_s = _log_normalize(log_s, axis=2, log_n=log_n)
+        log_s = _log_normalize(log_s, axis=1, log_n=log_n)
+        # Projection onto C3 (S <= 1) with dual update.
+        log_tmp = log_s + log_q
+        log_s = jnp.minimum(log_tmp, 0.0)
+        log_q = log_tmp - log_s
+        return log_s, log_q
+
+    log_s, _ = jax.lax.fori_loop(0, iters, body, (log_s0, log_q0))
+    return jnp.exp(log_s)
+
+
+def dykstra_reference(w_abs, n, iters=300, tau=None):
+    """Non-log-space textbook implementation (Algorithm 1 verbatim).
+
+    Used only in tests to cross-check the log-space version on well-scaled
+    inputs; overflows for large tau by design.
+    """
+    w_abs = jnp.asarray(w_abs, jnp.float32)
+    if tau is None:
+        scale = jnp.max(w_abs, axis=(1, 2), keepdims=True)
+        tau = 200.0 / jnp.maximum(scale, 1e-30)
+    s = jnp.exp(tau * w_abs)
+    q = jnp.ones_like(s)
+    for _ in range(iters):
+        s = s * (n / jnp.sum(s, axis=2, keepdims=True))
+        s = s * (n / jnp.sum(s, axis=1, keepdims=True))
+        tmp = s * q
+        s_new = jnp.minimum(tmp, 1.0)
+        q = tmp / jnp.maximum(s_new, 1e-30)
+        s = s_new
+    return s

@@ -1,0 +1,72 @@
+"""Exact oracles for the per-block transposable N:M problem.
+
+Used by tests and the solution-quality benchmark (paper Figs. 3 & 6 report
+relative error against the optimum).  Two oracles:
+
+* ``brute_force`` — exhaustive enumeration, only for M <= 4.
+* ``lp_exact`` — the LP relaxation (Eq. 3) solved with HiGHS; by the bipartite
+  matching polytope integrality (Schrijver Ch. 18) the optimal *value* of the
+  relaxation equals the integral optimum, and simplex returns a vertex, which
+  is integral.  We assert near-integrality and round.
+
+These run on CPU/numpy — they are oracles, not production paths.
+"""
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+
+
+def brute_force(w_abs: np.ndarray, n: int) -> tuple[np.ndarray, float]:
+    """Exhaustive search over row-wise N-subsets; feasible col sums filtered.
+
+    Complexity C(M, N)^M — practical only for M <= 4.
+    """
+    w = np.asarray(w_abs, np.float64)
+    m = w.shape[0]
+    assert w.shape == (m, m) and m <= 6, "brute force limited to tiny blocks"
+    row_choices = [np.array(c) for c in itertools.combinations(range(m), n)]
+    best_val, best_mask = -1.0, None
+    rows_as_masks = []
+    for c in row_choices:
+        v = np.zeros(m, bool)
+        v[c] = True
+        rows_as_masks.append(v)
+    for combo in itertools.product(range(len(rows_as_masks)), repeat=m):
+        mask = np.stack([rows_as_masks[i] for i in combo])
+        if not np.all(mask.sum(0) == n):
+            continue
+        val = float((w * mask).sum())
+        if val > best_val:
+            best_val, best_mask = val, mask
+    return best_mask, best_val
+
+
+def lp_exact(w_abs: np.ndarray, n: int) -> tuple[np.ndarray, float]:
+    """Solve the relaxation (Eq. 3) exactly with HiGHS simplex."""
+    from scipy.optimize import linprog
+
+    w = np.asarray(w_abs, np.float64)
+    m = w.shape[0]
+    # Variables S_ij flattened row-major; maximize <S, w> -> minimize -w.
+    a_eq = np.zeros((2 * m, m * m))
+    for i in range(m):
+        a_eq[i, i * m : (i + 1) * m] = 1.0  # row sums
+        a_eq[m + i, i::m] = 1.0  # col sums
+    b_eq = np.full(2 * m, float(n))
+    res = linprog(
+        -w.ravel(), A_eq=a_eq, b_eq=b_eq, bounds=(0.0, 1.0), method="highs"
+    )
+    assert res.status == 0, res.message
+    x = res.x.reshape(m, m)
+    mask = x > 0.5
+    # Vertex solutions of the transportation polytope are integral.
+    frac = np.abs(x - mask.astype(np.float64)).max()
+    assert frac < 1e-6, f"non-integral LP vertex (max frac {frac})"
+    return mask, float(-res.fun)
+
+
+def exact_block_values(w_abs_blocks: np.ndarray, n: int) -> np.ndarray:
+    """Optimal objective value per block (B,) via the LP oracle."""
+    return np.array([lp_exact(b, n)[1] for b in np.asarray(w_abs_blocks)])

@@ -1,0 +1,156 @@
+"""Rounding of fractional transport plans to feasible binary masks.
+
+Implements Algorithm 2 of the paper: greedy selection over sorted entries with
+row/column capacity counters, followed by swap-based local search (Eq. 6).
+Both phases are vectorized across the whole block batch (paper Appendix A.2):
+the greedy loop has M^2 iterations of O(B) fully-parallel work, and every
+local-search step performs one batched gather + argmax over all blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def greedy_round(scores: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Greedy selection (Algorithm 2, lines 1-6), batched over blocks.
+
+    Args:
+      scores: (B, M, M) entries to round — either the fractional Dykstra
+        solution (full TSENOR) or |W| directly (the 2-approximation baseline).
+      n: row/column capacity N.
+
+    Returns:
+      (B, M, M) boolean mask with row and column sums <= N (== N except for
+      blocks where greedy saturates prematurely; see local_search).
+    """
+    scores = jnp.asarray(scores)
+    b, m, _ = scores.shape
+    order = jnp.argsort(-scores.reshape(b, m * m), axis=1)  # (B, M^2) desc
+    bidx = jnp.arange(b)
+
+    def body(k, carry):
+        mask, rc, cc = carry
+        idx = order[:, k]
+        r, c = idx // m, idx % m
+        can = (rc[bidx, r] < n) & (cc[bidx, c] < n)
+        mask = mask.at[bidx, r, c].set(mask[bidx, r, c] | can)
+        inc = can.astype(jnp.int32)
+        rc = rc.at[bidx, r].add(inc)
+        cc = cc.at[bidx, c].add(inc)
+        return mask, rc, cc
+
+    mask0 = jnp.zeros((b, m, m), bool)
+    cnt0 = jnp.zeros((b, m), jnp.int32)
+    mask, _, _ = jax.lax.fori_loop(0, m * m, body, (mask0, cnt0, cnt0))
+    return mask
+
+
+@functools.partial(jax.jit, static_argnames=("n", "steps"))
+def local_search(
+    mask: jnp.ndarray, w_abs: jnp.ndarray, n: int, steps: int = 10
+) -> jnp.ndarray:
+    """Swap-based local search (Algorithm 2, lines 7-13), batched over blocks.
+
+    For each block with an unsaturated row i and column j, evaluates
+    Swap(i', j') = |W[i, j']| + |W[i', j]| - |W[i', j']| over all (i', j')
+    with the paper's feasibility penalties (Eq. 6), and applies the best
+    positive swap: insert (i, j') and (i', j), remove (i', j').
+
+    The three touched cells are provably distinct whenever the swap is valid,
+    so the batched scatter updates below never collide.
+    """
+    w_abs = jnp.asarray(w_abs, jnp.float32)
+    b, m, _ = mask.shape
+    bidx = jnp.arange(b)
+
+    def body(_, mask):
+        rdef = mask.sum(2) < n  # (B, M) unsaturated rows
+        cdef = mask.sum(1) < n  # (B, M) unsaturated cols
+        i = jnp.argmax(rdef, axis=1)  # first deficit row per block
+        j = jnp.argmax(cdef, axis=1)  # first deficit col per block
+        need = rdef.any(1) & cdef.any(1)
+
+        w_row_i = w_abs[bidx, i, :]  # (B, M): |W[i, j']|
+        w_col_j = w_abs[bidx, :, j]  # (B, M): |W[i', j]|
+        score = w_row_i[:, None, :] + w_col_j[:, :, None] - w_abs
+        # Eq. 6 penalties: need S[i',j']=1 (removable), S[i,j']=0, S[i',j]=0.
+        s_row_i = mask[bidx, i, :]
+        s_col_j = mask[bidx, :, j]
+        valid = mask & ~s_row_i[:, None, :] & ~s_col_j[:, :, None]
+        score = jnp.where(valid, score, -jnp.inf)
+
+        flat = score.reshape(b, m * m)
+        k = jnp.argmax(flat, axis=1)
+        smax = flat[bidx, k]
+        ip, jp = k // m, k % m
+        do = need & (smax > 0)
+
+        mask = mask.at[bidx, ip, jp].set(jnp.where(do, False, mask[bidx, ip, jp]))
+        mask = mask.at[bidx, ip, j].set(jnp.where(do, True, mask[bidx, ip, j]))
+        mask = mask.at[bidx, i, jp].set(jnp.where(do, True, mask[bidx, i, jp]))
+        return mask
+
+    return jax.lax.fori_loop(0, steps, body, mask)
+
+
+def round_blocks(
+    s_approx: jnp.ndarray,
+    w_abs: jnp.ndarray,
+    n: int,
+    ls_steps: int = 10,
+) -> jnp.ndarray:
+    """Full Algorithm 2: greedy on the fractional solution + local search.
+
+    Local search scores use the *original* magnitudes |W| (the true objective),
+    not the fractional solution.
+    """
+    mask = greedy_round(s_approx, n)
+    if ls_steps > 0:
+        mask = local_search(mask, w_abs, n, ls_steps)
+    return mask
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def simple_round(s_approx: jnp.ndarray, n: int) -> jnp.ndarray:
+    """"Simple" rounding baseline (paper §B.2.1): row-wise top-N of the
+    fractional solution, then column-wise top-N of the row-masked solution.
+    Feasible in the <=N sense only."""
+    b, m, _ = s_approx.shape
+    # Row-wise top-N.
+    row_thresh = -jnp.sort(-s_approx, axis=2)[:, :, n - 1 : n]
+    m1 = s_approx >= row_thresh
+    masked = jnp.where(m1, s_approx, -jnp.inf)
+    # Column-wise top-N of the survivors.
+    col_sorted = -jnp.sort(-masked, axis=1)
+    col_thresh = col_sorted[:, n - 1 : n, :]
+    m2 = masked >= col_thresh
+    both = m1 & m2
+    # Cap: top-N per column could tie; enforce <= N exactly via cumulative count.
+    return _cap_counts(both, s_approx, n)
+
+
+def _cap_counts(mask: jnp.ndarray, scores: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Enforce row/col sums <= n by dropping lowest-score surplus entries."""
+    b, m, _ = mask.shape
+    order = jnp.argsort(-jnp.where(mask, scores, -jnp.inf).reshape(b, m * m), axis=1)
+    bidx = jnp.arange(b)
+
+    def body(k, carry):
+        out, rc, cc = carry
+        idx = order[:, k]
+        r, c = idx // m, idx % m
+        keep = mask[bidx, r, c] & (rc[bidx, r] < n) & (cc[bidx, c] < n)
+        out = out.at[bidx, r, c].set(keep)
+        inc = keep.astype(jnp.int32)
+        rc = rc.at[bidx, r].add(inc)
+        cc = cc.at[bidx, c].add(inc)
+        return out, rc, cc
+
+    out0 = jnp.zeros_like(mask)
+    cnt0 = jnp.zeros((b, m), jnp.int32)
+    out, _, _ = jax.lax.fori_loop(0, m * m, body, (out0, cnt0, cnt0))
+    return out

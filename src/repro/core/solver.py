@@ -1,0 +1,147 @@
+"""TSENOR public API: transposable N:M mask generation for weight matrices.
+
+Pipeline (paper Fig. 1):  partition into M x M blocks -> entropy-regularized
+OT via Dykstra (Alg. 1) -> greedy + local-search rounding (Alg. 2) ->
+reassemble.  Everything is batched over blocks and jit-compiled; the Pallas
+kernel path (``use_kernel=True``) fuses the Dykstra iterations in VMEM.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blocks as blk
+from repro.core.dykstra import dykstra_log
+from repro.core.rounding import greedy_round, local_search, round_blocks, simple_round
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverConfig:
+    """Hyper-parameters of the TSENOR solver (paper defaults)."""
+
+    iters: int = 300          # Dykstra iterations T
+    ls_steps: int = 10        # local-search steps L
+    tau_scale: float = 200.0  # tau = tau_scale / max|W| per block
+    use_kernel: bool = False  # route Dykstra through the Pallas kernel
+    block_batch: int = 0      # >0: process blocks in chunks of this size
+
+
+def transposable_nm_mask(
+    w: jnp.ndarray,
+    n: int,
+    m: int,
+    config: SolverConfig = SolverConfig(),
+) -> jnp.ndarray:
+    """Compute a transposable N:M mask for a 2-D weight/score matrix.
+
+    Args:
+      w: (R, C) weights; the objective uses |w|.  R, C are zero-padded to
+        multiples of ``m`` internally and the mask is cropped back.
+      n, m: the N:M pattern; every M x M block of the mask has <= N (== N when
+        achievable) ones per row and per column, so both the mask and its
+        transpose are N:M sparse.
+      config: solver hyper-parameters.
+
+    Returns:
+      Boolean mask of the same shape as ``w``.
+    """
+    w = jnp.asarray(w)
+    w_abs = jnp.abs(w).astype(jnp.float32)
+    padded, orig = blk.pad_to_multiple(w_abs, m)
+    blocks = blk.to_blocks(padded, m)
+    mask_blocks = solve_blocks(blocks, n, config)
+    mask = blk.from_blocks(mask_blocks, padded.shape)
+    return blk.crop(mask, orig)
+
+
+def solve_blocks(
+    w_abs_blocks: jnp.ndarray, n: int, config: SolverConfig = SolverConfig()
+) -> jnp.ndarray:
+    """Solve a (B, M, M) batch of block problems; returns boolean masks."""
+    if config.block_batch and w_abs_blocks.shape[0] > config.block_batch:
+        outs = []
+        for s in range(0, w_abs_blocks.shape[0], config.block_batch):
+            outs.append(
+                _solve_blocks_jit(
+                    w_abs_blocks[s : s + config.block_batch],
+                    n,
+                    config.iters,
+                    config.ls_steps,
+                    config.tau_scale,
+                    config.use_kernel,
+                )
+            )
+        return jnp.concatenate(outs, axis=0)
+    return _solve_blocks_jit(
+        w_abs_blocks, n, config.iters, config.ls_steps, config.tau_scale, config.use_kernel
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "iters", "ls_steps", "tau_scale", "use_kernel")
+)
+def _solve_blocks_jit(w_abs_blocks, n, iters, ls_steps, tau_scale, use_kernel):
+    w_abs_blocks = jnp.asarray(w_abs_blocks, jnp.float32)
+    scale = jnp.max(w_abs_blocks, axis=(1, 2), keepdims=True)
+    tau = tau_scale / jnp.maximum(scale, 1e-30)
+    if use_kernel:
+        from repro.kernels.dykstra import ops as dykstra_ops
+
+        s_approx = dykstra_ops.dykstra(w_abs_blocks * tau, n, iters)
+    else:
+        s_approx = dykstra_log(w_abs_blocks, n, iters, tau=tau)
+    return round_blocks(s_approx, w_abs_blocks, n, ls_steps)
+
+
+# ---------------------------------------------------------------------------
+# Standard (non-transposable) N:M masks, used by the pruning baselines.
+# ---------------------------------------------------------------------------
+
+
+def nm_mask(w: jnp.ndarray, n: int, m: int, axis: int = 0) -> jnp.ndarray:
+    """Standard N:M mask: keep the top-N of every M consecutive entries along
+    ``axis`` (the reduction/input dimension of the matmul)."""
+    w_abs = jnp.abs(jnp.asarray(w))
+    if axis == 1:
+        return nm_mask(w_abs.T, n, m, axis=0).T
+    r, c = w_abs.shape
+    assert r % m == 0, (r, m)
+    g = w_abs.reshape(r // m, m, c)
+    thresh = -jnp.sort(-g, axis=1)[:, n - 1 : n, :]
+    # Tie-break: rank entries within the group and keep the first n.
+    rank = jnp.argsort(jnp.argsort(-g, axis=1), axis=1)
+    mask = (g >= thresh) & (rank < n)
+    return mask.reshape(r, c)
+
+
+# ---------------------------------------------------------------------------
+# Verification / metrics helpers.
+# ---------------------------------------------------------------------------
+
+
+def block_row_col_sums(mask: jnp.ndarray, m: int):
+    padded, _ = blk.pad_to_multiple(jnp.asarray(mask, jnp.int32), m)
+    b = blk.to_blocks(padded, m)
+    return b.sum(axis=2), b.sum(axis=1)
+
+
+def is_transposable_nm(mask: jnp.ndarray, n: int, m: int, strict: bool = False) -> bool:
+    """Check the transposable N:M property.  ``strict`` demands == N sums
+    (only meaningful when both dims divide by M)."""
+    rs, cs = block_row_col_sums(mask, m)
+    if strict:
+        return bool(jnp.all(rs == n) & jnp.all(cs == n))
+    return bool(jnp.all(rs <= n) & jnp.all(cs <= n))
+
+
+def objective(mask: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Paper objective f(S) = sum_ij S_ij |W_ij|."""
+    return jnp.sum(jnp.where(mask, jnp.abs(w), 0.0))
+
+
+def relative_error(mask: jnp.ndarray, w: jnp.ndarray, opt_value: jnp.ndarray) -> jnp.ndarray:
+    """(f(S*) - f(S)) / f(S*) as reported in paper Figs. 3 & 6."""
+    return (opt_value - objective(mask, w)) / opt_value

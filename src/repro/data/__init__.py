@@ -1,0 +1,4 @@
+"""Deterministic synthetic data pipeline (offline container: no corpora)."""
+from repro.data.synthetic import SyntheticLM, SyntheticEmbeds, calibration_batch
+
+__all__ = ["SyntheticLM", "SyntheticEmbeds", "calibration_batch"]

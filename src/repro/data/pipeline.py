@@ -1,0 +1,68 @@
+"""Host-side input pipeline: background prefetch + device placement.
+
+Wraps any ``batch(step)`` source (SyntheticLM/SyntheticEmbeds or a real
+corpus reader with the same contract) with a prefetch thread and sharded
+``jax.device_put``.  State is just the step counter — checkpoint/resume needs
+no iterator files (the source is a pure function of the step).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+class Prefetcher:
+    def __init__(
+        self,
+        source: Any,
+        start_step: int = 0,
+        prefetch: int = 2,
+        shardings: Optional[dict] = None,
+    ):
+        self.source = source
+        self.shardings = shardings
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._step = start_step
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._fill, daemon=True)
+        self._thread.start()
+
+    def _place(self, batch: dict) -> dict:
+        out = {}
+        for k, v in batch.items():
+            sh = (self.shardings or {}).get(k)
+            out[k] = jax.device_put(v, sh) if sh is not None else jax.numpy.asarray(v)
+        return out
+
+    def _fill(self):
+        step = self._step
+        while not self._stop.is_set():
+            batch = self.source.batch(step)
+            self._q.put((step, batch))
+            step += 1
+
+    def batch(self, step: int) -> dict:
+        """TrainLoop-compatible: returns the batch for ``step`` (prefetched
+        when consumed sequentially; falls back to direct compute on skips)."""
+        while True:
+            try:
+                s, b = self._q.get(timeout=60)
+            except queue.Empty:  # producer died
+                return self._place(self.source.batch(step))
+            if s == step:
+                return self._place(b)
+            if s > step:  # resumed backwards: compute directly
+                return self._place(self.source.batch(step))
+            # s < step: drain stale entries
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass

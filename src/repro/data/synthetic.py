@@ -1,0 +1,81 @@
+"""Deterministic synthetic token/embedding streams.
+
+Every batch is a pure function of (seed, step) via a splitmix64-style hash,
+so the pipeline is: (1) resumable from a checkpointed step counter alone —
+no iterator state files; (2) identical across hosts — each data shard slices
+the same global batch, which is what a multi-host input pipeline must
+guarantee; (3) cheap enough to never bottleneck the CPU container.
+
+The token stream is *learnable* (a noisy Markov chain over the vocab), so a
+few hundred training steps show a clearly decreasing loss — used by the
+end-to-end example and the fine-tuning benchmark.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def _splitmix64(x: np.ndarray) -> np.ndarray:
+    x = (x + np.uint64(0x9E3779B97F4A7C15)).astype(np.uint64)
+    z = x
+    z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    return z ^ (z >> np.uint64(31))
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    """Noisy-Markov synthetic LM data: batch(step) -> tokens/labels."""
+
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    order: int = 3          # next token depends on previous via affine map
+    noise: int = 7          # 1-in-noise tokens are uniform random
+
+    def batch(self, step: int) -> dict:
+        b, s, v = self.global_batch, self.seq_len + 1, self.vocab_size
+        idx = np.arange(b, dtype=np.uint64) + np.uint64(step) * np.uint64(b)
+        seeds = _splitmix64(idx ^ np.uint64(self.seed * 0x9E3779B9))
+        toks = np.zeros((b, s), np.int64)
+        toks[:, 0] = (seeds % np.uint64(v)).astype(np.int64)
+        state = seeds
+        for t in range(1, s):
+            state = _splitmix64(state)
+            markov = (toks[:, t - 1] * self.order + 1) % v
+            rnd = (state % np.uint64(v)).astype(np.int64)
+            use_rnd = (state >> np.uint64(32)) % np.uint64(self.noise) == 0
+            toks[:, t] = np.where(use_rnd, rnd, markov)
+        return {
+            "tokens": toks[:, :-1].astype(np.int32),
+            "labels": toks[:, 1:].astype(np.int32),
+        }
+
+
+@dataclasses.dataclass
+class SyntheticEmbeds:
+    """Stub modality frontend (vlm/audio): precomputed frame/patch embeds."""
+
+    d_model: int
+    seq_len: int
+    global_batch: int
+    vocab_size: int
+    seed: int = 0
+
+    def batch(self, step: int) -> dict:
+        b, s, d = self.global_batch, self.seq_len, self.d_model
+        rng = np.random.default_rng(self.seed * 1_000_003 + step)
+        embeds = rng.standard_normal((b, s, d), np.float32) * 0.02
+        labels = rng.integers(0, self.vocab_size, (b, s)).astype(np.int32)
+        return {"embeds": embeds, "labels": labels}
+
+
+def calibration_batch(
+    vocab_size: int, seq_len: int, batch: int, seed: int = 0
+) -> np.ndarray:
+    """Token batch for layer-wise pruning calibration."""
+    data = SyntheticLM(vocab_size, seq_len, batch, seed=seed)
+    return data.batch(0)["tokens"]

@@ -1,0 +1,18 @@
+"""Distribution substrate: meshes, sharding rules, gradient compression."""
+from repro.distributed.sharding import (
+    MeshRules,
+    current_mesh,
+    set_mesh,
+    shard,
+    named_sharding,
+    logical_to_spec,
+)
+
+__all__ = [
+    "MeshRules",
+    "current_mesh",
+    "set_mesh",
+    "shard",
+    "named_sharding",
+    "logical_to_spec",
+]

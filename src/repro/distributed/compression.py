@@ -1,0 +1,50 @@
+"""Int8 gradient compression with error feedback for cross-pod reduction.
+
+On a multi-pod mesh the "pod" axis rides the slowest links (DCN / inter-pod
+ICI), so the cross-pod gradient all-reduce dominates collective time for pure
+data parallelism across pods.  We shard_map the train step with *manual*
+"pod" axis (data/model stay auto/GSPMD) and replace the pod all-reduce with:
+
+    1. pmax of the per-tensor scale        (scalar — free)
+    2. all_gather of int8 quantized grads  (1 byte/elem vs 4)
+    3. local f32 sum + dequantize
+
+Error feedback [Seide'14/Karimireddy'19]: the quantization residual is added
+to the next step's gradient, keeping the compressed SGD unbiased in the long
+run — the residual buffer lives in the train state and inherits param
+sharding.  Traffic drops 4x vs f32 all-reduce (per-link accounting in
+EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compressed_psum(grads, ef, axis_name: str):
+    """Quantized all-reduce over ``axis_name`` with error feedback.
+
+    grads/ef: pytrees (ef may be None -> no feedback).  Returns
+    (reduced grads in f32-of-param-dtype, new ef residuals).
+    """
+    n = jax.lax.axis_size(axis_name)
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32)
+        if e is not None:
+            g32 = g32 + e.astype(jnp.float32)
+        scale = jnp.max(jnp.abs(g32)) / 127.0 + 1e-30
+        scale = jax.lax.pmax(scale, axis_name)
+        q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+        resid = g32 - q.astype(jnp.float32) * scale
+        gathered = jax.lax.all_gather(q, axis_name)  # (n, ...) int8 payload
+        total = jnp.sum(gathered.astype(jnp.float32), axis=0) * scale
+        return (total / n).astype(g.dtype), resid.astype(g.dtype)
+
+    flat_g, tree = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(ef) if ef is not None else [None] * len(flat_g)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (
+        jax.tree.unflatten(tree, [o[0] for o in outs]),
+        jax.tree.unflatten(tree, [o[1] for o in outs]),
+    )

@@ -1,0 +1,157 @@
+"""Logical-axis sharding rules (MaxText-style) and mesh plumbing.
+
+Parameters and activations are annotated with *logical* axis names; a
+``MeshRules`` table maps them to physical mesh axes.  The defaults implement
+FSDP("data") x TP("model") with an optional outer "pod" data axis:
+
+  * weight matrices  (in=embed, out=mlp/heads/vocab) -> ("data", "model")
+  * expert tensors   (experts, embed, ff)            -> ("model", "data", None)
+  * activations      (batch, seq, embed)             -> (("pod","data"), None, None)
+
+``shard(x, *logical)`` applies a sharding constraint when a mesh is active
+and is a no-op otherwise, so model code is identical on 1 CPU device and on a
+512-chip mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+DEFAULT_RULES = {
+    # Parameter logical axes.
+    "embed": "data",       # FSDP shard of the model dimension
+    "mlp": "model",        # TP shard of hidden/ff
+    "heads": "model",      # TP shard of attention heads
+    "kv_heads": "model",
+    "vocab": "model",      # TP shard of embedding/unembedding vocab
+    "experts": "model",    # expert parallelism
+    "expert_in": "data",   # FSDP of per-expert matrices
+    "layers": None,        # scan-stacked layer axis is replicated
+    "conv": None,
+    "stats": None,
+    # Activation logical axes.
+    "act_batch": ("pod", "data"),
+    "act_seq": None,
+    "act_embed": None,
+    "act_heads": "model",
+    "act_vocab": "model",
+    "act_exp": "model",
+    "act_kv": None,
+    # Sequence parallelism for attention internals when head counts don't
+    # divide the TP axis (phi3: 40 heads, qwen2-vl: 28, mixtral: 48, ...).
+    "act_attn_seq": "model",
+}
+
+
+def model_axis_size(mesh: Optional[Mesh]) -> int:
+    if mesh is None:
+        return 1
+    sizes = dict(mesh.shape)
+    return sizes.get("model", 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    rules: dict
+
+    def spec(self, *logical: Optional[str]) -> P:
+        out = []
+        for name in logical:
+            if name is None:
+                out.append(None)
+            else:
+                axis = self.rules.get(name, None)
+                out.append(axis)
+        return P(*out)
+
+
+def default_rules(mesh: Optional[Mesh]) -> MeshRules:
+    rules = dict(DEFAULT_RULES)
+    if mesh is not None:
+        names = set(mesh.axis_names)
+        # Drop references to mesh axes that don't exist (e.g. no "pod").
+        def fix(v):
+            if isinstance(v, tuple):
+                vv = tuple(a for a in v if a in names)
+                return vv if vv else None
+            return v if v in names else None
+
+        rules = {k: fix(v) for k, v in rules.items()}
+    return MeshRules(rules)
+
+
+def set_mesh(mesh: Optional[Mesh], rules: Optional[MeshRules] = None):
+    _state.mesh = mesh
+    _state.rules = rules or default_rules(mesh)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def current_rules() -> MeshRules:
+    r = getattr(_state, "rules", None)
+    return r if r is not None else default_rules(None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: Optional[MeshRules] = None):
+    prev_m, prev_r = current_mesh(), getattr(_state, "rules", None)
+    set_mesh(mesh, rules)
+    try:
+        yield
+    finally:
+        _state.mesh = prev_m
+        _state.rules = prev_r
+
+
+def logical_to_spec(*logical: Optional[str]) -> P:
+    return current_rules().spec(*logical)
+
+
+def named_sharding(*logical: Optional[str]) -> Optional[NamedSharding]:
+    mesh = current_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, logical_to_spec(*logical))
+
+
+def _fit_spec_to_shape(spec: P, shape: tuple, mesh: Mesh) -> P:
+    """Drop mesh axes that don't divide the corresponding dim (e.g. 40 heads
+    on a 16-wide model axis).  Dropped dims become UNCONSTRAINED — a None
+    would *force replication* across the axis, which measured 3-6x extra
+    HBM traffic on phi3/qwen2-vl/llama3.2-3b whose head counts don't divide
+    16 (EXPERIMENTS.md §Perf iteration 1)."""
+    sizes = dict(mesh.shape)
+    out = []
+    for dim, s in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if s is None:
+            out.append(None)
+            continue
+        axes = s if isinstance(s, tuple) else (s,)
+        axes = tuple(a for a in axes if a in sizes)
+        total = 1
+        for a in axes:
+            total *= sizes[a]
+        if axes and total and dim % total == 0:
+            out.append(axes if len(axes) > 1 else axes[0])
+        else:
+            out.append(P.UNCONSTRAINED)
+    return P(*out)
+
+
+def shard(x, *logical: Optional[str]):
+    """Apply a sharding constraint if a mesh is active; else identity."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = _fit_spec_to_shape(logical_to_spec(*logical), x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

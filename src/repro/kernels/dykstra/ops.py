@@ -1,0 +1,15 @@
+"""Public jit'd wrapper for the fused Dykstra kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.dykstra.kernel import dykstra_pallas
+
+
+def dykstra(tlw: jnp.ndarray, n: int, iters: int = 300, **kw) -> jnp.ndarray:
+    """Solve the entropy-regularized OT relaxation for a block batch.
+
+    ``tlw`` must already be scaled by the regularization strength
+    (tau * |W|); see ``repro.core.solver`` for the tau rule.
+    """
+    return dykstra_pallas(tlw, n, iters, **kw)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the fused Dykstra kernel (identical math, no Pallas)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("n", "iters"))
+def dykstra_ref(tlw: jnp.ndarray, n: int, iters: int = 300) -> jnp.ndarray:
+    """(B, M, M) pre-scaled log scores -> fractional plan, log-space Dykstra."""
+    x = jnp.asarray(tlw, jnp.float32)
+    log_n = jnp.log(jnp.float32(n))
+
+    def lse(v, axis):
+        return jax.scipy.special.logsumexp(v, axis=axis, keepdims=True)
+
+    def body(_, carry):
+        s, q = carry
+        s = s - lse(s, 2) + log_n
+        s = s - lse(s, 1) + log_n
+        tmp = s + q
+        s = jnp.minimum(tmp, 0.0)
+        q = tmp - s
+        return s, q
+
+    s, _ = jax.lax.fori_loop(0, iters, body, (x, jnp.zeros_like(x)))
+    return jnp.exp(s)

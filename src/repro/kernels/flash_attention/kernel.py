@@ -1,0 +1,302 @@
+"""Fused flash attention kernel for TPU (beyond-paper optimization).
+
+Motivation (EXPERIMENTS.md §Perf): the XLA chunked-scan attention materializes
+every (Q, KV-chunk) score tile in HBM — at prefill_32k that's
+B·H·S² · 4 bytes of score traffic, 10-100x the K/V/Q/O traffic, making every
+prefill cell memory-bound.  This kernel keeps the running max / denominator /
+accumulator in VMEM scratch across KV-grid steps, so HBM traffic collapses to
+Q + K + V + O.
+
+Grid: (batch*kv_heads, q_tiles, kv_tiles) — kv innermost so the scratch
+carries (m, l, acc) for one q-tile across its kv sweep; the output tile is
+emitted at the last kv step.  Causal masking is applied per-tile from absolute
+positions; GQA is handled by blocking q as (group, q_tile) per kv head.
+
+Tiles default to (q, kv) = (256, 256): VMEM live set ~= q-tile + k/v tiles +
+scores tile + acc ~= 1.5 MB at bf16 — room for double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import default_interpret
+
+NEG_INF = -1e30
+
+
+def _tile_scores(q, k, qi, ki, q_tile, kv_tile, scale, causal, window):
+    sc = jax.lax.dot_general(
+        q.astype(jnp.float32) * scale, k.astype(jnp.float32),
+        (((2,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (G, qt, kt)
+    if causal:
+        q_pos = qi * q_tile + jax.lax.broadcasted_iota(jnp.int32, sc.shape, 1)
+        k_pos = ki * kv_tile + jax.lax.broadcasted_iota(jnp.int32, sc.shape, 2)
+        ok = q_pos >= k_pos
+        if window:
+            ok &= (q_pos - k_pos) < window
+        sc = jnp.where(ok, sc, NEG_INF)
+    return sc
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                  m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, q_tile: int, kv_tile: int,
+                  window: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]  # (G, qt, hd)
+    k = k_ref[0]  # (kt, hd)
+    v = v_ref[0]  # (kt, hd)
+    sc = _tile_scores(q, k, qi, ki, q_tile, kv_tile, scale, causal, window)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, sc.max(axis=-1))
+    p = jnp.exp(sc - m_new[..., None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_prev * corr + p.sum(axis=-1)
+    m_scr[...] = m_new
+    acc_scr[...] = acc_scr[...] * corr[..., None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(ki == nk - 1)
+    def _emit():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom[..., None]).astype(o_ref.dtype)
+        m_ref[0] = m_scr[...]
+        l_ref[0] = denom
+
+
+def _flash_fwd_impl(q, k, v, causal, window, q_tile, kv_tile, interpret):
+    bkv, g, s, hd = q.shape
+    q_tile = min(q_tile, s)
+    kv_tile = min(kv_tile, s)
+    assert s % q_tile == 0 and s % kv_tile == 0, (s, q_tile, kv_tile)
+    grid = (bkv, s // q_tile, s // kv_tile)
+    scale = hd**-0.5
+    return pl.pallas_call(
+        functools.partial(
+            _flash_kernel, scale=scale, causal=causal, q_tile=q_tile,
+            kv_tile=kv_tile, window=window,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, g, q_tile, hd), lambda b, i, j: (b, 0, i, 0)),
+            pl.BlockSpec((1, kv_tile, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, kv_tile, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, g, q_tile, hd), lambda b, i, j: (b, 0, i, 0)),
+            pl.BlockSpec((1, g, q_tile), lambda b, i, j: (b, 0, i)),
+            pl.BlockSpec((1, g, q_tile), lambda b, i, j: (b, 0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bkv, g, s, hd), q.dtype),
+            jax.ShapeDtypeStruct((bkv, g, s), jnp.float32),  # row max m
+            jax.ShapeDtypeStruct((bkv, g, s), jnp.float32),  # denominator l
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, q_tile), jnp.float32),
+            pltpu.VMEM((g, q_tile), jnp.float32),
+            pltpu.VMEM((g, q_tile, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels: recompute score tiles in VMEM (never materialize S^2).
+# The XLA autodiff of the online-softmax scan stacks every (q, kv-chunk)
+# linearization residual in HBM — measured as the dominant train-cell traffic
+# (EXPERIMENTS.md §Perf) — whereas these kernels re-derive p from (m, l) per
+# tile and keep it in VMEM.
+# ---------------------------------------------------------------------------
+
+
+def _flash_bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, m_ref, l_ref, d_ref,
+                         dq_ref, dq_scr, *, scale, causal, q_tile, kv_tile,
+                         window):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        dq_scr[...] = jnp.zeros_like(dq_scr)
+
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    sc = _tile_scores(q, k, qi, ki, q_tile, kv_tile, scale, causal, window)
+    p = jnp.exp(sc - m_ref[0][..., None]) / jnp.maximum(
+        l_ref[0], 1e-30
+    )[..., None]  # (G, qt, kt)
+    dp = jax.lax.dot_general(
+        do_ref[0].astype(jnp.float32), v.astype(jnp.float32),
+        (((2,), (1,)), ((), ())), preferred_element_type=jnp.float32,
+    )
+    ds = p * (dp - d_ref[0][..., None]) * scale
+    dq_scr[...] += jax.lax.dot_general(
+        ds, k.astype(jnp.float32), (((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(ki == nk - 1)
+    def _emit():
+        dq_ref[0] = dq_scr[...].astype(dq_ref.dtype)
+
+
+def _flash_bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, m_ref, l_ref, d_ref,
+                          dk_ref, dv_ref, dk_scr, dv_scr, *, scale, causal,
+                          q_tile, kv_tile, window):
+    ki = pl.program_id(1)
+    qi = pl.program_id(2)
+    nq = pl.num_programs(2)
+
+    @pl.when(qi == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    do = do_ref[0].astype(jnp.float32)
+    sc = _tile_scores(q, k, qi, ki, q_tile, kv_tile, scale, causal, window)
+    p = jnp.exp(sc - m_ref[0][..., None]) / jnp.maximum(
+        l_ref[0], 1e-30
+    )[..., None]  # (G, qt, kt)
+    # dv += sum_g p^T do
+    dv_scr[...] += jax.lax.dot_general(
+        p, do, (((0, 1), (0, 1)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    dp = jax.lax.dot_general(
+        do, v.astype(jnp.float32), (((2,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    ds = p * (dp - d_ref[0][..., None]) * scale
+    dk_scr[...] += jax.lax.dot_general(
+        ds, q.astype(jnp.float32), (((0, 1), (0, 1)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(qi == nq - 1)
+    def _emit():
+        dk_ref[0] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_scr[...].astype(dv_ref.dtype)
+
+
+def _flash_bwd_impl(res, dout, causal, window, q_tile, kv_tile, interpret):
+    q, k, v, o, m, l = res
+    bkv, g, s, hd = q.shape
+    q_tile = min(q_tile, s)
+    kv_tile = min(kv_tile, s)
+    scale = hd**-0.5
+    delta = jnp.sum(
+        dout.astype(jnp.float32) * o.astype(jnp.float32), axis=-1
+    )  # (BKV, G, S)
+
+    dq = pl.pallas_call(
+        functools.partial(
+            _flash_bwd_dq_kernel, scale=scale, causal=causal, q_tile=q_tile,
+            kv_tile=kv_tile, window=window,
+        ),
+        grid=(bkv, s // q_tile, s // kv_tile),
+        in_specs=[
+            pl.BlockSpec((1, g, q_tile, hd), lambda b, i, j: (b, 0, i, 0)),
+            pl.BlockSpec((1, kv_tile, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, kv_tile, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, g, q_tile, hd), lambda b, i, j: (b, 0, i, 0)),
+            pl.BlockSpec((1, g, q_tile), lambda b, i, j: (b, 0, i)),
+            pl.BlockSpec((1, g, q_tile), lambda b, i, j: (b, 0, i)),
+            pl.BlockSpec((1, g, q_tile), lambda b, i, j: (b, 0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, g, q_tile, hd), lambda b, i, j: (b, 0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bkv, g, s, hd), q.dtype),
+        scratch_shapes=[pltpu.VMEM((g, q_tile, hd), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, dout, m, l, delta)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(
+            _flash_bwd_dkv_kernel, scale=scale, causal=causal, q_tile=q_tile,
+            kv_tile=kv_tile, window=window,
+        ),
+        grid=(bkv, s // kv_tile, s // q_tile),
+        in_specs=[
+            pl.BlockSpec((1, g, q_tile, hd), lambda b, j, i: (b, 0, i, 0)),
+            pl.BlockSpec((1, kv_tile, hd), lambda b, j, i: (b, j, 0)),
+            pl.BlockSpec((1, kv_tile, hd), lambda b, j, i: (b, j, 0)),
+            pl.BlockSpec((1, g, q_tile, hd), lambda b, j, i: (b, 0, i, 0)),
+            pl.BlockSpec((1, g, q_tile), lambda b, j, i: (b, 0, i)),
+            pl.BlockSpec((1, g, q_tile), lambda b, j, i: (b, 0, i)),
+            pl.BlockSpec((1, g, q_tile), lambda b, j, i: (b, 0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, kv_tile, hd), lambda b, j, i: (b, j, 0)),
+            pl.BlockSpec((1, kv_tile, hd), lambda b, j, i: (b, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bkv, s, hd), k.dtype),
+            jax.ShapeDtypeStruct((bkv, s, hd), v.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((kv_tile, hd), jnp.float32),
+            pltpu.VMEM((kv_tile, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, dout, m, l, delta)
+    return dq, dk, dv
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7)
+)
+def flash_attention_pallas(
+    q: jnp.ndarray,  # (BKV, G, S, hd)  — batch*kv_heads, q-groups per kv head
+    k: jnp.ndarray,  # (BKV, S, hd)
+    v: jnp.ndarray,  # (BKV, S, hd)
+    causal: bool = True,
+    window: int = 0,
+    q_tile: int = 256,
+    kv_tile: int = 256,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    if interpret is None:
+        interpret = default_interpret()
+    o, _, _ = _flash_fwd_impl(q, k, v, causal, window, q_tile, kv_tile, interpret)
+    return o
+
+
+def _fa_fwd(q, k, v, causal, window, q_tile, kv_tile, interpret):
+    if interpret is None:
+        interpret = default_interpret()
+    o, m, l = _flash_fwd_impl(q, k, v, causal, window, q_tile, kv_tile, interpret)
+    return o, (q, k, v, o, m, l)
+
+
+def _fa_bwd(causal, window, q_tile, kv_tile, interpret, res, dout):
+    if interpret is None:
+        interpret = default_interpret()
+    return _flash_bwd_impl(res, dout, causal, window, q_tile, kv_tile, interpret)
+
+
+flash_attention_pallas.defvjp(_fa_fwd, _fa_bwd)

@@ -1,0 +1,22 @@
+"""Model-facing wrapper: (B, S, KV, G, hd) layout -> fused flash attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+def flash_attention(
+    qg: jnp.ndarray,  # (B, S, KV, G, hd) — as used by repro.models.attention
+    k: jnp.ndarray,   # (B, S, KV, hd)
+    v: jnp.ndarray,   # (B, S, KV, hd)
+    causal: bool = True,
+    window: int = 0,
+    **kw,
+) -> jnp.ndarray:
+    b, s, kv, g, hd = qg.shape
+    qk = qg.transpose(0, 2, 3, 1, 4).reshape(b * kv, g, s, hd)
+    kk = k.transpose(0, 2, 1, 3).reshape(b * kv, s, hd)
+    vk = v.transpose(0, 2, 1, 3).reshape(b * kv, s, hd)
+    out = flash_attention_pallas(qk, kk, vk, causal=causal, window=window, **kw)
+    return out.reshape(b, kv, g, s, hd).transpose(0, 3, 1, 2, 4)

@@ -1,0 +1,30 @@
+"""Naive-softmax oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,  # (BKV, G, S, hd)
+    k: jnp.ndarray,  # (BKV, S, hd)
+    v: jnp.ndarray,  # (BKV, S, hd)
+    causal: bool = True,
+    window: int = 0,
+) -> jnp.ndarray:
+    bkv, g, s, hd = q.shape
+    sc = jnp.einsum(
+        "bgqh,bkh->bgqk", q.astype(jnp.float32) * hd**-0.5,
+        k.astype(jnp.float32),
+    )
+    if causal:
+        qp = jnp.arange(s)[:, None]
+        kp = jnp.arange(s)[None, :]
+        ok = qp >= kp
+        if window:
+            ok &= (qp - kp) < window
+        sc = jnp.where(ok[None, None], sc, NEG_INF)
+    w = jax.nn.softmax(sc, axis=-1)
+    return jnp.einsum("bgqk,bkh->bgqh", w, v.astype(jnp.float32)).astype(q.dtype)

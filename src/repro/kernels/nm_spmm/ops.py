@@ -1,0 +1,47 @@
+"""Public wrapper for the compressed N:M matmul: custom-VJP sparse linear op.
+
+``nm_linear`` is the layer-level entry point used by sparse fine-tuning: the
+forward pass computes X·W from the compressed buffer, and the backward pass
+computes dX = dY·Wᵀ from the *same* buffer (transposable masks make the
+transposed view N:M too).  dW is returned densely against the mask support —
+weight gradients are only needed at mask positions.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.nm_spmm.kernel import nm_spmm_pallas
+
+
+def nm_spmm(x, vals, idx, m, transpose=False, **kw):
+    return nm_spmm_pallas(x, vals, idx, m, transpose=transpose, **kw)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def nm_linear(x, vals, idx, m):
+    """y = x @ decompress(vals, idx); differentiable in x and vals."""
+    return nm_spmm_pallas(x, vals, idx, m).astype(x.dtype)
+
+
+def _fwd(x, vals, idx, m):
+    y = nm_spmm_pallas(x, vals, idx, m).astype(x.dtype)
+    return y, (x, vals, idx)
+
+
+def _bwd(m, res, dy):
+    x, vals, idx = res
+    # dX via the SAME compressed buffer — the transposable-mask payoff.
+    dx = nm_spmm_pallas(dy, vals, idx, m, transpose=True).astype(x.dtype)
+    # dVals: gradient of each stored value = <x[:, k], dy[:, f]> at its
+    # (k, f) position; gather from the dense dW restricted to the support.
+    dw = (x.astype(jnp.float32).T @ dy.astype(jnp.float32))  # (K, F)
+    g, n, f = vals.shape
+    dwg = dw.reshape(g, m, f)
+    dvals = jnp.take_along_axis(dwg, idx.astype(jnp.int32), axis=1).astype(vals.dtype)
+    return dx, dvals, None
+
+
+nm_linear.defvjp(_fwd, _bwd)

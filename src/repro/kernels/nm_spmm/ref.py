@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the compressed N:M matmul kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.sparsity.compressed import compress_nm, decompress_nm  # re-export
+__all__ = ["compress_nm", "decompress_nm", "nm_spmm_ref"]
+
+
+def nm_spmm_ref(
+    x: jnp.ndarray,
+    vals: jnp.ndarray,
+    idx: jnp.ndarray,
+    m: int,
+    transpose: bool = False,
+) -> jnp.ndarray:
+    """Decompress to dense and matmul in float32 (the correctness oracle)."""
+    w = decompress_nm(vals, idx, m).astype(jnp.float32)  # (K, F)
+    x = x.astype(jnp.float32)
+    return x @ (w.T if transpose else w)

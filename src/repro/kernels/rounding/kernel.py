@@ -1,0 +1,78 @@
+"""Greedy-selection rounding kernel (paper Algorithm 2, lines 1-6) for TPU.
+
+Split of labor: XLA performs the descending ``argsort`` of the M² block
+entries (sorts belong in XLA on TPU), and this kernel runs the *sequential*
+counter loop fused in VMEM: M² steps, each a fully-vectorized one-hot
+capacity check/update across the block tile on the VPU.  The GPU version
+pays a scatter per step into HBM-resident counters; here counters and the
+mask tile never leave VMEM.
+
+The per-step one-hot outer product makes each step O(M²) VPU work per block
+(vs O(1) scatter work in the XLA path) — the win is zero HBM round-trips and
+no per-step kernel dispatch; see EXPERIMENTS.md §Perf for the accounting.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import default_interpret
+
+
+def _greedy_kernel(order_ref, out_ref, *, n: int, m: int):
+    order = order_ref[...]  # (bt, m*m) int32, descending-score order
+    bt = order.shape[0]
+    rows = order // m
+    cols = order % m
+    iota_m = jax.lax.broadcasted_iota(jnp.int32, (bt, m), 1)
+
+    def body(k, carry):
+        mask, rc, cc = carry
+        r = jax.lax.dynamic_slice_in_dim(rows, k, 1, axis=1)  # (bt, 1)
+        c = jax.lax.dynamic_slice_in_dim(cols, k, 1, axis=1)
+        r_oh = iota_m == r  # (bt, m) one-hot of this step's row
+        c_oh = iota_m == c
+        rcount = jnp.sum(jnp.where(r_oh, rc, 0), axis=1, keepdims=True)
+        ccount = jnp.sum(jnp.where(c_oh, cc, 0), axis=1, keepdims=True)
+        can = (rcount < n) & (ccount < n)  # (bt, 1)
+        upd = (r_oh[:, :, None] & c_oh[:, None, :]) & can[:, :, None]
+        mask = jnp.where(upd, jnp.int8(1), mask)
+        inc = can.astype(jnp.int32)
+        rc = rc + jnp.where(r_oh, inc, 0)
+        cc = cc + jnp.where(c_oh, inc, 0)
+        return mask, rc, cc
+
+    mask0 = jnp.zeros((bt, m, m), jnp.int8)
+    cnt0 = jnp.zeros((bt, m), jnp.int32)
+    mask, _, _ = jax.lax.fori_loop(0, m * m, body, (mask0, cnt0, cnt0))
+    out_ref[...] = mask
+
+
+@functools.partial(jax.jit, static_argnames=("n", "block_b", "interpret"))
+def greedy_round_pallas(
+    scores: jnp.ndarray,
+    n: int,
+    block_b: int = 256,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """(B, M, M) scores -> boolean mask, greedy selection in VMEM."""
+    if interpret is None:
+        interpret = default_interpret()
+    b, m, _ = scores.shape
+    order = jnp.argsort(-scores.reshape(b, m * m), axis=1).astype(jnp.int32)
+    bt = min(block_b, max(8, b))
+    pb = -(-b // bt) * bt
+    if pb != b:
+        order = jnp.pad(order, ((0, pb - b), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_greedy_kernel, n=n, m=m),
+        grid=(pb // bt,),
+        in_specs=[pl.BlockSpec((bt, m * m), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bt, m, m), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((pb, m, m), jnp.int8),
+        interpret=interpret,
+    )(order)
+    return out[:b].astype(bool)

@@ -1,0 +1,10 @@
+"""Public wrapper for the greedy-rounding kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.rounding.kernel import greedy_round_pallas
+
+
+def greedy_round(scores: jnp.ndarray, n: int, **kw) -> jnp.ndarray:
+    return greedy_round_pallas(scores, n, **kw)

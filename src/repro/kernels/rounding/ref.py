@@ -1,0 +1,4 @@
+"""Oracle for the greedy-rounding kernel: the core (XLA scatter) greedy."""
+from repro.core.rounding import greedy_round as greedy_round_ref
+
+__all__ = ["greedy_round_ref"]

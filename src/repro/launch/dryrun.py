@@ -1,0 +1,376 @@
+"""Multi-pod dry-run: prove every (arch x shape x mesh) cell lowers,
+partitions and compiles, and extract its roofline terms.
+
+MUST set the placeholder device count before ANY other import (jax locks the
+device count on first init):
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs.registry import (  # noqa: E402
+    ARCH_IDS,
+    cell_supported,
+    get_config,
+)
+from repro.configs.shapes import SHAPES  # noqa: E402
+from repro.distributed.sharding import set_mesh  # noqa: E402
+from repro.launch.hlo_analysis import analyze_compiled  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import lm, specs  # noqa: E402
+from repro.models.config import ModelConfig  # noqa: E402
+from repro.optim.adamw import AdamW  # noqa: E402
+from repro.sparsity.masks import default_prunable  # noqa: E402
+from repro.train.step import StepConfig, build_train_step, make_train_state  # noqa: E402
+
+# TPU v5e constants (per assignment).
+PEAK_FLOPS = 197e12       # bf16 FLOP/s per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+
+
+def serving_cfg(cfg: ModelConfig) -> ModelConfig:
+    return dataclasses.replace(cfg, param_dtype="bfloat16", remat="none")
+
+
+def train_opt(cfg: ModelConfig) -> AdamW:
+    big = cfg.param_count() > 2e10
+    return AdamW(
+        learning_rate=1e-4, moment_dtype="bfloat16" if big else None
+    )
+
+
+def abstract_masks(params_shape, m: int = 32):
+    """Bool mask SDS tree for prunable weights (None elsewhere)."""
+    flat = jax.tree_util.tree_flatten_with_path(params_shape)
+    leaves = []
+    for path, p in flat[0]:
+        if default_prunable(path, p, m):
+            leaves.append(jax.ShapeDtypeStruct(p.shape, jnp.bool_))
+        else:
+            leaves.append(None)
+    return jax.tree_util.tree_unflatten(flat[1], leaves)
+
+
+def input_specs(
+    cfg: ModelConfig, shape, mesh, *, sparse: bool, accum: int,
+    mask_mode: str = "fwd", pure_dp: bool = False,
+):
+    """Abstract, sharded inputs + the function to lower for one cell."""
+    b, s = shape.global_batch, shape.seq_len
+
+    if shape.kind == "train":
+        opt = train_opt(cfg)
+        state_shape = jax.eval_shape(
+            lambda: make_train_state(cfg, opt, jax.random.PRNGKey(0))
+        )
+        pspecs = specs.fit_param_specs(cfg, state_shape.params, mesh, pure_dp)
+        state_specs = type(state_shape)(
+            params=pspecs,
+            opt_state=type(state_shape.opt_state)(
+                step=jax.sharding.PartitionSpec(),
+                mu=pspecs,
+                nu=pspecs,
+            ),
+            step=jax.sharding.PartitionSpec(),
+            ef=None,
+        )
+        state_sds = specs.as_sds(
+            state_shape, specs.shardings_of(state_specs, mesh)
+        )
+        bs = specs.batch_spec(mesh, b, 2, pure_dp)
+        bsh = jax.sharding.NamedSharding(mesh, bs)
+        if cfg.frontend != "none":
+            es = specs.batch_spec(mesh, b, 3, pure_dp)
+            batch_sds = {
+                "embeds": jax.ShapeDtypeStruct(
+                    (b, s, cfg.d_model), jnp.bfloat16,
+                    sharding=jax.sharding.NamedSharding(mesh, es),
+                ),
+                "labels": jax.ShapeDtypeStruct((b, s), jnp.int32, sharding=bsh),
+            }
+        else:
+            batch_sds = {
+                "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32, sharding=bsh),
+                "labels": jax.ShapeDtypeStruct((b, s), jnp.int32, sharding=bsh),
+            }
+        step_fn = build_train_step(
+            cfg, opt, step_cfg=StepConfig(accum=accum, mask_mode=mask_mode),
+            masks_as_input=sparse, donate=True,
+        )
+        if sparse:
+            masks_shape = abstract_masks(state_shape.params)
+            mask_specs = jax.tree.map(
+                lambda m, sp: sp if m is not None else None,
+                masks_shape,
+                pspecs,
+                is_leaf=lambda x: x is None,
+            )
+            masks_sds = jax.tree.map(
+                lambda m, sp: jax.ShapeDtypeStruct(
+                    m.shape, m.dtype,
+                    sharding=jax.sharding.NamedSharding(mesh, sp),
+                )
+                if m is not None
+                else None,
+                masks_shape,
+                mask_specs,
+                is_leaf=lambda x: x is None,
+            )
+            return step_fn, (state_sds, batch_sds, masks_sds)
+        return step_fn, (state_sds, batch_sds)
+
+    # Serving cells: bf16 params, decode or prefill.
+    scfg = serving_cfg(cfg)
+    params_shape = jax.eval_shape(lambda: lm.init_params(scfg, jax.random.PRNGKey(0)))
+    psh = specs.shardings_of(specs.fit_param_specs(scfg, params_shape, mesh), mesh)
+    params_sds = specs.as_sds(params_shape, psh)
+    caches_shape = jax.eval_shape(lambda: lm.init_cache(scfg, b, s))
+    csh = specs.shardings_of(specs.cache_specs(scfg, caches_shape, mesh), mesh)
+    caches_sds = specs.as_sds(caches_shape, csh)
+
+    if shape.kind == "decode":
+        tok_sds = jax.ShapeDtypeStruct(
+            (b,), jnp.int32,
+            sharding=jax.sharding.NamedSharding(mesh, specs.batch_spec(mesh, b, 1)),
+        )
+        idx_sds = jax.ShapeDtypeStruct((), jnp.int32)
+
+        def serve_step(params, token, caches, index):
+            return lm.decode_step(params, scfg, token, caches, index)
+
+        fn = jax.jit(serve_step, donate_argnums=(2,))
+        return fn, (params_sds, tok_sds, caches_sds, idx_sds)
+
+    # prefill
+    if cfg.frontend != "none":
+        es = specs.batch_spec(mesh, b, 3)
+        inp_sds = jax.ShapeDtypeStruct(
+            (b, s, cfg.d_model), jnp.bfloat16,
+            sharding=jax.sharding.NamedSharding(mesh, es),
+        )
+
+        def prefill_fn(params, caches, embeds):
+            return lm.prefill(params, scfg, caches, embeds=embeds)
+
+    else:
+        inp_sds = jax.ShapeDtypeStruct(
+            (b, s), jnp.int32,
+            sharding=jax.sharding.NamedSharding(mesh, specs.batch_spec(mesh, b, 2)),
+        )
+
+        def prefill_fn(params, caches, tokens):
+            return lm.prefill(params, scfg, caches, tokens=tokens)
+
+    fn = jax.jit(prefill_fn, donate_argnums=(1,))
+    return fn, (params_sds, caches_sds, inp_sds)
+
+
+def roofline_terms(analysis: dict, chips: int) -> dict:
+    """Per the assignment: terms in seconds from the per-device HLO numbers.
+
+    The compiled module is the per-device program, so per-chip work =
+    module totals; global = x chips.
+    """
+    per_chip_flops = analysis.get("flops", 0.0)
+    per_chip_dot_flops = analysis.get("dot_flops", 0.0)
+    per_chip_bytes = analysis.get("hbm_bytes", 0.0)
+    per_chip_coll = analysis.get("collective_bytes", 0.0)
+    return {
+        "compute_s": per_chip_flops / PEAK_FLOPS,
+        "compute_dot_s": per_chip_dot_flops / PEAK_FLOPS,
+        "memory_s": per_chip_bytes / HBM_BW,
+        "collective_s": per_chip_coll / ICI_BW,
+        "hlo_flops_global": per_chip_flops * chips,
+        "hlo_dot_flops_global": per_chip_dot_flops * chips,
+        "hlo_bytes_global": per_chip_bytes * chips,
+        "collective_bytes_global": per_chip_coll * chips,
+    }
+
+
+def model_flops(cfg: ModelConfig, shape) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE); decode counts one token/seq."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def run_cell(
+    arch: str, shape_name: str, multi_pod: bool, sparse: bool, accum: int,
+    out_dir: str, overrides: dict | None = None, mask_mode: str = "fwd",
+    tag: str = "",
+) -> dict:
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    overrides = dict(overrides or {})
+    pure_dp = bool(overrides.pop("pure_dp", 0))
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    if pure_dp:
+        from repro.distributed.sharding import MeshRules, default_rules
+
+        rules = dict(default_rules(mesh).rules)
+        rules["act_batch"] = tuple(
+            a for a in ("pod", "data", "model") if a in mesh.axis_names
+        )
+        for k in ("act_heads", "act_vocab", "act_exp", "act_attn_seq"):
+            rules[k] = None
+        set_mesh(mesh, MeshRules(rules))
+    else:
+        set_mesh(mesh)
+    report = {
+        "arch": arch, "shape": shape_name, "mesh": list(mesh.devices.shape),
+        "axes": list(mesh.axis_names), "chips": chips, "sparse": sparse,
+        "accum": accum, "kind": shape.kind, "overrides": overrides or {},
+        "mask_mode": mask_mode, "tag": tag, "pure_dp": pure_dp,
+    }
+    t0 = time.time()
+    try:
+        ok, why = cell_supported(arch, shape_name)
+        if not ok:
+            report.update(status="skipped", reason=why)
+            return report
+        fn, args = input_specs(
+            cfg, shape, mesh, sparse=sparse, accum=accum, mask_mode=mask_mode,
+            pure_dp=pure_dp,
+        )
+        lowered = fn.lower(*args)
+        report["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        report["compile_s"] = round(time.time() - t1, 1)
+
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            for field in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes",
+                "alias_size_in_bytes",
+            ):
+                v = getattr(mem, field, None)
+                if v is not None:
+                    report[field] = int(v)
+        ca = compiled.cost_analysis() or {}
+        report["xla_cost_flops"] = float(ca.get("flops", 0.0))
+        report["xla_cost_bytes"] = float(ca.get("bytes accessed", 0.0))
+
+        analysis = analyze_compiled(compiled)
+        report["hlo"] = {
+            k: v for k, v in analysis.items() if k != "collectives"
+        }
+        report["collectives"] = analysis.get("collectives", {})
+        report.update(roofline_terms(analysis, chips))
+        mf = model_flops(cfg, shape)
+        report["model_flops"] = mf
+        if report["hlo_dot_flops_global"]:
+            report["useful_flops_ratio"] = mf / report["hlo_dot_flops_global"]
+        dom = max(
+            ("compute_s", "memory_s", "collective_s"), key=lambda k: report[k]
+        )
+        report["bottleneck"] = dom
+        total = report["compute_s"] + report["memory_s"] + report["collective_s"]
+        report["roofline_fraction"] = report[dom] / total if total else 0.0
+        report["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 — record, don't die mid-sweep
+        report["status"] = "error"
+        report["error"] = f"{type(e).__name__}: {e}"
+        report["traceback"] = traceback.format_exc()[-4000:]
+    finally:
+        report["total_s"] = round(time.time() - t0, 1)
+        set_mesh(None)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        mtag = "pod2" if multi_pod else "pod1"
+        if tag:
+            mtag = f"{mtag}__{tag}"
+        path = os.path.join(out_dir, f"{arch}__{shape_name}__{mtag}.json")
+        with open(path, "w") as f:
+            json.dump(report, f, indent=1, default=str)
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS + ["all"])
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + ["all"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--dense", action="store_true", help="disable sparse masks")
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--mask-mode", default="fwd", choices=["fwd", "post"])
+    ap.add_argument("--tag", default="", help="suffix for report files")
+    ap.add_argument(
+        "--override", action="append", default=[],
+        help="model config overrides, e.g. --override ssm_chunk=64",
+    )
+    args = ap.parse_args()
+
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        try:
+            overrides[k] = int(v)
+        except ValueError:
+            try:
+                overrides[k] = float(v)
+            except ValueError:
+                overrides[k] = v
+
+    archs = ARCH_IDS if args.arch in (None, "all") else [args.arch]
+    shapes = list(SHAPES) if args.shape in (None, "all") else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results = []
+    for mp in meshes:
+        for arch in archs:
+            for sh in shapes:
+                mtag = ("pod2" if mp else "pod1") + (
+                    f"__{args.tag}" if args.tag else ""
+                )
+                path = os.path.join(args.out, f"{arch}__{sh}__{mtag}.json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[dryrun] skip existing {arch} x {sh} ({mtag})")
+                    continue
+                print(f"[dryrun] {arch} x {sh} ({mtag}) ...", flush=True)
+                r = run_cell(
+                    arch, sh, mp, not args.dense, args.accum, args.out,
+                    overrides=overrides, mask_mode=args.mask_mode,
+                    tag=args.tag,
+                )
+                status = r["status"]
+                extra = ""
+                if status == "ok":
+                    extra = (
+                        f" compute={r['compute_s']:.4f}s memory={r['memory_s']:.4f}s"
+                        f" coll={r['collective_s']:.4f}s -> {r['bottleneck']}"
+                    )
+                elif status == "error":
+                    extra = " " + r["error"][:160]
+                print(f"[dryrun]   {status}{extra} ({r['total_s']}s)", flush=True)
+                results.append(r)
+    n_ok = sum(1 for r in results if r["status"] == "ok")
+    n_skip = sum(1 for r in results if r["status"] == "skipped")
+    n_err = sum(1 for r in results if r["status"] == "error")
+    print(f"[dryrun] done: {n_ok} ok / {n_skip} skipped / {n_err} errors")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

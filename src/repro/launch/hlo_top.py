@@ -1,0 +1,119 @@
+"""Debug tool: per-instruction HBM-byte attribution for one dry-run cell.
+
+    PYTHONPATH=src python -m repro.launch.hlo_top --arch X --shape Y [...]
+
+Prints the top instructions by (trip-count-scaled) traffic — the profile that
+drives each §Perf iteration (no wall-clock profiler exists on this CPU
+container, so the lowered HLO is the profile; see task brief).
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import re  # noqa: E402
+from collections import defaultdict  # noqa: E402
+
+from repro.configs.registry import ARCH_IDS, get_config  # noqa: E402
+from repro.configs.shapes import SHAPES  # noqa: E402
+from repro.distributed.sharding import set_mesh  # noqa: E402
+from repro.launch import hlo_analysis as H  # noqa: E402
+from repro.launch.dryrun import input_specs  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+
+def top_contributors(hlo: str, k: int = 20):
+    comps, entry = H.parse_module(hlo)
+    symtab = {c: {i.name: i.out_text for i in instrs} for c, instrs in comps.items()}
+    fused = set()
+    for instrs in comps.values():
+        for i in instrs:
+            for m in re.finditer(r"(?:calls|to_apply)=%?([\w\.\-]+)", i.attrs_text):
+                fused.add(m.group(1))
+
+    rows = []
+
+    def walk(cname, mult, seen):
+        if cname in seen or cname not in comps:
+            return
+        seen = seen | {cname}
+        top = cname not in fused
+        for ins in comps[cname]:
+            op = ins.opcode
+            if op in H._FREE_OPS or op == "get-tuple-element":
+                continue
+            if top:
+                ob = H._shapes_bytes(ins.out_text)
+                ib = sum(
+                    H._shapes_bytes(symtab.get(cname, {}).get(o, ""))
+                    for o in H._OPERAND_RE.findall(ins.args_text)
+                )
+                if op in ("while", "conditional", "call"):
+                    io = 0.0
+                elif op in ("dynamic-slice", "slice", "gather"):
+                    io = 2 * ob
+                else:
+                    io = ib + ob
+                if io:
+                    meta = re.search(r'op_name="([^"]+)"', ins.attrs_text)
+                    rows.append((mult * io, op, ins.out_text[:48],
+                                 (meta.group(1) if meta else "")[:80]))
+            if op == "while":
+                bm = re.search(r"body=%?([\w\.\-]+)", ins.attrs_text)
+                cm = re.search(r"condition=%?([\w\.\-]+)", ins.attrs_text)
+                trips = 1
+                if cm:
+                    for i2 in comps.get(cm.group(1), []):
+                        for mm in re.finditer(r"constant\((\d+)\)", i2.args_text):
+                            trips = max(trips, int(mm.group(1)))
+                        if i2.opcode == "constant":
+                            mm = re.match(r"\s*(\d+)\s*$", i2.args_text)
+                            if mm:
+                                trips = max(trips, int(mm.group(1)))
+                if bm:
+                    walk(bm.group(1), mult * trips, seen)
+            else:
+                for m in re.finditer(r"(?:calls|to_apply)=%?([\w\.\-]+)",
+                                     ins.attrs_text):
+                    walk(m.group(1), mult, seen)
+
+    walk(entry, 1.0, frozenset())
+    rows.sort(reverse=True)
+    agg = defaultdict(float)
+    for b, op, _, meta in rows:
+        key = meta.split("/")[-1][:40] if meta else op
+        agg[f"{op}:{key}"] += b
+    return rows[:k], sorted(agg.items(), key=lambda kv: -kv[1])[:k]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--dense", action="store_true")
+    ap.add_argument("--override", action="append", default=[])
+    ap.add_argument("--topk", type=int, default=18)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        cfg = dataclasses.replace(cfg, **{k: int(v) if v.isdigit() else v})
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    set_mesh(mesh)
+    fn, specs_args = input_specs(
+        cfg, SHAPES[args.shape], mesh, sparse=not args.dense, accum=1
+    )
+    compiled = fn.lower(*specs_args).compile()
+    rows, agg = top_contributors(compiled.as_text(), args.topk)
+    print("== top instructions (trip-scaled bytes/device) ==")
+    for b, op, shape, meta in rows:
+        print(f"{b / 2**30:9.2f} GiB  {op:20s} {shape:48s} {meta}")
+    print("\n== aggregated by op_name ==")
+    for k, b in agg:
+        print(f"{b / 2**30:9.2f} GiB  {k}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""One-shot pruning launcher (layer-wise, sequential propagation).
+
+    PYTHONPATH=src python -m repro.launch.prune --arch granite_8b --smoke \
+        --method alps --nm 8:16 --out /tmp/pruned
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.registry import ARCH_IDS, get_smoke_config
+from repro.core.solver import SolverConfig
+from repro.data import SyntheticLM
+from repro.models import lm
+from repro.pruning import prune_transformer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite_8b", choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--method", default="alps",
+                    choices=["alps", "sparsegpt", "wanda", "magnitude"])
+    ap.add_argument("--nm", default="2:4")
+    ap.add_argument("--standard", action="store_true")
+    ap.add_argument("--calib-tokens", type=int, default=8192)
+    ap.add_argument("--restore", default=None, help="checkpoint dir to prune")
+    ap.add_argument("--out", default=None, help="save pruned params here")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    assert cfg.family in ("dense", "vlm", "audio"), \
+        "layer-wise runner covers attention+MLP families"
+    n, m = map(int, args.nm.split(":"))
+
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    if args.restore:
+        mgr = CheckpointManager(args.restore)
+        step = mgr.latest_step()
+        state_like = {"params": params}
+        params = mgr.restore(step, state_like)["params"]
+        print(f"[prune] restored step {step} from {args.restore}")
+
+    seq = 64
+    batch = max(1, args.calib_tokens // seq)
+    data = SyntheticLM(cfg.vocab_size, seq, batch)
+    calib = jnp.asarray(data.batch(0)["tokens"])
+
+    print(f"[prune] {args.method} -> "
+          f"{'standard' if args.standard else 'transposable'} {n}:{m}")
+    pruned, masks = prune_transformer(
+        params, cfg, tokens=calib, method=args.method, n=n, m=m,
+        transposable=not args.standard, solver=SolverConfig(iters=150),
+        log=print,
+    )
+    nz = float(np.mean([float(jnp.mean(mk)) for mk in jax.tree.leaves(masks)]))
+    print(f"[prune] kept fraction {nz:.3f} (target {n / m:.3f})")
+    if args.out:
+        mgr = CheckpointManager(args.out, async_save=False)
+        mgr.save(0, {"params": pruned, "masks": masks})
+        print(f"[prune] saved to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Aggregate dry-run reports into the EXPERIMENTS.md roofline table."""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(out_dir: str, tag_filter: str | None = None):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        name = os.path.basename(path)[: -len(".json")]
+        parts = name.split("__")
+        r["_mesh_tag"] = parts[2] if len(parts) > 2 else "pod1"
+        r["_extra_tag"] = parts[3] if len(parts) > 3 else ""
+        if tag_filter is not None and r["_extra_tag"] != tag_filter:
+            continue
+        rows.append(r)
+    return rows
+
+
+def fmt_row(r: dict) -> str:
+    if r["status"] == "skipped":
+        return (f"| {r['arch']} | {r['shape']} | {r['_mesh_tag']} | skipped | "
+                f"— | — | — | — | — | {r['reason'][:40]} |")
+    if r["status"] != "ok":
+        return (f"| {r['arch']} | {r['shape']} | {r['_mesh_tag']} | ERROR | "
+                f"— | — | — | — | — | {r.get('error', '')[:40]} |")
+    dom = {"compute_s": "compute", "memory_s": "memory",
+           "collective_s": "collective"}[r["bottleneck"]]
+    ratio = r.get("useful_flops_ratio", 0.0)
+    total = r["compute_s"] + r["memory_s"] + r["collective_s"]
+    bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+    ideal = r["model_flops"] / r["chips"] / 197e12
+    # roofline fraction: ideal model-FLOPs time / dominant-term time.
+    frac = ideal / bound if bound else 0.0
+    return (f"| {r['arch']} | {r['shape']} | {r['_mesh_tag']} | ok "
+            f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+            f"| {r['collective_s']:.3f} | {dom} | {frac:.3f} | "
+            f"useful={ratio:.2f} temp={r.get('temp_size_in_bytes', 0) / 2**30:.1f}GiB |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    rows = load(args.out, args.tag if args.tag else None)
+    rows = [r for r in rows if not r["_extra_tag"] or r["_extra_tag"] == args.tag]
+    print("| arch | shape | mesh | status | compute_s | memory_s | "
+          "collective_s | bottleneck | roofline_frac | notes |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        print(fmt_row(r))
+
+
+if __name__ == "__main__":
+    main()

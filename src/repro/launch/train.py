@@ -1,0 +1,92 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite_8b --smoke \
+        --steps 100 --nm 8:16 --ckpt-dir /tmp/run1
+
+On a real TPU deployment this binary runs per host under the usual
+`jax.distributed.initialize()`; on this container it drives the smoke configs
+end to end (full configs are exercised by the dry-run).  Features: mesh
+construction, sparse transposable-N:M fine-tuning, gradient accumulation,
+int8 cross-pod gradient compression, fault-tolerant checkpointing with
+resume, straggler flagging.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
+from repro.core.solver import SolverConfig
+from repro.data import SyntheticEmbeds, SyntheticLM
+from repro.distributed.sharding import set_mesh
+from repro.launch.mesh import make_mesh
+from repro.optim import AdamW, warmup_cosine
+from repro.sparsity.masks import sparsify_pytree
+from repro.train import TrainLoop, TrainLoopConfig, build_train_step, make_train_state
+from repro.train.step import StepConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite_8b", choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true", help="reduced config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--nm", default=None, help="N:M sparse fine-tune, e.g. 8:16")
+    ap.add_argument("--mesh", default=None, help="e.g. 2x4=data,model")
+    ap.add_argument("--compress-pods", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--max-step-seconds", type=float, default=None)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    mesh = None
+    if args.mesh:
+        shape_s, axes_s = args.mesh.split("=")
+        shape = tuple(int(x) for x in shape_s.split("x"))
+        axes = tuple(axes_s.split(","))
+        mesh = make_mesh(shape, axes)
+        set_mesh(mesh)
+
+    if cfg.frontend != "none":
+        data = SyntheticEmbeds(cfg.d_model, args.seq, args.batch, cfg.vocab_size)
+    else:
+        data = SyntheticLM(cfg.vocab_size, args.seq, args.batch)
+
+    opt = AdamW(learning_rate=warmup_cosine(args.lr, args.steps // 10, args.steps))
+    state = make_train_state(
+        cfg, opt, jax.random.PRNGKey(0), compression=args.compress_pods
+    )
+
+    masks = None
+    if args.nm:
+        n, m = map(int, args.nm.split(":"))
+        print(f"[train] solving transposable {n}:{m} masks (TSENOR)")
+        masks = sparsify_pytree(state.params, n, m, SolverConfig(iters=150))
+
+    step = build_train_step(
+        cfg, opt, masks=masks,
+        step_cfg=StepConfig(accum=args.accum, compression=args.compress_pods),
+        mesh=mesh,
+    )
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    loop = TrainLoop(
+        step, data, ckpt,
+        TrainLoopConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                        log_every=10, max_step_seconds=args.max_step_seconds),
+    )
+    import numpy as np
+    batch0 = {k: jax.numpy.asarray(v) for k, v in data.batch(0).items()}  # noqa
+    state, hist = loop.run(state)
+    print(f"[train] done: {len(hist)} steps, final loss "
+          f"{hist[-1]['loss']:.4f}" if hist else "[train] resumed-complete")
+
+
+if __name__ == "__main__":
+    main()

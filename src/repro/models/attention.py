@@ -1,0 +1,277 @@
+"""GQA attention with RoPE / M-RoPE, sliding windows, online-softmax
+training path and ring-buffer KV caches for decode.
+
+The training/prefill path is a chunked online-softmax (flash-style) scan over
+KV chunks, so the (S x S) score matrix is never materialized — on TPU the
+per-chunk einsums feed the MXU and the running max/denominator stay in
+registers (XLA fuses the scan body).  Decode uses a single einsum against the
+cache; sliding-window archs keep a ring buffer of size `window`, which is what
+makes mixtral's 500k-token decode cell feasible (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import current_mesh, model_axis_size, shard
+from repro.models.config import ModelConfig
+
+NEG_INF = -1e30
+
+
+def _use_seq_parallel_attn(cfg: ModelConfig, s: int) -> bool:
+    """Head counts that don't divide the TP axis leave the flash-scan score
+    tensors unsharded on "model" (measured 100+ TB/step on phi3 train_4k).
+    In that case shard the *query sequence* over "model" instead — S always
+    divides — and let k/v replicate (they are tiny next to scores)."""
+    ms = model_axis_size(current_mesh())
+    if ms <= 1 or s % ms != 0 or s == 1:
+        return False
+    return cfg.num_heads % ms != 0 or cfg.num_kv_heads % ms != 0
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray        # (B, S_buf, KV, hd)
+    v: jnp.ndarray        # (B, S_buf, KV, hd)
+    index: jnp.ndarray    # () int32 — next absolute position
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + M-RoPE).
+# ---------------------------------------------------------------------------
+
+
+def _rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def rope(
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    theta: float,
+    mrope_sections: Optional[tuple] = None,
+) -> jnp.ndarray:
+    """Apply rotary embedding.
+
+    x: (B, S, H, hd); positions: (B, S) or (3, B, S) for M-RoPE.
+    M-RoPE (qwen2-vl): the hd/2 frequency slots are split into 3 sections
+    (temporal, height, width) that take positions from the corresponding
+    stream.  Text tokens use identical streams, recovering standard RoPE.
+    """
+    b, s, h, hd = x.shape
+    freqs = _rope_freqs(hd, theta)  # (hd/2,)
+    if mrope_sections is not None:
+        assert sum(mrope_sections) == hd // 2, (mrope_sections, hd)
+        if positions.ndim == 2:
+            positions = jnp.broadcast_to(positions[None], (3, b, s))
+        sec_id = jnp.repeat(
+            jnp.arange(3), jnp.array(mrope_sections), total_repeat_length=hd // 2
+        )
+        pos_per_freq = positions[sec_id]  # (hd/2, B, S)
+        angle = jnp.einsum("fbs,f->bsf", pos_per_freq.astype(jnp.float32), freqs)
+    else:
+        if positions.ndim == 3:
+            positions = positions[0]
+        angle = positions.astype(jnp.float32)[..., None] * freqs  # (B, S, hd/2)
+    cos = jnp.cos(angle)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(angle)[:, :, None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Chunked online-softmax causal attention (training / prefill).
+# ---------------------------------------------------------------------------
+
+
+def _flash_attention(
+    q: jnp.ndarray,  # (B, S, KV, G, hd)  — query heads grouped per KV head
+    k: jnp.ndarray,  # (B, S, KV, hd)
+    v: jnp.ndarray,  # (B, S, KV, hd)
+    q_pos: jnp.ndarray,  # (B, S) absolute positions of queries
+    k_pos: jnp.ndarray,  # (B, S) absolute positions of keys
+    window: int,
+    chunk: int,
+) -> jnp.ndarray:
+    b, s, kvh, g, hd = q.shape
+    scale = hd**-0.5
+    nc = -(-k.shape[1] // chunk)
+    pad = nc * chunk - k.shape[1]
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-(10**9))
+    k_c = k.reshape(b, nc, chunk, kvh, hd).transpose(1, 0, 2, 3, 4)
+    v_c = v.reshape(b, nc, chunk, kvh, hd).transpose(1, 0, 2, 3, 4)
+    p_c = k_pos.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    qs = (q * scale).astype(q.dtype)  # keep operands narrow; accumulate f32
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kc, vc, pc = xs
+        sc = jnp.einsum(
+            "bsngh,bcnh->bsngc", qs, kc, preferred_element_type=jnp.float32
+        )  # (B,S,KV,G,C) f32 accum without materializing f32 operands
+        causal = q_pos[:, :, None] >= pc[:, None, :]  # (B, S, C)
+        if window:
+            causal &= (q_pos[:, :, None] - pc[:, None, :]) < window
+        sc = jnp.where(causal[:, :, None, None, :], sc, NEG_INF)
+        m_new = jnp.maximum(m, sc.max(axis=-1))
+        p = jnp.exp(sc - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bsngc,bcnh->bsngh", p.astype(vc.dtype), vc,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, s, kvh, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, s, kvh, g), jnp.float32)
+    acc0 = jnp.zeros((b, s, kvh, g, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), (k_c, v_c, p_c))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full attention layer.
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig, dtype) -> dict:
+    from repro.models.layers import dense_init
+
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, h * hd), dtype),
+        "wk": dense_init(ks[1], (d, kv * hd), dtype),
+        "wv": dense_init(ks[2], (d, kv * hd), dtype),
+        "wo": dense_init(ks[3], (h * hd, d), dtype, scale=(h * hd) ** -0.5
+                         / (2 * cfg.num_layers) ** 0.5),
+    }
+
+
+def attention(
+    p: dict,
+    x: jnp.ndarray,  # (B, S, d)
+    cfg: ModelConfig,
+    positions: jnp.ndarray,
+    cache: Optional[KVCache] = None,
+    capture: Optional[dict] = None,
+):
+    """Returns (out (B,S,d), new_cache).
+
+    Modes:
+      * cache is None                  -> training forward (chunked causal).
+      * cache given, update_cache      -> decode step (S==1) or prefill write.
+    """
+    b, s, d = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    g = h // kv
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, h, hd)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(b, s, kv, hd)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(b, s, kv, hd)
+    if _use_seq_parallel_attn(cfg, s):
+        q = shard(q, "act_batch", "act_attn_seq", None, None)
+        k = shard(k, "act_batch", None, None, None)
+        v = shard(v, "act_batch", None, None, None)
+    else:
+        q = shard(q, "act_batch", "act_seq", "act_heads", None)
+        k = shard(k, "act_batch", "act_seq", "act_heads", None)
+        v = shard(v, "act_batch", "act_seq", "act_heads", None)
+
+    pos2 = positions[0] if positions.ndim == 3 else positions
+    q = rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+    k = rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+
+    if cache is None:
+        qg = q.reshape(b, s, kv, g, hd)
+        out = _flash_attention(
+            qg, k, v, pos2, pos2, cfg.sliding_window, min(cfg.attn_chunk, s)
+        )
+        out = out.reshape(b, s, h * hd)
+        new_cache = None
+    else:
+        s_buf = cache.k.shape[1]
+        if s == 1:
+            # Decode: write this token's K/V into the (ring) buffer.
+            slot = (
+                cache.index % s_buf if cfg.sliding_window else cache.index
+            )
+            ck = jax.lax.dynamic_update_slice(
+                cache.k, k.astype(cache.k.dtype), (0, slot, 0, 0)
+            )
+            cv = jax.lax.dynamic_update_slice(
+                cache.v, v.astype(cache.v.dtype), (0, slot, 0, 0)
+            )
+            new_cache = KVCache(ck, cv, cache.index + 1)
+            # Valid cache positions: absolute position of each buffer slot.
+            slots = jnp.arange(s_buf)
+            if cfg.sliding_window:
+                # Ring: slot holds absolute pos p with p % s_buf == slot and
+                # p <= index;  p = index - ((index - slot) % s_buf).
+                abs_pos = cache.index - ((cache.index - slots) % s_buf)
+            else:
+                abs_pos = slots
+            valid = (abs_pos <= cache.index) & (abs_pos >= 0)
+            if cfg.sliding_window:
+                valid &= (cache.index - abs_pos) < cfg.sliding_window
+            # Never convert the cache: bf16 reads, f32 MXU accumulation.
+            qg = (q.reshape(b, 1, kv, g, hd) * hd**-0.5).astype(ck.dtype)
+            sc = jnp.einsum(
+                "bsngh,bcnh->bsngc", qg, ck, preferred_element_type=jnp.float32
+            )
+            sc = jnp.where(valid[None, None, None, None, :], sc, NEG_INF)
+            w = jax.nn.softmax(sc, axis=-1)
+            out = jnp.einsum(
+                "bsngc,bcnh->bsngh", w.astype(cv.dtype), cv,
+                preferred_element_type=jnp.float32,
+            )
+            out = out.reshape(b, 1, h * hd).astype(x.dtype)
+        else:
+            # Prefill: run flash attention and write the cache.
+            qg = q.reshape(b, s, kv, g, hd)
+            out = _flash_attention(
+                qg, k, v, pos2, pos2, cfg.sliding_window, min(cfg.attn_chunk, s)
+            ).reshape(b, s, h * hd)
+            if cfg.sliding_window and s_buf < s:
+                # Place the last s_buf tokens at their ring slots (pos % s_buf).
+                tail = s - s_buf
+                last_pos = jnp.arange(tail, s)
+                ck = jnp.zeros_like(cache.k).at[:, last_pos % s_buf].set(
+                    k[:, tail:].astype(cache.k.dtype)
+                )
+                cv = jnp.zeros_like(cache.v).at[:, last_pos % s_buf].set(
+                    v[:, tail:].astype(cache.v.dtype)
+                )
+            else:
+                ck = jax.lax.dynamic_update_slice(
+                    cache.k, k.astype(cache.k.dtype), (0, 0, 0, 0)
+                )
+                cv = jax.lax.dynamic_update_slice(
+                    cache.v, v.astype(cache.v.dtype), (0, 0, 0, 0)
+                )
+            new_cache = KVCache(ck, cv, cache.index + s)
+
+    if _use_seq_parallel_attn(cfg, s):
+        out = shard(out, "act_batch", "act_attn_seq", None)
+    else:
+        out = shard(out, "act_batch", "act_seq", "act_heads")
+    if capture is not None:
+        capture["pre_out"] = out  # inputs to wo — used by layer-wise pruning
+    return out @ p["wo"].astype(x.dtype), new_cache
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> KVCache:
+    """Per-layer cache buffer; sliding-window archs use a ring of size window."""
+    s_buf = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    shape = (batch, s_buf, cfg.num_kv_heads, cfg.head_dim)
+    return KVCache(
+        k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+        index=jnp.zeros((), jnp.int32),
+    )

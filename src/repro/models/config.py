@@ -1,0 +1,123 @@
+"""Unified model configuration covering all assigned architecture families."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int                   # query heads (0 for attention-free)
+    num_kv_heads: int
+    d_ff: int                        # dense MLP hidden (per-expert for MoE)
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // num_heads
+
+    # MoE.
+    num_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    moe_group: int = 512             # tokens per dispatch group
+    norm_topk: bool = True
+
+    # SSM (Mamba2 / SSD).
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    conv_kernel: int = 4
+
+    # Hybrid (zamba2-style): shared attention block every k mamba blocks.
+    hybrid_attn_every: int = 0
+
+    # Attention flavor.
+    sliding_window: int = 0          # 0 -> full causal
+    rope_theta: float = 1e4
+    mrope_sections: Optional[Tuple[int, int, int]] = None  # qwen2-vl M-RoPE
+
+    # Modality frontend (vlm/audio): training inputs are precomputed
+    # embeddings from a stubbed encoder (per assignment).
+    frontend: str = "none"           # none | vision | audio
+
+    # Attention impl knobs.
+    attn_chunk: int = 512            # online-softmax KV chunk
+
+    # Numerics.
+    dtype: str = "bfloat16"          # activation/compute dtype
+    param_dtype: str = "float32"
+
+    # Remat policy for the layer scan: "none" | "full" | "dots".
+    remat: str = "full"
+
+    def __post_init__(self):
+        if self.num_heads and not self.head_dim:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch decode at 500k context with bounded state?"""
+        return self.family in ("ssm", "hybrid") or self.sliding_window > 0
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embedding + blocks + unembed)."""
+        d, ff, v = self.d_model, self.d_ff, self.vocab_size
+        hd = self.head_dim
+        per_layer = 0
+        if self.family in ("ssm", "hybrid"):
+            din = self.d_inner
+            conv_dim = din + 2 * self.ssm_state
+            in_proj = d * (2 * din + 2 * self.ssm_state + self.ssm_heads)
+            per_layer = in_proj + self.conv_kernel * conv_dim + din * d + din
+        if self.family != "ssm" and self.hybrid_attn_every == 0:
+            qkvo = d * self.num_heads * hd + 2 * d * self.num_kv_heads * hd \
+                + self.num_heads * hd * d
+            per_layer += qkvo
+            if self.is_moe:
+                per_layer += d * self.num_experts + self.num_experts * 3 * d * ff
+            else:
+                per_layer += 3 * d * ff
+        total = self.num_layers * per_layer
+        if self.hybrid_attn_every:
+            shared = d * self.num_heads * hd + 2 * d * self.num_kv_heads * hd \
+                + self.num_heads * hd * d + 3 * d * ff
+            total += shared
+        total += 2 * v * d
+        return total
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: top-k experts only)."""
+        if not self.is_moe:
+            return self.param_count()
+        d, ff = self.d_model, self.d_ff
+        inactive = self.num_layers * (self.num_experts - self.top_k) * 3 * d * ff
+        return self.param_count() - inactive
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One (input-shape) cell of the assignment."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"

@@ -1,0 +1,59 @@
+"""Shared building blocks: norms, MLP, embeddings, init helpers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dtype) * w.astype(dtype)
+
+
+def swiglu_mlp(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Gated MLP: down( silu(x@gate) * (x@up) )."""
+    h = jax.nn.silu(x @ p["gate"].astype(x.dtype)) * (x @ p["up"].astype(x.dtype))
+    h = shard(h, "act_batch", "act_seq", "act_heads")
+    return h @ p["down"].astype(x.dtype)
+
+
+def embed_tokens(table: jnp.ndarray, tokens: jnp.ndarray, dtype) -> jnp.ndarray:
+    out = jnp.take(table, tokens, axis=0).astype(dtype)
+    return shard(out, "act_batch", "act_seq", "act_embed")
+
+
+def unembed(x: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    logits = x @ table.astype(x.dtype)
+    return shard(logits, "act_batch", "act_seq", "act_vocab")
+
+
+def cross_entropy(
+    logits: jnp.ndarray, labels: jnp.ndarray, ignore_index: int = -1
+) -> jnp.ndarray:
+    """Mean CE over non-ignored positions; stable in float32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1
+    )[..., 0]
+    nll = lse - gold
+    ok = labels != ignore_index
+    return jnp.sum(jnp.where(ok, nll, 0.0)) / jnp.maximum(jnp.sum(ok), 1)
+
+
+# ---------------------------------------------------------------------------
+# Init helpers.
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    """Truncated-normal fan-in init (std = scale or 1/sqrt(fan_in))."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else fan_in**-0.5
+    return (jax.random.truncated_normal(key, -2, 2, shape, jnp.float32) * std).astype(
+        dtype
+    )

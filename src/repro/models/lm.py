@@ -1,0 +1,299 @@
+"""Unified language model: init, training forward, prefill and decode.
+
+One code path serves all ten assigned architectures; the family switch picks
+block kinds, the layer stack is a ``lax.scan`` over stacked parameters (keeps
+HLO size and compile time bounded for 94-layer models on 512-device meshes),
+and remat policy comes from the config.
+
+Hybrid (zamba2) models scan over *groups* of ``hybrid_attn_every`` ssm layers
+and apply the shared-weight attention block between groups, so only
+``num_layers // every`` KV caches exist — the reason 500k-token decode fits.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import transformer as tf
+from repro.models.attention import KVCache, init_kv_cache
+from repro.models.config import ModelConfig
+from repro.models.layers import cross_entropy, dense_init, embed_tokens, rms_norm, unembed
+from repro.models.mamba2 import SSMCache, init_ssm_cache
+
+
+def _act_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _param_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Init.
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    dtype = _param_dtype(cfg)
+    k_emb, k_blocks, k_shared, k_out = jax.random.split(key, 4)
+    layer_keys = jax.random.split(k_blocks, cfg.num_layers)
+
+    if cfg.family in ("ssm", "hybrid"):
+        blocks = jax.vmap(lambda k: tf.init_ssm_block(k, cfg, dtype))(layer_keys)
+    else:
+        blocks = jax.vmap(lambda k: tf.init_attn_block(k, cfg, dtype))(layer_keys)
+
+    params = {
+        "embed": dense_init(k_emb, (cfg.vocab_size, cfg.d_model), dtype, scale=0.02),
+        "blocks": blocks,
+        "final_ln": jnp.ones((cfg.d_model,), jnp.float32),
+        "unembed": dense_init(k_out, (cfg.d_model, cfg.vocab_size), dtype),
+    }
+    if cfg.hybrid_attn_every:
+        params["shared"] = tf.init_attn_block(k_shared, cfg, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Layer-stack runners.
+# ---------------------------------------------------------------------------
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+
+def _layer_params(blocks, l):
+    return jax.tree.map(lambda a: a[l], blocks)
+
+
+def _run_attn_stack(params, x, cfg, positions, caches):
+    """Training path scans over stacked blocks (bounded HLO/compile time).
+
+    Serving paths (caches given) UNROLL the layer loop with *per-layer*
+    cache tensors: scanning with caches (as xs/ys or carry) makes XLA copy
+    the whole (L, B, S, KV, hd) buffer every token — measured 87 GB/step on
+    granite decode_32k — whereas unrolled per-layer buffers alias the
+    one-token dynamic-update-slice in place.  Serving HLO is ~L x larger but
+    each layer is a handful of GEMV ops.
+    """
+
+    def body_nocache(x, lp):
+        x = shard(x, "act_batch", "act_seq", "act_embed")
+        x, _ = tf.attn_block_apply(lp, x, cfg, positions, None)
+        return x, None
+
+    if caches is None:
+        x, _ = jax.lax.scan(_remat(body_nocache, cfg), x, params["blocks"])
+        return x, None
+    new_caches = []
+    for l in range(cfg.num_layers):
+        x = shard(x, "act_batch", "act_seq", "act_embed")
+        x, nc = tf.attn_block_apply(
+            _layer_params(params["blocks"], l), x, cfg, positions, caches[l]
+        )
+        new_caches.append(nc)
+    return x, new_caches
+
+
+def _run_ssm_stack(params, x, cfg, caches):
+    def body_nocache(x, lp):
+        x = shard(x, "act_batch", "act_seq", "act_embed")
+        x, _ = tf.ssm_block_apply(lp, x, cfg, None)
+        return x, None
+
+    if caches is None:
+        x, _ = jax.lax.scan(_remat(body_nocache, cfg), x, params["blocks"])
+        return x, None
+    new_caches = []
+    for l in range(cfg.num_layers):
+        x = shard(x, "act_batch", "act_seq", "act_embed")
+        x, nc = tf.ssm_block_apply(
+            _layer_params(params["blocks"], l), x, cfg, caches[l]
+        )
+        new_caches.append(nc)
+    return x, new_caches
+
+
+def _hybrid_groups(cfg: ModelConfig):
+    every = cfg.hybrid_attn_every
+    full = cfg.num_layers // every
+    tail = cfg.num_layers - full * every
+    return every, full, tail
+
+
+def _slice_blocks(blocks, start, count):
+    return jax.tree.map(lambda a: a[start : start + count], blocks)
+
+
+def _run_hybrid_stack(params, x, cfg, positions, ssm_caches, kv_caches):
+    """Groups of `every` ssm layers, shared attention block between groups.
+
+    Caches stay in carries / are updated at indices in place (see
+    _run_attn_stack) so nothing is copied wholesale per token.
+    """
+    every, full, tail = _hybrid_groups(cfg)
+
+    def ssm_body_nocache(x, lp):
+        x = shard(x, "act_batch", "act_seq", "act_embed")
+        x, _ = tf.ssm_block_apply(lp, x, cfg, None)
+        return x, None
+
+    groups = [(g * every, every) for g in range(full)]
+    if tail:
+        groups.append((full * every, tail))
+
+    new_ssm, new_kv = [], []
+    for gidx, (start, count) in enumerate(groups):
+        lp = _slice_blocks(params["blocks"], start, count)
+        if ssm_caches is None:
+            x, _ = jax.lax.scan(_remat(ssm_body_nocache, cfg), x, lp)
+        else:
+            for l in range(start, start + count):
+                x = shard(x, "act_batch", "act_seq", "act_embed")
+                x, nc = tf.ssm_block_apply(
+                    _layer_params(params["blocks"], l), x, cfg, ssm_caches[l]
+                )
+                new_ssm.append(nc)
+        if gidx < full:  # shared attention after each complete group
+            kvc = None if kv_caches is None else kv_caches[gidx]
+            if ssm_caches is None:
+                x, nkv = _remat(
+                    lambda x, c: tf.attn_block_apply(
+                        params["shared"], x, cfg, positions, c
+                    ),
+                    cfg,
+                )(x, kvc)
+            else:
+                x, nkv = tf.attn_block_apply(
+                    params["shared"], x, cfg, positions, kvc
+                )
+            if kv_caches is not None:
+                new_kv.append(nkv)
+    return x, new_ssm if ssm_caches is not None else None, (
+        new_kv if kv_caches is not None else None
+    )
+
+
+# ---------------------------------------------------------------------------
+# Public entry points.
+# ---------------------------------------------------------------------------
+
+
+def forward(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: Optional[jnp.ndarray] = None,
+    embeds: Optional[jnp.ndarray] = None,
+    positions: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Training forward -> logits (B, S, V)."""
+    dtype = _act_dtype(cfg)
+    if embeds is None:
+        x = embed_tokens(params["embed"], tokens, dtype)
+    else:
+        x = embeds.astype(dtype)
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    if cfg.family == "ssm":
+        x, _ = _run_ssm_stack(params, x, cfg, None)
+    elif cfg.family == "hybrid":
+        x, _, _ = _run_hybrid_stack(params, x, cfg, positions, None, None)
+    else:
+        x, _ = _run_attn_stack(params, x, cfg, positions, None)
+
+    x = rms_norm(x, params["final_ln"])
+    return unembed(x, params["unembed"])
+
+
+def loss_fn(params: dict, cfg: ModelConfig, batch: dict) -> jnp.ndarray:
+    logits = forward(
+        params,
+        cfg,
+        tokens=batch.get("tokens"),
+        embeds=batch.get("embeds"),
+        positions=batch.get("positions"),
+    )
+    return cross_entropy(logits, batch["labels"])
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Any:
+    """Decode caches: PER-LAYER lists (unstacked) so serving's unrolled layer
+    loop aliases every cache update in place (see _run_attn_stack)."""
+    dtype = _act_dtype(cfg)
+    if cfg.family == "ssm":
+        return [init_ssm_cache(cfg, batch, dtype) for _ in range(cfg.num_layers)]
+    if cfg.family == "hybrid":
+        every, full, tail = _hybrid_groups(cfg)
+        return {
+            "ssm": [init_ssm_cache(cfg, batch, dtype) for _ in range(cfg.num_layers)],
+            "kv": [init_kv_cache(cfg, batch, max_len, dtype) for _ in range(full)],
+        }
+    return [init_kv_cache(cfg, batch, max_len, dtype) for _ in range(cfg.num_layers)]
+
+
+def prefill(
+    params: dict,
+    cfg: ModelConfig,
+    caches: Any,
+    tokens: Optional[jnp.ndarray] = None,
+    embeds: Optional[jnp.ndarray] = None,
+):
+    """Process a prompt, returning (last-position logits, filled caches)."""
+    dtype = _act_dtype(cfg)
+    x = embed_tokens(params["embed"], tokens, dtype) if embeds is None else embeds.astype(dtype)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    if cfg.family == "ssm":
+        x, caches = _run_ssm_stack(params, x, cfg, caches)
+    elif cfg.family == "hybrid":
+        x, ssm, kv = _run_hybrid_stack(
+            params, x, cfg, positions, caches["ssm"], caches["kv"]
+        )
+        caches = {"ssm": ssm, "kv": kv}
+    else:
+        x, caches = _run_attn_stack(params, x, cfg, positions, caches)
+
+    x = rms_norm(x[:, -1:, :], params["final_ln"])
+    return unembed(x, params["unembed"])[:, 0], caches
+
+
+def decode_step(
+    params: dict,
+    cfg: ModelConfig,
+    token: jnp.ndarray,  # (B,) int32
+    caches: Any,
+    index: jnp.ndarray,  # () int32 current absolute position
+):
+    """One autoregressive step with a filled cache -> (logits (B,V), caches)."""
+    dtype = _act_dtype(cfg)
+    x = embed_tokens(params["embed"], token[:, None], dtype)  # (B, 1, d)
+    b = x.shape[0]
+    positions = jnp.broadcast_to(index.astype(jnp.int32), (b, 1))
+
+    if cfg.family == "ssm":
+        x, caches = _run_ssm_stack(params, x, cfg, caches)
+    elif cfg.family == "hybrid":
+        x, ssm, kv = _run_hybrid_stack(
+            params, x, cfg, positions, caches["ssm"], caches["kv"]
+        )
+        caches = {"ssm": ssm, "kv": kv}
+    else:
+        x, caches = _run_attn_stack(params, x, cfg, positions, caches)
+
+    x = rms_norm(x, params["final_ln"])
+    return unembed(x, params["unembed"])[:, 0], caches

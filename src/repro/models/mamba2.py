@@ -1,0 +1,215 @@
+"""Mamba2 (SSD — state-space duality) block, chunked for TPU.
+
+Forward uses the SSD chunked decomposition [Dao & Gu 2024]: within-chunk
+attention-like quadratic term + across-chunk recurrent state carried by a
+``lax.scan`` (seq/chunk steps).  Decode maintains O(1) state per layer:
+a (heads, head_dim, state) SSM state and a (kernel-1, conv_dim) conv tail —
+this is what makes the 500k-token decode cell trivial for SSM archs.
+
+Sharding: d_inner (heads) is TP-sharded on "model"; the SSM state tensors
+inherit it.  in/out projections are the FLOP carriers and are the matrices
+TSENOR prunes (DESIGN.md §4); conv/Δ/A/D params are exempt (1-D / tiny).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.config import ModelConfig
+
+
+class SSMCache(NamedTuple):
+    conv: jnp.ndarray   # (B, kernel-1, conv_dim) trailing conv inputs
+    state: jnp.ndarray  # (B, H, P, N) SSM state
+
+
+def _dims(cfg: ModelConfig):
+    din = cfg.d_inner
+    nheads = cfg.ssm_heads
+    dstate = cfg.ssm_state
+    conv_dim = din + 2 * dstate
+    return din, nheads, cfg.ssm_head_dim, dstate, conv_dim
+
+
+def init_mamba(key, cfg: ModelConfig, dtype) -> dict:
+    from repro.models.layers import dense_init
+
+    d = cfg.d_model
+    din, nh, hp, ns, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 5)
+    d_in_proj = 2 * din + 2 * ns + nh
+    return {
+        "in_proj": dense_init(ks[0], (d, d_in_proj), dtype),
+        "conv_w": dense_init(ks[1], (cfg.conv_kernel, conv_dim), dtype, scale=0.3),
+        "a_log": jnp.log(
+            jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)
+        ),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(
+            jnp.expm1(
+                jnp.exp(
+                    jax.random.uniform(
+                        ks[2], (nh,), jnp.float32,
+                        jnp.log(1e-3), jnp.log(1e-1),
+                    )
+                )
+            )
+        ),
+        "norm_w": jnp.ones((din,), jnp.float32),
+        "out_proj": dense_init(ks[3], (din, d), dtype,
+                               scale=din**-0.5 / (2 * cfg.num_layers) ** 0.5),
+    }
+
+
+def _split_in_proj(zxbcdt, cfg):
+    din, nh, hp, ns, conv_dim = _dims(cfg)
+    z = zxbcdt[..., :din]
+    xbc = zxbcdt[..., din : din + conv_dim]
+    dt = zxbcdt[..., din + conv_dim :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, tail: Optional[jnp.ndarray]):
+    """Depthwise causal conv along seq.  xbc: (B,S,C); w: (K,C)."""
+    k = w.shape[0]
+    if tail is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = tail.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)  # (B, S+K-1, C)
+    out = sum(
+        xp[:, i : i + xbc.shape[1], :] * w[i].astype(xbc.dtype) for i in range(k)
+    )
+    new_tail = xp[:, -(k - 1) :, :] if k > 1 else None
+    return jax.nn.silu(out), new_tail
+
+
+def _gated_norm(y: jnp.ndarray, z: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    return y * jax.lax.rsqrt(var + 1e-5) * w
+
+
+def mamba_block(
+    p: dict,
+    x: jnp.ndarray,  # (B, S, d)
+    cfg: ModelConfig,
+    cache: Optional[SSMCache] = None,
+):
+    """Returns (out (B,S,d), new_cache)."""
+    b, s, d = x.shape
+    din, nh, hp, ns, conv_dim = _dims(cfg)
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xbc, dt_raw = _split_in_proj(zxbcdt, cfg)
+    a = -jnp.exp(p["a_log"])  # (H,) negative
+
+    if cache is None or s > 1:
+        tail = cache.conv if cache is not None else None
+        xbc, new_tail = _causal_conv(xbc, p["conv_w"], tail)
+        xs = xbc[..., :din].reshape(b, s, nh, hp)
+        bmat = xbc[..., din : din + ns]
+        cmat = xbc[..., din + ns :]
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+        y, state = _ssd_chunked(xs, bmat, cmat, dt, a, cfg)
+        y = y + xs.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+        y = y.reshape(b, s, din)
+        y = _gated_norm(y, z, p["norm_w"]).astype(x.dtype)
+        out = y @ p["out_proj"].astype(x.dtype)
+        new_cache = None
+        if cache is not None:
+            new_cache = SSMCache(conv=new_tail.astype(cache.conv.dtype),
+                                 state=state.astype(cache.state.dtype))
+        return out, new_cache
+
+    # Single-token decode: O(1) recurrent update.
+    conv_in = jnp.concatenate([cache.conv.astype(x.dtype), xbc], axis=1)
+    xbc1 = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", conv_in, p["conv_w"].astype(x.dtype))
+    )[:, None, :]
+    new_conv = conv_in[:, 1:, :]
+    xs = xbc1[..., :din].reshape(b, nh, hp)
+    bmat = xbc1[:, 0, din : din + ns]  # (B, N)
+    cmat = xbc1[:, 0, din + ns :]
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    decay = jnp.exp(dt * a)  # (B, H)
+    xf = xs.astype(jnp.float32)
+    state = cache.state.astype(jnp.float32) * decay[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xf, bmat.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhpn,bn->bhp", state, cmat.astype(jnp.float32))
+    y = y + xf * p["d_skip"][None, :, None]
+    y = y.reshape(b, 1, din)
+    y = _gated_norm(y, z, p["norm_w"]).astype(x.dtype)
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, SSMCache(conv=new_conv.astype(cache.conv.dtype),
+                         state=state.astype(cache.state.dtype))
+
+
+def _ssd_chunked(xs, bmat, cmat, dt, a, cfg: ModelConfig):
+    """Chunked SSD scan.
+
+    xs: (B,S,H,P); bmat/cmat: (B,S,N); dt: (B,S,H); a: (H,).
+    Returns (y (B,S,H,P) float32, final_state (B,H,P,N) float32).
+    """
+    b, s, nh, hp = xs.shape
+    ns = bmat.shape[-1]
+    q = min(cfg.ssm_chunk, s)
+    nc = -(-s // q)
+    pad = nc * q - s
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    xf = xs.astype(jnp.float32).reshape(b, nc, q, nh, hp)
+    bf = bmat.astype(jnp.float32).reshape(b, nc, q, ns)
+    cf = cmat.astype(jnp.float32).reshape(b, nc, q, ns)
+    dtc = dt.reshape(b, nc, q, nh)
+    da = dtc * a  # (B,NC,Q,H) negative increments
+    cum = jnp.cumsum(da, axis=2)  # inclusive within-chunk cumsum
+    seg_total = cum[:, :, -1, :]  # (B,NC,H)
+
+    # Within-chunk (quadratic) term: y_i += sum_{j<=i} C_i·B_j exp(cum_i-cum_j) dt_j x_j
+    cb = jnp.einsum("bcqn,bckn->bcqk", cf, bf)  # (B,NC,Q,Q)
+    decay = jnp.exp(
+        cum[:, :, :, None, :] - cum[:, :, None, :, :]
+    )  # (B,NC,Q(i),Q(j),H)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    lmat = jnp.where(tri[None, None, :, :, None], decay, 0.0)
+    scores = cb[..., None] * lmat * dtc[:, :, None, :, :]  # (B,NC,Qi,Qj,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, xf)
+
+    # Chunk-boundary states: S_c = sum_j exp(seg_total - cum_j) dt_j B_j x_j^T
+    w_state = jnp.exp(seg_total[:, :, None, :] - cum) * dtc  # (B,NC,Q,H)
+    s_chunk = jnp.einsum("bcqh,bcqhp,bcqn->bchpn", w_state, xf, bf)
+
+    def scan_body(state, xs_c):
+        s_c, seg_c = xs_c  # (B,H,P,N), (B,H)
+        new_state = state * jnp.exp(seg_c)[:, :, None, None] + s_c
+        return new_state, state  # emit the *incoming* state for this chunk
+
+    init = jnp.zeros((b, nh, hp, ns), jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        scan_body,
+        init,
+        (s_chunk.transpose(1, 0, 2, 3, 4), seg_total.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B,NC,H,P,N)
+
+    # Across-chunk term: y_i += exp(cum_i) C_i · state_prev
+    y_inter = jnp.einsum(
+        "bcqh,bcqn,bchpn->bcqhp", jnp.exp(cum), cf, prev_states
+    )
+    y = (y_intra + y_inter).reshape(b, nc * q, nh, hp)[:, :s]
+    return y, final_state
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> SSMCache:
+    din, nh, hp, ns, conv_dim = _dims(cfg)
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.conv_kernel - 1, conv_dim), dtype),
+        state=jnp.zeros((batch, nh, hp, ns), jnp.float32),
+    )

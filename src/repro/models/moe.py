@@ -1,0 +1,95 @@
+"""GSPMD-style token-choice top-k MoE with capacity-bounded dispatch.
+
+Tokens are processed in fixed-size groups; routing builds (group, token,
+expert, capacity) dispatch/combine tensors via k rounds of top-1 selection
+with per-expert capacity counters (the Switch/GSPMD pattern generalized to
+top-k).  Expert FFN weights are stacked (E, d, ff) and sharded
+experts->"model", d->"data": the dispatch einsum reshards tokens from
+data-parallel groups to expert-parallel shards, which XLA lowers to the
+canonical MoE all-to-all — visible in the dry-run HLO and counted by the
+roofline (EXPERIMENTS.md §Dry-run).
+
+The group size bounds the dispatch tensor to
+  tokens/group * group * E * C  with  C = ceil(group * k / E * capacity_factor),
+i.e. O(tokens * group * k * cf) elements regardless of E — set
+``cfg.moe_group`` to trade routing memory against load-balance slack.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.config import ModelConfig
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> dict:
+    from repro.models.layers import dense_init
+
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, e), jnp.float32),
+        "gate": dense_init(ks[1], (e, d, ff), dtype),
+        "up": dense_init(ks[2], (e, d, ff), dtype),
+        "down": dense_init(ks[3], (e, ff, d), dtype,
+                           scale=ff**-0.5 / (2 * cfg.num_layers) ** 0.5),
+    }
+
+
+def _capacity(group: int, cfg: ModelConfig) -> int:
+    c = int(group * cfg.top_k / cfg.num_experts * cfg.capacity_factor)
+    return max(4, -(-c // 4) * 4)  # round up to a multiple of 4
+
+
+def moe_ffn(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """x: (B, S, d) -> (B, S, d)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    t = b * s
+    group = min(cfg.moe_group, t)
+    assert t % group == 0, (t, group)
+    ng = t // group
+    cap = _capacity(group, cfg)
+
+    xs = x.reshape(ng, group, d)
+    logits = (xs.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (G, g, E)
+
+    # k rounds of top-1 with capacity counters.
+    gates = probs
+    combine = jnp.zeros((ng, group, e, cap), jnp.float32)
+    expert_count = jnp.zeros((ng, e), jnp.int32)
+    gate_sum = jnp.zeros((ng, group), jnp.float32)
+    for _ in range(k):
+        eidx = jnp.argmax(gates, axis=-1)  # (G, g)
+        oh = jax.nn.one_hot(eidx, e, dtype=jnp.float32)  # (G, g, E)
+        # Position of each token within its expert's buffer this round.
+        pos = jnp.cumsum(oh, axis=1) - 1 + expert_count[:, None, :].astype(jnp.float32)
+        pos_tok = jnp.sum(pos * oh, axis=-1)  # (G, g)
+        keep = pos_tok < cap
+        gval = jnp.sum(gates * oh, axis=-1)  # (G, g)
+        pos_oh = jax.nn.one_hot(pos_tok.astype(jnp.int32), cap, dtype=jnp.float32)
+        combine = combine + (gval * keep)[..., None, None] * (
+            oh[..., None] * pos_oh[:, :, None, :]
+        )
+        gate_sum = gate_sum + gval * keep
+        expert_count = expert_count + jnp.sum(
+            oh * keep[..., None], axis=1
+        ).astype(jnp.int32)
+        gates = gates * (1.0 - oh)  # exclude chosen expert from later rounds
+    if cfg.norm_topk:
+        combine = combine / jnp.maximum(gate_sum, 1e-9)[..., None, None]
+    dispatch = (combine > 0).astype(x.dtype)
+    combine = combine.astype(x.dtype)
+
+    # Dispatch -> expert compute -> combine.
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch, xs)
+    xe = shard(xe, "act_batch", "act_exp", None, None)
+    hg = jnp.einsum("gecd,edf->gecf", xe, p["gate"].astype(x.dtype))
+    hu = jnp.einsum("gecd,edf->gecf", xe, p["up"].astype(x.dtype))
+    hidden = jax.nn.silu(hg) * hu
+    hidden = shard(hidden, "act_batch", "act_exp", None, None)
+    ye = jnp.einsum("gecf,efd->gecd", hidden, p["down"].astype(x.dtype))
+    y = jnp.einsum("gtec,gecd->gtd", combine, ye)
+    return y.reshape(b, s, d)

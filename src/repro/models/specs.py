@@ -1,0 +1,221 @@
+"""PartitionSpec trees for parameters, train state and caches.
+
+FSDP("data") x TP("model") rules (DESIGN.md §3): weight matrices are 2-D
+sharded (in->"data", out->"model" or transposed for output projections);
+expert tensors put E on "model" (EP) and d on "data"; norms and tiny SSM
+params are replicated; the scan-stacked layer axis is always replicated.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+# Leaf-name -> spec for (in-dim, out-dim)-style weights, *without* the
+# stacked-layer axis (prepended for "blocks" leaves).
+_LEAF_SPECS = {
+    "wq": P("data", "model"),
+    "wk": P("data", "model"),
+    "wv": P("data", "model"),
+    "wo": P("model", "data"),
+    "gate": P("data", "model"),
+    "up": P("data", "model"),
+    "down": P("model", "data"),
+    "router": P("data", None),
+    "in_proj": P("data", "model"),
+    "out_proj": P("model", "data"),
+    "conv_w": P(),
+    "norm_w": P("model"),
+    "a_log": P(),
+    "d_skip": P(),
+    "dt_bias": P(),
+    "ln": P(),
+    "ln1": P(),
+    "ln2": P(),
+}
+
+_MOE_LEAF_SPECS = {
+    "gate": P("model", "data", None),
+    "up": P("model", "data", None),
+    "down": P("model", None, "data"),
+    "router": P("data", None),
+}
+
+# When the expert count doesn't divide the model axis (e.g. mixtral E=8 on a
+# 16-wide TP axis), fall back to TP-sharding the per-expert matrices instead
+# of replicating them.
+_MOE_FALLBACK_SPECS = {
+    "gate": P(None, "data", "model"),
+    "up": P(None, "data", "model"),
+    "down": P(None, "model", "data"),
+}
+
+
+def _spec_for_path(path, cfg: ModelConfig) -> P:
+    keys = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+    name = keys[-1]
+    in_moe = "moe" in keys
+    stacked = keys[0] == "blocks"
+    if name == "embed":
+        spec = P("model", "data")
+    elif name == "unembed":
+        spec = P("data", "model")
+    elif name == "final_ln":
+        spec = P()
+    elif in_moe and name in _MOE_LEAF_SPECS:
+        spec = _MOE_LEAF_SPECS[name]
+    elif name in _LEAF_SPECS:
+        spec = _LEAF_SPECS[name]
+    else:
+        spec = P()
+    if stacked:
+        spec = P(None, *spec)
+    return spec
+
+
+def param_specs(cfg: ModelConfig, params_shape: Any) -> Any:
+    """Pytree of PartitionSpec matching an (abstract) params tree."""
+    flat = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = [_spec_for_path(path, cfg) for path, _ in flat[0]]
+    return jax.tree_util.tree_unflatten(flat[1], specs)
+
+
+def _fit(spec: P, shape: tuple, mesh: Mesh) -> P:
+    """Drop shard axes that don't divide the dim or exist in the mesh."""
+    sizes = dict(mesh.shape)
+    out = []
+    for dim, s in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if s is None:
+            out.append(None)
+            continue
+        axes = s if isinstance(s, tuple) else (s,)
+        axes = tuple(a for a in axes if a in sizes)
+        total = 1
+        for a in axes:
+            total *= sizes[a]
+        if total and dim % total == 0 and axes:
+            out.append(axes if len(axes) > 1 else axes[0])
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def batch_axes(mesh: Mesh, pure_dp: bool = False) -> tuple:
+    names = ("pod", "data", "model") if pure_dp else ("pod", "data")
+    return tuple(a for a in names if a in mesh.axis_names)
+
+
+def batch_spec(mesh: Mesh, global_batch: int, ndim: int, pure_dp: bool = False) -> P:
+    axes = batch_axes(mesh, pure_dp)
+    total = 1
+    for a in axes:
+        total *= dict(mesh.shape)[a]
+    lead = axes if (axes and global_batch % total == 0) else None
+    if isinstance(lead, tuple) and len(lead) == 1:
+        lead = lead[0]
+    return P(lead, *([None] * (ndim - 1)))
+
+
+def cache_specs(cfg: ModelConfig, caches_shape: Any, mesh: Mesh) -> Any:
+    """Specs for (unstacked, per-layer) decode caches: batch -> data axes;
+    KV heads -> model when divisible, else the cache *sequence* dim takes
+    "model" (context parallelism); when the batch doesn't shard (long_500k
+    B=1) the sequence also takes "data"."""
+    from repro.models.attention import KVCache
+    from repro.models.mamba2 import SSMCache
+
+    sizes = dict(mesh.shape)
+    baxes = batch_axes(mesh)
+    btotal = 1
+    for a in baxes:
+        btotal *= sizes[a]
+
+    def b_spec_for(bdim: int):
+        ok = btotal > 1 and bdim % btotal == 0
+        return (baxes if len(baxes) > 1 else baxes[0]) if (baxes and ok) else None
+
+    def kv_spec(shape):
+        # (B, S_buf, KV, hd)
+        b_spec = b_spec_for(shape[0])
+        kv = "model" if shape[2] % sizes.get("model", 1) == 0 else None
+        seq = None
+        if kv is None and "model" in sizes and shape[1] % sizes["model"] == 0:
+            seq = "model"
+        if b_spec is None and "data" in sizes and shape[1] % sizes["data"] == 0:
+            seq = ("data", seq) if seq else "data"
+        return _fit(P(b_spec, seq, kv, None), shape, mesh)
+
+    def walk(node):
+        if isinstance(node, KVCache):
+            return KVCache(
+                k=kv_spec(node.k.shape), v=kv_spec(node.v.shape), index=P()
+            )
+        if isinstance(node, SSMCache):
+            return SSMCache(
+                conv=_fit(P(b_spec_for(node.conv.shape[0]), None, "model"),
+                          node.conv.shape, mesh),
+                state=_fit(P(b_spec_for(node.state.shape[0]), "model", None, None),
+                           node.state.shape, mesh),
+            )
+        if isinstance(node, dict):
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        return P()
+
+    return walk(caches_shape)
+
+
+def _fit_preserves(spec: P, shape: tuple, mesh: Mesh) -> bool:
+    return _fit(spec, shape, mesh) == P(
+        *(tuple(spec) + (None,) * (len(shape) - len(spec)))
+    )
+
+
+def fit_param_specs(
+    cfg: ModelConfig, params_shape: Any, mesh: Mesh, pure_dp: bool = False
+) -> Any:
+    """param_specs with every axis validated against the mesh/shape; MoE
+    expert matrices fall back to TP sharding when EP doesn't divide.
+
+    ``pure_dp``: drop "model" from param specs (params replicated over the
+    model axis; the batch takes it instead) — the right recipe for sub-1B
+    archs where TP shards are smaller than a VPU tile (EXPERIMENTS.md §Perf).
+    """
+    flat = jax.tree_util.tree_flatten_with_path(params_shape)
+    out = []
+    for path, leaf in flat[0]:
+        keys = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+        name, in_moe, stacked = keys[-1], "moe" in keys, keys[0] == "blocks"
+        spec = _spec_for_path(path, cfg)
+        if in_moe and name in _MOE_FALLBACK_SPECS:
+            if not _fit_preserves(spec, leaf.shape, mesh):
+                fb = _MOE_FALLBACK_SPECS[name]
+                spec = P(None, *fb) if stacked else fb
+        if pure_dp:
+            spec = P(*(
+                None if s == "model" else s for s in spec
+            ))
+        out.append(_fit(spec, leaf.shape, mesh))
+    return jax.tree_util.tree_unflatten(flat[1], out)
+
+
+def shardings_of(spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def as_sds(shape_tree: Any, sharding_tree: Any) -> Any:
+    """ShapeDtypeStructs with shardings attached (dry-run inputs)."""
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        shape_tree,
+        sharding_tree,
+    )

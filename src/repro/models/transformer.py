@@ -1,0 +1,84 @@
+"""Decoder blocks for every assigned family, with cache plumbing.
+
+Block kinds:
+  * attention block ("dense"/"moe"/"vlm"/"audio"): pre-RMSNorm attn + SwiGLU
+    MLP (or GSPMD MoE).
+  * ssm block ("ssm"): pre-RMSNorm Mamba2/SSD (no MLP, following Mamba2).
+  * hybrid ("hybrid", zamba2-style): ssm blocks; one *shared-weight*
+    attention+MLP block applied after every ``hybrid_attn_every`` layers.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import mamba2, moe
+from repro.models.attention import KVCache, attention, init_attention
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, rms_norm, swiglu_mlp
+from repro.models.mamba2 import SSMCache, init_mamba, mamba_block
+
+
+def init_mlp(key, cfg: ModelConfig, dtype) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(ks[0], (d, ff), dtype),
+        "up": dense_init(ks[1], (d, ff), dtype),
+        "down": dense_init(ks[2], (ff, d), dtype,
+                           scale=ff**-0.5 / (2 * cfg.num_layers) ** 0.5),
+    }
+
+
+def init_attn_block(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    ka, km = jax.random.split(key)
+    block = {
+        "ln1": jnp.ones((d,), jnp.float32),
+        "attn": init_attention(ka, cfg, dtype),
+        "ln2": jnp.ones((d,), jnp.float32),
+    }
+    if cfg.is_moe:
+        block["moe"] = moe.init_moe(km, cfg, dtype)
+    else:
+        block["mlp"] = init_mlp(km, cfg, dtype)
+    return block
+
+
+def init_ssm_block(key, cfg: ModelConfig, dtype) -> dict:
+    return {
+        "ln": jnp.ones((cfg.d_model,), jnp.float32),
+        "mamba": init_mamba(key, cfg, dtype),
+    }
+
+
+def attn_block_apply(
+    p: dict,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    positions: jnp.ndarray,
+    cache: Optional[KVCache] = None,
+):
+    h = rms_norm(x, p["ln1"])
+    out, new_cache = attention(p["attn"], h, cfg, positions, cache)
+    x = x + out
+    h = rms_norm(x, p["ln2"])
+    if cfg.is_moe:
+        x = x + moe.moe_ffn(p["moe"], h, cfg)
+    else:
+        x = x + swiglu_mlp(p["mlp"], h)
+    return x, new_cache
+
+
+def ssm_block_apply(
+    p: dict,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    cache: Optional[SSMCache] = None,
+):
+    h = rms_norm(x, p["ln"])
+    out, new_cache = mamba_block(p["mamba"], h, cfg, cache)
+    return x + out, new_cache

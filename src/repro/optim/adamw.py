@@ -1,0 +1,87 @@
+"""AdamW with global-norm clipping and configurable moment dtype.
+
+Moments inherit the parameter sharding (elementwise update), so under the
+FSDP("data") x TP("model") rules the optimizer state is fully ZeRO-sharded
+for free.  ``moment_dtype="bfloat16"`` halves optimizer HBM for the 100B+
+archs (see EXPERIMENTS.md §Dry-run memory table).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: dict
+    nu: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: Callable[[jnp.ndarray], jnp.ndarray] | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: float = 1.0
+    moment_dtype: Optional[str] = None  # None -> param dtype
+
+    def init(self, params) -> AdamWState:
+        dt = jnp.dtype(self.moment_dtype) if self.moment_dtype else None
+
+        def zeros(p):
+            return jnp.zeros(p.shape, dt or p.dtype)
+
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(zeros, params),
+            nu=jax.tree.map(zeros, params),
+        )
+
+    def _lr(self, step):
+        if callable(self.learning_rate):
+            return self.learning_rate(step)
+        return jnp.asarray(self.learning_rate, jnp.float32)
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        if self.clip_norm:
+            gnorm = jnp.sqrt(
+                sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                    for g in jax.tree.leaves(grads))
+            )
+            scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+        else:
+            gnorm = jnp.asarray(0.0)
+            scale = jnp.asarray(1.0)
+        lr = self._lr(step)
+        c1 = 1.0 - self.b1**step.astype(jnp.float32)
+        c2 = 1.0 - self.b2**step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * scale
+            m_new = self.b1 * m.astype(jnp.float32) + (1 - self.b1) * g
+            v_new = self.b2 * v.astype(jnp.float32) + (1 - self.b2) * g * g
+            mh = m_new / c1
+            vh = v_new / c2
+            delta = mh / (jnp.sqrt(vh) + self.eps)
+            if self.weight_decay:
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            return new_p, m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+        flat_p, tree = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state.mu)
+        flat_v = jax.tree.leaves(state.nu)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_params = jax.tree.unflatten(tree, [o[0] for o in out])
+        new_mu = jax.tree.unflatten(tree, [o[1] for o in out])
+        new_nu = jax.tree.unflatten(tree, [o[2] for o in out])
+        return new_params, AdamWState(step, new_mu, new_nu), {
+            "grad_norm": gnorm, "lr": lr,
+        }

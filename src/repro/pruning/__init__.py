@@ -1,0 +1,26 @@
+"""Layer-wise pruning frameworks with TSENOR integration (paper Sec. 4).
+
+Conventions: weights are (in, out) with ``y = x @ W``; calibration
+activations are X with shape (tokens, in); the layer-wise objective is
+
+    min_W  1/2 ||X (W - What)||_F^2 + lambda/2 ||W - What||_F^2
+    s.t.   W in T (transposable N:M support)       (paper Eq. 7)
+
+Every method returns ``(w_pruned, mask)``.
+"""
+from repro.pruning.calib import gram_matrix, reconstruction_error
+from repro.pruning.magnitude import magnitude_prune
+from repro.pruning.wanda import wanda_prune
+from repro.pruning.sparsegpt import sparsegpt_prune
+from repro.pruning.alps import alps_prune
+from repro.pruning.runner import prune_transformer
+
+__all__ = [
+    "gram_matrix",
+    "magnitude_prune",
+    "wanda_prune",
+    "sparsegpt_prune",
+    "alps_prune",
+    "prune_transformer",
+    "reconstruction_error",
+]

@@ -1,0 +1,129 @@
+"""ALPS [Meng et al. 2024] + TSENOR: ADMM layer-wise pruning with
+transposable N:M constraints (paper Sec. 4, Prop. 1, Thm. 1).
+
+Updates (Eq. 30), with eigendecomposition H = QΛQᵀ so every W-update under a
+changing penalty ρ_t is two dense matmuls:
+
+    W   = Q diag(1/(Λ+ρ)) Qᵀ (H·What − V + ρD)
+    S   = TSENOR mask of (W + V/ρ)²          (problem (10))
+    D   = (W + V/ρ) ⊙ S
+    V  += ρ (W − D)
+
+The Assumption-1 safeguard keeps the previous mask whenever the new one would
+*decrease* the D-subproblem objective — this is what makes Theorem 1
+(convergence of W(t), D(t) to a common limit) hold with an inexact mask
+solver.  ρ_t grows geometrically so Σ 1/ρ_t < ∞.  The whole ADMM loop is one
+jitted ``lax.fori_loop`` with the TSENOR solve inlined.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blocks as blk
+from repro.core.dykstra import dykstra_log
+from repro.core.rounding import round_blocks
+from repro.core.solver import SolverConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class AlpsConfig:
+    iters: int = 80
+    rho0_rel: float = 0.03       # rho0 = rho0_rel * mean(diag H)
+    rho_growth: float = 1.05
+    solver: SolverConfig = SolverConfig(iters=150)
+
+
+def _mask_for(scores, n, m, transposable, iters, ls_steps, tau_scale):
+    if transposable:
+        blocks = blk.to_blocks(scores, m)
+        scale = jnp.max(blocks, axis=(1, 2), keepdims=True)
+        tau = tau_scale / jnp.maximum(scale, 1e-30)
+        s_approx = dykstra_log(blocks, n, iters, tau=tau)
+        mask = round_blocks(s_approx, blocks, n, ls_steps)
+        return blk.from_blocks(mask, scores.shape)
+    r, c = scores.shape
+    g = scores.reshape(r // m, m, c)
+    rank = jnp.argsort(jnp.argsort(-g, axis=1), axis=1)
+    return (rank < n).reshape(r, c)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "n", "m", "transposable", "iters", "rho_growth",
+        "solver_iters", "ls_steps", "tau_scale",
+    ),
+)
+def _alps_jit(
+    w_hat, h, n, m, transposable, iters, rho0, rho_growth,
+    solver_iters, ls_steps, tau_scale,
+):
+    evals, q = jnp.linalg.eigh(h)
+    hw = h @ w_hat
+
+    def layer_obj(d):
+        diff = d - w_hat
+        return 0.5 * jnp.sum(diff * (h @ diff))
+
+    mask0 = _mask_for(
+        jnp.abs(w_hat), n, m, transposable, solver_iters, ls_steps, tau_scale
+    )
+    d0 = jnp.where(mask0, w_hat, 0.0)
+    v0 = jnp.zeros_like(w_hat)
+
+    def body(t, carry):
+        mask, d, v, rho, best_d, best_mask, best_obj = carry
+        w = q @ ((q.T @ (hw - v + rho * d)) / (evals + rho)[:, None])
+        target = w + v / rho
+        scores = target**2
+        new_mask = _mask_for(
+            scores, n, m, transposable, solver_iters, ls_steps, tau_scale
+        )
+        # Assumption-1 safeguard (never decrease the D-subproblem objective).
+        keep_new = jnp.sum(scores * new_mask) >= jnp.sum(scores * mask)
+        mask = jnp.where(keep_new, new_mask, mask)
+        d = jnp.where(mask, target, 0.0)
+        v = v + rho * (w - d)
+        rho = rho * rho_growth
+        obj = layer_obj(d)
+        better = obj < best_obj
+        best_d = jnp.where(better, d, best_d)
+        best_mask = jnp.where(better, mask, best_mask)
+        best_obj = jnp.where(better, obj, best_obj)
+        return mask, d, v, rho, best_d, best_mask, best_obj
+
+    init = (mask0, d0, v0, jnp.float32(rho0), d0, mask0, layer_obj(d0))
+    out = jax.lax.fori_loop(0, iters, body, init)
+    _, _, _, _, best_d, best_mask, _ = out
+    return best_d, best_mask
+
+
+def alps_prune(
+    w_hat: jnp.ndarray,
+    h: jnp.ndarray,
+    n: int,
+    m: int,
+    transposable: bool = True,
+    config: AlpsConfig = AlpsConfig(),
+):
+    """Returns (pruned W = best ADMM D iterate, mask)."""
+    w_hat = jnp.asarray(w_hat, jnp.float32)
+    h = jnp.asarray(h, jnp.float32)
+    rho0 = float(config.rho0_rel) * float(jnp.mean(jnp.diag(h)))
+    return _alps_jit(
+        w_hat,
+        h,
+        n,
+        m,
+        transposable,
+        config.iters,
+        rho0,
+        config.rho_growth,
+        config.solver.iters,
+        config.solver.ls_steps,
+        config.solver.tau_scale,
+    )

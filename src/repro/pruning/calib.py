@@ -1,0 +1,30 @@
+"""Calibration statistics for layer-wise pruning."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gram_matrix(x: jnp.ndarray, damp: float = 1e-2) -> jnp.ndarray:
+    """H = XᵀX + λI with relative damping λ = damp * mean(diag XᵀX).
+
+    ``x``: (tokens, in) calibration activations (flattened over batch/seq).
+    The relative damping rule matches the SparseGPT/ALPS implementations.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    h = x.T @ x
+    lam = damp * jnp.mean(jnp.diag(h))
+    return h + lam * jnp.eye(h.shape[0], dtype=h.dtype)
+
+
+def col_norms(x: jnp.ndarray) -> jnp.ndarray:
+    """Per-input-feature activation norms ||X_:,i||_2 (Wanda importance)."""
+    return jnp.sqrt(jnp.sum(jnp.asarray(x, jnp.float32) ** 2, axis=0))
+
+
+def reconstruction_error(
+    x: jnp.ndarray, w_hat: jnp.ndarray, w: jnp.ndarray
+) -> jnp.ndarray:
+    """||X What - X W||_F^2 / ||X What||_F^2 (paper §B.2.3)."""
+    ref = x @ w_hat
+    diff = ref - x @ w
+    return jnp.sum(diff**2) / jnp.maximum(jnp.sum(ref**2), 1e-30)

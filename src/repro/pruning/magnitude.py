@@ -1,0 +1,21 @@
+"""Magnitude pruning with (transposable) N:M masks."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.solver import SolverConfig, nm_mask, transposable_nm_mask
+
+
+def magnitude_prune(
+    w: jnp.ndarray,
+    n: int,
+    m: int,
+    transposable: bool = True,
+    config: SolverConfig = SolverConfig(),
+):
+    """TSENOR (or row-wise N:M) mask directly on |W|; zero outside the mask."""
+    if transposable:
+        mask = transposable_nm_mask(w, n, m, config)
+    else:
+        mask = nm_mask(w, n, m, axis=0)
+    return jnp.where(mask, w, 0), mask

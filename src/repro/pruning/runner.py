@@ -1,0 +1,120 @@
+"""Sequential layer-wise LM pruning (SparseGPT-style propagation).
+
+Walks a dense-family transformer layer by layer: capture each projection's
+*true* input activations (with earlier layers already pruned), prune it with
+the chosen method + TSENOR transposable masks, and propagate the pruned
+activations forward — exactly how the paper applies Wanda/SparseGPT/ALPS to
+LLaMA.  Covers the attention (wq/wk/wv/wo) and MLP (gate/up/down) projections
+of the "dense"/"vlm"/"audio" families; MoE expert matrices and SSM in/out
+projections use the same per-matrix APIs directly (see examples/prune_llm.py).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.solver import SolverConfig
+from repro.models.attention import attention
+from repro.models.config import ModelConfig
+from repro.models.layers import rms_norm, embed_tokens
+from repro.pruning.alps import AlpsConfig, alps_prune
+from repro.pruning.calib import gram_matrix
+from repro.pruning.sparsegpt import sparsegpt_prune
+from repro.pruning.wanda import wanda_prune
+
+
+def _prune_one(w, x_flat, method, n, m, transposable, solver, alps_cfg):
+    if method == "wanda":
+        return wanda_prune(w, x_flat, n, m, transposable, solver)
+    if method == "sparsegpt":
+        return sparsegpt_prune(w, gram_matrix(x_flat), n, m, transposable, solver)
+    if method == "alps":
+        return alps_prune(w, gram_matrix(x_flat), n, m, transposable, alps_cfg)
+    if method == "magnitude":
+        from repro.pruning.magnitude import magnitude_prune
+
+        return magnitude_prune(w, n, m, transposable, solver)
+    raise ValueError(method)
+
+
+def prune_transformer(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: Optional[jnp.ndarray] = None,
+    embeds: Optional[jnp.ndarray] = None,
+    method: str = "alps",
+    n: int = 2,
+    m: int = 4,
+    transposable: bool = True,
+    solver: SolverConfig = SolverConfig(iters=150),
+    alps_cfg: Optional[AlpsConfig] = None,
+    log=lambda s: None,
+):
+    """Returns (pruned params, {proj_name: stacked masks}).
+
+    ``tokens``/``embeds``: calibration batch (B, S)/(B, S, d).
+    """
+    assert cfg.family in ("dense", "vlm", "audio"), cfg.family
+    alps_cfg = alps_cfg or AlpsConfig(iters=50, solver=solver)
+    dtype = jnp.float32
+    if embeds is None:
+        x = embed_tokens(params["embed"], tokens, dtype)
+    else:
+        x = embeds.astype(dtype)
+    b, s, d = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    blocks = params["blocks"]
+    new_attn = {k: [] for k in ("wq", "wk", "wv", "wo")}
+    new_mlp = {k: [] for k in ("gate", "up", "down")}
+    masks_attn = {k: [] for k in ("wq", "wk", "wv", "wo")}
+    masks_mlp = {k: [] for k in ("gate", "up", "down")}
+
+    def pr(w, x_act, name, l):
+        wp, mask = _prune_one(
+            w.astype(jnp.float32), x_act.reshape(-1, x_act.shape[-1]),
+            method, n, m, transposable, solver, alps_cfg,
+        )
+        log(f"[prune] layer {l} {name}: done")
+        return wp.astype(w.dtype), mask
+
+    for l in range(cfg.num_layers):
+        lp = jax.tree.map(lambda a: a[l], blocks)
+        h1 = rms_norm(x, lp["ln1"])
+        ap = dict(lp["attn"])
+        for nm_ in ("wq", "wk", "wv"):
+            ap[nm_], mk = pr(ap[nm_], h1, nm_, l)
+            new_attn[nm_].append(ap[nm_])
+            masks_attn[nm_].append(mk)
+        cap = {}
+        attn_out, _ = attention(ap, h1, cfg, positions, capture=cap)
+        ap["wo"], mk = pr(ap["wo"], cap["pre_out"], "wo", l)
+        masks_attn["wo"].append(mk)
+        new_attn["wo"].append(ap["wo"])
+        attn_out = cap["pre_out"] @ ap["wo"].astype(h1.dtype)
+        x = x + attn_out
+
+        h2 = rms_norm(x, lp["ln2"])
+        mp = dict(lp["mlp"])
+        for nm_ in ("gate", "up"):
+            mp[nm_], mk = pr(mp[nm_], h2, nm_, l)
+            new_mlp[nm_].append(mp[nm_])
+            masks_mlp[nm_].append(mk)
+        hidden = jax.nn.silu(h2 @ mp["gate"].astype(h2.dtype)) * (
+            h2 @ mp["up"].astype(h2.dtype)
+        )
+        mp["down"], mk = pr(mp["down"], hidden, "down", l)
+        masks_mlp["down"].append(mk)
+        new_mlp["down"].append(mp["down"])
+        x = x + hidden @ mp["down"].astype(h2.dtype)
+
+    new_blocks = dict(blocks)
+    new_blocks["attn"] = {k: jnp.stack(v) for k, v in new_attn.items()}
+    new_blocks["mlp"] = {k: jnp.stack(v) for k, v in new_mlp.items()}
+    masks = {
+        "attn": {k: jnp.stack(v) for k, v in masks_attn.items()},
+        "mlp": {k: jnp.stack(v) for k, v in masks_mlp.items()},
+    }
+    return dict(params, blocks=new_blocks), masks

@@ -1,0 +1,109 @@
+"""SparseGPT [Frantar & Alistarh 2023] with TSENOR transposable masks.
+
+OBS-based one-shot pruning in the (in, out) convention: input dimensions are
+processed in groups of M; each group's mask comes from TSENOR on the OBS
+scores (W_ij / [H^-1]_ii)^2 (paper Sec. 4, "Integration with SparseGPT"), and
+the remaining rows receive the standard OBS compensation update through the
+upper Cholesky factor of H^{-1}.
+
+The whole pass — group scan, TSENOR solve, within-group OBS recursion — is a
+single jitted ``lax.scan``; the sequential row update exploits the upper-
+triangular structure of the Cholesky factor (hinv[i, :i] = 0) to stay
+shape-static.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import jax.scipy.linalg as jsl
+
+from repro.core import blocks as blk
+from repro.core.rounding import round_blocks
+from repro.core.dykstra import dykstra_log
+from repro.core.solver import SolverConfig
+
+
+def upper_chol_of_inverse(h: jnp.ndarray) -> jnp.ndarray:
+    """Upper Cholesky factor U of H⁻¹ (H⁻¹ = UᵀU), as in SparseGPT."""
+    h = jnp.asarray(h, jnp.float32)
+    eye = jnp.eye(h.shape[0], dtype=h.dtype)
+    c = jsl.cholesky(h, lower=True)
+    h_inv = jsl.cho_solve((c, True), eye)
+    return jnp.linalg.cholesky(h_inv, upper=True)
+
+
+def _tsenor_group_mask(scores, n, m, iters, ls_steps, tau_scale):
+    """Transposable mask for an (M, out) score group via the block batch."""
+    blocks = blk.to_blocks(scores, m)  # (out/m, m, m)
+    scale = jnp.max(blocks, axis=(1, 2), keepdims=True)
+    tau = tau_scale / jnp.maximum(scale, 1e-30)
+    s_approx = dykstra_log(blocks, n, iters, tau=tau)
+    mask = round_blocks(s_approx, blocks, n, ls_steps)
+    return blk.from_blocks(mask, scores.shape)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "m", "transposable", "iters", "ls_steps", "tau_scale")
+)
+def _sparsegpt_jit(w_hat, h, n, m, transposable, iters, ls_steps, tau_scale):
+    in_dim, out_dim = w_hat.shape
+    hinv = upper_chol_of_inverse(h)
+    diag = jnp.diag(hinv)
+    row_gt = jnp.arange(in_dim)
+
+    def group_step(w, s):
+        dslice = jax.lax.dynamic_slice_in_dim(diag, s, m)
+        wg = jax.lax.dynamic_slice_in_dim(w, s, m, axis=0)
+        scores = (wg / dslice[:, None]) ** 2
+        if transposable:
+            gmask = _tsenor_group_mask(scores, n, m, iters, ls_steps, tau_scale)
+        else:
+            rank = jnp.argsort(jnp.argsort(-scores, axis=0), axis=0)
+            gmask = rank < n
+
+        def row_step(r, w):
+            i = s + r
+            row = jax.lax.dynamic_index_in_dim(w, i, 0, keepdims=False)
+            q = jnp.where(gmask[r], row, 0.0)
+            hrow = jax.lax.dynamic_index_in_dim(hinv, i, 0, keepdims=False)
+            d = jax.lax.dynamic_index_in_dim(dslice, r, 0, keepdims=False)
+            err = (row - q) / d
+            w = jax.lax.dynamic_update_index_in_dim(w, q, i, 0)
+            # hinv is upper-triangular, so masking j > i reproduces hinv[i, i+1:].
+            return w - jnp.outer(jnp.where(row_gt > i, hrow, 0.0), err)
+
+        w = jax.lax.fori_loop(0, m, row_step, w)
+        return w, gmask
+
+    starts = jnp.arange(0, in_dim, m)
+    w, gmasks = jax.lax.scan(group_step, jnp.asarray(w_hat, jnp.float32), starts)
+    mask = gmasks.reshape(in_dim, out_dim)
+    return jnp.where(mask, w, 0.0), mask
+
+
+def sparsegpt_prune(
+    w_hat: jnp.ndarray,
+    h: jnp.ndarray,
+    n: int,
+    m: int,
+    transposable: bool = True,
+    config: SolverConfig = SolverConfig(iters=150),
+):
+    """Returns (pruned + OBS-updated W, mask).
+
+    ``w_hat``: (in, out) dense weights; ``h``: damped Gram XᵀX + λI (in, in).
+    """
+    in_dim, out_dim = w_hat.shape
+    assert in_dim % m == 0 and out_dim % m == 0, (w_hat.shape, m)
+    return _sparsegpt_jit(
+        jnp.asarray(w_hat, jnp.float32),
+        jnp.asarray(h, jnp.float32),
+        n,
+        m,
+        transposable,
+        config.iters,
+        config.ls_steps,
+        config.tau_scale,
+    )

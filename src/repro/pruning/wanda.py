@@ -1,0 +1,29 @@
+"""Wanda [Sun et al. 2023] with TSENOR transposable masks (paper Sec. 4).
+
+Importance score: |W_ij| * ||X_:,i||_2.  The transposable mask is found by
+solving problem (1) on the importance matrix; weights outside the mask are
+zeroed (Wanda performs no weight update).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.solver import SolverConfig, nm_mask, transposable_nm_mask
+from repro.pruning.calib import col_norms
+
+
+def wanda_prune(
+    w: jnp.ndarray,
+    x: jnp.ndarray,
+    n: int,
+    m: int,
+    transposable: bool = True,
+    config: SolverConfig = SolverConfig(),
+):
+    """Returns (pruned W, mask).  ``x``: (tokens, in) calibration inputs."""
+    imp = jnp.abs(w) * col_norms(x)[:, None]
+    if transposable:
+        mask = transposable_nm_mask(imp, n, m, config)
+    else:
+        mask = nm_mask(imp, n, m, axis=0)
+    return jnp.where(mask, w, 0), mask

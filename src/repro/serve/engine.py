@@ -1,0 +1,83 @@
+"""Batched serving engine: prefill + autoregressive decode.
+
+``build_serve_step`` produces the jitted single-token step that the dry-run
+lowers for the decode_* shape cells: one new token against a KV cache (or SSM
+state) of the cell's seq_len.  The engine wraps it with greedy/temperature
+sampling and a fixed-slot batch (continuous batching would swap finished
+slots; we keep slot management host-side and simple).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+
+def build_serve_step(cfg: ModelConfig, in_shardings=None, donate: bool = True):
+    """Jitted decode step: (params, token (B,), caches, index) -> (logits, caches)."""
+
+    def step(params, token, caches, index):
+        return lm.decode_step(params, cfg, token, caches, index)
+
+    return jax.jit(
+        step,
+        donate_argnums=(2,) if donate else (),
+        in_shardings=in_shardings,
+    )
+
+
+def build_prefill(cfg: ModelConfig, in_shardings=None):
+    def pre(params, caches, tokens=None, embeds=None):
+        return lm.prefill(params, cfg, caches, tokens=tokens, embeds=embeds)
+
+    return jax.jit(pre, static_argnames=(), in_shardings=in_shardings)
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    cfg: ModelConfig
+    params: Any
+    max_len: int
+    temperature: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        self._decode = build_serve_step(self.cfg, donate=True)
+        self._prefill = build_prefill(self.cfg)
+
+    def generate(
+        self,
+        prompts: jnp.ndarray,  # (B, S_prompt) int32
+        max_new_tokens: int,
+        embeds: Optional[jnp.ndarray] = None,
+    ) -> jnp.ndarray:
+        """Greedy/temperature generation; returns (B, max_new_tokens)."""
+        b = prompts.shape[0] if prompts is not None else embeds.shape[0]
+        s0 = prompts.shape[1] if prompts is not None else embeds.shape[1]
+        caches = lm.init_cache(self.cfg, b, self.max_len)
+        logits, caches = self._prefill(
+            self.params, caches,
+            tokens=None if embeds is not None else prompts,
+            embeds=embeds,
+        )
+        key = jax.random.PRNGKey(self.seed)
+        out = []
+        tok = self._sample(logits, key)
+        out.append(tok)
+        index = jnp.asarray(s0, jnp.int32)
+        for i in range(max_new_tokens - 1):
+            logits, caches = self._decode(self.params, tok, caches, index + i)
+            key, sub = jax.random.split(key)
+            tok = self._sample(logits, sub)
+            out.append(tok)
+        return jnp.stack(out, axis=1)
+
+    def _sample(self, logits: jnp.ndarray, key) -> jnp.ndarray:
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / self.temperature).astype(jnp.int32)

@@ -1,0 +1,12 @@
+"""N:M sparsity substrate: mask application, compressed storage formats."""
+from repro.sparsity.compressed import compress_nm, decompress_nm, compressed_bytes
+from repro.sparsity.masks import apply_mask, mask_sparsity, sparsify_pytree
+
+__all__ = [
+    "compress_nm",
+    "decompress_nm",
+    "compressed_bytes",
+    "apply_mask",
+    "mask_sparsity",
+    "sparsify_pytree",
+]

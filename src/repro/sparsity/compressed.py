@@ -1,0 +1,66 @@
+"""Compressed storage for (transposable) N:M sparse weights on TPU.
+
+Layout: a dense weight W of shape (K, F) with N:M sparsity along K (each
+column keeps at most N of every M consecutive rows) is stored as
+
+    values  : (K/M, N, F)  weight dtype (bf16/f32)
+    indices : (K/M, N, F)  int8 — position of each kept value inside its
+                            M-group (0..M-1); slots beyond the group's
+                            nonzero count hold index 0 with value 0.
+
+HBM traffic ratio vs dense: (N*bytes_w + N) / (M*bytes_w) — e.g. 0.375x for
+8:32 bf16, 0.75x for 16:32 bf16.  With a *transposable* mask the same buffer
+serves both W·x and Wᵀ·g (the Pallas kernel decompresses the transposed tile),
+which is the paper's training-time benefit restated for TPU (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def compress_nm(
+    w: jnp.ndarray, mask: jnp.ndarray, n: int, m: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Compress masked weights to (values, indices).
+
+    Requires every (M-group, column) to contain at most N mask entries.
+    """
+    k, f = w.shape
+    assert k % m == 0, (k, m)
+    g = k // m
+    wm = jnp.where(mask, w, 0).reshape(g, m, f)
+    mk = mask.reshape(g, m, f)
+    # Stable order: selected positions first (ascending), then the rest.
+    order = jnp.argsort(jnp.where(mk, 0, 1), axis=1, stable=True)  # (g, m, f)
+    idx = order[:, :n, :].astype(jnp.int8)
+    vals = jnp.take_along_axis(wm, idx.astype(jnp.int32), axis=1)
+    # Zero out slots that exceeded the group's nonzero count.
+    counts = mk.sum(axis=1, keepdims=True)  # (g, 1, f)
+    slot = jnp.arange(n)[None, :, None]
+    live = slot < counts
+    vals = jnp.where(live, vals, 0).astype(w.dtype)
+    idx = jnp.where(live, idx, 0).astype(jnp.int8)
+    return vals, idx
+
+
+def decompress_nm(vals: jnp.ndarray, idx: jnp.ndarray, m: int) -> jnp.ndarray:
+    """(values, indices) -> dense (K, F).  Pure-jnp oracle used by tests."""
+    g, n, f = vals.shape
+    p = jnp.arange(m, dtype=jnp.int32)[None, :, None, None]  # (1, m, 1, 1)
+    eq = idx.astype(jnp.int32)[:, None, :, :] == p  # (g, m, n, f)
+    dense = jnp.sum(jnp.where(eq, vals[:, None, :, :].astype(jnp.float32), 0.0), axis=2)
+    return dense.reshape(g * m, f).astype(vals.dtype)
+
+
+def compressed_bytes(k: int, f: int, n: int, m: int, bytes_w: int = 2) -> dict:
+    """HBM footprint accounting used by the roofline benchmark."""
+    dense = k * f * bytes_w
+    vals = (k // m) * n * f * bytes_w
+    idx = (k // m) * n * f  # int8
+    return {
+        "dense": dense,
+        "values": vals,
+        "indices": idx,
+        "compressed": vals + idx,
+        "ratio": (vals + idx) / dense,
+    }

@@ -1,0 +1,71 @@
+"""Mask application utilities for sparse training / fine-tuning.
+
+Masks are fixed after pruning; sparse fine-tuning multiplies weights by their
+mask in the forward pass (and therefore gradients are masked by the chain
+rule).  ``sparsify_pytree`` walks a parameter tree and attaches transposable
+N:M masks to every 2-D weight whose both dims divide by M (embedding tables
+and norm/bias vectors are exempt — paper prunes linear projections only).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.solver import SolverConfig, transposable_nm_mask
+
+
+def apply_mask(params, masks):
+    """Elementwise multiply params by masks where a mask exists (None skips)."""
+
+    def f(p, m):
+        return p if m is None else p * m.astype(p.dtype)
+
+    return jax.tree.map(f, params, masks, is_leaf=lambda x: x is None)
+
+
+def mask_sparsity(masks) -> float:
+    """Fraction of zeros across all non-None masks."""
+    leaves = [m for m in jax.tree.leaves(masks) if m is not None]
+    total = sum(m.size for m in leaves)
+    nnz = sum(int(jnp.sum(m)) for m in leaves)
+    return 1.0 - nnz / max(total, 1)
+
+
+def default_prunable(path: tuple, p: jnp.ndarray, m: int) -> bool:
+    """Prune 2-D (or stacked 3-D) projection weights divisible by M."""
+    if p.ndim == 2:
+        return p.shape[0] % m == 0 and p.shape[1] % m == 0
+    if p.ndim == 3:  # scan-stacked layers: (L, in, out)
+        return p.shape[1] % m == 0 and p.shape[2] % m == 0
+    return False
+
+
+def sparsify_pytree(
+    params,
+    n: int,
+    m: int,
+    config: SolverConfig = SolverConfig(),
+    prunable: Callable = default_prunable,
+):
+    """Compute transposable N:M masks for every prunable weight in a pytree.
+
+    Returns a mask pytree with ``None`` at exempt leaves.  Stacked (L, in, out)
+    weights are masked per layer (block batches concatenate across layers —
+    TSENOR's block-batch formulation doesn't care).
+    """
+    flat = jax.tree_util.tree_flatten_with_path(params)
+    masks = []
+    for path, p in flat[0]:
+        if not prunable(path, p, m):
+            masks.append(None)
+            continue
+        if p.ndim == 3:
+            mk = jnp.stack(
+                [transposable_nm_mask(p[i], n, m, config) for i in range(p.shape[0])]
+            )
+        else:
+            mk = transposable_nm_mask(p, n, m, config)
+        masks.append(mk)
+    return jax.tree_util.tree_unflatten(flat[1], masks)

@@ -1,0 +1,11 @@
+"""Training substrate: jitted step builder and fault-tolerant loop."""
+from repro.train.step import TrainState, build_train_step, make_train_state
+from repro.train.loop import TrainLoop, TrainLoopConfig
+
+__all__ = [
+    "TrainState",
+    "build_train_step",
+    "make_train_state",
+    "TrainLoop",
+    "TrainLoopConfig",
+]

@@ -1,0 +1,156 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import transposable_nm_mask
+from repro.core.rounding import greedy_round as greedy_ref
+from repro.kernels.dykstra.kernel import dykstra_pallas
+from repro.kernels.dykstra.ref import dykstra_ref
+from repro.kernels.nm_spmm.kernel import nm_spmm_pallas
+from repro.kernels.nm_spmm.ops import nm_linear
+from repro.kernels.nm_spmm.ref import nm_spmm_ref
+from repro.kernels.rounding.kernel import greedy_round_pallas
+from repro.sparsity.compressed import compress_nm, decompress_nm
+
+RNG = np.random.default_rng(42)
+
+
+# ---------------------------------------------------------------------------
+# dykstra kernel.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,m,n", [
+    (3, 4, 2), (7, 8, 4), (16, 8, 2), (5, 16, 8), (9, 16, 4), (4, 32, 16),
+])
+def test_dykstra_kernel_matches_ref(b, m, n):
+    w = np.abs(RNG.normal(size=(b, m, m))).astype(np.float32)
+    tlw = jnp.asarray(w) * (200.0 / w.max(axis=(1, 2), keepdims=True))
+    out_k = dykstra_pallas(tlw, n, iters=60, block_b=4)
+    out_r = dykstra_ref(tlw, n, iters=60)
+    np.testing.assert_allclose(np.array(out_k), np.array(out_r), rtol=1e-5, atol=1e-5)
+
+
+def test_dykstra_kernel_block_padding():
+    w = np.abs(RNG.normal(size=(11, 8, 8))).astype(np.float32)
+    tlw = jnp.asarray(w) * 30.0
+    out_k = dykstra_pallas(tlw, 4, iters=40, block_b=8)  # 11 % 8 != 0
+    out_r = dykstra_ref(tlw, 4, iters=40)
+    np.testing.assert_allclose(np.array(out_k), np.array(out_r), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# nm_spmm kernel.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,K,F,n,m", [
+    (16, 64, 96, 8, 16), (8, 128, 64, 16, 32), (5, 64, 64, 2, 4), (4, 96, 32, 4, 8),
+])
+def test_nm_spmm_fwd_and_transpose(B, K, F, n, m, dtype):
+    w = RNG.normal(size=(K, F)).astype(np.float32)
+    mask = np.array(transposable_nm_mask(jnp.asarray(w), n, m))
+    vals, idx = compress_nm(jnp.asarray(w, dtype), jnp.asarray(mask), n, m)
+    x = jnp.asarray(RNG.normal(size=(B, K)), dtype)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    y_k = nm_spmm_pallas(x, vals, idx, m, bt=8, kt=32, ft=32)
+    y_r = nm_spmm_ref(x, vals, idx, m)
+    np.testing.assert_allclose(np.array(y_k), np.array(y_r), rtol=tol, atol=tol)
+    g = jnp.asarray(RNG.normal(size=(B, F)), dtype)
+    d_k = nm_spmm_pallas(g, vals, idx, m, transpose=True, bt=8, kt=32, ft=32)
+    d_r = nm_spmm_ref(g, vals, idx, m, transpose=True)
+    np.testing.assert_allclose(np.array(d_k), np.array(d_r), rtol=tol, atol=tol)
+
+
+def test_compress_decompress_roundtrip():
+    for (K, F, n, m) in [(64, 32, 4, 8), (32, 64, 8, 16), (64, 64, 16, 32)]:
+        w = RNG.normal(size=(K, F)).astype(np.float32)
+        mask = np.array(transposable_nm_mask(jnp.asarray(w), n, m))
+        vals, idx = compress_nm(jnp.asarray(w), jnp.asarray(mask), n, m)
+        assert idx.dtype == jnp.int8
+        dense = np.array(decompress_nm(vals, idx, m))
+        np.testing.assert_allclose(dense, w * mask, rtol=1e-6, atol=1e-6)
+
+
+def test_nm_linear_grads_match_dense():
+    K, F, n, m = 64, 64, 4, 8
+    w = RNG.normal(size=(K, F)).astype(np.float32)
+    mask = np.array(transposable_nm_mask(jnp.asarray(w), n, m))
+    vals, idx = compress_nm(jnp.asarray(w), jnp.asarray(mask), n, m)
+    x = jnp.asarray(RNG.normal(size=(4, K)).astype(np.float32))
+
+    f_sparse = lambda x, v: jnp.sum(jnp.tanh(nm_linear(x, v, idx, m)))
+    gx, gv = jax.grad(f_sparse, argnums=(0, 1))(x, vals)
+    wd = jnp.asarray(w * mask)
+    f_dense = lambda x, wd: jnp.sum(jnp.tanh(x @ wd))
+    gx_d, gw_d = jax.grad(f_dense, argnums=(0, 1))(x, wd)
+    np.testing.assert_allclose(np.array(gx), np.array(gx_d), rtol=1e-4, atol=1e-4)
+    # dVals gathered from dense dW at the mask support.
+    gw_gathered = np.array(gw_d).reshape(K // m, m, F)
+    got = np.array(gv)
+    idxn = np.array(idx).astype(int)
+    for gblk in range(K // m):
+        for slot in range(n):
+            for f in range(F):
+                if mask.reshape(K // m, m, F)[gblk, idxn[gblk, slot, f], f]:
+                    assert abs(got[gblk, slot, f] - gw_gathered[gblk, idxn[gblk, slot, f], f]) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# rounding kernel.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,m,n", [(5, 4, 2), (17, 16, 8), (9, 32, 16), (12, 8, 3)])
+def test_greedy_kernel_matches_ref(b, m, n):
+    s = jnp.asarray(RNG.random((b, m, m)).astype(np.float32))
+    a = greedy_round_pallas(s, n, block_b=8)
+    r = greedy_ref(s, n)
+    assert (np.array(a) == np.array(r)).all()
+
+
+# ---------------------------------------------------------------------------
+# flash attention kernel (fwd + custom-VJP bwd).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bkv,g,s,hd,causal,window", [
+    (2, 2, 64, 32, True, 0),
+    (1, 4, 128, 16, True, 0),
+    (2, 1, 64, 32, False, 0),
+    (1, 2, 128, 32, True, 48),
+])
+def test_flash_attention_fwd_bwd(bkv, g, s, hd, causal, window):
+    from repro.kernels.flash_attention.kernel import flash_attention_pallas
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+
+    q = jnp.asarray(RNG.normal(size=(bkv, g, s, hd)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(bkv, s, hd)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(bkv, s, hd)).astype(np.float32))
+    o = flash_attention_pallas(q, k, v, causal, window, 32, 32)
+    o_ref = flash_attention_ref(q, k, v, causal, window)
+    np.testing.assert_allclose(np.array(o), np.array(o_ref), rtol=2e-5, atol=2e-5)
+
+    f_k = lambda *a: jnp.sum(jnp.sin(flash_attention_pallas(*a, causal, window, 32, 32)))
+    f_r = lambda *a: jnp.sum(jnp.sin(flash_attention_ref(*a, causal, window)))
+    gk = jax.grad(f_k, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_r, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.array(a), np.array(b), rtol=1e-4, atol=5e-5)
+
+
+def test_flash_attention_matches_model_path():
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.models.attention import _flash_attention
+
+    B, S, KV, G, HD = 2, 64, 2, 2, 32
+    qg = jnp.asarray(RNG.normal(size=(B, S, KV, G, HD)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(B, S, KV, HD)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(B, S, KV, HD)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    ref = _flash_attention(qg, k, v, pos, pos, 0, 16)
+    got = flash_attention(qg, k, v, causal=True, q_tile=16, kv_tile=16)
+    np.testing.assert_allclose(np.array(ref), np.array(got), rtol=2e-5, atol=3e-5)

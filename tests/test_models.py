@@ -1,0 +1,152 @@
+"""Per-architecture smoke tests (reduced configs) + decode consistency."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
+from repro.configs.shapes import SHAPES
+from repro.data import SyntheticEmbeds, SyntheticLM
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.optim import AdamW
+from repro.train import build_train_step, make_train_state
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    """Reduced config: one forward + one train step; shapes + finiteness."""
+    cfg = get_smoke_config(arch)
+    B, S = 2, 32
+    if cfg.frontend != "none":
+        data = SyntheticEmbeds(cfg.d_model, S, B, cfg.vocab_size)
+    else:
+        data = SyntheticLM(cfg.vocab_size, S, B)
+    batch = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
+
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    logits = lm.forward(
+        params, cfg, tokens=batch.get("tokens"), embeds=batch.get("embeds")
+    )
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert np.isfinite(np.array(logits, np.float32)).all()
+
+    opt = AdamW(learning_rate=1e-3)
+    state = make_train_state(cfg, opt, jax.random.PRNGKey(0))
+    step = build_train_step(cfg, opt)
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(state.step) == 1
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_prefill_decode(arch):
+    cfg = get_smoke_config(arch)
+    B, S = 2, 16
+    params = lm.init_params(cfg, jax.random.PRNGKey(1))
+    caches = lm.init_cache(cfg, B, 32)
+    if cfg.frontend != "none":
+        embeds = jax.random.normal(jax.random.PRNGKey(2), (B, S, cfg.d_model))
+        logits, caches = lm.prefill(params, cfg, caches, embeds=embeds)
+    else:
+        toks = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab_size)
+        logits, caches = lm.prefill(params, cfg, caches, tokens=toks)
+    assert logits.shape == (B, cfg.vocab_size)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    logits2, caches = lm.decode_step(params, cfg, tok, caches, jnp.asarray(S, jnp.int32))
+    assert logits2.shape == (B, cfg.vocab_size)
+    assert np.isfinite(np.array(logits2, np.float32)).all()
+
+
+def test_full_configs_match_assignment():
+    expected = {
+        "qwen2_vl_7b": (28, 3584, 28, 4, 18944, 152064),
+        "zamba2_7b": (81, 3584, 32, 32, 14336, 32000),
+        "qwen3_moe_235b": (94, 4096, 64, 4, 1536, 151936),
+        "mixtral_8x22b": (56, 6144, 48, 8, 16384, 32768),
+        "llama32_3b": (28, 3072, 24, 8, 8192, 128256),
+        "command_r_plus_104b": (64, 12288, 96, 8, 33792, 256000),
+        "phi3_medium_14b": (40, 5120, 40, 10, 17920, 100352),
+        "granite_8b": (36, 4096, 32, 8, 14336, 49152),
+        "mamba2_370m": (48, 1024, 0, 0, 0, 50280),
+        "musicgen_large": (48, 2048, 32, 32, 8192, 2048),
+    }
+    for arch, (L, d, h, kv, ff, v) in expected.items():
+        cfg = get_config(arch)
+        got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+               cfg.d_ff, cfg.vocab_size)
+        assert got == (L, d, h, kv, ff, v), (arch, got)
+    assert get_config("qwen3_moe_235b").num_experts == 128
+    assert get_config("qwen3_moe_235b").top_k == 8
+    assert get_config("mixtral_8x22b").num_experts == 8
+    assert get_config("mixtral_8x22b").sliding_window > 0
+    assert get_config("mamba2_370m").ssm_state == 128
+    assert get_config("zamba2_7b").ssm_state == 64
+
+
+def test_shapes_match_assignment():
+    assert (SHAPES["train_4k"].seq_len, SHAPES["train_4k"].global_batch) == (4096, 256)
+    assert (SHAPES["prefill_32k"].seq_len, SHAPES["prefill_32k"].global_batch) == (32768, 32)
+    assert (SHAPES["decode_32k"].seq_len, SHAPES["decode_32k"].global_batch) == (32768, 128)
+    assert (SHAPES["long_500k"].seq_len, SHAPES["long_500k"].global_batch) == (524288, 1)
+
+
+class TestDecodeConsistency:
+    """Prefill+decode must reproduce the teacher-forced forward exactly."""
+
+    CASES = [
+        ModelConfig("d", "dense", num_layers=2, d_model=64, num_heads=4,
+                    num_kv_heads=2, d_ff=128, vocab_size=256, remat="none",
+                    dtype="float32"),
+        ModelConfig("swa", "dense", num_layers=2, d_model=64, num_heads=4,
+                    num_kv_heads=2, d_ff=128, vocab_size=256, sliding_window=6,
+                    remat="none", dtype="float32"),
+        ModelConfig("ssm", "ssm", num_layers=2, d_model=64, num_heads=0,
+                    num_kv_heads=0, d_ff=0, vocab_size=256, ssm_state=16,
+                    ssm_head_dim=16, ssm_chunk=4, remat="none", dtype="float32"),
+        ModelConfig("hyb", "hybrid", num_layers=5, d_model=64, num_heads=4,
+                    num_kv_heads=4, d_ff=128, vocab_size=256, ssm_state=16,
+                    ssm_head_dim=16, ssm_chunk=4, hybrid_attn_every=2,
+                    remat="none", dtype="float32"),
+        ModelConfig("moe", "moe", num_layers=2, d_model=64, num_heads=4,
+                    num_kv_heads=2, d_ff=96, vocab_size=256, num_experts=4,
+                    top_k=2, moe_group=1, remat="none", dtype="float32"),
+    ]
+
+    @pytest.mark.parametrize("cfg", CASES, ids=lambda c: c.name)
+    def test_decode_equals_forward(self, cfg):
+        key = jax.random.PRNGKey(0)
+        params = lm.init_params(cfg, key)
+        toks = jax.random.randint(key, (1, 9), 0, cfg.vocab_size)
+        full = lm.forward(params, cfg, tokens=toks)
+        caches = lm.init_cache(cfg, 1, 16)
+        lg, caches = lm.prefill(params, cfg, caches, tokens=toks[:, :8])
+        np.testing.assert_allclose(np.array(lg), np.array(full[:, 7]),
+                                   rtol=3e-3, atol=3e-3)
+        lg2, _ = lm.decode_step(params, cfg, toks[:, 8], caches,
+                                jnp.asarray(8, jnp.int32))
+        np.testing.assert_allclose(np.array(lg2), np.array(full[:, 8]),
+                                   rtol=3e-3, atol=3e-3)
+
+
+def test_mrope_reduces_to_rope_for_text():
+    from repro.models.attention import rope
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 4, 16))
+    pos = jnp.broadcast_to(jnp.arange(8), (2, 8))
+    a = rope(x, pos, 1e4)
+    b = rope(x, pos, 1e4, mrope_sections=(2, 3, 3))
+    np.testing.assert_allclose(np.array(a), np.array(b), rtol=1e-6, atol=1e-6)
+
+
+def test_sliding_window_masks_out_far_context():
+    """With SWA, tokens beyond the window cannot influence the output."""
+    cfg = ModelConfig("swa", "dense", num_layers=1, d_model=32, num_heads=2,
+                      num_kv_heads=2, d_ff=64, vocab_size=64, sliding_window=4,
+                      remat="none", dtype="float32")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    t1 = jax.random.randint(jax.random.PRNGKey(1), (1, 12), 0, 64)
+    t2 = t1.at[:, 0].set((t1[:, 0] + 7) % 64)  # differs outside last window
+    l1 = lm.forward(params, cfg, tokens=t1)
+    l2 = lm.forward(params, cfg, tokens=t2)
+    np.testing.assert_allclose(np.array(l1[:, -1]), np.array(l2[:, -1]),
+                               rtol=1e-5, atol=1e-5)
