@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV lines.  Mapping (DESIGN.md §6):
   pruning_quality    -> Tab. 2   (end-to-end one-shot pruning, miniature)
   finetune_recovery  -> Fig. 5   (sparse fine-tuning recovery)
   spmm_traffic       -> Fig. 4   (TPU bandwidth model + kernel check)
+  service_throughput -> system   (bucketed MaskService vs per-tensor loop)
 """
 from __future__ import annotations
 
@@ -21,6 +22,7 @@ def main() -> None:
         pruning_quality,
         reconstruction,
         rounding_ablation,
+        service_throughput,
         solver_quality,
         solver_runtime,
         spmm_traffic,
@@ -35,6 +37,7 @@ def main() -> None:
         pruning_quality,
         finetune_recovery,
         spmm_traffic,
+        service_throughput,
     ):
         t0 = time.time()
         try:

@@ -1,0 +1,86 @@
+"""Tour of the batched mask-solver engine (repro.service).
+
+    PYTHONPATH=src python examples/mask_service.py [--dir runs/mask-demo]
+
+Submits a transformer-like mix of weight tensors to a MaskService backed by
+a disk cache + journal, shows the shape-bucketed batching stats, verifies a
+couple of masks bit-match the per-tensor solver, then simulates a crash and
+demonstrates resume: a second service over the same directory completes the
+full workload without re-solving anything it already finished.
+"""
+import argparse
+import shutil
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.solver import SolverConfig, is_transposable_nm, transposable_nm_mask
+from repro.service import BucketPolicy, MaskService
+
+N, M = 2, 4
+
+
+def make_workload(seed=0):
+    rng = np.random.default_rng(seed)
+    tensors = {}
+    for l in range(3):
+        tensors[f"layer{l}/wq"] = rng.normal(size=(128, 128))
+        tensors[f"layer{l}/up"] = rng.normal(size=(128, 256))
+        tensors[f"layer{l}/odd"] = rng.normal(size=(100, 60))  # padded internally
+    tensors["stacked_qkv"] = rng.normal(size=(3, 64, 64))  # ONE submission
+    return {k: v.astype(np.float32) for k, v in tensors.items()}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=None,
+                    help="service directory (default: fresh temp dir)")
+    args = ap.parse_args()
+    workdir = args.dir or tempfile.mkdtemp(prefix="mask-service-")
+
+    config = SolverConfig(iters=80)
+    policy = BucketPolicy(base=64, growth=4, max_bucket=4096)
+    tensors = make_workload()
+
+    print(f"== run 1: interrupted mid-model (dir={workdir}) ==")
+    svc = MaskService(config, policy=policy, directory=workdir)
+    names = list(tensors)
+    for name in names[: len(names) // 2]:  # "crash" halfway through
+        svc.solve(name, tensors[name], N, M)
+    print(f"  died after {len(names) // 2}/{len(names)} tensors: "
+          f"{svc.stats.summary()}")
+
+    print("== run 2: resume + finish ==")
+    svc = MaskService(config, policy=policy, directory=workdir)
+    handles = {k: svc.submit(k, v, N, M) for k, v in tensors.items()}
+    svc.flush()
+    masks = {k: h.result() for k, h in handles.items()}
+    print(f"  {svc.stats.summary()}")
+    print(f"  -> {svc.stats.cache_hits} tensors restored from the journaled "
+          f"cache, {svc.stats.blocks_solved} blocks solved fresh")
+
+    # Masks are bit-identical to the per-tensor reference path.
+    for name in ("layer0/wq", "layer2/odd"):
+        ref = transposable_nm_mask(jnp.asarray(tensors[name]), N, M, config)
+        assert (np.array(masks[name]) == np.array(ref)).all(), name
+        assert is_transposable_nm(np.array(masks[name]), N, M)
+    stacked = np.array(masks["stacked_qkv"])
+    assert stacked.shape == tensors["stacked_qkv"].shape
+    assert all(is_transposable_nm(stacked[i], N, M) for i in range(stacked.shape[0]))
+    print("  masks verified: transposable + bit-identical to the direct solver")
+
+    print("== run 3: fully cached (re-pruning is near-free) ==")
+    svc = MaskService(config, policy=policy, directory=workdir)
+    for k, v in tensors.items():
+        svc.submit(k, v, N, M)
+    svc.flush()
+    print(f"  {svc.stats.summary()}")
+    assert svc.stats.blocks_solved == 0
+
+    if args.dir is None:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -33,6 +33,9 @@ def main():
     ap.add_argument("--pretrain-steps", type=int, default=200)
     ap.add_argument("--standard", action="store_true",
                     help="standard (non-transposable) N:M")
+    ap.add_argument("--journal-dir", default=None,
+                    help="persist pruned tensors + journal here; re-running "
+                         "after a kill resumes mid-model")
     args = ap.parse_args()
 
     if args.arch:
@@ -70,6 +73,7 @@ def main():
         state.params, cfg, tokens=calib, method=args.method,
         n=args.n, m=args.m, transposable=not args.standard,
         solver=SolverConfig(iters=150), log=print,
+        journal_dir=args.journal_dir,
     )
     pruned_loss = eval_loss(pruned)
     mq = np.array(masks["attn"]["wq"][0])

@@ -1,4 +1,4 @@
 """Fault-tolerant checkpointing."""
-from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.manager import CheckpointManager, ContentStore
 
-__all__ = ["CheckpointManager"]
+__all__ = ["CheckpointManager", "ContentStore"]

@@ -49,6 +49,45 @@ def _path_str(p) -> str:
     return str(p)
 
 
+class ContentStore:
+    """Content-addressed array store with the same atomic-commit discipline
+    as :class:`CheckpointManager`.
+
+    Entries are immutable ``<key>.npz`` bundles (key = caller-supplied content
+    hash), written to a temp file and committed with ``os.replace`` so a crash
+    mid-write never leaves a readable-but-corrupt entry.  Used by
+    ``repro.service`` to persist solved masks / pruned tensors across runs:
+    because keys are content hashes, restarts and re-runs dedupe for free.
+    """
+
+    def __init__(self, directory: str):
+        self.dir = directory
+        os.makedirs(directory, exist_ok=True)
+
+    def path(self, key: str) -> str:
+        return os.path.join(self.dir, key + ".npz")
+
+    def has(self, key: str) -> bool:
+        return os.path.exists(self.path(key))
+
+    def put(self, key: str, **arrays: np.ndarray) -> None:
+        if self.has(key):  # immutable: same key == same content
+            return
+        tmp = self.path(key) + f".tmp.{os.getpid()}"
+        with open(tmp, "wb") as f:
+            np.savez(f, **{k: np.asarray(v) for k, v in arrays.items()})
+        os.replace(tmp, self.path(key))  # atomic commit
+
+    def get(self, key: str) -> dict[str, np.ndarray]:
+        with np.load(self.path(key)) as z:
+            return {k: z[k] for k in z.files}
+
+    def keys(self) -> list[str]:
+        return sorted(
+            name[:-4] for name in os.listdir(self.dir) if name.endswith(".npz")
+        )
+
+
 class CheckpointManager:
     def __init__(self, directory: str, keep_n: int = 3, async_save: bool = True):
         self.dir = directory

@@ -1,0 +1,85 @@
+"""Version-compat shims for the installed JAX.
+
+The repo targets recent JAX (where ``jax.sharding.AxisType`` exists and
+``jax.make_mesh`` accepts ``axis_types``), but must degrade gracefully on
+older releases: every mesh in this codebase uses Auto axis types, which is
+exactly the default when the argument is unsupported, so dropping it is
+semantics-preserving.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+AxisType = getattr(jax.sharding, "AxisType", None)
+
+_MAKE_MESH_TAKES_AXIS_TYPES = (
+    hasattr(jax, "make_mesh")
+    and "axis_types" in inspect.signature(jax.make_mesh).parameters
+)
+
+
+def auto_axis_types(num_axes: int):
+    """(AxisType.Auto,) * num_axes, or None when the installed JAX predates
+    explicit axis types (Auto is then the only behaviour anyway)."""
+    if AxisType is None:
+        return None
+    return (AxisType.Auto,) * num_axes
+
+
+def make_mesh(shape: tuple, axes: tuple, axis_types=None):
+    """``jax.make_mesh`` that tolerates JAX versions without ``axis_types``
+    (or without ``jax.make_mesh`` at all)."""
+    if axis_types is not None and _MAKE_MESH_TAKES_AXIS_TYPES:
+        return jax.make_mesh(shape, axes, axis_types=axis_types)
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(shape, axes)
+    from jax.experimental import mesh_utils
+
+    return jax.sharding.Mesh(mesh_utils.create_device_mesh(shape), axes)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None, check_vma=False):
+    """``jax.shard_map`` (newer JAX) or ``jax.experimental.shard_map`` with
+    the ``axis_names``/``check_vma`` kwargs mapped to ``auto``/``check_rep``."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            axis_names=axis_names, check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    # Partial-auto shard_map on old JAX trips XLA's manual-subgroup check at
+    # compile time, so the fallback takes EVERY axis manual.  That is
+    # numerically identical whenever the wrapped function doesn't rely on
+    # GSPMD partitioning over the would-be-auto axes (true for this repo:
+    # the model forward contains no sharding constraints).
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )
+
+
+def axis_size(axis_name):
+    """``jax.lax.axis_size`` with a psum(1) fallback for older JAX."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def set_mesh_context(mesh):
+    """Context manager activating ``mesh``: ``jax.set_mesh(mesh)`` on newer
+    JAX, the legacy ``with mesh:`` global-mesh context otherwise."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def abstract_mesh(shape: tuple, axes: tuple):
+    """``jax.sharding.AbstractMesh(shape, axes)`` across the signature change
+    (older JAX takes a single tuple of (name, size) pairs)."""
+    try:
+        return jax.sharding.AbstractMesh(shape, axes)
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(zip(axes, shape)))

@@ -20,6 +20,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.compat import axis_size
+
 
 def compressed_psum(grads, ef, axis_name: str):
     """Quantized all-reduce over ``axis_name`` with error feedback.
@@ -27,7 +29,7 @@ def compressed_psum(grads, ef, axis_name: str):
     grads/ef: pytrees (ef may be None -> no feedback).  Returns
     (reduced grads in f32-of-param-dtype, new ef residuals).
     """
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
 
     def one(g, e):
         g32 = g.astype(jnp.float32)

@@ -5,7 +5,7 @@ state (the dry-run sets XLA_FLAGS before any jax initialization).
 """
 from __future__ import annotations
 
-import jax
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -14,13 +14,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     shard_map takes the pod axis manual (gradient compression)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return compat.make_mesh(shape, axes, axis_types=compat.auto_axis_types(len(axes)))
 
 
 def make_mesh(shape: tuple, axes: tuple):
     """Arbitrary mesh (tests / elastic restarts with fewer devices)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return compat.make_mesh(shape, axes, axis_types=compat.auto_axis_types(len(axes)))

@@ -1,6 +1,8 @@
 """Magnitude pruning with (transposable) N:M masks."""
 from __future__ import annotations
 
+from typing import Callable, Optional
+
 import jax.numpy as jnp
 
 from repro.core.solver import SolverConfig, nm_mask, transposable_nm_mask
@@ -12,10 +14,18 @@ def magnitude_prune(
     m: int,
     transposable: bool = True,
     config: SolverConfig = SolverConfig(),
+    mask_fn: Optional[Callable] = None,
 ):
-    """TSENOR (or row-wise N:M) mask directly on |W|; zero outside the mask."""
+    """TSENOR (or row-wise N:M) mask directly on |W|; zero outside the mask.
+
+    ``mask_fn(scores, n, m)`` overrides the transposable solver (see
+    ``wanda_prune``).
+    """
     if transposable:
-        mask = transposable_nm_mask(w, n, m, config)
+        if mask_fn is not None:
+            mask = mask_fn(jnp.abs(w), n, m)
+        else:
+            mask = transposable_nm_mask(w, n, m, config)
     else:
         mask = nm_mask(w, n, m, axis=0)
     return jnp.where(mask, w, 0), mask

@@ -7,14 +7,30 @@ activations forward — exactly how the paper applies Wanda/SparseGPT/ALPS to
 LLaMA.  Covers the attention (wq/wk/wv/wo) and MLP (gate/up/down) projections
 of the "dense"/"vlm"/"audio" families; MoE expert matrices and SSM in/out
 projections use the same per-matrix APIs directly (see examples/prune_llm.py).
+
+Mask generation routes through :class:`repro.service.MaskService`:
+
+  * Wanda/magnitude masks for projections sharing an input (wq/wk/wv;
+    gate/up) are submitted together and solved as one bucketed batch (the
+    sequential calibration dependency forbids batching across layers —
+    each layer's activations need the previous layers already pruned);
+  * with ``journal_dir`` set, every pruned tensor is persisted to a
+    content-addressed store and journaled, so a killed run resumes
+    mid-model: completed tensors restore from disk (the cheap forward
+    recompute reproduces identical activations, hence identical content
+    keys) and only the remainder is solved.
 """
 from __future__ import annotations
 
+import hashlib
+import os
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.checkpoint.manager import ContentStore
 from repro.core.solver import SolverConfig
 from repro.models.attention import attention
 from repro.models.config import ModelConfig
@@ -22,7 +38,10 @@ from repro.models.layers import rms_norm, embed_tokens
 from repro.pruning.alps import AlpsConfig, alps_prune
 from repro.pruning.calib import gram_matrix
 from repro.pruning.sparsegpt import sparsegpt_prune
-from repro.pruning.wanda import wanda_prune
+from repro.pruning.wanda import wanda_prune, wanda_importance
+from repro.service.cache import solver_fingerprint
+from repro.service.engine import MaskService
+from repro.service.journal import Journal
 
 
 def _prune_one(w, x_flat, method, n, m, transposable, solver, alps_cfg):
@@ -39,6 +58,35 @@ def _prune_one(w, x_flat, method, n, m, transposable, solver, alps_cfg):
     raise ValueError(method)
 
 
+def _digest(arr) -> bytes:
+    a = np.ascontiguousarray(np.asarray(arr, np.float32))
+    h = hashlib.sha256()
+    h.update(str(a.shape).encode())
+    h.update(a.tobytes())
+    return h.digest()
+
+
+def _tensor_key(w, x_digest, method, n, m, transposable, solver, alps_cfg) -> str:
+    """Content hash identifying one layer-wise pruning problem end to end:
+    weights, calibration activations (pre-digested — shared by the group),
+    method, and every knob of the solver config that actually produces the
+    mask."""
+    h = hashlib.sha256()
+    h.update(b"tsenor-prune-v1|")
+    h.update(
+        f"method={method}|n={n}|m={m}|t={bool(transposable)}|"
+        f"{solver_fingerprint(solver)}|".encode()
+    )
+    if method == "alps":
+        h.update(
+            f"alps:iters={alps_cfg.iters};rho0={alps_cfg.rho0_rel!r};"
+            f"growth={alps_cfg.rho_growth!r};{solver_fingerprint(alps_cfg.solver)}|".encode()
+        )
+    h.update(_digest(w))
+    h.update(x_digest)
+    return h.hexdigest()
+
+
 def prune_transformer(
     params: dict,
     cfg: ModelConfig,
@@ -51,13 +99,25 @@ def prune_transformer(
     solver: SolverConfig = SolverConfig(iters=150),
     alps_cfg: Optional[AlpsConfig] = None,
     log=lambda s: None,
+    service: Optional[MaskService] = None,
+    journal_dir: Optional[str] = None,
 ):
     """Returns (pruned params, {proj_name: stacked masks}).
 
     ``tokens``/``embeds``: calibration batch (B, S)/(B, S, d).
+    ``service``: MaskService for transposable mask solves (a per-call
+    in-memory one is created by default).
+    ``journal_dir``: persist every pruned (W, mask) pair content-addressed
+    under this directory and journal completions; re-running with the same
+    inputs resumes after an interruption without re-solving finished tensors.
     """
     assert cfg.family in ("dense", "vlm", "audio"), cfg.family
     alps_cfg = alps_cfg or AlpsConfig(iters=50, solver=solver)
+    svc = service if service is not None else MaskService(solver, directory=journal_dir)
+    journal = store = None
+    if journal_dir is not None:
+        store = ContentStore(os.path.join(journal_dir, "pruned"))
+        journal = Journal(os.path.join(journal_dir, "prune_journal.jsonl"))
     dtype = jnp.float32
     if embeds is None:
         x = embed_tokens(params["embed"], tokens, dtype)
@@ -72,25 +132,91 @@ def prune_transformer(
     masks_attn = {k: [] for k in ("wq", "wk", "wv", "wo")}
     masks_mlp = {k: [] for k in ("gate", "up", "down")}
 
-    def pr(w, x_act, name, l):
-        wp, mask = _prune_one(
-            w.astype(jnp.float32), x_act.reshape(-1, x_act.shape[-1]),
-            method, n, m, transposable, solver, alps_cfg,
-        )
-        log(f"[prune] layer {l} {name}: done")
-        return wp.astype(w.dtype), mask
+    # Wanda/magnitude masks depend only on (W, X): they can ride the batched
+    # service path; SparseGPT/ALPS inline the solve in their jitted loops.
+    group_batched = transposable and method in ("wanda", "magnitude")
+
+    def restore(tname, key):
+        if journal is None or key is None:
+            return None
+        rec = journal.lookup(tname)
+        if rec and rec.get("key") == key and store.has(key):
+            data = store.get(key)
+            return jnp.asarray(data["w"]), jnp.asarray(data["mask"])
+        return None
+
+    def persist(tname, key, wp, mask):
+        if journal is not None:
+            store.put(key, w=np.asarray(wp), mask=np.asarray(mask))
+            journal.record(tname, key)
+
+    def pr_group(ws: dict, x_act, l: int, grp: str):
+        """Prune projections sharing input ``x_act``; returns name -> (wp, mask).
+
+        For the batched methods every cache-miss in the group is submitted to
+        the service first and solved in ONE bucketed flush.
+        """
+        x_flat = x_act.reshape(-1, x_act.shape[-1])
+        results, todo = {}, {}
+        # Hashing is journal-only work; the batched methods' masks come from
+        # the service, so the key must fingerprint ITS config, not ``solver``.
+        x_digest = _digest(x_flat) if journal is not None else b""
+        mask_cfg = svc.config if group_batched else solver
+        for name, w in ws.items():
+            tname = f"layer{l:03d}/{grp}/{name}"
+            w32 = w.astype(jnp.float32)
+            key = None
+            if journal is not None:
+                key = _tensor_key(
+                    w32, x_digest, method, n, m, transposable, mask_cfg, alps_cfg
+                )
+            prior = restore(tname, key)
+            if prior is not None:
+                results[name] = prior
+                log(f"[prune] layer {l} {name}: restored from journal")
+            else:
+                todo[name] = (tname, key, w32)
+        if group_batched and todo:
+            handles = {}
+            for name, (tname, _key, w32) in todo.items():
+                imp = (
+                    wanda_importance(w32, x_flat)
+                    if method == "wanda"
+                    else jnp.abs(w32)
+                )
+                handles[name] = svc.submit(tname, imp, n, m)
+            svc.flush()  # one bucketed solve for the whole group
+            for name, (tname, key, w32) in todo.items():
+                mask = handles[name].result()
+                wp = jnp.where(mask, w32, 0)
+                persist(tname, key, wp, mask)
+                results[name] = (wp, mask)
+                log(f"[prune] layer {l} {name}: done")
+        else:
+            for name, (tname, key, w32) in todo.items():
+                wp, mask = _prune_one(
+                    w32, x_flat, method, n, m, transposable, solver, alps_cfg
+                )
+                persist(tname, key, wp, mask)
+                results[name] = (wp, mask)
+                log(f"[prune] layer {l} {name}: done")
+        return {
+            name: (wp.astype(ws[name].dtype), mask)
+            for name, (wp, mask) in results.items()
+        }
 
     for l in range(cfg.num_layers):
         lp = jax.tree.map(lambda a: a[l], blocks)
         h1 = rms_norm(x, lp["ln1"])
         ap = dict(lp["attn"])
+        qkv = pr_group({k: ap[k] for k in ("wq", "wk", "wv")}, h1, l, "attn")
         for nm_ in ("wq", "wk", "wv"):
-            ap[nm_], mk = pr(ap[nm_], h1, nm_, l)
+            ap[nm_], mk = qkv[nm_]
             new_attn[nm_].append(ap[nm_])
             masks_attn[nm_].append(mk)
         cap = {}
         attn_out, _ = attention(ap, h1, cfg, positions, capture=cap)
-        ap["wo"], mk = pr(ap["wo"], cap["pre_out"], "wo", l)
+        (ap["wo"], mk), = pr_group({"wo": ap["wo"]}, cap["pre_out"], l, "attn").values()
         masks_attn["wo"].append(mk)
         new_attn["wo"].append(ap["wo"])
         attn_out = cap["pre_out"] @ ap["wo"].astype(h1.dtype)
@@ -98,14 +224,15 @@ def prune_transformer(
 
         h2 = rms_norm(x, lp["ln2"])
         mp = dict(lp["mlp"])
+        gu = pr_group({k: mp[k] for k in ("gate", "up")}, h2, l, "mlp")
         for nm_ in ("gate", "up"):
-            mp[nm_], mk = pr(mp[nm_], h2, nm_, l)
+            mp[nm_], mk = gu[nm_]
             new_mlp[nm_].append(mp[nm_])
             masks_mlp[nm_].append(mk)
         hidden = jax.nn.silu(h2 @ mp["gate"].astype(h2.dtype)) * (
             h2 @ mp["up"].astype(h2.dtype)
         )
-        mp["down"], mk = pr(mp["down"], hidden, "down", l)
+        (mp["down"], mk), = pr_group({"down": mp["down"]}, hidden, l, "mlp").values()
         masks_mlp["down"].append(mk)
         new_mlp["down"].append(mp["down"])
         x = x + hidden @ mp["down"].astype(h2.dtype)

@@ -6,10 +6,17 @@ zeroed (Wanda performs no weight update).
 """
 from __future__ import annotations
 
+from typing import Callable, Optional
+
 import jax.numpy as jnp
 
 from repro.core.solver import SolverConfig, nm_mask, transposable_nm_mask
 from repro.pruning.calib import col_norms
+
+
+def wanda_importance(w: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """|W_ij| * ||X_:,i||_2 — the matrix the mask problem is solved on."""
+    return jnp.abs(w) * col_norms(x)[:, None]
 
 
 def wanda_prune(
@@ -19,11 +26,20 @@ def wanda_prune(
     m: int,
     transposable: bool = True,
     config: SolverConfig = SolverConfig(),
+    mask_fn: Optional[Callable] = None,
 ):
-    """Returns (pruned W, mask).  ``x``: (tokens, in) calibration inputs."""
-    imp = jnp.abs(w) * col_norms(x)[:, None]
+    """Returns (pruned W, mask).  ``x``: (tokens, in) calibration inputs.
+
+    ``mask_fn(scores, n, m)`` overrides the transposable solver — pass
+    ``repro.service.MaskService.solve`` (partially applied) to route through
+    the batched/cached engine.
+    """
+    imp = wanda_importance(w, x)
     if transposable:
-        mask = transposable_nm_mask(imp, n, m, config)
+        if mask_fn is not None:
+            mask = mask_fn(imp, n, m)
+        else:
+            mask = transposable_nm_mask(imp, n, m, config)
     else:
         mask = nm_mask(imp, n, m, axis=0)
     return jnp.where(mask, w, 0), mask

@@ -1,0 +1,25 @@
+"""Batched mask-solver engine: shape-bucketed scheduling, content-addressed
+caching, and resumable model-scale pruning.
+
+The per-tensor API (``core.solver.transposable_nm_mask``) re-dispatches and
+re-compiles per weight matrix; this package treats the whole model as one
+stream of M x M block problems instead.  See README "Mask service" for the
+architecture and ``examples/mask_service.py`` for a runnable tour.
+"""
+from repro.service.cache import MaskCache, content_key, solver_fingerprint
+from repro.service.engine import MaskHandle, MaskService, ServiceStats
+from repro.service.journal import Journal
+from repro.service.scheduler import BucketPolicy, StreamStats, solve_stream
+
+__all__ = [
+    "BucketPolicy",
+    "Journal",
+    "MaskCache",
+    "MaskHandle",
+    "MaskService",
+    "ServiceStats",
+    "StreamStats",
+    "content_key",
+    "solver_fingerprint",
+    "solve_stream",
+]

@@ -1,0 +1,92 @@
+"""Content-addressed cache for solved mask blocks.
+
+Key format (see README "Mask service"):
+
+    sha256( "tsenor-mask-v1" | n | m | solver fingerprint
+            | block-array shape | block-array bytes )           -> hex digest
+
+The hash runs over the exact (B, M, M) float32 ``|W|`` block stream the
+solver consumes — after abs/cast/padding — so two tensors that produce the
+same block stream share one cache entry regardless of where they came from.
+The solver fingerprint covers every :class:`SolverConfig` field that can
+change the output mask; bumping the version tag invalidates all entries when
+solver semantics change.
+
+The cache is two-level: an in-process dict in front of an optional
+:class:`repro.checkpoint.ContentStore` (atomic ``<key>.npz`` files), which is
+what makes re-pruning and crash-resume near-free.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Optional
+
+import numpy as np
+
+from repro.checkpoint.manager import ContentStore
+from repro.core.solver import SolverConfig
+
+_VERSION = "tsenor-mask-v1"
+
+
+def solver_fingerprint(config: SolverConfig) -> str:
+    """Stable string of the SolverConfig fields that affect the solved mask.
+
+    ``block_batch`` is deliberately excluded: it only chunks the dispatch and
+    never changes per-block results.  ``use_kernel`` is included out of
+    caution — the Pallas path is verified equal to XLA in tests, but a cache
+    must never have to trust that.
+    """
+    return (
+        f"iters={config.iters};ls_steps={config.ls_steps};"
+        f"tau_scale={config.tau_scale!r};use_kernel={bool(config.use_kernel)}"
+    )
+
+
+def content_key(
+    w_abs_blocks: np.ndarray, n: int, m: int, config: SolverConfig
+) -> str:
+    """Content hash of one tensor's block stream + problem parameters."""
+    blocks = np.ascontiguousarray(w_abs_blocks, dtype=np.float32)
+    h = hashlib.sha256()
+    h.update(_VERSION.encode())
+    h.update(f"|n={n}|m={m}|{solver_fingerprint(config)}|".encode())
+    h.update(str(blocks.shape).encode())
+    h.update(blocks.tobytes())
+    return h.hexdigest()
+
+
+class MaskCache:
+    """In-memory dict over an optional disk ContentStore; counts hits/misses."""
+
+    def __init__(self, store: Optional[ContentStore] = None):
+        self.store = store
+        self._mem: dict[str, np.ndarray] = {}
+        self.mem_hits = 0
+        self.disk_hits = 0
+        self.misses = 0
+
+    def get(self, key: str) -> Optional[np.ndarray]:
+        """Solved (B, M, M) bool mask blocks for ``key``, or None."""
+        if key in self._mem:
+            self.mem_hits += 1
+            return self._mem[key]
+        if self.store is not None and self.store.has(key):
+            mask = self.store.get(key)["mask"].astype(bool)
+            self._mem[key] = mask
+            self.disk_hits += 1
+            return mask
+        self.misses += 1
+        return None
+
+    def put(self, key: str, mask_blocks: np.ndarray) -> None:
+        mask = np.asarray(mask_blocks, dtype=bool)
+        self._mem[key] = mask
+        if self.store is not None:
+            # np.packbits would halve the footprint further; bool npz already
+            # compresses the 1-bit payload well enough for mask volumes.
+            self.store.put(key, mask=mask)
+
+    @property
+    def hits(self) -> int:
+        return self.mem_hits + self.disk_hits

@@ -1,0 +1,184 @@
+"""MaskService: submit/future front-end of the batched mask-solver engine.
+
+Callers enqueue whole tensors (2-D, or scan-stacked 3-D as ONE submission)
+and get back :class:`MaskHandle` futures; ``flush()`` drains the queue as a
+handful of shape-bucketed mega-batches (see ``scheduler``), consulting the
+content-addressed cache first and journaling every completion for resume.
+
+    service = MaskService(SolverConfig(iters=150), directory="runs/prune")
+    handles = [service.submit(name, w, n=2, m=4) for name, w in tensors]
+    service.flush()                       # one bucketed solve for everything
+    masks = {h.name: h.result() for h in handles}
+
+``result()`` on an unresolved handle flushes implicitly, so laziness is a
+throughput optimization, never a correctness concern.  Everything is
+single-process; the "service" boundary is the submit/flush API, which is
+what a multi-tenant deployment would put behind an RPC layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import ContentStore
+from repro.core.solver import SolverConfig
+from repro.service.cache import MaskCache, content_key
+from repro.service.journal import Journal
+from repro.service.scheduler import (
+    BucketPolicy,
+    StreamStats,
+    blocks_to_mask,
+    solve_stream,
+    tensor_to_blocks,
+)
+
+
+class MaskHandle:
+    """Future for one submitted tensor's transposable N:M mask."""
+
+    def __init__(self, service: "MaskService", name: str, n: int, m: int,
+                 key: str, geom: dict):
+        self.service = service
+        self.name = name
+        self.n = n
+        self.m = m
+        self.key = key
+        self._geom = geom
+        self._mask_blocks: Optional[np.ndarray] = None
+
+    @property
+    def done(self) -> bool:
+        return self._mask_blocks is not None
+
+    def _resolve(self, mask_blocks: np.ndarray) -> None:
+        self._mask_blocks = mask_blocks
+
+    def result(self) -> jnp.ndarray:
+        """The solved bool mask, shaped like the submitted tensor."""
+        if not self.done:
+            self.service.flush()
+        assert self.done, f"flush did not resolve {self.name!r}"
+        return jnp.asarray(blocks_to_mask(self._mask_blocks, self._geom))
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    submitted: int = 0
+    cache_hits: int = 0
+    journal_skips: int = 0  # resolved via a prior run's journal + store
+    stream: StreamStats = dataclasses.field(default_factory=StreamStats)
+
+    @property
+    def blocks_solved(self) -> int:
+        return self.stream.blocks_solved
+
+    @property
+    def batches(self) -> int:
+        return self.stream.batches
+
+    def summary(self) -> str:
+        return (
+            f"submitted={self.submitted} cache_hits={self.cache_hits} "
+            f"solved_blocks={self.stream.blocks_solved} "
+            f"batches={self.stream.batches} "
+            f"padded_blocks={self.stream.blocks_padded}"
+        )
+
+
+class MaskService:
+    """Batched, cached, journaled transposable N:M mask solver."""
+
+    def __init__(
+        self,
+        config: SolverConfig = SolverConfig(),
+        policy: BucketPolicy = BucketPolicy(),
+        cache: Optional[MaskCache] = None,
+        journal: Optional[Journal] = None,
+        directory: Optional[str] = None,
+    ):
+        """``directory`` is the one-argument persistent setup: it wires a
+        disk-backed cache (``<dir>/store``) and a completion journal
+        (``<dir>/journal.jsonl``) unless explicit ones are passed."""
+        self.config = config
+        self.policy = policy
+        if directory is not None:
+            if cache is None:
+                cache = MaskCache(ContentStore(os.path.join(directory, "store")))
+            if journal is None:
+                journal = Journal(os.path.join(directory, "journal.jsonl"))
+        self.cache = cache if cache is not None else MaskCache()
+        self.journal = journal
+        self.stats = ServiceStats()
+        self._pending: list[tuple[MaskHandle, np.ndarray]] = []
+
+    # -- submit/future API --------------------------------------------------
+
+    def submit(self, name: str, w, n: int, m: int) -> MaskHandle:
+        """Enqueue one tensor (2-D, or stacked (L, R, C) as one submission).
+
+        The mask objective uses |w|, so callers pass either raw weights or an
+        importance matrix.  Returns immediately; the solve happens at the
+        next ``flush()`` (or lazily at ``result()``).
+        """
+        blocks, geom = tensor_to_blocks(w, m)
+        key = content_key(blocks, n, m, self.config)
+        handle = MaskHandle(self, name, n, m, key, geom)
+        self.stats.submitted += 1
+
+        disk_hits_before = self.cache.disk_hits
+        cached = self.cache.get(key)
+        if cached is not None:
+            if self.cache.disk_hits > disk_hits_before \
+                    and self.journal is not None \
+                    and self.journal.lookup(name) is not None:
+                self.stats.journal_skips += 1
+            self.stats.cache_hits += 1
+            handle._resolve(cached)
+            self._record(handle)
+            return handle
+
+        self._pending.append((handle, blocks))
+        return handle
+
+    def flush(self) -> None:
+        """Solve every pending submission in shape-bucketed mega-batches."""
+        pending, self._pending = self._pending, []
+        if not pending:
+            return
+        # One stream per (n, m): block shape and the solver's static args
+        # both depend on it.  Submission order is preserved within a group.
+        groups: dict[tuple[int, int], list[tuple[MaskHandle, np.ndarray]]] = {}
+        for handle, blocks in pending:
+            groups.setdefault((handle.n, handle.m), []).append((handle, blocks))
+        for (n, _m), entries in groups.items():
+            solved = solve_stream(
+                [blocks for _, blocks in entries],
+                n,
+                self.config,
+                self.policy,
+                self.stats.stream,
+            )
+            for (handle, _), mask_blocks in zip(entries, solved):
+                handle._resolve(mask_blocks)
+                self.cache.put(handle.key, mask_blocks)
+                self._record(handle)
+
+    def solve(self, name: str, w, n: int, m: int) -> jnp.ndarray:
+        """Synchronous convenience: submit + flush + result."""
+        handle = self.submit(name, w, n, m)
+        self.flush()
+        return handle.result()
+
+    # -- internals ----------------------------------------------------------
+
+    def _record(self, handle: MaskHandle) -> None:
+        if self.journal is not None:
+            prior = self.journal.lookup(handle.name)
+            if prior is None or prior.get("key") != handle.key:
+                self.journal.record(
+                    handle.name, handle.key, n=handle.n, m=handle.m
+                )

@@ -1,0 +1,76 @@
+"""Append-only completion journal for resumable model-scale runs.
+
+One JSON line per completed tensor:
+
+    {"name": "layer003/mlp/down", "key": "<sha256>", "extra": {...}}
+
+The journal is the unit of crash-resume: a killed run leaves the journal
+with every tensor completed so far, and the next run skips straight past
+them by fetching their payloads from the content store under the recorded
+key.  Appends are flushed + fsynced per record so at most the in-flight
+tensor is lost on a kill; a torn final line (crash mid-append) is ignored on
+read, which is the same corruption discipline as ``CheckpointManager``'s
+atomic commits.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional
+
+
+class Journal:
+    def __init__(self, path: str):
+        """``path``: journal file; parent directories are created."""
+        self.path = path
+        parent = os.path.dirname(path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        self._completed: Optional[dict[str, dict]] = None
+        self._tail_checked = False
+
+    def _needs_newline(self) -> bool:
+        """True when the file ends mid-line (torn tail from a crash) — the
+        next append must not glue onto it and corrupt itself too."""
+        if self._tail_checked:
+            return False
+        self._tail_checked = True
+        try:
+            with open(self.path, "rb") as f:
+                f.seek(-1, os.SEEK_END)
+                return f.read(1) != b"\n"
+        except (OSError, ValueError):  # missing or empty file
+            return False
+
+    def completed(self) -> dict[str, dict]:
+        """name -> record for every durably recorded tensor (last wins)."""
+        if self._completed is None:
+            out: dict[str, dict] = {}
+            if os.path.exists(self.path):
+                with open(self.path) as f:
+                    for line in f:
+                        line = line.strip()
+                        if not line:
+                            continue
+                        try:
+                            rec = json.loads(line)
+                        except json.JSONDecodeError:
+                            continue  # torn tail from a mid-append crash
+                        if isinstance(rec, dict) and "name" in rec:
+                            out[rec["name"]] = rec
+            self._completed = out
+        return self._completed
+
+    def lookup(self, name: str) -> Optional[dict]:
+        return self.completed().get(name)
+
+    def record(self, name: str, key: str, **extra) -> None:
+        rec = {"name": name, "key": key}
+        if extra:
+            rec.update(extra)
+        lead = "\n" if self._needs_newline() else ""
+        with open(self.path, "a") as f:
+            f.write(lead + json.dumps(rec) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+        self.completed()[name] = rec

@@ -1,0 +1,198 @@
+"""Shape-bucketed scheduling of M x M block problems.
+
+The transposable N:M solver is embarrassingly parallel over M x M blocks
+(every op in Dykstra + rounding is batched over the leading axis), so the
+only thing that matters for throughput at model scale is how blocks are
+*dispatched*: the naive per-tensor path pays one XLA compilation per distinct
+block count and one dispatch per tensor, which wrecks occupancy on the long
+tail of small layers.
+
+The scheduler instead treats the whole model as one stream of blocks per
+``(n, m)`` group and packs it into a small number of shape-bucketed
+mega-batches:
+
+  * bucket sizes are the geometric ladder ``base * growth^k`` capped at
+    ``max_bucket`` — every workload compiles at most ``len(ladder)`` programs
+    per ``(n, m)`` instead of one per tensor;
+  * the plan greedily emits the largest bucket that fits the remaining
+    stream, then rounds the tail UP to the smallest bucket that covers it,
+    padding with all-zero sentinel blocks (blocks are independent, so
+    sentinels can never contaminate real results — they are sliced off after
+    the solve);
+  * mega-batches are dispatched back-to-back without blocking, so host-side
+    packing of batch ``k+1`` overlaps the device solve of batch ``k`` (JAX
+    async dispatch);
+  * results are scattered back to per-tensor block streams in submission
+    order.
+
+Bit-exactness: every mega-batch is solved by the exact same jitted program
+as the per-tensor path (``repro.core.solver._solve_blocks_jit``), and every
+per-block operation in the solver reduces only within its own block, so
+masks are identical to ``transposable_nm_mask`` bit for bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.solver import SolverConfig, _solve_blocks_jit
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPolicy:
+    """Geometric ladder of mega-batch sizes (in blocks)."""
+
+    base: int = 512        # smallest dispatched batch
+    growth: int = 4        # ladder ratio
+    max_bucket: int = 32768  # device-memory cap per dispatch
+
+    def ladder(self) -> tuple[int, ...]:
+        sizes = [self.base]
+        while sizes[-1] * self.growth <= self.max_bucket:
+            sizes.append(sizes[-1] * self.growth)
+        return tuple(sizes)
+
+    def plan(self, total: int) -> list[int]:
+        """Bucket sizes covering ``total`` blocks (sum(plan) >= total)."""
+        assert total > 0, total
+        sizes = self.ladder()
+        out = []
+        remaining = total
+        while remaining >= sizes[-1]:
+            out.append(sizes[-1])
+            remaining -= sizes[-1]
+        if remaining:
+            out.append(next(s for s in sizes if s >= remaining))
+        return out
+
+
+@dataclasses.dataclass
+class StreamStats:
+    blocks_solved: int = 0     # real (non-sentinel) blocks dispatched
+    blocks_padded: int = 0     # sentinel blocks added to fill buckets
+    batches: int = 0           # device dispatches
+
+
+def pad_blocks_2d(w_abs: np.ndarray, m: int) -> tuple[np.ndarray, tuple[int, int]]:
+    """numpy twin of ``core.blocks.pad_to_multiple`` (host-side packing)."""
+    r, c = w_abs.shape
+    pr, pc = (-r) % m, (-c) % m
+    if pr or pc:
+        w_abs = np.pad(w_abs, ((0, pr), (0, pc)))
+    return w_abs, (r, c)
+
+
+def to_blocks_2d(w_abs: np.ndarray, m: int) -> np.ndarray:
+    """numpy twin of ``core.blocks.to_blocks``: (R, C) -> (B, M, M)."""
+    r, c = w_abs.shape
+    assert r % m == 0 and c % m == 0, (r, c, m)
+    return np.ascontiguousarray(
+        w_abs.reshape(r // m, m, c // m, m).transpose(0, 2, 1, 3).reshape(-1, m, m)
+    )
+
+
+def from_blocks_2d(blocks: np.ndarray, shape: tuple[int, int]) -> np.ndarray:
+    """Inverse of :func:`to_blocks_2d`; ``shape`` is the padded matrix shape."""
+    r, c = shape
+    m = blocks.shape[-1]
+    return blocks.reshape(r // m, c // m, m, m).transpose(0, 2, 1, 3).reshape(r, c)
+
+
+def tensor_to_blocks(w: np.ndarray, m: int) -> tuple[np.ndarray, dict]:
+    """|w| -> one (B, M, M) float32 block stream for a 2-D or stacked 3-D
+    tensor, plus the geometry needed to reassemble the mask."""
+    w_abs = np.abs(np.asarray(w)).astype(np.float32)
+    if w_abs.ndim == 2:
+        padded, orig = pad_blocks_2d(w_abs, m)
+        return to_blocks_2d(padded, m), {
+            "shape": orig, "padded": padded.shape, "layers": None,
+        }
+    assert w_abs.ndim == 3, w_abs.shape
+    slices = [pad_blocks_2d(w_abs[i], m) for i in range(w_abs.shape[0])]
+    blocks = np.concatenate([to_blocks_2d(p, m) for p, _ in slices], axis=0)
+    return blocks, {
+        "shape": slices[0][1], "padded": slices[0][0].shape,
+        "layers": w_abs.shape[0],
+    }
+
+
+def blocks_to_mask(mask_blocks: np.ndarray, geom: dict) -> np.ndarray:
+    """Reassemble a per-tensor bool mask from its solved block stream."""
+    r, c = geom["shape"]
+    if geom["layers"] is None:
+        return from_blocks_2d(mask_blocks, geom["padded"])[:r, :c]
+    per = mask_blocks.shape[0] // geom["layers"]
+    return np.stack([
+        from_blocks_2d(mask_blocks[i * per : (i + 1) * per], geom["padded"])[:r, :c]
+        for i in range(geom["layers"])
+    ])
+
+
+def solve_stream(
+    block_arrays: list[np.ndarray],
+    n: int,
+    config: SolverConfig = SolverConfig(),
+    policy: BucketPolicy = BucketPolicy(),
+    stats: StreamStats | None = None,
+) -> list[np.ndarray]:
+    """Solve a list of per-tensor (B_i, M, M) block streams as one bucketed
+    mega-batch sequence; returns per-tensor bool mask block streams.
+
+    All arrays must share the same M.  The concatenated stream is cut at
+    bucket boundaries regardless of tensor boundaries, so one tensor may span
+    several buckets and one bucket may hold many tensors.
+    """
+    if not block_arrays:
+        return []
+    m = block_arrays[0].shape[-1]
+    for a in block_arrays:
+        assert a.ndim == 3 and a.shape[-2:] == (m, m), (a.shape, m)
+    stats = stats if stats is not None else StreamStats()
+
+    total = sum(a.shape[0] for a in block_arrays)
+    plan = policy.plan(total)
+
+    # Cut the virtual concatenated stream into buckets, dispatch each without
+    # blocking, and remember which (tensor, range) each bucket slice feeds.
+    cursor_t, cursor_off = 0, 0
+    pending = []  # (device result, [(tensor_idx, tensor_off, count, bucket_off)])
+    for bucket in plan:
+        parts, segmap = [], []
+        filled = 0
+        while filled < bucket and cursor_t < len(block_arrays):
+            arr = block_arrays[cursor_t]
+            take = min(bucket - filled, arr.shape[0] - cursor_off)
+            parts.append(arr[cursor_off : cursor_off + take])
+            segmap.append((cursor_t, cursor_off, take, filled))
+            filled += take
+            cursor_off += take
+            if cursor_off == arr.shape[0]:
+                cursor_t, cursor_off = cursor_t + 1, 0
+        if filled < bucket:  # tail bucket: sentinel zero blocks
+            parts.append(np.zeros((bucket - filled, m, m), np.float32))
+            stats.blocks_padded += bucket - filled
+        batch = np.concatenate(parts, axis=0) if len(parts) > 1 else parts[0]
+        solved = _solve_blocks_jit(
+            jnp.asarray(batch),
+            n,
+            config.iters,
+            config.ls_steps,
+            config.tau_scale,
+            config.use_kernel,
+        )
+        stats.blocks_solved += filled
+        stats.batches += 1
+        pending.append((solved, segmap))
+
+    outs = [
+        np.empty((a.shape[0], m, m), dtype=bool) for a in block_arrays
+    ]
+    for solved, segmap in pending:
+        host = np.asarray(solved)  # blocks until this bucket's solve is done
+        for tensor_idx, tensor_off, count, bucket_off in segmap:
+            outs[tensor_idx][tensor_off : tensor_off + count] = host[
+                bucket_off : bucket_off + count
+            ]
+    return outs

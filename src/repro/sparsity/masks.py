@@ -5,15 +5,22 @@ mask in the forward pass (and therefore gradients are masked by the chain
 rule).  ``sparsify_pytree`` walks a parameter tree and attaches transposable
 N:M masks to every 2-D weight whose both dims divide by M (embedding tables
 and norm/bias vectors are exempt — paper prunes linear projections only).
+
+Mask generation routes through :class:`repro.service.MaskService`: the whole
+tree is submitted first (stacked (L, in, out) weights as ONE submission) and
+solved in a handful of shape-bucketed mega-batches, instead of one dispatch
+per tensor per layer.  Results are bit-identical to the per-tensor
+``transposable_nm_mask`` path.
 """
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.solver import SolverConfig, transposable_nm_mask
+from repro.core.solver import SolverConfig
+from repro.service.engine import MaskService
 
 
 def apply_mask(params, masks):
@@ -42,30 +49,40 @@ def default_prunable(path: tuple, p: jnp.ndarray, m: int) -> bool:
     return False
 
 
+def _path_name(path: tuple) -> str:
+    return "/".join(
+        str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+        for p in path
+    )
+
+
 def sparsify_pytree(
     params,
     n: int,
     m: int,
     config: SolverConfig = SolverConfig(),
     prunable: Callable = default_prunable,
+    service: Optional[MaskService] = None,
 ):
     """Compute transposable N:M masks for every prunable weight in a pytree.
 
-    Returns a mask pytree with ``None`` at exempt leaves.  Stacked (L, in, out)
-    weights are masked per layer (block batches concatenate across layers —
-    TSENOR's block-batch formulation doesn't care).
+    Returns a mask pytree with ``None`` at exempt leaves.  Stacked (L, in,
+    out) weights are one submission each (block batches concatenate across
+    layers — TSENOR's block-batch formulation doesn't care).
+
+    ``service``: reuse an existing :class:`MaskService` — e.g. one built with
+    ``directory=`` for disk caching + journaled resume; its config takes
+    precedence over ``config``.  By default an in-memory service is created
+    per call.
     """
+    svc = service if service is not None else MaskService(config)
     flat = jax.tree_util.tree_flatten_with_path(params)
-    masks = []
+    handles = []
     for path, p in flat[0]:
         if not prunable(path, p, m):
-            masks.append(None)
+            handles.append(None)
             continue
-        if p.ndim == 3:
-            mk = jnp.stack(
-                [transposable_nm_mask(p[i], n, m, config) for i in range(p.shape[0])]
-            )
-        else:
-            mk = transposable_nm_mask(p, n, m, config)
-        masks.append(mk)
+        handles.append(svc.submit(_path_name(path), p, n, m))
+    svc.flush()  # everything dispatches as shape-bucketed mega-batches
+    masks = [None if h is None else h.result() for h in handles]
     return jax.tree_util.tree_unflatten(flat[1], masks)

@@ -138,7 +138,9 @@ def build_train_step(
         auto = frozenset(n for n in mesh.axis_names if n != step_cfg.pod_axis)
         state_spec = P()  # replicated across pods
         batch_spec = P(step_cfg.pod_axis)
-        fn = jax.shard_map(
+        from repro.compat import shard_map
+
+        fn = shard_map(
             core_step,
             mesh=mesh,
             in_specs=(state_spec, batch_spec),

@@ -74,7 +74,9 @@ class TestSpecs:
     def _mesh(self, shape=(2, 2), axes=("data", "model")):
         # AbstractMesh: spec fitting needs only axis names/sizes, so these
         # tests run on the 1-CPU-device container.
-        return jax.sharding.AbstractMesh(shape, axes)
+        from repro.compat import abstract_mesh
+
+        return abstract_mesh(shape, axes)
 
     def test_param_specs_2d_sharding(self):
         from repro.configs.registry import get_smoke_config
@@ -132,9 +134,10 @@ class TestSpecs:
 
 def test_shard_unconstrained_for_nondividing_dims():
     from jax.sharding import PartitionSpec as P
+    from repro.compat import abstract_mesh
     from repro.distributed.sharding import _fit_spec_to_shape
 
-    mesh = jax.sharding.AbstractMesh((2, 4), ("data", "model"))
+    mesh = abstract_mesh((2, 4), ("data", "model"))
     spec = _fit_spec_to_shape(P("data", "model"), (8, 10), mesh)
     assert spec[0] == "data"
     assert spec[1] is P.UNCONSTRAINED  # 10 % 4 != 0 -> let XLA choose

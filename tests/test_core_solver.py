@@ -3,7 +3,19 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip cleanly; the rest of the module runs
+    def given(**kwargs):
+        return lambda f: pytest.mark.skip(reason="hypothesis not installed")(f)
+
+    def settings(**kwargs):
+        return lambda f: f
+
+    class st:  # noqa: N801 - stand-in for hypothesis.strategies
+        sampled_from = staticmethod(lambda *a, **k: None)
+        integers = staticmethod(lambda *a, **k: None)
 
 from repro.core import (
     SolverConfig,

@@ -66,6 +66,7 @@ def test_sharded_train_step_matches_single_device():
 def test_compressed_psum_close_to_exact():
     out = run_py("""
         import numpy as np, jax, jax.numpy as jnp
+        from repro.compat import set_mesh_context
         from repro.launch.mesh import make_mesh
         from repro.models.config import ModelConfig
         from repro.optim import AdamW
@@ -82,7 +83,7 @@ def test_compressed_psum_close_to_exact():
         b = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
         sc = make_train_state(cfg, opt, jax.random.PRNGKey(0), compression=True)
         sn = make_train_state(cfg, opt, jax.random.PRNGKey(0))
-        with jax.set_mesh(mesh):
+        with set_mesh_context(mesh):
             stc, mc = build_train_step(cfg, opt, step_cfg=StepConfig(compression=True), mesh=mesh)(sc, b)
             stn, mn = build_train_step(cfg, opt)(sn, b)
         d = max(float(jnp.max(jnp.abs(a - b2)))

@@ -1,0 +1,284 @@
+"""repro.service: bucketed scheduling, caching, journaled resume."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.solver import SolverConfig, nm_mask, transposable_nm_mask
+from repro.service import BucketPolicy, Journal, MaskCache, MaskService
+from repro.service.cache import content_key
+from repro.checkpoint import ContentStore
+
+FAST = SolverConfig(iters=60)
+TINY = BucketPolicy(base=8, growth=2, max_bucket=32)  # exercise multi-bucket paths
+
+
+def mixed_tensors(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "big": rng.normal(size=(64, 48)).astype(np.float32),
+        "pad_both": rng.normal(size=(20, 12)).astype(np.float32),
+        "one_block": rng.normal(size=(8, 8)).astype(np.float32),
+        "stacked": rng.normal(size=(3, 16, 16)).astype(np.float32),
+        "tiny": rng.normal(size=(4, 4)).astype(np.float32),
+    }
+
+
+def direct_mask(w, n, m, config=FAST):
+    if w.ndim == 3:
+        return np.stack([
+            np.array(transposable_nm_mask(jnp.asarray(w[i]), n, m, config))
+            for i in range(w.shape[0])
+        ])
+    return np.array(transposable_nm_mask(jnp.asarray(w), n, m, config))
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: bucketing round-trips bit-exact vs the per-tensor path.
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_shapes_bit_exact_vs_direct():
+    svc = MaskService(FAST, policy=TINY)
+    tensors = mixed_tensors()
+    handles = {k: svc.submit(k, v, 4, 8) for k, v in tensors.items()}
+    svc.flush()
+    for k, v in tensors.items():
+        got = np.array(handles[k].result())
+        want = direct_mask(v, 4, 8)
+        assert got.shape == want.shape, k
+        assert (got == want).all(), k
+    assert svc.stats.batches >= 2  # tiny policy forces several mega-batches
+    assert svc.stats.blocks_solved == sum(
+        np.prod([s // 8 + (s % 8 > 0) for s in t.shape[-2:]]) * (t.shape[0] if t.ndim == 3 else 1)
+        for t in tensors.values()
+    )
+
+
+def test_mixed_nm_groups_one_service():
+    rng = np.random.default_rng(1)
+    svc = MaskService(FAST, policy=TINY)
+    a = rng.normal(size=(16, 16)).astype(np.float32)
+    b = rng.normal(size=(16, 24)).astype(np.float32)
+    ha = svc.submit("a", a, 2, 4)
+    hb = svc.submit("b", b, 4, 8)
+    svc.flush()
+    assert (np.array(ha.result()) == direct_mask(a, 2, 4)).all()
+    assert (np.array(hb.result()) == direct_mask(b, 4, 8)).all()
+
+
+def test_lazy_result_flushes():
+    svc = MaskService(FAST, policy=TINY)
+    h = svc.submit("w", np.ones((8, 8), np.float32), 4, 8)
+    assert not h.done
+    mask = np.array(h.result())  # implicit flush
+    assert h.done and mask.sum(0).max() <= 4 and mask.sum(1).max() <= 4
+
+
+def test_bucket_plan_ladder():
+    p = BucketPolicy(base=8, growth=4, max_bucket=128)
+    assert p.ladder() == (8, 32, 128)
+    assert p.plan(128 * 3 + 40) == [128, 128, 128, 128]
+    assert p.plan(7) == [8]
+    assert p.plan(8) == [8]
+    assert p.plan(9) == [32]
+
+
+def test_zero_magnitude_blocks_are_safe():
+    svc = MaskService(FAST, policy=TINY)
+    w = np.zeros((8, 8), np.float32)
+    mask = np.array(svc.solve("z", w, 4, 8))
+    assert mask.sum(0).max() <= 4 and mask.sum(1).max() <= 4
+
+
+# ---------------------------------------------------------------------------
+# Cache: hit/miss accounting + disk persistence.
+# ---------------------------------------------------------------------------
+
+
+def test_cache_hits_skip_solving():
+    svc = MaskService(FAST, policy=TINY)
+    w = np.random.default_rng(2).normal(size=(16, 16)).astype(np.float32)
+    m1 = np.array(svc.solve("w", w, 4, 8))
+    solved = svc.stats.blocks_solved
+    m2 = np.array(svc.solve("w-again", w, 4, 8))  # same content, new name
+    assert (m1 == m2).all()
+    assert svc.stats.blocks_solved == solved  # nothing re-solved
+    assert svc.stats.cache_hits == 1
+
+
+def test_cache_key_sensitivity():
+    w = np.abs(np.random.default_rng(3).normal(size=(2, 8, 8))).astype(np.float32)
+    base = content_key(w, 4, 8, FAST)
+    assert content_key(w, 2, 8, FAST) != base
+    assert content_key(w, 4, 8, SolverConfig(iters=61)) != base
+    assert content_key(w + 1e-6, 4, 8, FAST) != base
+    # block_batch only chunks dispatch — must NOT invalidate the cache
+    assert content_key(w, 4, 8, SolverConfig(iters=60, block_batch=7)) == base
+
+
+def test_disk_persistence_across_services(tmp_path):
+    w = np.random.default_rng(4).normal(size=(24, 16)).astype(np.float32)
+    svc1 = MaskService(FAST, policy=TINY, directory=str(tmp_path))
+    m1 = np.array(svc1.solve("w", w, 4, 8))
+    assert svc1.stats.blocks_solved > 0
+
+    svc2 = MaskService(FAST, policy=TINY, directory=str(tmp_path))  # fresh process, same dir
+    m2 = np.array(svc2.solve("w", w, 4, 8))
+    assert (m1 == m2).all()
+    assert svc2.stats.blocks_solved == 0  # fully served from disk
+    assert svc2.cache.disk_hits == 1
+
+
+# ---------------------------------------------------------------------------
+# Journal + resume-after-interrupt.
+# ---------------------------------------------------------------------------
+
+
+def test_journal_records_and_tolerates_torn_tail(tmp_path):
+    j = Journal(str(tmp_path / "j.jsonl"))
+    j.record("a", "k1", n=2, m=4)
+    j.record("b", "k2", n=2, m=4)
+    with open(j.path, "a") as f:
+        f.write('{"name": "c", "key"')  # torn mid-append by a crash
+    j2 = Journal(j.path)
+    done = j2.completed()
+    assert set(done) == {"a", "b"}
+    assert done["a"]["key"] == "k1"
+    # Appending after the tear must not glue onto the torn fragment.
+    j2.record("d", "k4", n=2, m=4)
+    assert set(Journal(j.path).completed()) == {"a", "b", "d"}
+
+
+def test_resume_after_interrupt(tmp_path):
+    """A run killed mid-model re-solves only the unfinished tensors."""
+    tensors = mixed_tensors(seed=5)
+    names = list(tensors)
+
+    svc1 = MaskService(FAST, policy=TINY, directory=str(tmp_path))
+    for k in names[:2]:  # "run" dies after two tensors complete
+        svc1.solve(k, tensors[k], 4, 8)
+    first_solved = svc1.stats.blocks_solved
+    assert first_solved > 0
+
+    svc2 = MaskService(FAST, policy=TINY, directory=str(tmp_path))
+    handles = {k: svc2.submit(k, v, 4, 8) for k, v in tensors.items()}
+    svc2.flush()
+    for k, v in tensors.items():
+        assert (np.array(handles[k].result()) == direct_mask(v, 4, 8)).all(), k
+    assert svc2.stats.cache_hits == 2  # the finished prefix came from disk
+    total_blocks = first_solved + svc2.stats.blocks_solved
+    svc3 = MaskService(FAST, policy=TINY)  # no cache: counts the full workload
+    for k, v in tensors.items():
+        svc3.submit(k, v, 4, 8)
+    svc3.flush()
+    assert total_blocks == svc3.stats.blocks_solved  # no tensor solved twice
+
+
+def test_sparsify_pytree_routes_through_service_bit_exact():
+    from repro.sparsity.masks import sparsify_pytree
+
+    rng = np.random.default_rng(6)
+    params = {
+        "embed": rng.normal(size=(64, 32)).astype(np.float32),  # exempt? no: 2-D divisible
+        "blocks": {
+            "wq": rng.normal(size=(2, 16, 16)).astype(np.float32),
+            "ln": rng.normal(size=(16,)).astype(np.float32),
+        },
+    }
+    svc = MaskService(SolverConfig(iters=60), policy=TINY)
+    masks = sparsify_pytree(params, 2, 4, SolverConfig(iters=60), service=svc)
+    assert masks["blocks"]["ln"] is None
+    assert (np.array(masks["embed"]) == direct_mask(params["embed"], 2, 4,
+                                                    SolverConfig(iters=60))).all()
+    assert (np.array(masks["blocks"]["wq"]) == direct_mask(
+        params["blocks"]["wq"], 2, 4, SolverConfig(iters=60))).all()
+    # stacked tensor was ONE submission, not one per layer
+    assert svc.stats.submitted == 2
+
+
+# ---------------------------------------------------------------------------
+# Runner: journaled pruning resumes without re-solving.
+# ---------------------------------------------------------------------------
+
+
+def _tiny_lm():
+    from repro.models.config import ModelConfig
+    from repro.models import lm
+
+    cfg = ModelConfig("svc-test", "dense", num_layers=2, d_model=32, num_heads=4,
+                      num_kv_heads=2, d_ff=64, vocab_size=64, remat="none",
+                      dtype="float32")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jnp.asarray(np.random.default_rng(7).integers(0, 64, size=(2, 16)))
+    return cfg, params, tokens
+
+
+def test_prune_transformer_journal_resume(tmp_path):
+    from repro.pruning.runner import prune_transformer
+
+    cfg, params, tokens = _tiny_lm()
+    jd = str(tmp_path / "run")
+
+    class Interrupted(Exception):
+        pass
+
+    calls = []
+
+    def dying_log(s):
+        calls.append(s)
+        if len(calls) == 5:  # die mid-model
+            raise Interrupted(s)
+
+    with pytest.raises(Interrupted):
+        prune_transformer(params, cfg, tokens=tokens, method="wanda", n=2, m=4,
+                          solver=SolverConfig(iters=40), journal_dir=jd,
+                          log=dying_log)
+
+    # Resumed run: completes, restores the finished prefix from the journal.
+    restored = []
+    pruned, masks = prune_transformer(
+        params, cfg, tokens=tokens, method="wanda", n=2, m=4,
+        solver=SolverConfig(iters=40), journal_dir=jd,
+        log=lambda s: restored.append(s),
+    )
+    assert any("restored from journal" in s for s in restored)
+
+    # And matches a clean single-shot run exactly.
+    pruned2, masks2 = prune_transformer(
+        params, cfg, tokens=tokens, method="wanda", n=2, m=4,
+        solver=SolverConfig(iters=40),
+    )
+    for a, b in zip(jax.tree.leaves(masks), jax.tree.leaves(masks2)):
+        assert (np.array(a) == np.array(b)).all()
+    for a, b in zip(jax.tree.leaves(pruned), jax.tree.leaves(pruned2)):
+        np.testing.assert_array_equal(np.array(a), np.array(b))
+
+    # Third run: fully journaled, zero new solves.
+    svc = MaskService(SolverConfig(iters=40), directory=jd)
+    prune_transformer(params, cfg, tokens=tokens, method="wanda", n=2, m=4,
+                      solver=SolverConfig(iters=40), service=svc, journal_dir=jd)
+    assert svc.stats.blocks_solved == 0
+
+
+# ---------------------------------------------------------------------------
+# nm_mask tie-break on duplicate magnitudes (satellite).
+# ---------------------------------------------------------------------------
+
+
+def test_nm_mask_tie_break_duplicate_magnitudes():
+    w = jnp.ones((8, 8), jnp.float32)  # every entry ties
+    for axis in (0, 1):
+        mask = np.array(nm_mask(w, 2, 4, axis=axis))
+        sums = mask.reshape(2, 4, 8).sum(1) if axis == 0 else mask.reshape(8, 2, 4).sum(2)
+        assert (sums == 2).all(), (axis, sums)
+
+
+def test_nm_mask_tie_break_partial_duplicates():
+    w = np.array([[3.0, 1.0, 1.0, 1.0],
+                  [2.0, 2.0, 2.0, 0.0]] * 2, dtype=np.float32).T  # (4, 4)
+    mask = np.array(nm_mask(jnp.asarray(w), 2, 4, axis=0))
+    assert (mask.sum(0) == 2).all()
+    assert mask[0, 0] and mask[0, 2]  # strict max always kept
