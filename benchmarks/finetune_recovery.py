@@ -11,7 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
-from repro.core.solver import SolverConfig
+from repro.api import PatternSpec, SolverConfig
 from repro.data import SyntheticLM
 from repro.models import lm
 from repro.models.config import ModelConfig
@@ -44,7 +44,8 @@ def run():
     emit("finetune_dense", 0.0, f"loss={dense:.4f}")
 
     for n, m in [(2, 4), (8, 16)]:
-        masks = sparsify_pytree(state.params, n, m, SolverConfig(iters=80))
+        masks = sparsify_pytree(state.params, PatternSpec(n, m),
+                                config=SolverConfig(iters=80))
         pruned = apply_mask(state.params, masks)
         before = eval_loss(pruned, data)
         opt_ft = AdamW(learning_rate=1e-3)

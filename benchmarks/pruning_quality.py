@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
-from repro.core.solver import SolverConfig
+from repro.api import PatternSpec, SolverConfig
 from repro.data import SyntheticLM
 from repro.models import lm
 from repro.models.config import ModelConfig
@@ -55,8 +55,8 @@ def run():
     for n, m in [(2, 4), (8, 16)]:
         for method in ("wanda", "sparsegpt", "alps"):
             pruned, _ = prune_transformer(
-                params, CFG, tokens=calib, method=method, n=n, m=m,
-                transposable=True, solver=FAST,
+                params, CFG, tokens=calib, method=method,
+                pattern=PatternSpec(n, m, True), solver=FAST,
             )
             loss = eval_loss(pruned, data)
             results[(method, m)] = loss

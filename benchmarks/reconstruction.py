@@ -10,7 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
-from repro.core.solver import SolverConfig
+from repro.api import PatternSpec, SolverConfig
 from repro.pruning import alps_prune, gram_matrix, reconstruction_error
 from repro.pruning.alps import AlpsConfig
 
@@ -31,7 +31,7 @@ def run():
     for patterns, tag in ((PATTERNS_50, "50pct"), (PATTERNS_75, "75pct")):
         for n, m in patterns:
             for transposable in (False, True):
-                wp, _ = alps_prune(wj, h, n, m, transposable=transposable, config=cfg)
+                wp, _ = alps_prune(wj, h, PatternSpec(n, m, transposable), config=cfg)
                 e = float(reconstruction_error(xj, wj, wp))
                 kind = "tran" if transposable else "std"
                 emit(f"recon_{tag}_{n}:{m}_{kind}", 0.0, f"err={e:.5f}")

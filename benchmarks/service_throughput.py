@@ -10,6 +10,9 @@ isolates the scheduling win.
 Timings are end-to-end for a fresh workload (compilations included — mask
 generation is a one-shot pipeline, so compile time IS wall-clock the user
 pays), with a second warm pass reported for the steady-state comparison.
+Both paths use the unified API: the service side is the canonical
+``MaskService.solve`` machinery (submit + flush), the naive side the
+per-tensor ``solve_mask``.
 
     PYTHONPATH=src python benchmarks/service_throughput.py [--smoke]
 """
@@ -22,11 +25,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
-from repro.core.solver import SolverConfig, transposable_nm_mask
-from repro.service import BucketPolicy, MaskService
+from repro.api import BucketPolicy, MaskService, PatternSpec, SolverConfig, solve_mask
 from repro.service.scheduler import tensor_to_blocks
 
 N, M = 4, 8
+PATTERN = PatternSpec(N, M)
 
 
 def workload(smoke: bool = False):
@@ -57,11 +60,11 @@ def naive_pass(tensors, config) -> float:
     for _, w in tensors:
         if w.ndim == 3:  # per-tensor path loops the stacked layers too
             outs.extend(
-                transposable_nm_mask(jnp.asarray(w[i]), N, M, config)
+                solve_mask(jnp.asarray(w[i]), PATTERN, config)
                 for i in range(w.shape[0])
             )
         else:
-            outs.append(transposable_nm_mask(jnp.asarray(w), N, M, config))
+            outs.append(solve_mask(jnp.asarray(w), PATTERN, config))
     for o in outs:
         o.block_until_ready()
     return time.perf_counter() - t0
@@ -70,7 +73,7 @@ def naive_pass(tensors, config) -> float:
 def service_pass(tensors, config, policy) -> tuple[float, MaskService]:
     t0 = time.perf_counter()
     svc = MaskService(config, policy=policy)
-    handles = [svc.submit(name, w, N, M) for name, w in tensors]
+    handles = [svc.submit(name, w, PATTERN) for name, w in tensors]
     svc.flush()
     for h in handles:
         h.result()

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
-from repro.core import transposable_nm_mask
+from repro.api import PatternSpec, solve_mask
 from repro.kernels.nm_spmm.kernel import nm_spmm_pallas
 from repro.kernels.nm_spmm.ref import nm_spmm_ref
 from repro.sparsity.compressed import compress_nm, compressed_bytes
@@ -33,7 +33,7 @@ def run():
     # Correctness spot check of the kernel path used for the claim.
     rng = np.random.default_rng(0)
     w = rng.normal(size=(128, 128)).astype(np.float32)
-    mask = np.array(transposable_nm_mask(jnp.asarray(w), 8, 16))
+    mask = np.array(solve_mask(jnp.asarray(w), PatternSpec(8, 16)))
     vals, idx = compress_nm(jnp.asarray(w), jnp.asarray(mask), 8, 16)
     x = jnp.asarray(rng.normal(size=(8, 128)).astype(np.float32))
     err_f = float(jnp.max(jnp.abs(

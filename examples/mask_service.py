@@ -15,10 +15,11 @@ import tempfile
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.solver import SolverConfig, is_transposable_nm, transposable_nm_mask
-from repro.service import BucketPolicy, MaskService
+from repro.api import (BucketPolicy, MaskService, PatternSpec, SolverConfig,
+                       is_transposable_nm, solve_mask)
 
 N, M = 2, 4
+PATTERN = PatternSpec(N, M)
 
 
 def make_workload(seed=0):
@@ -47,13 +48,13 @@ def main():
     svc = MaskService(config, policy=policy, directory=workdir)
     names = list(tensors)
     for name in names[: len(names) // 2]:  # "crash" halfway through
-        svc.solve(name, tensors[name], N, M)
+        svc.solve(tensors[name], PATTERN, name=name)
     print(f"  died after {len(names) // 2}/{len(names)} tensors: "
           f"{svc.stats.summary()}")
 
     print("== run 2: resume + finish ==")
     svc = MaskService(config, policy=policy, directory=workdir)
-    handles = {k: svc.submit(k, v, N, M) for k, v in tensors.items()}
+    handles = {k: svc.submit(k, v, PATTERN) for k, v in tensors.items()}
     svc.flush()
     masks = {k: h.result() for k, h in handles.items()}
     print(f"  {svc.stats.summary()}")
@@ -62,7 +63,7 @@ def main():
 
     # Masks are bit-identical to the per-tensor reference path.
     for name in ("layer0/wq", "layer2/odd"):
-        ref = transposable_nm_mask(jnp.asarray(tensors[name]), N, M, config)
+        ref = solve_mask(jnp.asarray(tensors[name]), PATTERN, config)
         assert (np.array(masks[name]) == np.array(ref)).all(), name
         assert is_transposable_nm(np.array(masks[name]), N, M)
     stacked = np.array(masks["stacked_qkv"])
@@ -73,7 +74,7 @@ def main():
     print("== run 3: fully cached (re-pruning is near-free) ==")
     svc = MaskService(config, policy=policy, directory=workdir)
     for k, v in tensors.items():
-        svc.submit(k, v, N, M)
+        svc.submit(k, v, PATTERN)
     svc.flush()
     print(f"  {svc.stats.summary()}")
     assert svc.stats.blocks_solved == 0

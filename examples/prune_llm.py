@@ -14,7 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_smoke_config
-from repro.core.solver import SolverConfig, is_transposable_nm
+from repro.api import PatternSpec, SolverConfig, is_transposable_nm
 from repro.data import SyntheticLM
 from repro.models import lm
 from repro.models.config import ModelConfig
@@ -69,9 +69,9 @@ def main():
           f"{'standard' if args.standard else 'transposable'} "
           f"{args.n}:{args.m} ==")
     calib = jnp.asarray(data.batch(0)["tokens"])
+    spec = PatternSpec(args.n, args.m, not args.standard)
     pruned, masks = prune_transformer(
-        state.params, cfg, tokens=calib, method=args.method,
-        n=args.n, m=args.m, transposable=not args.standard,
+        state.params, cfg, tokens=calib, method=args.method, pattern=spec,
         solver=SolverConfig(iters=150), log=print,
         journal_dir=args.journal_dir,
     )

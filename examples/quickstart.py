@@ -12,11 +12,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
+from repro.api import (
+    PatternSpec,
     SolverConfig,
     is_transposable_nm,
     objective,
-    transposable_nm_mask,
+    solve_mask,
 )
 from repro.core.baselines import bi_nm, max_k_random, two_approx
 from repro.core.blocks import to_blocks
@@ -31,12 +32,13 @@ def main():
     ap.add_argument("--size", type=int, default=256)
     args = ap.parse_args()
     n, m = args.n, args.m
+    spec = PatternSpec(n, m)
 
     rng = np.random.default_rng(0)
     w = jnp.asarray(rng.normal(size=(args.size, args.size)).astype(np.float32))
 
     print(f"== TSENOR transposable {n}:{m} mask for a {args.size}^2 matrix ==")
-    mask = transposable_nm_mask(w, n, m, SolverConfig(iters=300))
+    mask = solve_mask(w, spec, SolverConfig(iters=300))
     assert is_transposable_nm(np.array(mask), n, m)
     assert is_transposable_nm(np.array(mask).T, n, m)
     print(f"mask sparsity: {1 - float(jnp.mean(mask)):.3f} "

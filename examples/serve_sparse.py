@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.registry import ARCH_IDS, get_smoke_config
-from repro.core.solver import SolverConfig
+from repro.api import PatternSpec, SolverConfig
 from repro.models import lm
 from repro.serve import ServeEngine
 from repro.sparsity.masks import apply_mask, sparsify_pytree
@@ -33,7 +33,8 @@ def main():
     print(f"== serving {cfg.name} ({cfg.family}) ==")
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
     if not args.dense:
-        masks = sparsify_pytree(params, args.n, args.m, SolverConfig(iters=100))
+        masks = sparsify_pytree(params, PatternSpec(args.n, args.m),
+                                config=SolverConfig(iters=100))
         params = apply_mask(params, masks)
         print(f"pruned to transposable {args.n}:{args.m}")
 

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
-from repro.core.solver import SolverConfig
+from repro.api import PatternSpec, SolverConfig
 from repro.data import SyntheticLM
 from repro.models import lm
 from repro.models.config import ModelConfig
@@ -69,8 +69,8 @@ def main():
 
     # Phase 2: TSENOR transposable masks for every projection.
     print(f"== solving transposable {args.n}:{args.m} masks (TSENOR) ==")
-    masks = sparsify_pytree(state.params, args.n, args.m,
-                            SolverConfig(iters=200, block_batch=1 << 15))
+    masks = sparsify_pytree(state.params, PatternSpec(args.n, args.m),
+                            config=SolverConfig(iters=200, block_batch=1 << 15))
     print(f"mask sparsity {mask_sparsity(masks):.3f}")
     pruned = apply_mask(state.params, masks)
 

@@ -1,0 +1,64 @@
+"""TSENOR reproduction — transposable N:M sparse masks at production scale.
+
+``repro.api`` is the unified front door; its names are re-exported here
+lazily (PEP 562), so ``import repro`` stays light and launcher modules can
+keep setting XLA flags before any heavyweight (jax) import runs::
+
+    from repro import MaskService, PatternSpec, SolverConfig
+    mask = MaskService().solve(w, PatternSpec(2, 4))
+"""
+
+# Static mirror of repro.api.__all__ (tests assert they stay in sync);
+# importing repro.api here would pull jax on ``import repro``.
+_API_NAMES = (
+    "PatternSpec",
+    "pattern_from_args",
+    "SolverBackend",
+    "SolverConfig",
+    "available_backends",
+    "get_backend",
+    "register_backend",
+    "unregister_backend",
+    "solve_mask",
+    "solve_blocks",
+    "nm_mask",
+    "transposable_nm_mask",
+    "is_transposable_nm",
+    "objective",
+    "relative_error",
+    "BucketPolicy",
+    "MaskCache",
+    "MaskHandle",
+    "MaskService",
+    "ServiceStats",
+    "StreamStats",
+    "AlpsConfig",
+    "PruneContext",
+    "PruneMethod",
+    "available_methods",
+    "get_method",
+    "register_method",
+    "unregister_method",
+    "prune_transformer",
+    "apply_mask",
+    "mask_sparsity",
+    "sparsify_pytree",
+)
+
+__all__ = list(_API_NAMES) + ["api", "compat"]
+
+
+def __getattr__(name):
+    if name in _API_NAMES or name == "api":
+        import repro.api as api
+
+        return api if name == "api" else getattr(api, name)
+    if name == "compat":
+        import repro.compat as compat
+
+        return compat
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

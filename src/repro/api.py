@@ -1,0 +1,105 @@
+"""Unified front door for the TSENOR reproduction.
+
+Everything a user needs for "arbitrary N:M values with pluggable layer-wise
+frameworks" lives here:
+
+* **Pattern** — :class:`PatternSpec`, the single description of an N:M
+  pattern (``PatternSpec(2, 4)``, ``PatternSpec.parse("t16:32")``).
+* **Solver backends** — :func:`register_backend` / :func:`get_backend` /
+  :func:`available_backends` over the :class:`SolverBackend` protocol;
+  ``SolverConfig(backend="pallas")`` selects one.
+* **Pruning methods** — :func:`register_method` / :func:`get_method` /
+  :func:`available_methods` over the :class:`PruneMethod` protocol;
+  ``prune_transformer(method="wanda")`` is a registry lookup.
+* **Solving** — :func:`solve_mask` for one tensor;
+  :class:`MaskService` (``service.solve(w, pattern)``) for whole-model
+  workloads with bucketed mega-batches, multi-device sharding, caching and
+  journaled resume.
+
+Typical use::
+
+    from repro.api import MaskService, PatternSpec, SolverConfig
+
+    service = MaskService(SolverConfig(iters=150), directory="runs/prune")
+    mask = service.solve(w, PatternSpec(2, 4))
+
+See ``examples/custom_backend.py`` for registering a custom solver backend
+and pruning method.
+"""
+from repro.patterns import PatternSpec, pattern_from_args
+from repro.core.backends import (
+    SolverBackend,
+    available_backends,
+    get_backend,
+    register_backend,
+    unregister_backend,
+)
+from repro.core.solver import (
+    SolverConfig,
+    is_transposable_nm,
+    nm_mask,
+    objective,
+    relative_error,
+    solve_blocks,
+    solve_mask,
+    transposable_nm_mask,
+)
+from repro.service import (
+    BucketPolicy,
+    MaskCache,
+    MaskHandle,
+    MaskService,
+    ServiceStats,
+    StreamStats,
+)
+from repro.pruning.alps import AlpsConfig
+from repro.pruning.methods import (
+    PruneContext,
+    PruneMethod,
+    available_methods,
+    get_method,
+    register_method,
+    unregister_method,
+)
+from repro.pruning.runner import prune_transformer
+from repro.sparsity.masks import apply_mask, mask_sparsity, sparsify_pytree
+
+__all__ = [
+    # pattern
+    "PatternSpec",
+    "pattern_from_args",
+    # solver + backends
+    "SolverBackend",
+    "SolverConfig",
+    "available_backends",
+    "get_backend",
+    "register_backend",
+    "unregister_backend",
+    "solve_mask",
+    "solve_blocks",
+    "nm_mask",
+    "transposable_nm_mask",
+    "is_transposable_nm",
+    "objective",
+    "relative_error",
+    # service
+    "BucketPolicy",
+    "MaskCache",
+    "MaskHandle",
+    "MaskService",
+    "ServiceStats",
+    "StreamStats",
+    # pruning
+    "AlpsConfig",
+    "PruneContext",
+    "PruneMethod",
+    "available_methods",
+    "get_method",
+    "register_method",
+    "unregister_method",
+    "prune_transformer",
+    # sparsity substrate
+    "apply_mask",
+    "mask_sparsity",
+    "sparsify_pytree",
+]

@@ -1,6 +1,14 @@
 """TSENOR core: transposable N:M mask solver (paper Sections 3.1-3.3)."""
+from repro.patterns import PatternSpec
+from repro.core.backends import (
+    SolverBackend,
+    available_backends,
+    get_backend,
+    register_backend,
+)
 from repro.core.solver import (
     SolverConfig,
+    solve_mask,
     transposable_nm_mask,
     solve_blocks,
     nm_mask,
@@ -12,7 +20,13 @@ from repro.core.dykstra import dykstra_log
 from repro.core.rounding import greedy_round, local_search, round_blocks, simple_round
 
 __all__ = [
+    "PatternSpec",
+    "SolverBackend",
     "SolverConfig",
+    "available_backends",
+    "get_backend",
+    "register_backend",
+    "solve_mask",
     "transposable_nm_mask",
     "solve_blocks",
     "nm_mask",

@@ -1,0 +1,196 @@
+"""Pluggable solver backends for the per-block transposable N:M problem.
+
+A backend consumes a ``(B, M, M)`` float batch of ``|W|`` blocks and returns
+``(B, M, M)`` boolean masks with <= N ones per row and column of every
+block.  Backends own their own jit/compile strategy; callers select one by
+name through :class:`repro.core.solver.SolverConfig.backend`.
+
+Built-in entries:
+
+* ``"dense-jit"``       — XLA-jitted Dykstra (Alg. 1) + rounding (Alg. 2);
+                          the default, bit-identical to the pre-registry path.
+* ``"pallas"``          — same pipeline with the Dykstra iterations fused in
+                          a Pallas kernel (VMEM-resident).
+* ``"exact"``           — per-block LP oracle (HiGHS; integral by the
+                          transportation-polytope argument).  Host-side,
+                          for tests/benchmarks — not a production path.
+* ``"greedy-baseline"`` — greedy insertion on raw magnitudes, the Hubara et
+                          al. 2021 2-approximation the paper compares against.
+
+Third parties register their own::
+
+    from repro.api import register_backend
+
+    @register_backend
+    class MyBackend:
+        name = "my-backend"
+        traceable = True  # safe to call under an enclosing jit / shard_map
+        def solve(self, w_abs_blocks, pattern, config): ...
+
+``traceable`` declares the solve is pure JAX, which lets the service
+scheduler wrap it in ``shard_map`` for multi-device mega-batch dispatch;
+host-side backends (like ``"exact"``) set it False and are dispatched on a
+single device.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dykstra import dykstra_log
+from repro.core.rounding import greedy_round, round_blocks
+from repro.patterns import PatternSpec
+
+
+@runtime_checkable
+class SolverBackend(Protocol):
+    """Protocol every solver backend implements."""
+
+    name: str
+    traceable: bool
+
+    def solve(
+        self, w_abs_blocks: jnp.ndarray, pattern: PatternSpec, config
+    ) -> jnp.ndarray:
+        """(B, M, M) |W| blocks -> (B, M, M) bool masks (row/col sums <= N)."""
+        ...
+
+
+_REGISTRY: dict[str, SolverBackend] = {}
+
+
+def register_backend(backend=None, *, name: str | None = None, overwrite: bool = False):
+    """Register a backend instance (or class — it is instantiated).
+
+    Usable directly (``register_backend(MyBackend())``) or as a decorator.
+    Registering an existing name without ``overwrite=True`` is an error.
+    """
+
+    def _register(obj):
+        inst = obj() if isinstance(obj, type) else obj
+        key = name if name is not None else getattr(inst, "name", None)
+        if not key or not isinstance(key, str):
+            raise ValueError("backend needs a string 'name' attribute (or name=)")
+        if key in _REGISTRY and not overwrite:
+            raise ValueError(
+                f"solver backend {key!r} is already registered; "
+                "pass overwrite=True to replace it"
+            )
+        _REGISTRY[key] = inst
+        return obj
+
+    if backend is None:
+        return _register
+    return _register(backend)
+
+
+def unregister_backend(name: str) -> None:
+    """Remove a registered backend (no-op if absent); mainly for tests."""
+    _REGISTRY.pop(name, None)
+
+
+def get_backend(name) -> SolverBackend:
+    """Look up a backend by name; backend instances pass through."""
+    if not isinstance(name, str):
+        if isinstance(name, SolverBackend):
+            return name
+        raise TypeError(f"expected a backend name or SolverBackend, got {name!r}")
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown solver backend {name!r}; available: "
+            f"{', '.join(available_backends())}"
+        ) from None
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# Built-in backends.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "iters", "ls_steps", "tau_scale", "kernel")
+)
+def _batched_solve(w_abs_blocks, n, iters, ls_steps, tau_scale, kernel):
+    """The TSENOR pipeline over a block batch; one program per static config.
+
+    This is the exact jitted program the pre-registry ``_solve_blocks_jit``
+    compiled, so masks (and the in-process jit cache) are unchanged.
+    """
+    w_abs_blocks = jnp.asarray(w_abs_blocks, jnp.float32)
+    scale = jnp.max(w_abs_blocks, axis=(1, 2), keepdims=True)
+    tau = tau_scale / jnp.maximum(scale, 1e-30)
+    if kernel:
+        from repro.kernels.dykstra import ops as dykstra_ops
+
+        s_approx = dykstra_ops.dykstra(w_abs_blocks * tau, n, iters)
+    else:
+        s_approx = dykstra_log(w_abs_blocks, n, iters, tau=tau)
+    return round_blocks(s_approx, w_abs_blocks, n, ls_steps)
+
+
+class DenseJitBackend:
+    """XLA path: log-domain Dykstra + greedy/local-search rounding."""
+
+    name = "dense-jit"
+    traceable = True
+
+    def solve(self, w_abs_blocks, pattern, config):
+        return _batched_solve(
+            w_abs_blocks, pattern.n, config.iters, config.ls_steps,
+            config.tau_scale, False,
+        )
+
+
+class PallasBackend:
+    """Pallas path: Dykstra iterations fused in VMEM, same rounding."""
+
+    name = "pallas"
+    traceable = True
+
+    def solve(self, w_abs_blocks, pattern, config):
+        return _batched_solve(
+            w_abs_blocks, pattern.n, config.iters, config.ls_steps,
+            config.tau_scale, True,
+        )
+
+
+class GreedyBaselineBackend:
+    """Hubara et al. 2-approximation: greedy insertion on |W| directly."""
+
+    name = "greedy-baseline"
+    traceable = True
+
+    def solve(self, w_abs_blocks, pattern, config):
+        return greedy_round(jnp.asarray(w_abs_blocks, jnp.float32), pattern.n)
+
+
+class ExactBackend:
+    """LP oracle per block (HiGHS).  Host-side numpy; not traceable."""
+
+    name = "exact"
+    traceable = False
+
+    def solve(self, w_abs_blocks, pattern, config):
+        from repro.core.exact import lp_exact
+
+        blocks = np.asarray(w_abs_blocks, np.float64)
+        if blocks.shape[0] == 0:
+            return jnp.zeros(blocks.shape, bool)
+        masks = np.stack([lp_exact(b, pattern.n)[0] for b in blocks])
+        return jnp.asarray(masks)
+
+
+register_backend(DenseJitBackend())
+register_backend(PallasBackend())
+register_backend(GreedyBaselineBackend())
+register_backend(ExactBackend())

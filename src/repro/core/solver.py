@@ -1,32 +1,89 @@
-"""TSENOR public API: transposable N:M mask generation for weight matrices.
+"""TSENOR core: N:M mask generation for weight matrices.
 
 Pipeline (paper Fig. 1):  partition into M x M blocks -> entropy-regularized
 OT via Dykstra (Alg. 1) -> greedy + local-search rounding (Alg. 2) ->
-reassemble.  Everything is batched over blocks and jit-compiled; the Pallas
-kernel path (``use_kernel=True``) fuses the Dykstra iterations in VMEM.
+reassemble.  Everything is batched over blocks; the actual per-block solve
+is delegated to a pluggable :mod:`repro.core.backends` entry selected by
+``SolverConfig.backend`` ("dense-jit" XLA default, "pallas" fused kernel,
+"exact" LP oracle, "greedy-baseline" 2-approximation).
+
+The canonical entry points are :func:`solve_mask` (one tensor, any
+:class:`repro.patterns.PatternSpec`) and — for whole-model workloads —
+``repro.service.MaskService.solve``.  ``transposable_nm_mask(w, n, m)`` is
+kept as a deprecated shim.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
+import warnings
+from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import blocks as blk
-from repro.core.dykstra import dykstra_log
-from repro.core.rounding import greedy_round, local_search, round_blocks, simple_round
+from repro.core.backends import get_backend
+from repro.patterns import PatternSpec
 
 
 @dataclasses.dataclass(frozen=True)
 class SolverConfig:
-    """Hyper-parameters of the TSENOR solver (paper defaults)."""
+    """Hyper-parameters of the TSENOR solver (paper defaults).
+
+    ``backend`` names a registered :class:`repro.core.backends.SolverBackend`.
+    The deprecated ``use_kernel`` bool is still accepted and maps to
+    ``backend="pallas"`` / ``"dense-jit"`` with a DeprecationWarning.
+    """
 
     iters: int = 300          # Dykstra iterations T
     ls_steps: int = 10        # local-search steps L
     tau_scale: float = 200.0  # tau = tau_scale / max|W| per block
-    use_kernel: bool = False  # route Dykstra through the Pallas kernel
+    backend: str = "dense-jit"  # registered solver backend name
     block_batch: int = 0      # >0: process blocks in chunks of this size
+    use_kernel: dataclasses.InitVar[Optional[bool]] = None  # deprecated
+
+    def __post_init__(self, use_kernel):
+        if use_kernel is not None:
+            warnings.warn(
+                "SolverConfig(use_kernel=...) is deprecated; use "
+                "backend='pallas' (True) or backend='dense-jit' (False)",
+                DeprecationWarning,
+                stacklevel=3,
+            )
+            object.__setattr__(
+                self, "backend", "pallas" if use_kernel else "dense-jit"
+            )
+
+
+def solve_mask(
+    w: jnp.ndarray,
+    pattern,
+    config: SolverConfig = SolverConfig(),
+) -> jnp.ndarray:
+    """Compute an N:M mask for a 2-D weight/score matrix.
+
+    Args:
+      w: (R, C) weights; the objective uses |w|.  For transposable patterns
+        R, C are zero-padded to multiples of M internally and the mask is
+        cropped back.
+      pattern: a :class:`PatternSpec` (or canonical string like ``"t2:4"``).
+        Transposable patterns run the TSENOR block solver through
+        ``config.backend``; standard patterns reduce to the row-wise top-N
+        mask along axis 0.
+      config: solver hyper-parameters.
+
+    Returns:
+      Boolean mask of the same shape as ``w``.
+    """
+    spec = PatternSpec.coerce(pattern)
+    w = jnp.asarray(w)
+    if not spec.transposable:
+        return nm_mask(w, spec.n, spec.m, axis=0)
+    w_abs = jnp.abs(w).astype(jnp.float32)
+    padded, orig = blk.pad_to_multiple(w_abs, spec.m)
+    blocks = blk.to_blocks(padded, spec.m)
+    mask_blocks = solve_blocks(blocks, spec, config)
+    mask = blk.from_blocks(mask_blocks, padded.shape)
+    return blk.crop(mask, orig)
 
 
 def transposable_nm_mask(
@@ -35,65 +92,57 @@ def transposable_nm_mask(
     m: int,
     config: SolverConfig = SolverConfig(),
 ) -> jnp.ndarray:
-    """Compute a transposable N:M mask for a 2-D weight/score matrix.
-
-    Args:
-      w: (R, C) weights; the objective uses |w|.  R, C are zero-padded to
-        multiples of ``m`` internally and the mask is cropped back.
-      n, m: the N:M pattern; every M x M block of the mask has <= N (== N when
-        achievable) ones per row and per column, so both the mask and its
-        transpose are N:M sparse.
-      config: solver hyper-parameters.
-
-    Returns:
-      Boolean mask of the same shape as ``w``.
-    """
-    w = jnp.asarray(w)
-    w_abs = jnp.abs(w).astype(jnp.float32)
-    padded, orig = blk.pad_to_multiple(w_abs, m)
-    blocks = blk.to_blocks(padded, m)
-    mask_blocks = solve_blocks(blocks, n, config)
-    mask = blk.from_blocks(mask_blocks, padded.shape)
-    return blk.crop(mask, orig)
+    """Deprecated: use ``solve_mask(w, PatternSpec(n, m))`` (repro.api)."""
+    warnings.warn(
+        "transposable_nm_mask(w, n, m) is deprecated; use "
+        "solve_mask(w, PatternSpec(n, m)) or MaskService.solve(w, pattern)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return solve_mask(w, PatternSpec(n, m, True), config)
 
 
 def solve_blocks(
-    w_abs_blocks: jnp.ndarray, n: int, config: SolverConfig = SolverConfig()
+    w_abs_blocks: jnp.ndarray, pattern, config: SolverConfig = SolverConfig()
 ) -> jnp.ndarray:
-    """Solve a (B, M, M) batch of block problems; returns boolean masks."""
-    if config.block_batch and w_abs_blocks.shape[0] > config.block_batch:
-        outs = []
-        for s in range(0, w_abs_blocks.shape[0], config.block_batch):
-            outs.append(
-                _solve_blocks_jit(
-                    w_abs_blocks[s : s + config.block_batch],
-                    n,
-                    config.iters,
-                    config.ls_steps,
-                    config.tau_scale,
-                    config.use_kernel,
-                )
-            )
-        return jnp.concatenate(outs, axis=0)
-    return _solve_blocks_jit(
-        w_abs_blocks, n, config.iters, config.ls_steps, config.tau_scale, config.use_kernel
-    )
+    """Solve a (B, M, M) batch of block problems; returns boolean masks.
 
-
-@functools.partial(
-    jax.jit, static_argnames=("n", "iters", "ls_steps", "tau_scale", "use_kernel")
-)
-def _solve_blocks_jit(w_abs_blocks, n, iters, ls_steps, tau_scale, use_kernel):
-    w_abs_blocks = jnp.asarray(w_abs_blocks, jnp.float32)
-    scale = jnp.max(w_abs_blocks, axis=(1, 2), keepdims=True)
-    tau = tau_scale / jnp.maximum(scale, 1e-30)
-    if use_kernel:
-        from repro.kernels.dykstra import ops as dykstra_ops
-
-        s_approx = dykstra_ops.dykstra(w_abs_blocks * tau, n, iters)
+    ``pattern`` may be a :class:`PatternSpec` (``m`` must equal the block
+    side) or a bare int N — the block side already fixes M, so an int is not
+    a "loose tuple" and stays supported.
+    """
+    m = int(w_abs_blocks.shape[-1])
+    if isinstance(pattern, int) and not isinstance(pattern, bool):
+        spec = PatternSpec(pattern, m, True)
     else:
-        s_approx = dykstra_log(w_abs_blocks, n, iters, tau=tau)
-    return round_blocks(s_approx, w_abs_blocks, n, ls_steps)
+        spec = PatternSpec.coerce(pattern)
+    if not spec.transposable:
+        raise ValueError(
+            "solve_blocks solves transposable patterns; use nm_mask for "
+            "standard N:M"
+        )
+    if spec.m != m:
+        raise ValueError(f"pattern {spec} does not match block side {m}")
+    backend = get_backend(config.backend)
+    total = w_abs_blocks.shape[0]
+    bb = config.block_batch
+    if bb and total > bb:
+        outs = []
+        for s in range(0, total, bb):
+            chunk = w_abs_blocks[s : s + bb]
+            pad = bb - chunk.shape[0]
+            if pad:
+                # Pad the ragged final chunk to the full block_batch so it
+                # reuses the already-compiled program instead of triggering
+                # one extra XLA compile; sentinel zero blocks are cropped
+                # after the solve (blocks are independent).
+                chunk = jnp.concatenate(
+                    [chunk, jnp.zeros((pad, m, m), chunk.dtype)], axis=0
+                )
+            solved = backend.solve(chunk, spec, config)
+            outs.append(solved[: bb - pad] if pad else solved)
+        return jnp.concatenate(outs, axis=0)
+    return backend.solve(w_abs_blocks, spec, config)
 
 
 # ---------------------------------------------------------------------------

@@ -12,7 +12,6 @@ import threading
 from typing import Any, Optional
 
 import jax
-import numpy as np
 
 
 class Prefetcher:

@@ -16,6 +16,7 @@ from repro.configs.registry import ARCH_IDS, get_smoke_config
 from repro.core.solver import SolverConfig
 from repro.data import SyntheticLM
 from repro.models import lm
+from repro.patterns import PatternSpec
 from repro.pruning import prune_transformer
 
 
@@ -35,7 +36,8 @@ def main():
     cfg = get_smoke_config(args.arch)
     assert cfg.family in ("dense", "vlm", "audio"), \
         "layer-wise runner covers attention+MLP families"
-    n, m = map(int, args.nm.split(":"))
+    base = PatternSpec.parse(args.nm)
+    spec = PatternSpec(base.n, base.m, not args.standard)
 
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
     if args.restore:
@@ -51,14 +53,13 @@ def main():
     calib = jnp.asarray(data.batch(0)["tokens"])
 
     print(f"[prune] {args.method} -> "
-          f"{'standard' if args.standard else 'transposable'} {n}:{m}")
+          f"{'standard' if args.standard else 'transposable'} {spec.n}:{spec.m}")
     pruned, masks = prune_transformer(
-        params, cfg, tokens=calib, method=args.method, n=n, m=m,
-        transposable=not args.standard, solver=SolverConfig(iters=150),
-        log=print,
+        params, cfg, tokens=calib, method=args.method, pattern=spec,
+        solver=SolverConfig(iters=150), log=print,
     )
     nz = float(np.mean([float(jnp.mean(mk)) for mk in jax.tree.leaves(masks)]))
-    print(f"[prune] kept fraction {nz:.3f} (target {n / m:.3f})")
+    print(f"[prune] kept fraction {nz:.3f} (target {spec.density:.3f})")
     if args.out:
         mgr = CheckpointManager(args.out, async_save=False)
         mgr.save(0, {"params": pruned, "masks": masks})

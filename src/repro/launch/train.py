@@ -19,6 +19,7 @@ import jax
 from repro.checkpoint import CheckpointManager
 from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
 from repro.core.solver import SolverConfig
+from repro.patterns import PatternSpec
 from repro.data import SyntheticEmbeds, SyntheticLM
 from repro.distributed.sharding import set_mesh
 from repro.launch.mesh import make_mesh
@@ -66,9 +67,10 @@ def main():
 
     masks = None
     if args.nm:
-        n, m = map(int, args.nm.split(":"))
-        print(f"[train] solving transposable {n}:{m} masks (TSENOR)")
-        masks = sparsify_pytree(state.params, n, m, SolverConfig(iters=150))
+        base = PatternSpec.parse(args.nm)
+        spec = PatternSpec(base.n, base.m, True)
+        print(f"[train] solving transposable {spec.n}:{spec.m} masks (TSENOR)")
+        masks = sparsify_pytree(state.params, spec, config=SolverConfig(iters=150))
 
     step = build_train_step(
         cfg, opt, masks=masks,
@@ -81,7 +83,6 @@ def main():
         TrainLoopConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
                         log_every=10, max_step_seconds=args.max_step_seconds),
     )
-    import numpy as np
     batch0 = {k: jax.numpy.asarray(v) for k, v in data.batch(0).items()}  # noqa
     state, hist = loop.run(state)
     print(f"[train] done: {len(hist)} steps, final loss "

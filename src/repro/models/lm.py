@@ -11,7 +11,6 @@ and apply the shared-weight attention block between groups, so only
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Optional
 
 import jax
@@ -19,10 +18,10 @@ import jax.numpy as jnp
 
 from repro.distributed.sharding import shard
 from repro.models import transformer as tf
-from repro.models.attention import KVCache, init_kv_cache
+from repro.models.attention import init_kv_cache
 from repro.models.config import ModelConfig
 from repro.models.layers import cross_entropy, dense_init, embed_tokens, rms_norm, unembed
-from repro.models.mamba2 import SSMCache, init_ssm_cache
+from repro.models.mamba2 import init_ssm_cache
 
 
 def _act_dtype(cfg: ModelConfig):

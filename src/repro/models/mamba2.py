@@ -17,7 +17,6 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.distributed.sharding import shard
 from repro.models.config import ModelConfig
 
 

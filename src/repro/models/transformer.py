@@ -9,13 +9,12 @@ Block kinds:
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.models import attention as attn_lib
-from repro.models import mamba2, moe
+from repro.models import moe
 from repro.models.attention import KVCache, attention, init_attention
 from repro.models.config import ModelConfig
 from repro.models.layers import dense_init, rms_norm, swiglu_mlp

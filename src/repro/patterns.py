@@ -1,0 +1,201 @@
+"""Canonical N:M sparsity pattern specification.
+
+:class:`PatternSpec` is the single source of truth for "which sparsity
+pattern" across the codebase, replacing the loose ``(n, m, transposable)``
+argument triples that used to be threaded through ``core``, ``service``,
+``pruning``, ``sparsity`` and ``launch``.  It is a frozen (hashable)
+dataclass, so it can key scheduler groups and cache entries directly.
+
+Canonical string form (accepted everywhere a pattern is accepted):
+
+    "t16:32"  transposable 16:32  (both the mask and its transpose are N:M)
+    "2:4"     standard row-wise 2:4
+
+The module is dependency-free (no jax/numpy) so every layer can import it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+import operator
+import warnings
+
+
+@dataclasses.dataclass(frozen=True)
+class PatternSpec:
+    """An N:M sparsity pattern: keep N of every M, optionally transposable.
+
+    ``transposable=True`` (the TSENOR setting) demands every M x M block of
+    the mask have <= N ones per row AND per column, so one compressed buffer
+    serves both the forward and backward matmuls.  ``transposable=False`` is
+    the standard one-directional N:M constraint.
+    """
+
+    n: int
+    m: int
+    transposable: bool = True
+
+    def __post_init__(self):
+        try:
+            n = operator.index(self.n)
+            m = operator.index(self.m)
+        except TypeError:
+            raise TypeError(
+                f"PatternSpec n and m must be integers, got {self.n!r}:{self.m!r}"
+            ) from None
+        if isinstance(self.n, bool) or isinstance(self.m, bool):
+            raise TypeError("PatternSpec n and m must be integers, not bools")
+        if n < 1:
+            raise ValueError(f"PatternSpec needs n >= 1, got n={n}")
+        if n > m:
+            raise ValueError(f"PatternSpec needs n <= m, got {n}:{m}")
+        object.__setattr__(self, "n", n)
+        object.__setattr__(self, "m", m)
+        object.__setattr__(self, "transposable", bool(self.transposable))
+
+    # -- canonical form ------------------------------------------------------
+
+    @property
+    def canonical(self) -> str:
+        """``"t16:32"`` / ``"2:4"``; ``parse(spec.canonical) == spec``."""
+        return f"{'t' if self.transposable else ''}{self.n}:{self.m}"
+
+    def __str__(self) -> str:
+        return self.canonical
+
+    @classmethod
+    def parse(cls, text: str) -> "PatternSpec":
+        """Parse the canonical form: ``"t16:32"`` or ``"2:4"``."""
+        s = text.strip()
+        transposable = s.startswith("t")
+        body = s[1:] if transposable else s
+        parts = body.split(":")
+        if len(parts) != 2:
+            raise ValueError(
+                f"cannot parse pattern {text!r}; expected 'N:M' or 'tN:M'"
+            )
+        try:
+            n, m = int(parts[0]), int(parts[1])
+        except ValueError:
+            raise ValueError(
+                f"cannot parse pattern {text!r}; expected 'N:M' or 'tN:M'"
+            ) from None
+        return cls(n, m, transposable)
+
+    @classmethod
+    def coerce(cls, value) -> "PatternSpec":
+        """PatternSpec | canonical string | (n, m[, transposable]) tuple."""
+        if isinstance(value, cls):
+            return value
+        if isinstance(value, str):
+            return cls.parse(value)
+        if isinstance(value, (tuple, list)) and len(value) in (2, 3):
+            return cls(*value)
+        raise TypeError(
+            f"cannot interpret {value!r} as a PatternSpec "
+            "(pass a PatternSpec, 'tN:M'/'N:M' string, or (n, m[, transposable]))"
+        )
+
+    # -- helpers -------------------------------------------------------------
+
+    @property
+    def density(self) -> float:
+        """Kept fraction N/M."""
+        return self.n / self.m
+
+    @property
+    def sparsity(self) -> float:
+        """Zeroed fraction 1 - N/M."""
+        return 1.0 - self.n / self.m
+
+    def pad_amount(self, dim: int) -> int:
+        """Zero-padding needed to bring ``dim`` to a multiple of M."""
+        return (-dim) % self.m
+
+    def divides(self, shape) -> bool:
+        """True when the trailing two dims of ``shape`` divide by M."""
+        if len(shape) < 2:
+            return False
+        return shape[-1] % self.m == 0 and shape[-2] % self.m == 0
+
+
+def pattern_from_args(
+    pattern,
+    m=None,
+    transposable=None,
+    *,
+    n=None,
+    caller: str,
+    default_transposable: bool = True,
+    stacklevel: int = 3,
+) -> PatternSpec:
+    """Resolve a public API's ``pattern`` argument, accepting the deprecated
+    ``(n, m[, transposable])`` calling convention with a DeprecationWarning.
+
+    New-style callers pass a :class:`PatternSpec` (or canonical string /
+    tuple) as ``pattern``; legacy callers pass ``n`` (positionally, landing
+    in ``pattern``, or as the ``n=`` keyword) together with ``m``.
+    """
+    if pattern is None and n is not None:
+        pattern = n
+    if pattern is None:
+        raise TypeError(f"{caller}: missing required 'pattern' argument")
+    if isinstance(pattern, bool):
+        raise TypeError(f"{caller}: pattern must not be a bool")
+    if isinstance(pattern, int):
+        if m is None:
+            raise TypeError(
+                f"{caller}: bare n={pattern} needs m; pass a PatternSpec "
+                f"or canonical string like 't{pattern}:<m>' instead"
+            )
+        spec = PatternSpec(
+            pattern, m,
+            default_transposable if transposable is None else bool(transposable),
+        )
+        warnings.warn(
+            f"{caller}: passing (n, m{', transposable' if transposable is not None else ''}) "
+            f"is deprecated; pass pattern=PatternSpec({spec.n}, {spec.m}, "
+            f"{spec.transposable}) or pattern={spec.canonical!r}",
+            DeprecationWarning,
+            stacklevel=stacklevel,
+        )
+        return spec
+    if m is not None:
+        raise TypeError(f"{caller}: cannot combine a pattern object with m=")
+    spec = PatternSpec.coerce(pattern)
+    if transposable is not None and bool(transposable) != spec.transposable:
+        raise ValueError(
+            f"{caller}: transposable={transposable} conflicts with pattern "
+            f"{spec.canonical!r}"
+        )
+    return spec
+
+
+def call_mask_fn(mask_fn, scores, pattern: PatternSpec, *, caller: str):
+    """Invoke a caller-supplied mask override with the new ``(scores,
+    pattern)`` contract, shimming the deprecated ``(scores, n, m)`` one.
+
+    A callback whose signature takes three or more positional parameters and
+    no ``*args`` is treated as the legacy form and called with
+    ``(scores, n, m)`` under a DeprecationWarning.
+    """
+    try:
+        params = list(inspect.signature(mask_fn).parameters.values())
+    except (TypeError, ValueError):  # builtins / C callables: assume new form
+        return mask_fn(scores, pattern)
+    if any(p.kind is inspect.Parameter.VAR_POSITIONAL for p in params):
+        return mask_fn(scores, pattern)
+    positional = [
+        p for p in params
+        if p.kind in (inspect.Parameter.POSITIONAL_ONLY,
+                      inspect.Parameter.POSITIONAL_OR_KEYWORD)
+    ]
+    if len(positional) >= 3:
+        warnings.warn(
+            f"{caller}: mask_fn(scores, n, m) callbacks are deprecated; "
+            "take (scores, pattern) instead",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+        return mask_fn(scores, pattern.n, pattern.m)
+    return mask_fn(scores, pattern)

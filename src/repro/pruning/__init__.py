@@ -6,16 +6,32 @@ activations are X with shape (tokens, in); the layer-wise objective is
     min_W  1/2 ||X (W - What)||_F^2 + lambda/2 ||W - What||_F^2
     s.t.   W in T (transposable N:M support)       (paper Eq. 7)
 
-Every method returns ``(w_pruned, mask)``.
+Every method returns ``(w_pruned, mask)`` and accepts a
+:class:`repro.patterns.PatternSpec` (deprecated ``(n, m, transposable)``
+triples still work).  Methods are registered in the
+:mod:`repro.pruning.methods` registry; ``prune_transformer(method=...)`` is
+a registry lookup.
 """
 from repro.pruning.calib import gram_matrix, reconstruction_error
 from repro.pruning.magnitude import magnitude_prune
 from repro.pruning.wanda import wanda_prune
 from repro.pruning.sparsegpt import sparsegpt_prune
 from repro.pruning.alps import alps_prune
+from repro.pruning.methods import (
+    PruneContext,
+    PruneMethod,
+    available_methods,
+    get_method,
+    register_method,
+)
 from repro.pruning.runner import prune_transformer
 
 __all__ = [
+    "PruneContext",
+    "PruneMethod",
+    "available_methods",
+    "get_method",
+    "register_method",
     "gram_matrix",
     "magnitude_prune",
     "wanda_prune",

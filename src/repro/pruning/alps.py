@@ -27,6 +27,7 @@ from repro.core import blocks as blk
 from repro.core.dykstra import dykstra_log
 from repro.core.rounding import round_blocks
 from repro.core.solver import SolverConfig
+from repro.patterns import pattern_from_args
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,21 +106,28 @@ def _alps_jit(
 def alps_prune(
     w_hat: jnp.ndarray,
     h: jnp.ndarray,
-    n: int,
-    m: int,
-    transposable: bool = True,
+    pattern=None,
+    m=None,
+    transposable=None,
     config: AlpsConfig = AlpsConfig(),
+    *,
+    n=None,
 ):
-    """Returns (pruned W = best ADMM D iterate, mask)."""
+    """Returns (pruned W = best ADMM D iterate, mask).
+
+    ``pattern``: :class:`~repro.patterns.PatternSpec` (or canonical string);
+    the deprecated ``(n, m[, transposable])`` triple still works.
+    """
+    spec = pattern_from_args(pattern, m, transposable, n=n, caller="alps_prune")
     w_hat = jnp.asarray(w_hat, jnp.float32)
     h = jnp.asarray(h, jnp.float32)
     rho0 = float(config.rho0_rel) * float(jnp.mean(jnp.diag(h)))
     return _alps_jit(
         w_hat,
         h,
-        n,
-        m,
-        transposable,
+        spec.n,
+        spec.m,
+        spec.transposable,
         config.iters,
         rho0,
         config.rho_growth,

@@ -5,27 +5,33 @@ from typing import Callable, Optional
 
 import jax.numpy as jnp
 
-from repro.core.solver import SolverConfig, nm_mask, transposable_nm_mask
+from repro.core.solver import SolverConfig, nm_mask, solve_mask
+from repro.patterns import call_mask_fn, pattern_from_args
 
 
 def magnitude_prune(
     w: jnp.ndarray,
-    n: int,
-    m: int,
-    transposable: bool = True,
+    pattern=None,
+    m=None,
+    transposable=None,
     config: SolverConfig = SolverConfig(),
     mask_fn: Optional[Callable] = None,
+    *,
+    n=None,
 ):
     """TSENOR (or row-wise N:M) mask directly on |W|; zero outside the mask.
 
-    ``mask_fn(scores, n, m)`` overrides the transposable solver (see
+    ``pattern``: :class:`~repro.patterns.PatternSpec` (or canonical string);
+    the deprecated ``(n, m[, transposable])`` triple still works.
+    ``mask_fn(scores, pattern)`` overrides the transposable solver (see
     ``wanda_prune``).
     """
-    if transposable:
-        if mask_fn is not None:
-            mask = mask_fn(jnp.abs(w), n, m)
-        else:
-            mask = transposable_nm_mask(w, n, m, config)
+    spec = pattern_from_args(pattern, m, transposable, n=n, caller="magnitude_prune")
+    if spec.transposable:
+        mask = (
+            call_mask_fn(mask_fn, jnp.abs(w), spec, caller="magnitude_prune")
+            if mask_fn is not None else solve_mask(w, spec, config)
+        )
     else:
-        mask = nm_mask(w, n, m, axis=0)
+        mask = nm_mask(w, spec.n, spec.m, axis=0)
     return jnp.where(mask, w, 0), mask

@@ -1,0 +1,199 @@
+"""PruneMethod protocol + registry: one signature for every layer-wise
+pruning framework.
+
+Every method — built-in (``magnitude``/``wanda``/``sparsegpt``/``alps``) or
+third-party — is a callable
+
+    method(w, gram, pattern, ctx) -> (w_pruned, mask)
+
+where ``w`` is the (in, out) weight matrix, ``gram`` is the damped Gram
+``XᵀX + λI`` (``None`` unless the method declares ``needs_gram``),
+``pattern`` is a :class:`~repro.patterns.PatternSpec`, and ``ctx`` is a
+:class:`PruneContext` carrying calibration activations and solver configs.
+``prune_transformer(method="wanda")`` is a registry lookup, so new methods
+plug in without touching ``runner.py``::
+
+    from repro.api import register_method
+
+    @register_method("my-method")
+    def my_method(w, gram, pattern, ctx):
+        ...
+        return w_pruned, mask
+
+Methods whose mask depends only on a per-weight importance score (Wanda,
+magnitude) additionally expose ``importance(w, ctx)``; the runner uses it to
+route their transposable mask solves through the batched
+:class:`~repro.service.MaskService` (one bucketed mega-batch per projection
+group) instead of one solve per tensor.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Protocol, runtime_checkable
+
+import jax.numpy as jnp
+
+from repro.core.solver import SolverConfig
+from repro.patterns import PatternSpec
+from repro.pruning.alps import AlpsConfig, alps_prune
+from repro.pruning.calib import gram_matrix
+from repro.pruning.magnitude import magnitude_prune
+from repro.pruning.sparsegpt import sparsegpt_prune
+from repro.pruning.wanda import wanda_importance, wanda_prune
+
+
+@dataclasses.dataclass
+class PruneContext:
+    """Everything a method may need beyond (w, gram, pattern).
+
+    ``x``: (tokens, in) calibration activations of the layer being pruned.
+    ``solver``: TSENOR solver config for mask solves.
+    ``alps``: ADMM config for ALPS-style methods.
+    ``mask_fn``: optional ``(scores, pattern) -> mask`` override routing
+    transposable solves through a service.
+    """
+
+    x: Optional[jnp.ndarray] = None
+    solver: SolverConfig = dataclasses.field(
+        default_factory=lambda: SolverConfig(iters=150)
+    )
+    alps: Optional[AlpsConfig] = None
+    mask_fn: Optional[Callable] = None
+    _gram: Any = dataclasses.field(default=None, repr=False)
+
+    def gram(self) -> jnp.ndarray:
+        """Damped Gram of ``x`` (computed once, cached)."""
+        if self._gram is None:
+            if self.x is None:
+                raise ValueError("PruneContext has no calibration activations")
+            self._gram = gram_matrix(self.x)
+        return self._gram
+
+
+@runtime_checkable
+class PruneMethod(Protocol):
+    """Protocol every registered pruning method implements."""
+
+    name: str
+    needs_gram: bool
+
+    def __call__(
+        self, w: jnp.ndarray, gram: Optional[jnp.ndarray],
+        pattern: PatternSpec, ctx: PruneContext,
+    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class _RegisteredMethod:
+    """Wraps a plain function into the PruneMethod protocol."""
+
+    name: str
+    fn: Callable
+    needs_gram: bool = False
+    importance: Optional[Callable] = None  # (w, ctx) -> scores, or None
+
+    def __call__(self, w, gram, pattern, ctx):
+        return self.fn(w, gram, pattern, ctx)
+
+
+_REGISTRY: dict[str, PruneMethod] = {}
+
+
+def register_method(
+    name: str,
+    method: Optional[Callable] = None,
+    *,
+    needs_gram: bool = False,
+    importance: Optional[Callable] = None,
+    overwrite: bool = False,
+):
+    """Register a pruning method under ``name``.
+
+    Usable as a decorator on a ``(w, gram, pattern, ctx)`` function, or
+    called directly with any object satisfying :class:`PruneMethod`.
+    Registering an existing name without ``overwrite=True`` is an error.
+    """
+
+    def _register(obj):
+        if hasattr(obj, "needs_gram"):  # already satisfies the protocol
+            inst = obj
+        elif callable(obj):  # plain (w, gram, pattern, ctx) function
+            inst = _RegisteredMethod(
+                name, obj, needs_gram=needs_gram, importance=importance
+            )
+        else:
+            raise TypeError(f"cannot register {obj!r} as a pruning method")
+        if name in _REGISTRY and not overwrite:
+            raise ValueError(
+                f"pruning method {name!r} is already registered; "
+                "pass overwrite=True to replace it"
+            )
+        _REGISTRY[name] = inst
+        return inst
+
+    if method is None:
+        return _register
+    return _register(method)
+
+
+def unregister_method(name: str) -> None:
+    """Remove a registered method (no-op if absent); mainly for tests."""
+    _REGISTRY.pop(name, None)
+
+
+def get_method(method) -> PruneMethod:
+    """Look up a method by name; PruneMethod objects pass through."""
+    if not isinstance(method, str):
+        if callable(method) and hasattr(method, "needs_gram"):
+            return method
+        raise TypeError(f"expected a method name or PruneMethod, got {method!r}")
+    try:
+        return _REGISTRY[method]
+    except KeyError:
+        raise ValueError(
+            f"unknown pruning method {method!r}; available: "
+            f"{', '.join(available_methods())}"
+        ) from None
+
+
+def available_methods() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def method_importance(method: PruneMethod) -> Optional[Callable]:
+    """The method's ``importance(w, ctx)`` hook, or None.
+
+    A non-None hook means the transposable mask is a pure function of the
+    importance matrix, so the runner may batch the solve through a
+    MaskService and apply ``w * mask`` itself.
+    """
+    return getattr(method, "importance", None)
+
+
+# ---------------------------------------------------------------------------
+# Built-in methods.
+# ---------------------------------------------------------------------------
+
+
+@register_method("magnitude", importance=lambda w, ctx: jnp.abs(w))
+def _magnitude(w, gram, pattern, ctx):
+    return magnitude_prune(w, pattern, config=ctx.solver, mask_fn=ctx.mask_fn)
+
+
+@register_method("wanda", importance=lambda w, ctx: wanda_importance(w, ctx.x))
+def _wanda(w, gram, pattern, ctx):
+    return wanda_prune(w, ctx.x, pattern, config=ctx.solver, mask_fn=ctx.mask_fn)
+
+
+@register_method("sparsegpt", needs_gram=True)
+def _sparsegpt(w, gram, pattern, ctx):
+    h = gram if gram is not None else ctx.gram()
+    return sparsegpt_prune(w, h, pattern, config=ctx.solver)
+
+
+@register_method("alps", needs_gram=True)
+def _alps(w, gram, pattern, ctx):
+    h = gram if gram is not None else ctx.gram()
+    cfg = ctx.alps if ctx.alps is not None else AlpsConfig(solver=ctx.solver)
+    return alps_prune(w, h, pattern, config=cfg)

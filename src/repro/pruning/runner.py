@@ -8,12 +8,16 @@ LLaMA.  Covers the attention (wq/wk/wv/wo) and MLP (gate/up/down) projections
 of the "dense"/"vlm"/"audio" families; MoE expert matrices and SSM in/out
 projections use the same per-matrix APIs directly (see examples/prune_llm.py).
 
-Mask generation routes through :class:`repro.service.MaskService`:
+Pruning methods come from the :mod:`repro.pruning.methods` registry — any
+registered :class:`~repro.pruning.methods.PruneMethod` works, built-in or
+third-party; there is no per-method dispatch here.  Mask generation routes
+through :class:`repro.service.MaskService`:
 
-  * Wanda/magnitude masks for projections sharing an input (wq/wk/wv;
-    gate/up) are submitted together and solved as one bucketed batch (the
-    sequential calibration dependency forbids batching across layers —
-    each layer's activations need the previous layers already pruned);
+  * methods exposing an ``importance`` hook (Wanda/magnitude) have the
+    masks of projections sharing an input (wq/wk/wv; gate/up) submitted
+    together and solved as one bucketed batch (the sequential calibration
+    dependency forbids batching across layers — each layer's activations
+    need the previous layers already pruned);
   * with ``journal_dir`` set, every pruned tensor is persisted to a
     content-addressed store and journaled, so a killed run resumes
     mid-model: completed tensors restore from disk (the cheap forward
@@ -35,27 +39,12 @@ from repro.core.solver import SolverConfig
 from repro.models.attention import attention
 from repro.models.config import ModelConfig
 from repro.models.layers import rms_norm, embed_tokens
-from repro.pruning.alps import AlpsConfig, alps_prune
-from repro.pruning.calib import gram_matrix
-from repro.pruning.sparsegpt import sparsegpt_prune
-from repro.pruning.wanda import wanda_prune, wanda_importance
+from repro.patterns import PatternSpec, pattern_from_args
+from repro.pruning.alps import AlpsConfig
+from repro.pruning.methods import PruneContext, get_method, method_importance
 from repro.service.cache import solver_fingerprint
 from repro.service.engine import MaskService
 from repro.service.journal import Journal
-
-
-def _prune_one(w, x_flat, method, n, m, transposable, solver, alps_cfg):
-    if method == "wanda":
-        return wanda_prune(w, x_flat, n, m, transposable, solver)
-    if method == "sparsegpt":
-        return sparsegpt_prune(w, gram_matrix(x_flat), n, m, transposable, solver)
-    if method == "alps":
-        return alps_prune(w, gram_matrix(x_flat), n, m, transposable, alps_cfg)
-    if method == "magnitude":
-        from repro.pruning.magnitude import magnitude_prune
-
-        return magnitude_prune(w, n, m, transposable, solver)
-    raise ValueError(method)
 
 
 def _digest(arr) -> bytes:
@@ -66,7 +55,7 @@ def _digest(arr) -> bytes:
     return h.digest()
 
 
-def _tensor_key(w, x_digest, method, n, m, transposable, solver, alps_cfg) -> str:
+def _tensor_key(w, x_digest, method_name, spec: PatternSpec, solver, alps_cfg) -> str:
     """Content hash identifying one layer-wise pruning problem end to end:
     weights, calibration activations (pre-digested — shared by the group),
     method, and every knob of the solver config that actually produces the
@@ -74,10 +63,10 @@ def _tensor_key(w, x_digest, method, n, m, transposable, solver, alps_cfg) -> st
     h = hashlib.sha256()
     h.update(b"tsenor-prune-v1|")
     h.update(
-        f"method={method}|n={n}|m={m}|t={bool(transposable)}|"
+        f"method={method_name}|n={spec.n}|m={spec.m}|t={spec.transposable}|"
         f"{solver_fingerprint(solver)}|".encode()
     )
-    if method == "alps":
+    if method_name == "alps":
         h.update(
             f"alps:iters={alps_cfg.iters};rho0={alps_cfg.rho0_rel!r};"
             f"growth={alps_cfg.rho_growth!r};{solver_fingerprint(alps_cfg.solver)}|".encode()
@@ -92,10 +81,12 @@ def prune_transformer(
     cfg: ModelConfig,
     tokens: Optional[jnp.ndarray] = None,
     embeds: Optional[jnp.ndarray] = None,
-    method: str = "alps",
-    n: int = 2,
-    m: int = 4,
-    transposable: bool = True,
+    method="alps",
+    pattern=None,
+    *,
+    n: Optional[int] = None,
+    m: Optional[int] = None,
+    transposable: Optional[bool] = None,
     solver: SolverConfig = SolverConfig(iters=150),
     alps_cfg: Optional[AlpsConfig] = None,
     log=lambda s: None,
@@ -105,6 +96,9 @@ def prune_transformer(
     """Returns (pruned params, {proj_name: stacked masks}).
 
     ``tokens``/``embeds``: calibration batch (B, S)/(B, S, d).
+    ``method``: registered method name (or a PruneMethod object).
+    ``pattern``: :class:`PatternSpec` or canonical string like ``"t2:4"``;
+    the deprecated ``n=``/``m=``/``transposable=`` keywords still work.
     ``service``: MaskService for transposable mask solves (a per-call
     in-memory one is created by default).
     ``journal_dir``: persist every pruned (W, mask) pair content-addressed
@@ -112,6 +106,10 @@ def prune_transformer(
     inputs resumes after an interruption without re-solving finished tensors.
     """
     assert cfg.family in ("dense", "vlm", "audio"), cfg.family
+    spec = pattern_from_args(pattern, m, transposable, n=n,
+                             caller="prune_transformer")
+    meth = get_method(method)
+    importance = method_importance(meth)
     alps_cfg = alps_cfg or AlpsConfig(iters=50, solver=solver)
     svc = service if service is not None else MaskService(solver, directory=journal_dir)
     journal = store = None
@@ -132,9 +130,10 @@ def prune_transformer(
     masks_attn = {k: [] for k in ("wq", "wk", "wv", "wo")}
     masks_mlp = {k: [] for k in ("gate", "up", "down")}
 
-    # Wanda/magnitude masks depend only on (W, X): they can ride the batched
-    # service path; SparseGPT/ALPS inline the solve in their jitted loops.
-    group_batched = transposable and method in ("wanda", "magnitude")
+    # Importance-scored methods' masks depend only on (W, X): they can ride
+    # the batched service path; gram-based methods (SparseGPT/ALPS) inline
+    # the solve in their jitted loops.
+    group_batched = spec.transposable and importance is not None
 
     def restore(tname, key):
         if journal is None or key is None:
@@ -153,10 +152,13 @@ def prune_transformer(
     def pr_group(ws: dict, x_act, l: int, grp: str):
         """Prune projections sharing input ``x_act``; returns name -> (wp, mask).
 
-        For the batched methods every cache-miss in the group is submitted to
-        the service first and solved in ONE bucketed flush.
+        For importance-scored methods every cache-miss in the group is
+        submitted to the service first and solved in ONE bucketed flush.
         """
         x_flat = x_act.reshape(-1, x_act.shape[-1])
+        # Gram-based methods pull ctx.gram() lazily (cached per group), so a
+        # fully-journaled resume never pays the O(tokens * d^2) matmul.
+        ctx = PruneContext(x=x_flat, solver=solver, alps=alps_cfg)
         results, todo = {}, {}
         # Hashing is journal-only work; the batched methods' masks come from
         # the service, so the key must fingerprint ITS config, not ``solver``.
@@ -167,9 +169,7 @@ def prune_transformer(
             w32 = w.astype(jnp.float32)
             key = None
             if journal is not None:
-                key = _tensor_key(
-                    w32, x_digest, method, n, m, transposable, mask_cfg, alps_cfg
-                )
+                key = _tensor_key(w32, x_digest, meth.name, spec, mask_cfg, alps_cfg)
             prior = restore(tname, key)
             if prior is not None:
                 results[name] = prior
@@ -179,12 +179,7 @@ def prune_transformer(
         if group_batched and todo:
             handles = {}
             for name, (tname, _key, w32) in todo.items():
-                imp = (
-                    wanda_importance(w32, x_flat)
-                    if method == "wanda"
-                    else jnp.abs(w32)
-                )
-                handles[name] = svc.submit(tname, imp, n, m)
+                handles[name] = svc.submit(tname, importance(w32, ctx), spec)
             svc.flush()  # one bucketed solve for the whole group
             for name, (tname, key, w32) in todo.items():
                 mask = handles[name].result()
@@ -194,9 +189,7 @@ def prune_transformer(
                 log(f"[prune] layer {l} {name}: done")
         else:
             for name, (tname, key, w32) in todo.items():
-                wp, mask = _prune_one(
-                    w32, x_flat, method, n, m, transposable, solver, alps_cfg
-                )
+                wp, mask = meth(w32, None, spec, ctx)
                 persist(tname, key, wp, mask)
                 results[name] = (wp, mask)
                 log(f"[prune] layer {l} {name}: done")

@@ -23,6 +23,7 @@ from repro.core import blocks as blk
 from repro.core.rounding import round_blocks
 from repro.core.dykstra import dykstra_log
 from repro.core.solver import SolverConfig
+from repro.patterns import pattern_from_args
 
 
 def upper_chol_of_inverse(h: jnp.ndarray) -> jnp.ndarray:
@@ -86,23 +87,30 @@ def _sparsegpt_jit(w_hat, h, n, m, transposable, iters, ls_steps, tau_scale):
 def sparsegpt_prune(
     w_hat: jnp.ndarray,
     h: jnp.ndarray,
-    n: int,
-    m: int,
-    transposable: bool = True,
+    pattern=None,
+    m=None,
+    transposable=None,
     config: SolverConfig = SolverConfig(iters=150),
+    *,
+    n=None,
 ):
     """Returns (pruned + OBS-updated W, mask).
 
     ``w_hat``: (in, out) dense weights; ``h``: damped Gram XᵀX + λI (in, in).
+    ``pattern``: :class:`~repro.patterns.PatternSpec` (or canonical string);
+    the deprecated ``(n, m[, transposable])`` triple still works.  The mask
+    solve is inlined in the jitted group scan (dense Dykstra path; see
+    ROADMAP for service routing).
     """
+    spec = pattern_from_args(pattern, m, transposable, n=n, caller="sparsegpt_prune")
     in_dim, out_dim = w_hat.shape
-    assert in_dim % m == 0 and out_dim % m == 0, (w_hat.shape, m)
+    assert in_dim % spec.m == 0 and out_dim % spec.m == 0, (w_hat.shape, spec.m)
     return _sparsegpt_jit(
         jnp.asarray(w_hat, jnp.float32),
         jnp.asarray(h, jnp.float32),
-        n,
-        m,
-        transposable,
+        spec.n,
+        spec.m,
+        spec.transposable,
         config.iters,
         config.ls_steps,
         config.tau_scale,

@@ -10,7 +10,8 @@ from typing import Callable, Optional
 
 import jax.numpy as jnp
 
-from repro.core.solver import SolverConfig, nm_mask, transposable_nm_mask
+from repro.core.solver import SolverConfig, nm_mask, solve_mask
+from repro.patterns import call_mask_fn, pattern_from_args
 from repro.pruning.calib import col_norms
 
 
@@ -22,24 +23,29 @@ def wanda_importance(w: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
 def wanda_prune(
     w: jnp.ndarray,
     x: jnp.ndarray,
-    n: int,
-    m: int,
-    transposable: bool = True,
+    pattern=None,
+    m=None,
+    transposable=None,
     config: SolverConfig = SolverConfig(),
     mask_fn: Optional[Callable] = None,
+    *,
+    n=None,
 ):
     """Returns (pruned W, mask).  ``x``: (tokens, in) calibration inputs.
 
-    ``mask_fn(scores, n, m)`` overrides the transposable solver — pass
-    ``repro.service.MaskService.solve`` (partially applied) to route through
+    ``pattern``: :class:`~repro.patterns.PatternSpec` (or canonical string);
+    the deprecated ``(n, m[, transposable])`` argument triple still works.
+    ``mask_fn(scores, pattern)`` overrides the transposable solver — pass a
+    partially-applied ``repro.service.MaskService.solve`` to route through
     the batched/cached engine.
     """
+    spec = pattern_from_args(pattern, m, transposable, n=n, caller="wanda_prune")
     imp = wanda_importance(w, x)
-    if transposable:
-        if mask_fn is not None:
-            mask = mask_fn(imp, n, m)
-        else:
-            mask = transposable_nm_mask(imp, n, m, config)
+    if spec.transposable:
+        mask = (
+            call_mask_fn(mask_fn, imp, spec, caller="wanda_prune")
+            if mask_fn is not None else solve_mask(imp, spec, config)
+        )
     else:
-        mask = nm_mask(imp, n, m, axis=0)
+        mask = nm_mask(imp, spec.n, spec.m, axis=0)
     return jnp.where(mask, w, 0), mask

@@ -1,10 +1,12 @@
 """Batched mask-solver engine: shape-bucketed scheduling, content-addressed
 caching, and resumable model-scale pruning.
 
-The per-tensor API (``core.solver.transposable_nm_mask``) re-dispatches and
+The per-tensor API (``core.solver.solve_mask``) re-dispatches and
 re-compiles per weight matrix; this package treats the whole model as one
-stream of M x M block problems instead.  See README "Mask service" for the
-architecture and ``examples/mask_service.py`` for a runnable tour.
+stream of M x M block problems instead — ``MaskService.solve(w, pattern)``
+is the canonical solve path.  Mega-batches shard over all local devices via
+``compat.shard_map``.  See README "Mask service" for the architecture and
+``examples/mask_service.py`` for a runnable tour.
 """
 from repro.service.cache import MaskCache, content_key, solver_fingerprint
 from repro.service.engine import MaskHandle, MaskService, ServiceStats

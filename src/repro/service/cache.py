@@ -15,42 +15,70 @@ solver semantics change.
 The cache is two-level: an in-process dict in front of an optional
 :class:`repro.checkpoint.ContentStore` (atomic ``<key>.npz`` files), which is
 what makes re-pruning and crash-resume near-free.
+
+On-disk payload format (versioned via the ``cache_format`` field):
+
+* v2 (current): ``mask_bits`` — the bool block stream bit-packed with
+  ``np.packbits`` (8x smaller than raw bool) — plus ``shape``.
+* v1 (legacy): raw bool ``mask`` array.  Old entries still load.
 """
 from __future__ import annotations
 
 import hashlib
+import warnings
 from typing import Optional
 
 import numpy as np
 
 from repro.checkpoint.manager import ContentStore
 from repro.core.solver import SolverConfig
+from repro.patterns import PatternSpec
 
 _VERSION = "tsenor-mask-v1"
+_CACHE_FORMAT = 2  # v2: packbits payload; v1 raw-bool entries still load
 
 
 def solver_fingerprint(config: SolverConfig) -> str:
     """Stable string of the SolverConfig fields that affect the solved mask.
 
     ``block_batch`` is deliberately excluded: it only chunks the dispatch and
-    never changes per-block results.  ``use_kernel`` is included out of
-    caution — the Pallas path is verified equal to XLA in tests, but a cache
-    must never have to trust that.
+    never changes per-block results.  The backend is included out of caution
+    — the Pallas path is verified equal to XLA in tests, but a cache must
+    never have to trust that.  The two original backends keep their historic
+    ``use_kernel=...`` spelling so pre-registry cache entries stay reachable.
     """
+    if config.backend in ("dense-jit", "pallas"):
+        backend_part = f"use_kernel={config.backend == 'pallas'}"
+    else:
+        backend_part = f"backend={config.backend}"
     return (
         f"iters={config.iters};ls_steps={config.ls_steps};"
-        f"tau_scale={config.tau_scale!r};use_kernel={bool(config.use_kernel)}"
+        f"tau_scale={config.tau_scale!r};{backend_part}"
     )
 
 
-def content_key(
-    w_abs_blocks: np.ndarray, n: int, m: int, config: SolverConfig
-) -> str:
-    """Content hash of one tensor's block stream + problem parameters."""
+def content_key(w_abs_blocks: np.ndarray, pattern, config=None, _legacy=None) -> str:
+    """Content hash of one tensor's block stream + problem parameters.
+
+    ``pattern`` is a :class:`PatternSpec` (or canonical string); the
+    deprecated ``content_key(blocks, n, m, config)`` form still works.
+    """
+    if isinstance(pattern, int) and not isinstance(pattern, bool):
+        warnings.warn(
+            "content_key(blocks, n, m, config) is deprecated; pass a "
+            "PatternSpec: content_key(blocks, pattern, config)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        spec = PatternSpec(pattern, config, True)  # (n, m) legacy positions
+        config = _legacy
+    else:
+        spec = PatternSpec.coerce(pattern)
+    assert config is not None, "content_key needs a SolverConfig"
     blocks = np.ascontiguousarray(w_abs_blocks, dtype=np.float32)
     h = hashlib.sha256()
     h.update(_VERSION.encode())
-    h.update(f"|n={n}|m={m}|{solver_fingerprint(config)}|".encode())
+    h.update(f"|n={spec.n}|m={spec.m}|{solver_fingerprint(config)}|".encode())
     h.update(str(blocks.shape).encode())
     h.update(blocks.tobytes())
     return h.hexdigest()
@@ -72,7 +100,7 @@ class MaskCache:
             self.mem_hits += 1
             return self._mem[key]
         if self.store is not None and self.store.has(key):
-            mask = self.store.get(key)["mask"].astype(bool)
+            mask = _decode_entry(self.store.get(key))
             self._mem[key] = mask
             self.disk_hits += 1
             return mask
@@ -83,10 +111,26 @@ class MaskCache:
         mask = np.asarray(mask_blocks, dtype=bool)
         self._mem[key] = mask
         if self.store is not None:
-            # np.packbits would halve the footprint further; bool npz already
-            # compresses the 1-bit payload well enough for mask volumes.
-            self.store.put(key, mask=mask)
+            self.store.put(
+                key,
+                mask_bits=np.packbits(mask.reshape(-1)),
+                shape=np.asarray(mask.shape, np.int64),
+                cache_format=np.asarray(_CACHE_FORMAT, np.int64),
+            )
 
     @property
     def hits(self) -> int:
         return self.mem_hits + self.disk_hits
+
+
+def _decode_entry(data: dict[str, np.ndarray]) -> np.ndarray:
+    """Decode a stored cache entry, tolerating the v1 raw-bool format."""
+    if "mask_bits" in data:
+        shape = tuple(int(v) for v in data["shape"])
+        count = int(np.prod(shape)) if shape else 0
+        return (
+            np.unpackbits(data["mask_bits"], count=count)
+            .astype(bool)
+            .reshape(shape)
+        )
+    return data["mask"].astype(bool)  # v1: raw bool blocks

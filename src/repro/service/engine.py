@@ -4,21 +4,27 @@ Callers enqueue whole tensors (2-D, or scan-stacked 3-D as ONE submission)
 and get back :class:`MaskHandle` futures; ``flush()`` drains the queue as a
 handful of shape-bucketed mega-batches (see ``scheduler``), consulting the
 content-addressed cache first and journaling every completion for resume.
+``MaskService.solve(w, pattern)`` is the canonical synchronous solve path of
+the whole codebase.
 
     service = MaskService(SolverConfig(iters=150), directory="runs/prune")
-    handles = [service.submit(name, w, n=2, m=4) for name, w in tensors]
+    handles = [service.submit(name, w, PatternSpec(2, 4)) for name, w in tensors]
     service.flush()                       # one bucketed solve for everything
     masks = {h.name: h.result() for h in handles}
+
+    mask = service.solve(w, "t2:4")       # canonical one-shot solve
 
 ``result()`` on an unresolved handle flushes implicitly, so laziness is a
 throughput optimization, never a correctness concern.  Everything is
 single-process; the "service" boundary is the submit/flush API, which is
-what a multi-tenant deployment would put behind an RPC layer.
+what a multi-tenant deployment would put behind an RPC layer.  Mega-batches
+shard over all local devices (``BucketPolicy.shard_devices``).
 """
 from __future__ import annotations
 
 import dataclasses
 import os
+import warnings
 from typing import Optional
 
 import jax.numpy as jnp
@@ -26,6 +32,7 @@ import numpy as np
 
 from repro.checkpoint.manager import ContentStore
 from repro.core.solver import SolverConfig
+from repro.patterns import PatternSpec, pattern_from_args
 from repro.service.cache import MaskCache, content_key
 from repro.service.journal import Journal
 from repro.service.scheduler import (
@@ -40,15 +47,22 @@ from repro.service.scheduler import (
 class MaskHandle:
     """Future for one submitted tensor's transposable N:M mask."""
 
-    def __init__(self, service: "MaskService", name: str, n: int, m: int,
+    def __init__(self, service: "MaskService", name: str, pattern: PatternSpec,
                  key: str, geom: dict):
         self.service = service
         self.name = name
-        self.n = n
-        self.m = m
+        self.pattern = pattern
         self.key = key
         self._geom = geom
         self._mask_blocks: Optional[np.ndarray] = None
+
+    @property
+    def n(self) -> int:
+        return self.pattern.n
+
+    @property
+    def m(self) -> int:
+        return self.pattern.m
 
     @property
     def done(self) -> bool:
@@ -85,7 +99,8 @@ class ServiceStats:
             f"submitted={self.submitted} cache_hits={self.cache_hits} "
             f"solved_blocks={self.stream.blocks_solved} "
             f"batches={self.stream.batches} "
-            f"padded_blocks={self.stream.blocks_padded}"
+            f"padded_blocks={self.stream.blocks_padded} "
+            f"waste=[{self.stream.waste_summary()}]"
         )
 
 
@@ -117,16 +132,28 @@ class MaskService:
 
     # -- submit/future API --------------------------------------------------
 
-    def submit(self, name: str, w, n: int, m: int) -> MaskHandle:
+    def submit(self, name: Optional[str], w, pattern=None, m=None, *,
+               n=None) -> MaskHandle:
         """Enqueue one tensor (2-D, or stacked (L, R, C) as one submission).
 
         The mask objective uses |w|, so callers pass either raw weights or an
-        importance matrix.  Returns immediately; the solve happens at the
-        next ``flush()`` (or lazily at ``result()``).
+        importance matrix.  ``pattern`` is a :class:`PatternSpec` (or
+        canonical string); the deprecated ``submit(name, w, n, m)`` form
+        still works.  ``name=None`` derives a content-addressed name.
+        Returns immediately; the solve happens at the next ``flush()``
+        (or lazily at ``result()``).
         """
-        blocks, geom = tensor_to_blocks(w, m)
-        key = content_key(blocks, n, m, self.config)
-        handle = MaskHandle(self, name, n, m, key, geom)
+        spec = pattern_from_args(pattern, m, None, n=n, caller="MaskService.submit")
+        if not spec.transposable:
+            raise ValueError(
+                "MaskService solves transposable patterns; standard N:M masks "
+                "are a cheap top-N (repro.core.solver.nm_mask)"
+            )
+        blocks, geom = tensor_to_blocks(w, spec.m)
+        key = content_key(blocks, spec, self.config)
+        if name is None:
+            name = f"mask:{key[:12]}"
+        handle = MaskHandle(self, name, spec, key, geom)
         self.stats.submitted += 1
 
         disk_hits_before = self.cache.disk_hits
@@ -149,15 +176,15 @@ class MaskService:
         pending, self._pending = self._pending, []
         if not pending:
             return
-        # One stream per (n, m): block shape and the solver's static args
+        # One stream per pattern: block shape and the solver's static args
         # both depend on it.  Submission order is preserved within a group.
-        groups: dict[tuple[int, int], list[tuple[MaskHandle, np.ndarray]]] = {}
+        groups: dict[PatternSpec, list[tuple[MaskHandle, np.ndarray]]] = {}
         for handle, blocks in pending:
-            groups.setdefault((handle.n, handle.m), []).append((handle, blocks))
-        for (n, _m), entries in groups.items():
+            groups.setdefault(handle.pattern, []).append((handle, blocks))
+        for spec, entries in groups.items():
             solved = solve_stream(
                 [blocks for _, blocks in entries],
-                n,
+                spec,
                 self.config,
                 self.policy,
                 self.stats.stream,
@@ -167,9 +194,34 @@ class MaskService:
                 self.cache.put(handle.key, mask_blocks)
                 self._record(handle)
 
-    def solve(self, name: str, w, n: int, m: int) -> jnp.ndarray:
-        """Synchronous convenience: submit + flush + result."""
-        handle = self.submit(name, w, n, m)
+    def solve(self, w, pattern=None, *legacy, name: Optional[str] = None,
+              n=None, m=None) -> jnp.ndarray:
+        """Canonical synchronous solve: submit + flush + result.
+
+            mask = service.solve(w, PatternSpec(2, 4))       # or "t2:4"
+
+        The deprecated ``solve(name, w, n, m)`` form still works.
+        """
+        if isinstance(w, str):  # legacy solve(name, w, n, m)
+            warnings.warn(
+                "MaskService.solve(name, w, n, m) is deprecated; use "
+                "solve(w, pattern, name=...)",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            name, w = w, pattern
+            if len(legacy) == 2:
+                spec = PatternSpec(legacy[0], legacy[1], True)
+            elif len(legacy) == 1:
+                spec = PatternSpec.coerce(legacy[0])
+            else:
+                spec = PatternSpec(n, m, True)
+        else:
+            if legacy:
+                raise TypeError("solve(w, pattern) takes no extra positionals")
+            spec = pattern_from_args(pattern, m, None, n=n,
+                                     caller="MaskService.solve")
+        handle = self.submit(name, w, spec)
         self.flush()
         return handle.result()
 

@@ -8,12 +8,12 @@ block count and one dispatch per tensor, which wrecks occupancy on the long
 tail of small layers.
 
 The scheduler instead treats the whole model as one stream of blocks per
-``(n, m)`` group and packs it into a small number of shape-bucketed
-mega-batches:
+:class:`~repro.patterns.PatternSpec` group and packs it into a small number
+of shape-bucketed mega-batches:
 
   * bucket sizes are the geometric ladder ``base * growth^k`` capped at
     ``max_bucket`` — every workload compiles at most ``len(ladder)`` programs
-    per ``(n, m)`` instead of one per tensor;
+    per pattern instead of one per tensor;
   * the plan greedily emits the largest bucket that fits the remaining
     stream, then rounds the tail UP to the smallest bucket that covers it,
     padding with all-zero sentinel blocks (blocks are independent, so
@@ -22,22 +22,39 @@ mega-batches:
   * mega-batches are dispatched back-to-back without blocking, so host-side
     packing of batch ``k+1`` overlaps the device solve of batch ``k`` (JAX
     async dispatch);
+  * with more than one local device (and a traceable backend), each
+    mega-batch is split over a 1-D ``("blocks",)`` device mesh via
+    ``compat.shard_map`` — blocks are independent, so sharding the leading
+    axis is semantics-free and model-scale solves use every local chip;
   * results are scattered back to per-tensor block streams in submission
     order.
 
-Bit-exactness: every mega-batch is solved by the exact same jitted program
-as the per-tensor path (``repro.core.solver._solve_blocks_jit``), and every
-per-block operation in the solver reduces only within its own block, so
-masks are identical to ``transposable_nm_mask`` bit for bit.
+Bit-exactness: every mega-batch is solved by the exact same backend program
+as the per-tensor path (``repro.core.backends``), and every per-block
+operation in the solver reduces only within its own block, so masks are
+identical to ``solve_mask`` bit for bit — sharded or not.
+
+:class:`StreamStats` additionally tracks padding waste per bucket size
+(padded blocks / dispatched blocks), giving the ROADMAP cost-model work a
+measurable baseline; ``solve_stream`` logs it per stream.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
+import logging
 
+import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
-from repro.core.solver import SolverConfig, _solve_blocks_jit
+from repro import compat
+from repro.core.backends import get_backend
+from repro.core.solver import SolverConfig
+from repro.patterns import PatternSpec
+
+logger = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,6 +64,7 @@ class BucketPolicy:
     base: int = 512        # smallest dispatched batch
     growth: int = 4        # ladder ratio
     max_bucket: int = 32768  # device-memory cap per dispatch
+    shard_devices: bool = True  # split mega-batches over local devices
 
     def ladder(self) -> tuple[int, ...]:
         sizes = [self.base]
@@ -73,6 +91,29 @@ class StreamStats:
     blocks_solved: int = 0     # real (non-sentinel) blocks dispatched
     blocks_padded: int = 0     # sentinel blocks added to fill buckets
     batches: int = 0           # device dispatches
+    # Per-bucket-size accounting for the padding-waste baseline.
+    bucket_blocks: dict[int, int] = dataclasses.field(default_factory=dict)
+    bucket_padded: dict[int, int] = dataclasses.field(default_factory=dict)
+
+    def note_batch(self, bucket: int, real: int, padded: int) -> None:
+        self.blocks_solved += real
+        self.blocks_padded += padded
+        self.batches += 1
+        self.bucket_blocks[bucket] = self.bucket_blocks.get(bucket, 0) + real + padded
+        self.bucket_padded[bucket] = self.bucket_padded.get(bucket, 0) + padded
+
+    def padding_waste(self) -> dict[int, float]:
+        """bucket size -> padded fraction of all blocks dispatched at it."""
+        return {
+            b: self.bucket_padded.get(b, 0) / total
+            for b, total in sorted(self.bucket_blocks.items())
+            if total
+        }
+
+    def waste_summary(self) -> str:
+        return " ".join(
+            f"{b}:{frac:.3f}" for b, frac in self.padding_waste().items()
+        ) or "-"
 
 
 def pad_blocks_2d(w_abs: np.ndarray, m: int) -> tuple[np.ndarray, tuple[int, int]]:
@@ -130,9 +171,79 @@ def blocks_to_mask(mask_blocks: np.ndarray, geom: dict) -> np.ndarray:
     ])
 
 
+# ---------------------------------------------------------------------------
+# Mesh-sharded mega-batch dispatch.
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _block_mesh(ndev: int):
+    """1-D mesh over all local devices; blocks shard along it."""
+    return compat.make_mesh(
+        (ndev,), ("blocks",), axis_types=compat.auto_axis_types(1)
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_solver(backend, n, m, iters, ls_steps, tau_scale, ndev):
+    """jitted shard_map of ``backend.solve`` over the local-device mesh.
+
+    Cached per (backend *instance*, pattern, solver statics, device count) so
+    repeat dispatches reuse the compiled program while a re-registered
+    backend name (``register_backend(..., overwrite=True)``) gets a fresh
+    entry instead of a stale one.
+    """
+    pattern = PatternSpec(n, m, True)
+    config = SolverConfig(
+        iters=iters, ls_steps=ls_steps, tau_scale=tau_scale, backend=backend.name
+    )
+
+    def solve_shard(blocks):
+        return backend.solve(blocks, pattern, config)
+
+    fn = compat.shard_map(
+        solve_shard,
+        mesh=_block_mesh(ndev),
+        in_specs=P("blocks"),
+        out_specs=P("blocks"),
+        axis_names=frozenset({"blocks"}),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+def dispatch_batch(
+    batch: np.ndarray,
+    pattern: PatternSpec,
+    config: SolverConfig,
+    shard_devices: bool = True,
+) -> tuple[jnp.ndarray, int]:
+    """Solve one mega-batch, sharded over local devices when possible.
+
+    Returns ``(mask_blocks, device_pad)`` where ``device_pad`` counts the
+    sentinel blocks appended to make the batch divisible by the device count
+    (already cropped from the returned masks).
+    """
+    backend = get_backend(config.backend)
+    ndev = jax.local_device_count()
+    if shard_devices and ndev > 1 and getattr(backend, "traceable", False):
+        pad = (-batch.shape[0]) % ndev
+        if pad:
+            batch = np.concatenate(
+                [batch, np.zeros((pad,) + batch.shape[1:], batch.dtype)], axis=0
+            )
+        solver = _sharded_solver(
+            backend, pattern.n, pattern.m,
+            config.iters, config.ls_steps, config.tau_scale, ndev,
+        )
+        solved = solver(batch)
+        return (solved[: solved.shape[0] - pad] if pad else solved), pad
+    return backend.solve(jnp.asarray(batch), pattern, config), 0
+
+
 def solve_stream(
     block_arrays: list[np.ndarray],
-    n: int,
+    pattern,
     config: SolverConfig = SolverConfig(),
     policy: BucketPolicy = BucketPolicy(),
     stats: StreamStats | None = None,
@@ -142,14 +253,20 @@ def solve_stream(
 
     All arrays must share the same M.  The concatenated stream is cut at
     bucket boundaries regardless of tensor boundaries, so one tensor may span
-    several buckets and one bucket may hold many tensors.
+    several buckets and one bucket may hold many tensors.  ``pattern`` may be
+    a :class:`PatternSpec` or a bare int N (M is the block side).
     """
     if not block_arrays:
         return []
     m = block_arrays[0].shape[-1]
+    if isinstance(pattern, int) and not isinstance(pattern, bool):
+        spec = PatternSpec(pattern, m, True)
+    else:
+        spec = PatternSpec.coerce(pattern)
     for a in block_arrays:
         assert a.ndim == 3 and a.shape[-2:] == (m, m), (a.shape, m)
     stats = stats if stats is not None else StreamStats()
+    local = StreamStats()  # this stream only, for the log line
 
     total = sum(a.shape[0] for a in block_arrays)
     plan = policy.plan(total)
@@ -172,18 +289,12 @@ def solve_stream(
                 cursor_t, cursor_off = cursor_t + 1, 0
         if filled < bucket:  # tail bucket: sentinel zero blocks
             parts.append(np.zeros((bucket - filled, m, m), np.float32))
-            stats.blocks_padded += bucket - filled
         batch = np.concatenate(parts, axis=0) if len(parts) > 1 else parts[0]
-        solved = _solve_blocks_jit(
-            jnp.asarray(batch),
-            n,
-            config.iters,
-            config.ls_steps,
-            config.tau_scale,
-            config.use_kernel,
+        solved, device_pad = dispatch_batch(
+            batch, spec, config, shard_devices=policy.shard_devices
         )
-        stats.blocks_solved += filled
-        stats.batches += 1
+        for st in (stats, local):
+            st.note_batch(bucket, filled, (bucket - filled) + device_pad)
         pending.append((solved, segmap))
 
     outs = [
@@ -195,4 +306,10 @@ def solve_stream(
             outs[tensor_idx][tensor_off : tensor_off + count] = host[
                 bucket_off : bucket_off + count
             ]
+    logger.info(
+        "solve_stream pattern=%s tensors=%d blocks=%d batches=%d padded=%d "
+        "waste_per_bucket=[%s]",
+        spec.canonical, len(block_arrays), local.blocks_solved, local.batches,
+        local.blocks_padded, local.waste_summary(),
+    )
     return outs

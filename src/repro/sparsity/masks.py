@@ -2,15 +2,15 @@
 
 Masks are fixed after pruning; sparse fine-tuning multiplies weights by their
 mask in the forward pass (and therefore gradients are masked by the chain
-rule).  ``sparsify_pytree`` walks a parameter tree and attaches transposable
-N:M masks to every 2-D weight whose both dims divide by M (embedding tables
-and norm/bias vectors are exempt — paper prunes linear projections only).
+rule).  ``sparsify_pytree`` walks a parameter tree and attaches N:M masks to
+every 2-D weight whose both dims divide by M (embedding tables and norm/bias
+vectors are exempt — paper prunes linear projections only).
 
-Mask generation routes through :class:`repro.service.MaskService`: the whole
-tree is submitted first (stacked (L, in, out) weights as ONE submission) and
-solved in a handful of shape-bucketed mega-batches, instead of one dispatch
-per tensor per layer.  Results are bit-identical to the per-tensor
-``transposable_nm_mask`` path.
+Transposable mask generation routes through
+:class:`repro.service.MaskService`: the whole tree is submitted first
+(stacked (L, in, out) weights as ONE submission) and solved in a handful of
+shape-bucketed mega-batches, instead of one dispatch per tensor per layer.
+Results are bit-identical to the per-tensor ``solve_mask`` path.
 """
 from __future__ import annotations
 
@@ -19,7 +19,8 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.solver import SolverConfig
+from repro.core.solver import SolverConfig, nm_mask
+from repro.patterns import pattern_from_args
 from repro.service.engine import MaskService
 
 
@@ -58,31 +59,54 @@ def _path_name(path: tuple) -> str:
 
 def sparsify_pytree(
     params,
-    n: int,
-    m: int,
+    pattern=None,
+    m=None,
     config: SolverConfig = SolverConfig(),
+    *,
+    n: Optional[int] = None,
     prunable: Callable = default_prunable,
     service: Optional[MaskService] = None,
 ):
-    """Compute transposable N:M masks for every prunable weight in a pytree.
+    """Compute N:M masks for every prunable weight in a pytree.
 
-    Returns a mask pytree with ``None`` at exempt leaves.  Stacked (L, in,
-    out) weights are one submission each (block batches concatenate across
-    layers — TSENOR's block-batch formulation doesn't care).
+    ``pattern`` is a :class:`~repro.patterns.PatternSpec` (or canonical
+    string like ``"t2:4"``); the deprecated ``(n, m)`` argument pair still
+    works.  Returns a mask pytree with ``None`` at exempt leaves.  Stacked
+    (L, in, out) weights are one submission each (block batches concatenate
+    across layers — TSENOR's block-batch formulation doesn't care).
 
     ``service``: reuse an existing :class:`MaskService` — e.g. one built with
     ``directory=`` for disk caching + journaled resume; its config takes
     precedence over ``config``.  By default an in-memory service is created
-    per call.
+    per call.  Standard (non-transposable) patterns reduce to cheap top-N
+    masks and skip the service entirely.
     """
-    svc = service if service is not None else MaskService(config)
+    spec = pattern_from_args(pattern, m, None, n=n, caller="sparsify_pytree")
     flat = jax.tree_util.tree_flatten_with_path(params)
+
+    if not spec.transposable:
+        masks = []
+        for path, p in flat[0]:
+            if not prunable(path, p, spec.m):
+                masks.append(None)
+            elif p.ndim == 3:
+                masks.append(
+                    jnp.stack([
+                        nm_mask(p[i], spec.n, spec.m, axis=0)
+                        for i in range(p.shape[0])
+                    ])
+                )
+            else:
+                masks.append(nm_mask(p, spec.n, spec.m, axis=0))
+        return jax.tree_util.tree_unflatten(flat[1], masks)
+
+    svc = service if service is not None else MaskService(config)
     handles = []
     for path, p in flat[0]:
-        if not prunable(path, p, m):
+        if not prunable(path, p, spec.m):
             handles.append(None)
             continue
-        handles.append(svc.submit(_path_name(path), p, n, m))
+        handles.append(svc.submit(_path_name(path), p, spec))
     svc.flush()  # everything dispatches as shape-bucketed mega-batches
     masks = [None if h is None else h.result() for h in handles]
     return jax.tree_util.tree_unflatten(flat[1], masks)

@@ -16,12 +16,11 @@ The step is built once per (arch, mesh) and covers:
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.distributed.compression import compressed_psum
 from repro.models import lm

@@ -1,5 +1,4 @@
 """HLO cost analyzer + sharding-spec unit tests."""
-import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest

@@ -1,0 +1,473 @@
+"""Unified sparsity API: PatternSpec, registries, deprecation shims, mesh
+dispatch (ISSUE 2 acceptance tests)."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.api import (
+    BucketPolicy,
+    MaskService,
+    PatternSpec,
+    SolverConfig,
+    available_backends,
+    available_methods,
+    get_backend,
+    get_method,
+    is_transposable_nm,
+    register_backend,
+    register_method,
+    solve_blocks,
+    solve_mask,
+    sparsify_pytree,
+    transposable_nm_mask,
+    unregister_backend,
+    unregister_method,
+)
+
+FAST = SolverConfig(iters=60)
+TINY = BucketPolicy(base=8, growth=2, max_bucket=32)
+
+
+# ---------------------------------------------------------------------------
+# PatternSpec validation + parsing round-trip.
+# ---------------------------------------------------------------------------
+
+
+class TestPatternSpec:
+    def test_round_trip(self):
+        for spec in (PatternSpec(2, 4), PatternSpec(16, 32),
+                     PatternSpec(4, 8, False), PatternSpec(1, 1)):
+            assert PatternSpec.parse(str(spec)) == spec
+            assert PatternSpec.parse(spec.canonical) == spec
+
+    def test_canonical_form(self):
+        assert str(PatternSpec(16, 32)) == "t16:32"
+        assert str(PatternSpec(2, 4, False)) == "2:4"
+        assert PatternSpec.parse("t2:4") == PatternSpec(2, 4, True)
+        assert PatternSpec.parse(" 2:4 ") == PatternSpec(2, 4, False)
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            PatternSpec(5, 4)  # n > m
+        with pytest.raises(ValueError):
+            PatternSpec(0, 4)  # n < 1
+        with pytest.raises(TypeError):
+            PatternSpec(2.5, 4)  # non-integer
+        with pytest.raises(TypeError):
+            PatternSpec(True, 4)  # bool is not an int here
+        with pytest.raises(ValueError):
+            PatternSpec.parse("2-4")
+        with pytest.raises(ValueError):
+            PatternSpec.parse("t2:x")
+
+    def test_coerce(self):
+        spec = PatternSpec(2, 4)
+        assert PatternSpec.coerce(spec) is spec
+        assert PatternSpec.coerce("t2:4") == spec
+        assert PatternSpec.coerce((2, 4)) == spec
+        assert PatternSpec.coerce((2, 4, False)) == PatternSpec(2, 4, False)
+        with pytest.raises(TypeError):
+            PatternSpec.coerce(2)
+
+    def test_helpers_and_hashability(self):
+        spec = PatternSpec(2, 4)
+        assert spec.density == 0.5 and spec.sparsity == 0.5
+        assert spec.pad_amount(10) == 2 and spec.pad_amount(8) == 0
+        assert spec.divides((8, 12)) and not spec.divides((8, 10))
+        assert len({PatternSpec(2, 4), PatternSpec(2, 4), PatternSpec(4, 8)}) == 2
+
+    def test_np_ints_accepted(self):
+        spec = PatternSpec(np.int64(2), np.int32(4))
+        assert spec == PatternSpec(2, 4)
+        assert isinstance(spec.n, int) and isinstance(spec.m, int)
+
+
+# ---------------------------------------------------------------------------
+# Registry error paths.
+# ---------------------------------------------------------------------------
+
+
+class TestRegistries:
+    def test_builtin_backends_present(self):
+        assert {"dense-jit", "pallas", "exact", "greedy-baseline"} <= set(
+            available_backends()
+        )
+
+    def test_unknown_backend(self):
+        with pytest.raises(ValueError, match="unknown solver backend"):
+            get_backend("nope")
+        with pytest.raises(ValueError, match="dense-jit"):  # lists available
+            get_backend("nope")
+
+    def test_double_register_backend(self):
+        class Dummy:
+            name = "test-dummy-backend"
+            traceable = False
+
+            def solve(self, blocks, pattern, config):
+                return np.zeros(blocks.shape, bool)
+
+        try:
+            register_backend(Dummy())
+            with pytest.raises(ValueError, match="already registered"):
+                register_backend(Dummy())
+            register_backend(Dummy(), overwrite=True)  # explicit replace OK
+        finally:
+            unregister_backend("test-dummy-backend")
+
+    def test_builtin_methods_present(self):
+        assert {"magnitude", "wanda", "sparsegpt", "alps"} <= set(
+            available_methods()
+        )
+
+    def test_unknown_method(self):
+        with pytest.raises(ValueError, match="unknown pruning method"):
+            get_method("nope")
+
+    def test_double_register_method(self):
+        def toy(w, gram, pattern, ctx):
+            return w, jnp.ones_like(w, dtype=bool)
+
+        try:
+            register_method("test-toy-method")(toy)
+            with pytest.raises(ValueError, match="already registered"):
+                register_method("test-toy-method")(toy)
+            register_method("test-toy-method", toy, overwrite=True)
+        finally:
+            unregister_method("test-toy-method")
+
+    def test_custom_backend_usable_via_config(self):
+        class AllTopLeft:
+            """Keeps the lexicographically-first feasible support."""
+
+            name = "test-topleft"
+            traceable = False
+
+            def solve(self, blocks, pattern, config):
+                b, m, _ = blocks.shape
+                base = np.zeros((m, m), bool)
+                for i in range(m):
+                    base[i, (np.arange(pattern.n) + i) % m] = True
+                return jnp.asarray(np.broadcast_to(base, (b, m, m)))
+
+        try:
+            register_backend(AllTopLeft())
+            w = np.random.default_rng(0).normal(size=(8, 8)).astype(np.float32)
+            mask = np.array(
+                solve_mask(w, PatternSpec(2, 4), SolverConfig(backend="test-topleft"))
+            )
+            assert is_transposable_nm(mask, 2, 4)
+        finally:
+            unregister_backend("test-topleft")
+
+
+# ---------------------------------------------------------------------------
+# Backend quality ordering: exact is the optimum.
+# ---------------------------------------------------------------------------
+
+
+def test_exact_backend_dominates():
+    rng = np.random.default_rng(3)
+    blocks = np.abs(rng.normal(size=(4, 8, 8))).astype(np.float32)
+    masks = {
+        name: np.array(solve_blocks(jnp.asarray(blocks), 4,
+                                    SolverConfig(iters=80, backend=name)))
+        for name in ("dense-jit", "greedy-baseline", "exact")
+    }
+    objs = {name: float((blocks * mk).sum()) for name, mk in masks.items()}
+    for name, mk in masks.items():
+        assert all(is_transposable_nm(b, 4, 8) for b in mk), name
+        # the LP oracle is the optimum; every heuristic is bounded by it
+        assert objs[name] <= objs["exact"] + 1e-4, objs
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims: warn AND stay bit-identical.
+# ---------------------------------------------------------------------------
+
+
+class TestShims:
+    def test_transposable_nm_mask_shim(self):
+        w = np.random.default_rng(1).normal(size=(24, 16)).astype(np.float32)
+        want = np.array(solve_mask(jnp.asarray(w), PatternSpec(4, 8), FAST))
+        with pytest.warns(DeprecationWarning, match="transposable_nm_mask"):
+            got = np.array(transposable_nm_mask(jnp.asarray(w), 4, 8, FAST))
+        assert (got == want).all()
+
+    def test_use_kernel_shim(self):
+        with pytest.warns(DeprecationWarning, match="use_kernel"):
+            cfg = SolverConfig(iters=50, use_kernel=True)
+        assert cfg.backend == "pallas"
+        with pytest.warns(DeprecationWarning):
+            cfg = SolverConfig(iters=50, use_kernel=False)
+        assert cfg.backend == "dense-jit"
+        # frozen-dataclass plumbing still works after the InitVar
+        assert dataclasses.replace(cfg, iters=60).iters == 60
+
+    def test_service_legacy_solve_and_submit(self):
+        w = np.random.default_rng(2).normal(size=(16, 16)).astype(np.float32)
+        svc = MaskService(FAST, policy=TINY)
+        want = np.array(svc.solve(w, PatternSpec(4, 8), name="new"))
+        with pytest.warns(DeprecationWarning, match="MaskService.solve"):
+            got = np.array(svc.solve("legacy", w, 4, 8))
+        assert (got == want).all()
+        with pytest.warns(DeprecationWarning):
+            h = svc.submit("legacy2", w, 4, 8)  # positional (n, m)
+        assert (np.array(h.result()) == want).all()
+        with pytest.warns(DeprecationWarning):
+            h = svc.submit("legacy3", w, n=4, m=8)  # keyword (n, m)
+        assert (np.array(h.result()) == want).all()
+
+    def test_prune_fn_legacy_triples(self):
+        from repro.pruning import magnitude_prune, wanda_prune
+
+        rng = np.random.default_rng(4)
+        w = jnp.asarray(rng.normal(size=(16, 16)).astype(np.float32))
+        x = jnp.asarray(rng.normal(size=(64, 16)).astype(np.float32))
+        spec = PatternSpec(4, 8)
+
+        wp_new, mk_new = magnitude_prune(w, spec, config=FAST)
+        with pytest.warns(DeprecationWarning, match="magnitude_prune"):
+            wp_old, mk_old = magnitude_prune(w, 4, 8, config=FAST)
+        assert (np.array(mk_new) == np.array(mk_old)).all()
+        np.testing.assert_array_equal(np.array(wp_new), np.array(wp_old))
+
+        wp_new, mk_new = wanda_prune(w, x, spec, config=FAST)
+        with pytest.warns(DeprecationWarning, match="wanda_prune"):
+            wp_old, mk_old = wanda_prune(w, x, 4, 8, config=FAST)
+        assert (np.array(mk_new) == np.array(mk_old)).all()
+
+        # conflicting transposable= with a pattern object is an error
+        with pytest.raises(ValueError, match="conflicts"):
+            magnitude_prune(w, spec, transposable=False, config=FAST)
+
+    def test_sparsify_pytree_legacy_positional(self):
+        rng = np.random.default_rng(5)
+        params = {"w": rng.normal(size=(16, 16)).astype(np.float32),
+                  "ln": rng.normal(size=(16,)).astype(np.float32)}
+        new = sparsify_pytree(params, PatternSpec(2, 4), config=FAST)
+        with pytest.warns(DeprecationWarning, match="sparsify_pytree"):
+            old = sparsify_pytree(params, 2, 4, FAST)
+        assert old["ln"] is None
+        assert (np.array(new["w"]) == np.array(old["w"])).all()
+
+    def test_prune_transformer_legacy_kwargs(self):
+        from repro.models import lm
+        from repro.models.config import ModelConfig
+        from repro.pruning import prune_transformer
+
+        cfg = ModelConfig("api-test", "dense", num_layers=1, d_model=16,
+                          num_heads=2, num_kv_heads=1, d_ff=32, vocab_size=32,
+                          remat="none", dtype="float32")
+        params = lm.init_params(cfg, jax.random.PRNGKey(0))
+        tokens = jnp.asarray(
+            np.random.default_rng(6).integers(0, 32, size=(1, 8))
+        )
+        solver = SolverConfig(iters=30)
+        _, masks_new = prune_transformer(
+            params, cfg, tokens=tokens, method="magnitude",
+            pattern=PatternSpec(2, 4), solver=solver,
+        )
+        with pytest.warns(DeprecationWarning, match="prune_transformer"):
+            _, masks_old = prune_transformer(
+                params, cfg, tokens=tokens, method="magnitude", n=2, m=4,
+                solver=solver,
+            )
+        for a, b in zip(jax.tree.leaves(masks_new), jax.tree.leaves(masks_old)):
+            assert (np.array(a) == np.array(b)).all()
+
+
+# ---------------------------------------------------------------------------
+# Standard (non-transposable) patterns through the unified entry points.
+# ---------------------------------------------------------------------------
+
+
+def test_standard_pattern_paths():
+    from repro.core.solver import nm_mask
+
+    rng = np.random.default_rng(7)
+    w = rng.normal(size=(16, 8)).astype(np.float32)
+    spec = PatternSpec(2, 4, False)
+    got = np.array(solve_mask(jnp.asarray(w), spec, FAST))
+    want = np.array(nm_mask(jnp.asarray(w), 2, 4, axis=0))
+    assert (got == want).all()
+
+    params = {"w": w, "stack": rng.normal(size=(2, 8, 8)).astype(np.float32)}
+    masks = sparsify_pytree(params, spec, config=FAST)
+    assert (np.array(masks["w"]) == want).all()
+    assert masks["stack"].shape == params["stack"].shape
+
+    with pytest.raises(ValueError, match="transposable"):
+        MaskService(FAST).submit("w", w, spec)
+
+
+# ---------------------------------------------------------------------------
+# Mesh-sharded dispatch: identical to single-device on 1 device.
+# ---------------------------------------------------------------------------
+
+
+class TestMeshDispatch:
+    def test_sharded_equals_unsharded_policy(self):
+        rng = np.random.default_rng(8)
+        tensors = {f"t{i}": rng.normal(size=(24 + 8 * i, 16)).astype(np.float32)
+                   for i in range(3)}
+        spec = PatternSpec(4, 8)
+        masks = {}
+        for shard in (True, False):
+            policy = BucketPolicy(base=8, growth=2, max_bucket=32,
+                                  shard_devices=shard)
+            svc = MaskService(FAST, policy=policy)
+            handles = {k: svc.submit(k, v, spec) for k, v in tensors.items()}
+            svc.flush()
+            masks[shard] = {k: np.array(h.result()) for k, h in handles.items()}
+        for k, v in tensors.items():
+            ref = np.array(solve_mask(jnp.asarray(v), spec, FAST))
+            assert (masks[True][k] == ref).all(), k
+            assert (masks[False][k] == ref).all(), k
+
+    def test_shard_map_wrapper_bit_identical(self):
+        """Exercise the actual shard_map path on a 1-device mesh."""
+        from repro.service.scheduler import _sharded_solver
+
+        rng = np.random.default_rng(9)
+        blocks = np.abs(rng.normal(size=(12, 8, 8))).astype(np.float32)
+        fn = _sharded_solver(get_backend("dense-jit"), 4, 8, FAST.iters,
+                             FAST.ls_steps, FAST.tau_scale,
+                             jax.local_device_count())
+        got = np.array(fn(blocks))
+        want = np.array(get_backend("dense-jit").solve(
+            jnp.asarray(blocks), PatternSpec(4, 8), FAST))
+        assert (got == want).all()
+
+
+# ---------------------------------------------------------------------------
+# Scheduler satellites: ragged chunk padding + per-bucket waste stats.
+# ---------------------------------------------------------------------------
+
+
+def test_block_batch_ragged_chunk_padded_to_full():
+    """The final ragged chunk is padded to block_batch (one compiled program)
+    and the result is bit-identical."""
+    shapes = []
+
+    class Recording:
+        name = "test-recording"
+        traceable = False
+
+        def solve(self, blocks, pattern, config):
+            shapes.append(tuple(blocks.shape))
+            return get_backend("dense-jit").solve(
+                blocks, pattern, SolverConfig(iters=FAST.iters))
+
+    rng = np.random.default_rng(10)
+    blocks = np.abs(rng.normal(size=(20, 8, 8))).astype(np.float32)
+    try:
+        register_backend(Recording())
+        got = np.array(solve_blocks(
+            jnp.asarray(blocks), 4,
+            SolverConfig(iters=FAST.iters, backend="test-recording",
+                         block_batch=8)))
+    finally:
+        unregister_backend("test-recording")
+    assert shapes == [(8, 8, 8)] * 3  # 20 blocks -> 8+8+(4 padded to 8)
+    want = np.array(solve_blocks(jnp.asarray(blocks), 4, FAST))
+    assert (got == want).all()
+
+
+def test_stream_stats_padding_waste():
+    rng = np.random.default_rng(11)
+    svc = MaskService(FAST, policy=TINY)
+    svc.solve(rng.normal(size=(8, 40)).astype(np.float32), PatternSpec(4, 8))
+    stats = svc.stats.stream
+    waste = stats.padding_waste()
+    assert set(waste) <= set(TINY.ladder())
+    assert all(0.0 <= v < 1.0 for v in waste.values())
+    # bucket tallies are consistent with the global counters
+    assert sum(stats.bucket_padded.values()) == stats.blocks_padded
+    assert (sum(stats.bucket_blocks.values())
+            == stats.blocks_solved + stats.blocks_padded)
+    assert "waste=" in svc.stats.summary()
+
+
+# ---------------------------------------------------------------------------
+# Cache format: packbits payload + legacy raw-bool entries load.
+# ---------------------------------------------------------------------------
+
+
+def test_cache_packbits_and_legacy_format(tmp_path):
+    from repro.checkpoint import ContentStore
+    from repro.service.cache import MaskCache
+
+    rng = np.random.default_rng(12)
+    mask = rng.random(size=(5, 8, 8)) > 0.5
+    store = ContentStore(str(tmp_path))
+    cache = MaskCache(store)
+    cache.put("k-new", mask)
+    payload = dict(np.load(str(tmp_path / "k-new.npz")))
+    assert "mask_bits" in payload and int(payload["cache_format"]) == 2
+    assert payload["mask_bits"].nbytes < mask.nbytes // 7  # ~8x smaller
+
+    store.put("k-old", mask=mask)  # a v1 raw-bool entry from an old run
+    fresh = MaskCache(ContentStore(str(tmp_path)))
+    assert (fresh.get("k-new") == mask).all()
+    assert (fresh.get("k-old") == mask).all()
+    assert fresh.disk_hits == 2
+
+
+def test_prune_fn_legacy_n_keyword():
+    """Old keyword spelling wanda_prune(w, x, n=4, m=8) still works."""
+    from repro.pruning import magnitude_prune, wanda_prune
+
+    rng = np.random.default_rng(20)
+    w = jnp.asarray(rng.normal(size=(16, 16)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(32, 16)).astype(np.float32))
+    want = np.array(wanda_prune(w, x, PatternSpec(4, 8), config=FAST)[1])
+    with pytest.warns(DeprecationWarning):
+        got = np.array(wanda_prune(w, x, n=4, m=8, config=FAST)[1])
+    assert (got == want).all()
+    with pytest.warns(DeprecationWarning):
+        got = np.array(magnitude_prune(w, n=4, m=8, config=FAST)[1])
+    assert (got == np.array(magnitude_prune(w, PatternSpec(4, 8), config=FAST)[1])).all()
+
+
+def test_legacy_mask_fn_contract_shimmed():
+    """Pre-registry mask_fn(scores, n, m) callbacks still work (with a
+    warning); (scores, pattern) callbacks are called directly."""
+    from repro.pruning import magnitude_prune
+
+    w = jnp.asarray(np.random.default_rng(21).normal(size=(8, 8)).astype(np.float32))
+    seen = {}
+
+    def legacy_fn(scores, n, m):
+        seen["legacy"] = (n, m)
+        return jnp.ones_like(scores, dtype=bool)
+
+    def new_fn(scores, pattern):
+        seen["new"] = pattern
+        return jnp.ones_like(scores, dtype=bool)
+
+    with pytest.warns(DeprecationWarning, match="mask_fn"):
+        magnitude_prune(w, PatternSpec(2, 4), mask_fn=legacy_fn)
+    assert seen["legacy"] == (2, 4)
+    magnitude_prune(w, PatternSpec(2, 4), mask_fn=new_fn)
+    assert seen["new"] == PatternSpec(2, 4)
+
+
+def test_repro_init_reexports_match_api():
+    import repro
+    import repro.api as api
+
+    assert set(repro._API_NAMES) == set(api.__all__)
+    assert repro.PatternSpec is api.PatternSpec
+
+
+def test_repro_compat_attribute():
+    import subprocess, sys
+
+    # fresh interpreter: repro.compat must resolve without any prior imports
+    code = "import repro; repro.compat.make_mesh"
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True)
+    assert res.returncode == 0, res.stderr.decode()

@@ -18,6 +18,7 @@ except ImportError:  # property tests skip cleanly; the rest of the module runs
         integers = staticmethod(lambda *a, **k: None)
 
 from repro.core import (
+    PatternSpec,
     SolverConfig,
     dykstra_log,
     greedy_round,
@@ -27,7 +28,7 @@ from repro.core import (
     objective,
     simple_round,
     solve_blocks,
-    transposable_nm_mask,
+    solve_mask,
 )
 from repro.core.baselines import bi_nm, max_k_random, two_approx
 from repro.core.exact import brute_force, lp_exact
@@ -148,7 +149,7 @@ def test_dykstra_marginals_property(mn, seed):
 
 def test_transposable_matrix_level():
     w = np.random.default_rng(1).normal(size=(64, 48)).astype(np.float32)
-    mask = transposable_nm_mask(jnp.asarray(w), 4, 8)
+    mask = solve_mask(jnp.asarray(w), PatternSpec(4, 8))
     assert mask.shape == w.shape
     assert is_transposable_nm(np.array(mask), 4, 8)
     # transposed view is N:M sparse too — the whole point
@@ -157,7 +158,7 @@ def test_transposable_matrix_level():
 
 def test_padding_path():
     w = np.random.default_rng(2).normal(size=(20, 12)).astype(np.float32)
-    mask = transposable_nm_mask(jnp.asarray(w), 2, 8)
+    mask = solve_mask(jnp.asarray(w), PatternSpec(2, 8))
     assert mask.shape == (20, 12)
 
 
@@ -190,6 +191,6 @@ def test_baselines_feasible():
 
 def test_pallas_solver_path_matches_xla():
     w = rand_blocks(5, 16, seed=9)
-    a = solve_blocks(w, 8, SolverConfig(iters=80, use_kernel=False))
-    b = solve_blocks(w, 8, SolverConfig(iters=80, use_kernel=True))
+    a = solve_blocks(w, 8, SolverConfig(iters=80, backend="dense-jit"))
+    b = solve_blocks(w, 8, SolverConfig(iters=80, backend="pallas"))
     assert (np.array(a) == np.array(b)).all()

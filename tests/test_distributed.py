@@ -1,7 +1,6 @@
 """Distribution substrate tests — run in subprocesses with fake devices
 (the device count is locked at first jax init, so each case gets its own
 process)."""
-import json
 import os
 import subprocess
 import sys

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.core import transposable_nm_mask
+from repro.core import PatternSpec, solve_mask
 from repro.core.rounding import greedy_round as greedy_ref
 from repro.kernels.dykstra.kernel import dykstra_pallas
 from repro.kernels.dykstra.ref import dykstra_ref
@@ -52,7 +52,7 @@ def test_dykstra_kernel_block_padding():
 ])
 def test_nm_spmm_fwd_and_transpose(B, K, F, n, m, dtype):
     w = RNG.normal(size=(K, F)).astype(np.float32)
-    mask = np.array(transposable_nm_mask(jnp.asarray(w), n, m))
+    mask = np.array(solve_mask(jnp.asarray(w), PatternSpec(n, m)))
     vals, idx = compress_nm(jnp.asarray(w, dtype), jnp.asarray(mask), n, m)
     x = jnp.asarray(RNG.normal(size=(B, K)), dtype)
     tol = 1e-4 if dtype == jnp.float32 else 5e-2
@@ -68,7 +68,7 @@ def test_nm_spmm_fwd_and_transpose(B, K, F, n, m, dtype):
 def test_compress_decompress_roundtrip():
     for (K, F, n, m) in [(64, 32, 4, 8), (32, 64, 8, 16), (64, 64, 16, 32)]:
         w = RNG.normal(size=(K, F)).astype(np.float32)
-        mask = np.array(transposable_nm_mask(jnp.asarray(w), n, m))
+        mask = np.array(solve_mask(jnp.asarray(w), PatternSpec(n, m)))
         vals, idx = compress_nm(jnp.asarray(w), jnp.asarray(mask), n, m)
         assert idx.dtype == jnp.int8
         dense = np.array(decompress_nm(vals, idx, m))
@@ -78,7 +78,7 @@ def test_compress_decompress_roundtrip():
 def test_nm_linear_grads_match_dense():
     K, F, n, m = 64, 64, 4, 8
     w = RNG.normal(size=(K, F)).astype(np.float32)
-    mask = np.array(transposable_nm_mask(jnp.asarray(w), n, m))
+    mask = np.array(solve_mask(jnp.asarray(w), PatternSpec(n, m)))
     vals, idx = compress_nm(jnp.asarray(w), jnp.asarray(mask), n, m)
     x = jnp.asarray(RNG.normal(size=(4, K)).astype(np.float32))
 

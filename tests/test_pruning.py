@@ -1,9 +1,9 @@
 """Pruning frameworks: quality orderings and paper-claimed trends."""
 import numpy as np
 import jax.numpy as jnp
-import pytest
 
 from repro.core.solver import SolverConfig, is_transposable_nm
+from repro.patterns import PatternSpec
 from repro.pruning import (
     alps_prune,
     gram_matrix,
@@ -33,9 +33,9 @@ class TestOrdering:
         n, m = 4, 8
         errs = {}
         for name, (wp, mask) in {
-            "wanda": wanda_prune(w, x, n, m, config=FAST),
-            "sparsegpt": sparsegpt_prune(w, h, n, m, config=FAST),
-            "alps": alps_prune(w, h, n, m, config=AlpsConfig(iters=50, solver=FAST)),
+            "wanda": wanda_prune(w, x, PatternSpec(n, m), config=FAST),
+            "sparsegpt": sparsegpt_prune(w, h, PatternSpec(n, m), config=FAST),
+            "alps": alps_prune(w, h, PatternSpec(n, m), config=AlpsConfig(iters=50, solver=FAST)),
         }.items():
             assert is_transposable_nm(np.array(mask), n, m), name
             errs[name] = float(reconstruction_error(x, w, wp))
@@ -46,9 +46,9 @@ class TestOrdering:
         x, w = make_layer(seed=1)
         h = gram_matrix(x)
         n, m = 4, 8
-        wt, _ = alps_prune(w, h, n, m, transposable=True,
+        wt, _ = alps_prune(w, h, PatternSpec(n, m, True),
                            config=AlpsConfig(iters=50, solver=FAST))
-        ws, _ = alps_prune(w, h, n, m, transposable=False,
+        ws, _ = alps_prune(w, h, PatternSpec(n, m, False),
                            config=AlpsConfig(iters=50, solver=FAST))
         et = float(reconstruction_error(x, w, wt))
         es = float(reconstruction_error(x, w, ws))
@@ -61,9 +61,9 @@ class TestOrdering:
         gaps = {}
         for m in (4, 16):
             n = m // 2
-            wt, _ = alps_prune(w, h, n, m, transposable=True,
+            wt, _ = alps_prune(w, h, PatternSpec(n, m, True),
                                config=AlpsConfig(iters=50, solver=FAST))
-            ws, _ = alps_prune(w, h, n, m, transposable=False,
+            ws, _ = alps_prune(w, h, PatternSpec(n, m, False),
                                config=AlpsConfig(iters=50, solver=FAST))
             et = float(reconstruction_error(x, w, wt))
             es = float(reconstruction_error(x, w, ws))
@@ -74,7 +74,7 @@ class TestOrdering:
 class TestMechanics:
     def test_magnitude_prune_mask(self):
         _, w = make_layer(seed=3)
-        wp, mask = magnitude_prune(w, 2, 8, config=FAST)
+        wp, mask = magnitude_prune(w, PatternSpec(2, 8), config=FAST)
         assert is_transposable_nm(np.array(mask), 2, 8)
         assert float(jnp.sum(jnp.abs(wp))) > 0
         np.testing.assert_array_equal(np.array(wp == 0), ~np.array(mask))
@@ -82,7 +82,7 @@ class TestMechanics:
     def test_sparsegpt_updates_reduce_error_vs_pure_mask(self):
         x, w = make_layer(seed=4)
         h = gram_matrix(x)
-        wp, mask = sparsegpt_prune(w, h, 4, 8, config=FAST)
+        wp, mask = sparsegpt_prune(w, h, PatternSpec(4, 8), config=FAST)
         masked_only = jnp.where(mask, w, 0)
         e_upd = float(reconstruction_error(x, w, wp))
         e_raw = float(reconstruction_error(x, w, masked_only))
@@ -92,12 +92,12 @@ class TestMechanics:
         x, w = make_layer(seed=5, din=64, dout=64)
         h = gram_matrix(x)
         for n, m in [(2, 4), (2, 8), (8, 16)]:
-            _, mask = alps_prune(w, h, n, m,
+            _, mask = alps_prune(w, h, PatternSpec(n, m),
                                  config=AlpsConfig(iters=25, solver=FAST))
             assert is_transposable_nm(np.array(mask), n, m), (n, m)
 
     def test_wanda_importance_differs_from_magnitude(self):
         x, w = make_layer(seed=6)
-        _, mw = wanda_prune(w, x, 4, 8, config=FAST)
-        _, mm = magnitude_prune(w, 4, 8, config=FAST)
+        _, mw = wanda_prune(w, x, PatternSpec(4, 8), config=FAST)
+        _, mm = magnitude_prune(w, PatternSpec(4, 8), config=FAST)
         assert (np.array(mw) != np.array(mm)).any()

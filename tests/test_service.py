@@ -1,15 +1,14 @@
 """repro.service: bucketed scheduling, caching, journaled resume."""
-import os
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.core.solver import SolverConfig, nm_mask, transposable_nm_mask
-from repro.service import BucketPolicy, Journal, MaskCache, MaskService
+from repro.core.solver import SolverConfig, nm_mask, solve_mask
+from repro.patterns import PatternSpec
+from repro.service import BucketPolicy, Journal, MaskService
 from repro.service.cache import content_key
-from repro.checkpoint import ContentStore
 
 FAST = SolverConfig(iters=60)
 TINY = BucketPolicy(base=8, growth=2, max_bucket=32)  # exercise multi-bucket paths
@@ -29,10 +28,10 @@ def mixed_tensors(seed=0):
 def direct_mask(w, n, m, config=FAST):
     if w.ndim == 3:
         return np.stack([
-            np.array(transposable_nm_mask(jnp.asarray(w[i]), n, m, config))
+            np.array(solve_mask(jnp.asarray(w[i]), PatternSpec(n, m), config))
             for i in range(w.shape[0])
         ])
-    return np.array(transposable_nm_mask(jnp.asarray(w), n, m, config))
+    return np.array(solve_mask(jnp.asarray(w), PatternSpec(n, m), config))
 
 
 # ---------------------------------------------------------------------------
@@ -43,7 +42,7 @@ def direct_mask(w, n, m, config=FAST):
 def test_mixed_shapes_bit_exact_vs_direct():
     svc = MaskService(FAST, policy=TINY)
     tensors = mixed_tensors()
-    handles = {k: svc.submit(k, v, 4, 8) for k, v in tensors.items()}
+    handles = {k: svc.submit(k, v, PatternSpec(4, 8)) for k, v in tensors.items()}
     svc.flush()
     for k, v in tensors.items():
         got = np.array(handles[k].result())
@@ -62,8 +61,8 @@ def test_mixed_nm_groups_one_service():
     svc = MaskService(FAST, policy=TINY)
     a = rng.normal(size=(16, 16)).astype(np.float32)
     b = rng.normal(size=(16, 24)).astype(np.float32)
-    ha = svc.submit("a", a, 2, 4)
-    hb = svc.submit("b", b, 4, 8)
+    ha = svc.submit("a", a, PatternSpec(2, 4))
+    hb = svc.submit("b", b, PatternSpec(4, 8))
     svc.flush()
     assert (np.array(ha.result()) == direct_mask(a, 2, 4)).all()
     assert (np.array(hb.result()) == direct_mask(b, 4, 8)).all()
@@ -71,7 +70,7 @@ def test_mixed_nm_groups_one_service():
 
 def test_lazy_result_flushes():
     svc = MaskService(FAST, policy=TINY)
-    h = svc.submit("w", np.ones((8, 8), np.float32), 4, 8)
+    h = svc.submit("w", np.ones((8, 8), np.float32), PatternSpec(4, 8))
     assert not h.done
     mask = np.array(h.result())  # implicit flush
     assert h.done and mask.sum(0).max() <= 4 and mask.sum(1).max() <= 4
@@ -89,7 +88,7 @@ def test_bucket_plan_ladder():
 def test_zero_magnitude_blocks_are_safe():
     svc = MaskService(FAST, policy=TINY)
     w = np.zeros((8, 8), np.float32)
-    mask = np.array(svc.solve("z", w, 4, 8))
+    mask = np.array(svc.solve(w, PatternSpec(4, 8), name="z"))
     assert mask.sum(0).max() <= 4 and mask.sum(1).max() <= 4
 
 
@@ -101,9 +100,9 @@ def test_zero_magnitude_blocks_are_safe():
 def test_cache_hits_skip_solving():
     svc = MaskService(FAST, policy=TINY)
     w = np.random.default_rng(2).normal(size=(16, 16)).astype(np.float32)
-    m1 = np.array(svc.solve("w", w, 4, 8))
+    m1 = np.array(svc.solve(w, PatternSpec(4, 8), name="w"))
     solved = svc.stats.blocks_solved
-    m2 = np.array(svc.solve("w-again", w, 4, 8))  # same content, new name
+    m2 = np.array(svc.solve(w, PatternSpec(4, 8), name="w-again"))  # same content, new name
     assert (m1 == m2).all()
     assert svc.stats.blocks_solved == solved  # nothing re-solved
     assert svc.stats.cache_hits == 1
@@ -111,22 +110,22 @@ def test_cache_hits_skip_solving():
 
 def test_cache_key_sensitivity():
     w = np.abs(np.random.default_rng(3).normal(size=(2, 8, 8))).astype(np.float32)
-    base = content_key(w, 4, 8, FAST)
-    assert content_key(w, 2, 8, FAST) != base
-    assert content_key(w, 4, 8, SolverConfig(iters=61)) != base
-    assert content_key(w + 1e-6, 4, 8, FAST) != base
+    base = content_key(w, PatternSpec(4, 8), FAST)
+    assert content_key(w, PatternSpec(2, 8), FAST) != base
+    assert content_key(w, PatternSpec(4, 8), SolverConfig(iters=61)) != base
+    assert content_key(w + 1e-6, PatternSpec(4, 8), FAST) != base
     # block_batch only chunks dispatch — must NOT invalidate the cache
-    assert content_key(w, 4, 8, SolverConfig(iters=60, block_batch=7)) == base
+    assert content_key(w, PatternSpec(4, 8), SolverConfig(iters=60, block_batch=7)) == base
 
 
 def test_disk_persistence_across_services(tmp_path):
     w = np.random.default_rng(4).normal(size=(24, 16)).astype(np.float32)
     svc1 = MaskService(FAST, policy=TINY, directory=str(tmp_path))
-    m1 = np.array(svc1.solve("w", w, 4, 8))
+    m1 = np.array(svc1.solve(w, PatternSpec(4, 8), name="w"))
     assert svc1.stats.blocks_solved > 0
 
     svc2 = MaskService(FAST, policy=TINY, directory=str(tmp_path))  # fresh process, same dir
-    m2 = np.array(svc2.solve("w", w, 4, 8))
+    m2 = np.array(svc2.solve(w, PatternSpec(4, 8), name="w"))
     assert (m1 == m2).all()
     assert svc2.stats.blocks_solved == 0  # fully served from disk
     assert svc2.cache.disk_hits == 1
@@ -159,12 +158,12 @@ def test_resume_after_interrupt(tmp_path):
 
     svc1 = MaskService(FAST, policy=TINY, directory=str(tmp_path))
     for k in names[:2]:  # "run" dies after two tensors complete
-        svc1.solve(k, tensors[k], 4, 8)
+        svc1.solve(tensors[k], PatternSpec(4, 8), name=k)
     first_solved = svc1.stats.blocks_solved
     assert first_solved > 0
 
     svc2 = MaskService(FAST, policy=TINY, directory=str(tmp_path))
-    handles = {k: svc2.submit(k, v, 4, 8) for k, v in tensors.items()}
+    handles = {k: svc2.submit(k, v, PatternSpec(4, 8)) for k, v in tensors.items()}
     svc2.flush()
     for k, v in tensors.items():
         assert (np.array(handles[k].result()) == direct_mask(v, 4, 8)).all(), k
@@ -172,7 +171,7 @@ def test_resume_after_interrupt(tmp_path):
     total_blocks = first_solved + svc2.stats.blocks_solved
     svc3 = MaskService(FAST, policy=TINY)  # no cache: counts the full workload
     for k, v in tensors.items():
-        svc3.submit(k, v, 4, 8)
+        svc3.submit(k, v, PatternSpec(4, 8))
     svc3.flush()
     assert total_blocks == svc3.stats.blocks_solved  # no tensor solved twice
 
@@ -189,7 +188,8 @@ def test_sparsify_pytree_routes_through_service_bit_exact():
         },
     }
     svc = MaskService(SolverConfig(iters=60), policy=TINY)
-    masks = sparsify_pytree(params, 2, 4, SolverConfig(iters=60), service=svc)
+    masks = sparsify_pytree(params, PatternSpec(2, 4),
+                            config=SolverConfig(iters=60), service=svc)
     assert masks["blocks"]["ln"] is None
     assert (np.array(masks["embed"]) == direct_mask(params["embed"], 2, 4,
                                                     SolverConfig(iters=60))).all()
@@ -233,14 +233,15 @@ def test_prune_transformer_journal_resume(tmp_path):
             raise Interrupted(s)
 
     with pytest.raises(Interrupted):
-        prune_transformer(params, cfg, tokens=tokens, method="wanda", n=2, m=4,
+        prune_transformer(params, cfg, tokens=tokens, method="wanda",
+                          pattern=PatternSpec(2, 4),
                           solver=SolverConfig(iters=40), journal_dir=jd,
                           log=dying_log)
 
     # Resumed run: completes, restores the finished prefix from the journal.
     restored = []
     pruned, masks = prune_transformer(
-        params, cfg, tokens=tokens, method="wanda", n=2, m=4,
+        params, cfg, tokens=tokens, method="wanda", pattern=PatternSpec(2, 4),
         solver=SolverConfig(iters=40), journal_dir=jd,
         log=lambda s: restored.append(s),
     )
@@ -248,7 +249,7 @@ def test_prune_transformer_journal_resume(tmp_path):
 
     # And matches a clean single-shot run exactly.
     pruned2, masks2 = prune_transformer(
-        params, cfg, tokens=tokens, method="wanda", n=2, m=4,
+        params, cfg, tokens=tokens, method="wanda", pattern=PatternSpec(2, 4),
         solver=SolverConfig(iters=40),
     )
     for a, b in zip(jax.tree.leaves(masks), jax.tree.leaves(masks2)):
@@ -258,7 +259,8 @@ def test_prune_transformer_journal_resume(tmp_path):
 
     # Third run: fully journaled, zero new solves.
     svc = MaskService(SolverConfig(iters=40), directory=jd)
-    prune_transformer(params, cfg, tokens=tokens, method="wanda", n=2, m=4,
+    prune_transformer(params, cfg, tokens=tokens, method="wanda",
+                      pattern=PatternSpec(2, 4),
                       solver=SolverConfig(iters=40), service=svc, journal_dir=jd)
     assert svc.stats.blocks_solved == 0
 

@@ -14,7 +14,8 @@ from repro.models import lm
 from repro.models.config import ModelConfig
 from repro.optim import AdamW, warmup_cosine
 from repro.serve import ServeEngine
-from repro.sparsity.masks import apply_mask, mask_sparsity, sparsify_pytree
+from repro.patterns import PatternSpec
+from repro.sparsity.masks import mask_sparsity, sparsify_pytree
 from repro.train import (
     TrainLoop,
     TrainLoopConfig,
@@ -163,7 +164,8 @@ class TestSparseFinetune:
         opt = AdamW(learning_rate=1e-2)
         data = SyntheticLM(vocab_size=64, seq_len=16, global_batch=4)
         state = make_train_state(TINY, opt, jax.random.PRNGKey(0))
-        masks = sparsify_pytree(state.params, 2, 4, SolverConfig(iters=30))
+        masks = sparsify_pytree(state.params, PatternSpec(2, 4),
+                                config=SolverConfig(iters=30))
         assert 0.4 < mask_sparsity(masks) < 0.6
         step = build_train_step(TINY, opt, masks=masks)
         for i in range(3):

@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.solver import SolverConfig, is_transposable_nm
+from repro.patterns import PatternSpec
 from repro.data import SyntheticLM
 from repro.models import lm
 from repro.models.config import ModelConfig
@@ -43,7 +44,8 @@ def test_pretrain_prune_finetune_recovers():
     assert dense_loss < hist[0]["loss"] * 0.7  # actually learned something
 
     # One-shot transposable 2:4 pruning.
-    masks = sparsify_pytree(state.params, 2, 4, SolverConfig(iters=60))
+    masks = sparsify_pytree(state.params, PatternSpec(2, 4),
+                            config=SolverConfig(iters=60))
     pruned = apply_mask(state.params, masks)
     pruned_loss = eval_loss(pruned, data)
     assert pruned_loss > dense_loss  # pruning hurts before fine-tuning
@@ -72,26 +74,26 @@ def test_alps_prunes_real_layer_activations():
     h = rms_norm(x, params["blocks"]["ln1"][0]).reshape(-1, CFG.d_model)
     w = params["blocks"]["attn"]["wq"][0]
     hmat = gram_matrix(h)
-    wp, mask = alps_prune(w, hmat, 4, 8,
+    wp, mask = alps_prune(w, hmat, PatternSpec(4, 8),
                           config=AlpsConfig(iters=40, solver=SolverConfig(iters=80)))
     assert is_transposable_nm(np.array(mask), 4, 8)
     err_alps = float(reconstruction_error(h, w, wp))
     # Fair baseline: the same transposable constraint, no ADMM updates.
     from repro.pruning import magnitude_prune
-    w_mag, _ = magnitude_prune(w, 4, 8, config=SolverConfig(iters=80))
+    w_mag, _ = magnitude_prune(w, PatternSpec(4, 8), config=SolverConfig(iters=80))
     err_mag = float(reconstruction_error(h, w, w_mag))
     assert err_alps < err_mag
 
 
 def test_transposable_mask_serves_both_passes_compressed():
     """The transposable mask lets ONE compressed buffer do fwd and bwd."""
-    from repro.core import transposable_nm_mask
+    from repro.core import solve_mask
     from repro.kernels.nm_spmm.ops import nm_linear
     from repro.sparsity.compressed import compress_nm
 
     rng = np.random.default_rng(0)
     w = rng.normal(size=(64, 64)).astype(np.float32)
-    mask = np.array(transposable_nm_mask(jnp.asarray(w), 4, 8))
+    mask = np.array(solve_mask(jnp.asarray(w), PatternSpec(4, 8)))
     vals, idx = compress_nm(jnp.asarray(w), jnp.asarray(mask), 4, 8)
     x = jnp.asarray(rng.normal(size=(8, 64)).astype(np.float32))
     y, vjp = jax.vjp(lambda x: nm_linear(x, vals, idx, 8), x)
