@@ -1,0 +1,206 @@
+"""Solver backend latency: dense-jit vs pallas vs pallas-fused.
+
+Times the registered solver backends over (B, M, M) block batches across
+M in {4, 8, 16, 32}, including the ``pallas-fused`` single-pass kernel at
+several early-exit tolerances, and writes a machine-readable
+``BENCH_solver.json`` with:
+
+* ``blocks_per_sec`` — median wall-clock throughput per backend config;
+* ``hbm_bytes_model`` — analytic bytes-moved model (see ``_bytes_model``):
+  the split pipelines pay ~5 HBM round-trips of the M² plan/order tensors,
+  the fused kernel one |W| read plus one bit-packed (M bits/row) mask write;
+* ``objective_ratio`` — mask objective vs the full-T dense-jit reference
+  (1.0 means identical or equal-quality masks);
+* ``iters_histogram`` — per-tile Dykstra iteration counts of the adaptive
+  early-exit rows ({iterations: tile count});
+* a ``headline`` block with the M=32 fused-vs-pallas speedup the ROADMAP
+  tracks.
+
+Run:    PYTHONPATH=src:. python benchmarks/solver_latency.py
+Smoke:  PYTHONPATH=src:. python benchmarks/solver_latency.py --smoke
+        (tiny shapes, few iterations — the CI kernel-regression gate)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+from collections import Counter
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import block, emit
+from repro.core import SolverConfig, get_backend
+from repro.kernels import default_interpret
+from repro.kernels.fused_solve import fused_block_b, fused_solve
+from repro.patterns import PatternSpec
+
+# (M, batch) per row; N = M/2 (the transposable patterns the paper evaluates).
+FULL_CASES = [(4, 8192), (8, 4096), (16, 2048), (32, 2048)]
+SMOKE_CASES = [(4, 64), (8, 64)]
+
+# Fused-backend early-exit tolerances benchmarked alongside tol=0.
+TOLERANCES = [1e-4, 3e-2, 5e-2, 7.5e-2]
+
+
+def _timeit(fn, *args, reps: int) -> float:
+    block(fn(*args))  # warmup + compile; block so rep 1 starts clean
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        block(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def _bytes_model(backend: str, b: int, m: int) -> int:
+    """Analytic HBM bytes per solve of a (B, M, M) float32 batch.
+
+    Split pipelines (dense-jit / pallas) stream the M² tensors through HBM
+    between stages: |W| read, fractional plan write+read, argsort order
+    write+read (int32), bool mask write, plus the local-search re-read of
+    |W| and mask.  The fused kernel reads |W| once and writes M bits per
+    mask row (uint32 words) — the plan, order and counters stay in VMEM.
+    """
+    mm = b * m * m
+    if backend == "pallas-fused":
+        return 4 * mm + 4 * b * m  # |W| in, packed words out
+    # w read + plan out/in + order out/in + mask out + LS pass (w + mask).
+    return 4 * mm * 5 + 1 * mm + 4 * mm + 1 * mm
+
+
+def _objective(mask: np.ndarray, w: np.ndarray) -> float:
+    return float(np.sum(np.where(mask, w, 0.0), dtype=np.float64))
+
+
+def run(cases, iters: int, reps: int, out_path: str) -> dict:
+    rng = np.random.default_rng(0)
+    results = []
+    headline = {}
+    for m, batch in cases:
+        n = m // 2
+        spec = PatternSpec(n, m)
+        w = np.abs(rng.normal(size=(batch, m, m))).astype(np.float32)
+        wj = jnp.asarray(w)
+
+        # Full-T dense-jit reference mask for quality ratios.
+        ref_config = SolverConfig(iters=iters)
+        ref_mask = np.array(get_backend("dense-jit").solve(wj, spec, ref_config))
+        ref_obj = _objective(ref_mask, w)
+
+        per_backend_bps = {}
+        for backend, tol in (
+            [("dense-jit", 0.0), ("pallas", 0.0), ("pallas-fused", 0.0)]
+            + [("pallas-fused", t) for t in TOLERANCES]
+        ):
+            config = SolverConfig(iters=iters, backend=backend, tol=tol)
+            be = get_backend(backend)
+            seconds = _timeit(lambda x: be.solve(x, spec, config), wj, reps=reps)
+            if backend == "pallas-fused":
+                # One solve yields mask, objective AND the iteration counts.
+                from repro.sparsity.bitpack import unpack_rows_np
+
+                words, tile_iters = fused_solve(wj, n, iters=iters, tol=tol)
+                mask = unpack_rows_np(np.array(words), m)
+            else:
+                mask = np.array(be.solve(wj, spec, config))
+            row = {
+                "m": m,
+                "n": n,
+                "batch": batch,
+                "backend": backend,
+                "tol": tol,
+                "iters": iters,
+                "seconds_median": seconds,
+                "blocks_per_sec": batch / seconds,
+                "hbm_bytes_model": _bytes_model(backend, batch, m),
+                "objective_ratio": _objective(mask, w) / ref_obj,
+            }
+            if backend == "pallas-fused" and tol > 0.0:
+                row["iters_histogram"] = {
+                    str(k): v for k, v in
+                    sorted(Counter(np.array(tile_iters).tolist()).items())
+                }
+                row["tile_blocks"] = fused_block_b(m)
+            if tol == 0.0:
+                per_backend_bps[backend] = row["blocks_per_sec"]
+            results.append(row)
+            emit(
+                f"latency_m{m}_b{batch}_{backend}"
+                + (f"_tol{tol:g}" if tol else ""),
+                seconds,
+                f"blocks/s={row['blocks_per_sec']:.0f}"
+                f" obj={row['objective_ratio']:.5f}",
+            )
+
+        fused_rows = [
+            r for r in results
+            if r["m"] == m and r["backend"] == "pallas-fused"
+        ]
+        best = max(fused_rows, key=lambda r: r["blocks_per_sec"])
+        summary = {
+            "fused_best_tol": best["tol"],
+            "fused_best_blocks_per_sec": best["blocks_per_sec"],
+            "fused_best_objective_ratio": best["objective_ratio"],
+            "speedup_vs_pallas": best["blocks_per_sec"]
+            / per_backend_bps["pallas"],
+            "speedup_vs_dense_jit": best["blocks_per_sec"]
+            / per_backend_bps["dense-jit"],
+        }
+        headline[f"m{m}"] = summary
+        emit(
+            f"headline_m{m}", 0.0,
+            f"fused(tol={best['tol']:g}) = {summary['speedup_vs_pallas']:.2f}x"
+            f" pallas, obj={best['objective_ratio']:.5f}",
+        )
+
+    doc = {
+        "meta": {
+            "benchmark": "solver_latency",
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+            "jax": jax.__version__,
+            "device": str(jax.local_devices()[0].device_kind),
+            "interpret_mode": default_interpret(),
+            "iters": iters,
+            "reps": reps,
+            "ls_steps": 10,
+        },
+        "headline": headline,
+        "results": results,
+    }
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=False)
+        f.write("\n")
+    print(f"wrote {out_path}")
+    return doc
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes / few iters (CI regression gate)")
+    ap.add_argument("--out", default="BENCH_solver.json")
+    ap.add_argument("--reps", type=int, default=None)
+    args = ap.parse_args()
+    if args.smoke:
+        doc = run(SMOKE_CASES, iters=60, reps=args.reps or 1,
+                  out_path=args.out)
+        # The smoke gate fails CI when the fused kernel regresses: at tol=0
+        # its masks must match dense-jit exactly (objective ratio 1.0), and
+        # the adaptive rows must stay near-optimal.
+        for r in doc["results"]:
+            if r["backend"] == "pallas-fused":
+                if r["tol"] == 0.0:
+                    assert r["objective_ratio"] == 1.0, r
+                else:
+                    assert r["objective_ratio"] >= 0.99, r
+    else:
+        run(FULL_CASES, iters=300, reps=args.reps or 5, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -11,6 +11,15 @@ Built-in entries:
                           the default, bit-identical to the pre-registry path.
 * ``"pallas"``          — same pipeline with the Dykstra iterations fused in
                           a Pallas kernel (VMEM-resident).
+* ``"pallas-fused"``    — the whole solve (tau scaling, Dykstra, greedy +
+                          local-search rounding) in ONE Pallas kernel: a
+                          single HBM read of |W| and a single bit-packed
+                          mask write.  Mask-identical to ``dense-jit`` at
+                          ``SolverConfig.tol = 0``; ``tol > 0`` enables the
+                          adaptive early-exit fast mode.  Also exposes
+                          ``solve_packed`` returning (B, M) uint32 rows
+                          (``repro.sparsity.bitpack`` layout) that the
+                          service cache stores verbatim.
 * ``"exact"``           — per-block LP oracle (HiGHS; integral by the
                           transportation-polytope argument).  Host-side,
                           for tests/benchmarks — not a production path.
@@ -118,13 +127,16 @@ def available_backends() -> tuple[str, ...]:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("n", "iters", "ls_steps", "tau_scale", "kernel")
+    jax.jit,
+    static_argnames=("n", "iters", "ls_steps", "tau_scale", "tol", "kernel"),
 )
-def _batched_solve(w_abs_blocks, n, iters, ls_steps, tau_scale, kernel):
+def _batched_solve(w_abs_blocks, n, iters, ls_steps, tau_scale, tol, kernel):
     """The TSENOR pipeline over a block batch; one program per static config.
 
-    This is the exact jitted program the pre-registry ``_solve_blocks_jit``
-    compiled, so masks (and the in-process jit cache) are unchanged.
+    At ``tol=0`` this is the exact jitted program the pre-registry
+    ``_solve_blocks_jit`` compiled, so masks (and the in-process jit cache)
+    are unchanged.  ``tol>0`` swaps the fixed Dykstra ``fori_loop`` for the
+    convergence-tested ``while_loop``.
     """
     w_abs_blocks = jnp.asarray(w_abs_blocks, jnp.float32)
     scale = jnp.max(w_abs_blocks, axis=(1, 2), keepdims=True)
@@ -132,9 +144,9 @@ def _batched_solve(w_abs_blocks, n, iters, ls_steps, tau_scale, kernel):
     if kernel:
         from repro.kernels.dykstra import ops as dykstra_ops
 
-        s_approx = dykstra_ops.dykstra(w_abs_blocks * tau, n, iters)
+        s_approx = dykstra_ops.dykstra(w_abs_blocks * tau, n, iters, tol=tol)
     else:
-        s_approx = dykstra_log(w_abs_blocks, n, iters, tau=tau)
+        s_approx = dykstra_log(w_abs_blocks, n, iters, tau=tau, tol=tol)
     return round_blocks(s_approx, w_abs_blocks, n, ls_steps)
 
 
@@ -147,7 +159,7 @@ class DenseJitBackend:
     def solve(self, w_abs_blocks, pattern, config):
         return _batched_solve(
             w_abs_blocks, pattern.n, config.iters, config.ls_steps,
-            config.tau_scale, False,
+            config.tau_scale, config.tol, False,
         )
 
 
@@ -160,8 +172,39 @@ class PallasBackend:
     def solve(self, w_abs_blocks, pattern, config):
         return _batched_solve(
             w_abs_blocks, pattern.n, config.iters, config.ls_steps,
-            config.tau_scale, True,
+            config.tau_scale, config.tol, True,
         )
+
+
+class FusedPallasBackend:
+    """Single-pass path: the whole block solve in one Pallas kernel.
+
+    One HBM read of |W|, one bit-packed mask write; the fractional plan,
+    Dykstra dual and capacity counters never leave VMEM.  Masks are
+    bit-identical to ``dense-jit`` at ``config.tol = 0``; ``tol > 0``
+    enables the kernel's adaptive early-exit fast mode.  ``solve_packed``
+    skips the unpack and returns the (B, M) uint32 row words directly —
+    the scheduler and cache consume these verbatim.
+    """
+
+    name = "pallas-fused"
+    traceable = True
+
+    def solve(self, w_abs_blocks, pattern, config):
+        from repro.sparsity.bitpack import unpack_rows
+
+        words = self.solve_packed(w_abs_blocks, pattern, config)
+        return unpack_rows(words, pattern.m)
+
+    def solve_packed(self, w_abs_blocks, pattern, config):
+        from repro.kernels.fused_solve import ops as fused_ops
+
+        words, _ = fused_ops.fused_solve(
+            jnp.asarray(w_abs_blocks, jnp.float32), pattern.n,
+            iters=config.iters, ls_steps=config.ls_steps,
+            tau_scale=config.tau_scale, tol=config.tol,
+        )
+        return words
 
 
 class GreedyBaselineBackend:
@@ -192,5 +235,6 @@ class ExactBackend:
 
 register_backend(DenseJitBackend())
 register_backend(PallasBackend())
+register_backend(FusedPallasBackend())
 register_backend(GreedyBaselineBackend())
 register_backend(ExactBackend())

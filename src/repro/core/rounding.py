@@ -62,12 +62,16 @@ def local_search(
 
     The three touched cells are provably distinct whenever the swap is valid,
     so the batched scatter updates below never collide.
+
+    The loop exits once a step applies no swap in any block: such a step
+    recomputes the identical state next time around, so all remaining steps
+    are no-ops and skipping them leaves the mask bit-identical.
     """
     w_abs = jnp.asarray(w_abs, jnp.float32)
     b, m, _ = mask.shape
     bidx = jnp.arange(b)
 
-    def body(_, mask):
+    def sweep(mask):
         rdef = mask.sum(2) < n  # (B, M) unsaturated rows
         cdef = mask.sum(1) < n  # (B, M) unsaturated cols
         i = jnp.argmax(rdef, axis=1)  # first deficit row per block
@@ -92,9 +96,19 @@ def local_search(
         mask = mask.at[bidx, ip, jp].set(jnp.where(do, False, mask[bidx, ip, jp]))
         mask = mask.at[bidx, ip, j].set(jnp.where(do, True, mask[bidx, ip, j]))
         mask = mask.at[bidx, i, jp].set(jnp.where(do, True, mask[bidx, i, jp]))
-        return mask
+        return mask, jnp.any(do)
 
-    return jax.lax.fori_loop(0, steps, body, mask)
+    def cond(carry):
+        _, it, changed = carry
+        return (it < steps) & changed
+
+    def body(carry):
+        mask, it, _ = carry
+        mask, changed = sweep(mask)
+        return mask, it + 1, changed
+
+    mask, _, _ = jax.lax.while_loop(cond, body, (mask, jnp.int32(0), True))
+    return mask
 
 
 def round_blocks(

@@ -34,9 +34,16 @@ class SolverConfig:
     ``backend="pallas"`` / ``"dense-jit"`` with a DeprecationWarning.
     """
 
-    iters: int = 300          # Dykstra iterations T
-    ls_steps: int = 10        # local-search steps L
+    iters: int = 300          # Dykstra iterations T (upper bound when tol > 0)
+    ls_steps: int = 10        # local-search steps L (upper bound; both the
+    #                           XLA and fused paths exit once a step swaps
+    #                           nothing — remaining steps are provable no-ops)
     tau_scale: float = 200.0  # tau = tau_scale / max|W| per block
+    tol: float = 0.0          # adaptive Dykstra early exit: stop once the max
+    #                           relative row/col marginal violation of the
+    #                           pre-clamp iterate drops to <= tol.  0 (the
+    #                           default) runs the fixed T loop and keeps masks
+    #                           bit-identical to the historical solver.
     backend: str = "dense-jit"  # registered solver backend name
     block_batch: int = 0      # >0: process blocks in chunks of this size
     use_kernel: dataclasses.InitVar[Optional[bool]] = None  # deprecated
@@ -152,12 +159,22 @@ def solve_blocks(
 
 def nm_mask(w: jnp.ndarray, n: int, m: int, axis: int = 0) -> jnp.ndarray:
     """Standard N:M mask: keep the top-N of every M consecutive entries along
-    ``axis`` (the reduction/input dimension of the matmul)."""
+    ``axis`` (the reduction/input dimension of the matmul).
+
+    Like ``solve_mask`` does for transposable patterns, a reduction dimension
+    that is not a multiple of M is zero-padded and the mask cropped back:
+    zero-magnitude padding never outranks a real entry (ties break toward the
+    lower index, i.e. the real rows), so real entries keep priority and the
+    partial final group simply keeps its top ``min(n, group size)`` entries.
+    """
     w_abs = jnp.abs(jnp.asarray(w))
     if axis == 1:
         return nm_mask(w_abs.T, n, m, axis=0).T
     r, c = w_abs.shape
-    assert r % m == 0, (r, m)
+    pad = (-r) % m
+    if pad:
+        mask = nm_mask(jnp.pad(w_abs, ((0, pad), (0, 0))), n, m, axis=0)
+        return mask[:r]
     g = w_abs.reshape(r // m, m, c)
     thresh = -jnp.sort(-g, axis=1)[:, n - 1 : n, :]
     # Tie-break: rank entries within the group and keep the first n.

@@ -1,18 +1,26 @@
 """Pallas TPU kernels for the perf-critical compute of TSENOR.
 
-Three hot spots (see DESIGN.md §2):
-  * ``dykstra``   — Algorithm 1 fused in VMEM: all T iterations of the
-                    entropy-regularized OT solve run on-chip per block tile.
-  * ``nm_spmm``   — compressed transposable-N:M matmul: weights live in HBM in
-                    (values, int8 indices) form, are decompressed tile-by-tile
-                    in VMEM, and feed the MXU; the same buffer serves W and Wᵀ.
-  * ``rounding``  — greedy-selection counter loop fused in VMEM (the argsort
-                    stays in XLA, which is where sorts belong on TPU).
+Four hot spots (see DESIGN.md §2):
+  * ``dykstra``     — Algorithm 1 fused in VMEM: all T iterations of the
+                      entropy-regularized OT solve run on-chip per block tile.
+  * ``fused_solve`` — the single-pass pipeline: Dykstra + bitonic sort +
+                      greedy rounding + swap local search in ONE pallas_call;
+                      one HBM |W| read, one bit-packed uint32-row mask write.
+                      Supersedes the split dykstra+rounding pipeline on the
+                      hot path (backend ``"pallas-fused"``).
+  * ``nm_spmm``     — compressed transposable-N:M matmul: weights live in HBM
+                      in (values, int8 indices) form, are decompressed
+                      tile-by-tile in VMEM, and feed the MXU; the same buffer
+                      serves W and Wᵀ.
+  * ``rounding``    — greedy-selection counter loop fused in VMEM (the argsort
+                      stays in XLA in this split pipeline).
 
 Each kernel directory has ``kernel.py`` (pallas_call + BlockSpec),
 ``ops.py`` (jit'd public wrapper) and ``ref.py`` (pure-jnp oracle used by the
-allclose test sweeps).  On non-TPU backends the wrappers run the kernel body
-in interpret mode, which is how this CPU container validates them.
+equality/allclose test sweeps).  Tile sizes come from ``kernels.vmem``
+(one VMEM budget shared by all kernels and the service scheduler's bucket
+ladder).  On non-TPU backends the wrappers run the kernel body in interpret
+mode, which is how this CPU container validates them.
 """
 
 

@@ -8,9 +8,15 @@ fractional plan.  Row/col logsumexp reductions run on the VPU; the dual
 variable of the capacity constraint lives in registers/VMEM for the whole
 solve.
 
-VMEM budget: the tile, the dual and ~2 temporaries are live, i.e.
-``4 * BT * M * M * 4B``.  BT=512 at M=32 is 8 MB < 16 MB VMEM.  The default
-tile is chosen per M to stay under ~8 MB.
+VMEM budget: the tile, the dual and ~2 temporaries are live; the tile size
+comes from :func:`repro.kernels.vmem.vmem_plan` (``live_buffers=4``), which
+keeps it under half the device's VMEM and aligned to the VPU sublane
+multiple.
+
+``tol > 0`` switches the fixed ``fori_loop`` for a convergence-tested
+``while_loop`` that exits a tile once its max row/col marginal violation
+drops to ``<= tol`` (relative to N).  ``tol=0`` keeps the historical
+fixed-T path bit for bit.
 """
 from __future__ import annotations
 
@@ -21,6 +27,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels import default_interpret
+from repro.kernels.vmem import vmem_plan
 
 
 def _logsumexp(x: jnp.ndarray, axis: int) -> jnp.ndarray:
@@ -28,38 +35,85 @@ def _logsumexp(x: jnp.ndarray, axis: int) -> jnp.ndarray:
     return mx + jnp.log(jnp.sum(jnp.exp(x - mx), axis=axis, keepdims=True))
 
 
-def _dykstra_kernel(tlw_ref, out_ref, *, n: int, iters: int):
+def _normalized(s, log_n):
+    """KL projections onto C1 (row sums = N) then C2 (col sums = N)."""
+    s = s - _logsumexp(s, axis=2) + log_n
+    return s - _logsumexp(s, axis=1) + log_n
+
+
+def _capacity(s, q):
+    """KL projection onto C3 (S <= 1) with Dykstra dual update."""
+    tmp = s + q
+    s = jnp.minimum(tmp, 0.0)
+    return s, tmp - s
+
+
+def _iteration(s, q, log_n):
+    """One Dykstra iteration: C1, C2 projections + capacity dual update."""
+    return _capacity(_normalized(s, log_n), q)
+
+
+def _iteration_with_violation(s, q, log_n, n):
+    """One Dykstra iteration, also reporting the tile's marginal violation.
+
+    The violation is measured on the pre-clamp iterate (after the column
+    projection), where column sums equal N exactly — see
+    ``core.dykstra.marginal_violation`` for why the post-clamp iterate is the
+    wrong place to test convergence.
+    """
+    s = _normalized(s, log_n)
+    pre = jnp.exp(s)
+    nf = jnp.float32(n)
+    row_dev = jnp.max(jnp.abs(jnp.sum(pre, axis=2) - nf))
+    col_dev = jnp.max(jnp.abs(jnp.sum(pre, axis=1) - nf))
+    viol = jnp.maximum(row_dev, col_dev) / nf
+    s, q = _capacity(s, q)
+    return s, q, viol
+
+
+def _dykstra_kernel(tlw_ref, out_ref, *, n: int, iters: int, tol: float):
     x = tlw_ref[...].astype(jnp.float32)  # (BT, M, M) log-space scores
     log_n = jnp.log(jnp.float32(n))
 
-    def body(_, carry):
-        s, q = carry
-        # KL projection onto C1 (row sums = N): row-wise log normalization.
-        s = s - _logsumexp(s, axis=2) + log_n
-        # KL projection onto C2 (col sums = N).
-        s = s - _logsumexp(s, axis=1) + log_n
-        # KL projection onto C3 (S <= 1) with Dykstra dual update.
-        tmp = s + q
-        s = jnp.minimum(tmp, 0.0)
-        q = tmp - s
-        return s, q
+    if tol <= 0.0:
 
-    s, _ = jax.lax.fori_loop(0, iters, body, (x, jnp.zeros_like(x)))
+        def body(_, carry):
+            s, q = carry
+            return _iteration(s, q, log_n)
+
+        s, _ = jax.lax.fori_loop(0, iters, body, (x, jnp.zeros_like(x)))
+    else:
+
+        def cond(carry):
+            _, _, it, viol = carry
+            return (it < iters) & (viol > tol)
+
+        def step(carry):
+            s, q, it, _ = carry
+            s, q, viol = _iteration_with_violation(s, q, log_n, n)
+            return s, q, it + 1, viol
+
+        s, _, _, _ = jax.lax.while_loop(
+            cond, step,
+            (x, jnp.zeros_like(x), jnp.int32(0), jnp.float32(jnp.inf)),
+        )
     out_ref[...] = jnp.exp(s)
 
 
 def default_block_b(m: int) -> int:
-    """Tile size keeping ~4 live copies under ~8 MB of VMEM."""
-    budget = 8 * 1024 * 1024 // (4 * 4 * m * m)
-    return max(8, min(512, budget))
+    """Tile size for the Dykstra kernel (input, plan, dual, temp live)."""
+    return vmem_plan(m, live_buffers=4).block_b
 
 
-@functools.partial(jax.jit, static_argnames=("n", "iters", "block_b", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("n", "iters", "block_b", "tol", "interpret")
+)
 def dykstra_pallas(
     tlw: jnp.ndarray,
     n: int,
     iters: int = 300,
     block_b: int | None = None,
+    tol: float = 0.0,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Run the fused Dykstra solve.
@@ -68,6 +122,8 @@ def dykstra_pallas(
       tlw: (B, M, M) *pre-scaled* log-space scores, i.e. tau * |W|.
       n: target row/col sum.
       iters: Dykstra iterations T.
+      tol: per-tile adaptive early exit (0 = fixed T, bit-identical to the
+        pre-tol kernel).
     Returns:
       (B, M, M) float32 fractional transport plan in [0, 1].
     """
@@ -81,7 +137,7 @@ def dykstra_pallas(
         # and are cropped afterwards — harmless.
         tlw = jnp.pad(tlw, ((0, pb - b), (0, 0), (0, 0)))
     out = pl.pallas_call(
-        functools.partial(_dykstra_kernel, n=n, iters=iters),
+        functools.partial(_dykstra_kernel, n=n, iters=iters, tol=tol),
         grid=(pb // bt,),
         in_specs=[pl.BlockSpec((bt, m, m), lambda i: (i, 0, 0))],
         out_specs=pl.BlockSpec((bt, m, m), lambda i: (i, 0, 0)),

@@ -1,0 +1,5 @@
+from repro.kernels.fused_solve.ops import (  # noqa: F401
+    fused_block_b,
+    fused_solve,
+    fused_solve_masks,
+)

@@ -1,0 +1,409 @@
+"""Single-pass fused TSENOR block solve (Algorithms 1 + 2) for TPU.
+
+The ``dense-jit`` / ``pallas`` pipelines pay three HBM round-trips per block
+batch: the Dykstra plan is written out, XLA argsorts it, the greedy kernel
+reads it back, and local search makes one more pass.  This kernel executes
+the *entire* solve — tau scaling, log-space Dykstra, descending-stable sort,
+greedy capacity rounding and swap local search — in one ``pallas_call``:
+
+  * one HBM read of the ``(BT, M, M)`` |W| tile,
+  * one HBM write of the mask, bit-packed as ``(BT, M)`` uint32 rows
+    (``repro.sparsity.bitpack`` layout — a 32x cut in mask write bandwidth
+    at M=32, and exactly the words the service cache stores),
+  * everything else (fractional plan, Dykstra dual, sort keys, capacity
+    counters) lives in VMEM/registers for the whole solve.
+
+Stage notes:
+
+  * **Dykstra** at ``tol=0`` reuses the exact log-space iteration of the
+    standalone kernel (fixed T, bit-identical masks).  ``tol>0`` arms the
+    adaptive fast mode: the log-space state is kept (the tau=200 regime
+    underflows a linear iterate's tail), but exp(s) is maintained
+    incrementally through the normalization factors, leaving ONE
+    per-element transcendental per sweep, and a ``while_loop`` exits the
+    tile once the pre-clamp marginal violation drops to ``tol``
+    (checked every ``_CHECK_EVERY`` sweeps).  Per-tile iteration counts
+    are written to a side output for the benchmark's early-exit histogram.
+  * **Sort**: XLA's argsort is unavailable in-kernel, so the M² entries are
+    ordered by a bitonic network on (key, index) pairs.  All (key, index)
+    pairs are distinct, so the network produces *exactly* the
+    descending-stable order of ``jnp.argsort(-s)`` — greedy processes the
+    same sequence as the XLA path and masks stay bit-identical.  The
+    compare-exchange is reshape-based (no gathers), ``L log² L / 4``
+    comparisons per block.
+  * **Greedy** keeps the mask bit-packed *during* the counter loop: the
+    per-step update touches one uint32 row word and two (BT, M) counters —
+    O(BT·M) per step instead of the O(BT·M²) one-hot outer product the
+    standalone rounding kernel pays.  Steps are unrolled 8-wide with
+    cascaded capacity checks (sequentially exact).
+  * **Local search** unpacks the mask once into VMEM, runs the same
+    arithmetic as ``core.rounding.local_search`` (one-hot row/col gathers
+    are exact — they select, never sum, real values), exits once a sweep
+    swaps nothing (remaining sweeps are provable no-ops), and repacks.
+
+Masks are bit-identical to ``dense-jit`` at ``tol=0`` (property-tested in
+interpret mode); ``tol>0`` trades bounded marginal violation for a large
+iteration cut.  M <= 32 (one packed word per row) — every paper pattern.
+
+TPU caveat: the bitonic reshapes split the trailing M² lane dimension below
+128 lanes for small strides; Mosaic handles these as sublane shuffles on
+current toolchains, but if a future compiler rejects them the sort can be
+restated with ``jnp.roll`` at ~2x the op count.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import default_interpret
+from repro.kernels.dykstra.kernel import _iteration, _normalized
+from repro.kernels.vmem import vmem_plan
+from repro.sparsity.bitpack import MAX_M, pack_rows, unpack_rows
+
+_SUM_FLOOR = 1e-30  # guards n/rowsum against fully-underflowed rows
+_CHECK_EVERY = 4    # convergence-check stride of the adaptive fast mode
+
+# Live float32-equivalent tile copies: |W|, plan, dual, sort keys + indices,
+# and the local-search score temporary.
+LIVE_BUFFERS = 6
+
+
+def fused_block_b(m: int, device=None) -> int:
+    """VMEM-derived tile size for the fused solve kernel."""
+    return vmem_plan(m, device, live_buffers=LIVE_BUFFERS).block_b
+
+
+def _bitonic_argsort_desc(keys: jnp.ndarray) -> jnp.ndarray:
+    """(BT, L) keys -> (BT, L) int32 indices in descending-stable order.
+
+    Sorts (key, index) pairs with the total order "larger key first, ties by
+    smaller index first" — identical to ``jnp.argsort(-keys)`` (stable).
+    Keys must be non-negative: a non-power-of-two L (odd M) is padded to the
+    next power of two with -1 sentinels, which sort strictly last, so the
+    first L output positions are exactly the real order.
+    """
+    bt, ell = keys.shape
+    pot = 1 << max(ell - 1, 1).bit_length()
+    if ell & (ell - 1):  # not a power of two: pad with always-last sentinels
+        keys = jnp.concatenate(
+            [keys, jnp.full((bt, pot - ell), -1.0, keys.dtype)], axis=1
+        )
+        ell = pot
+    idx = jax.lax.broadcasted_iota(jnp.int32, (bt, ell), 1)
+    pos = idx  # positions coincide with initial indices
+
+    def before(ka, ia, kb, ib):
+        """(ka, ia) strictly precedes (kb, ib) in descending-stable order."""
+        return (ka > kb) | ((ka == kb) & (ia < ib))
+
+    size = 2
+    while size <= ell:
+        # "Ascending" (= desired order) blocks of this merge level.
+        dirs = (pos // size) % 2 == 0
+        stride = size // 2
+        while stride >= 1:
+            shape4 = (bt, ell // (2 * stride), 2, stride)
+            k4 = keys.reshape(shape4)
+            i4 = idx.reshape(shape4)
+            d4 = dirs.reshape(shape4)[:, :, 0, :]  # same dir for both partners
+            klo, khi = k4[:, :, 0, :], k4[:, :, 1, :]
+            ilo, ihi = i4[:, :, 0, :], i4[:, :, 1, :]
+            swap = jnp.where(
+                d4, before(khi, ihi, klo, ilo), before(klo, ilo, khi, ihi)
+            )
+            nklo = jnp.where(swap, khi, klo)
+            nkhi = jnp.where(swap, klo, khi)
+            nilo = jnp.where(swap, ihi, ilo)
+            nihi = jnp.where(swap, ilo, ihi)
+            keys = jnp.stack([nklo, nkhi], axis=2).reshape(bt, ell)
+            idx = jnp.stack([nilo, nihi], axis=2).reshape(bt, ell)
+            stride //= 2
+        size *= 2
+    return idx
+
+
+def _greedy_packed(order: jnp.ndarray, n: int, m: int) -> jnp.ndarray:
+    """Greedy capacity rounding over a precomputed order, packed in VMEM.
+
+    ``order`` is (BT, M²) flat indices, best first.  Returns (BT, M) uint32
+    mask words (bit j of row word = column j).  Equivalent to
+    ``core.rounding.greedy_round`` fed the same order.
+
+    Several consecutive order entries are processed per loop step, each
+    entry's capacity check seeing the previous entries' (conditional)
+    counter increments — exactly the sequential semantics at a fraction of
+    the loop-dispatch overhead.  Entries past the largest unrollable
+    multiple are cascaded in an unrolled tail.
+    """
+    bt = order.shape[0]
+    rows = order // m
+    cols = order % m
+    iota_m = jax.lax.broadcasted_iota(jnp.int32, (bt, m), 1)
+
+    def take_one(k, words, rc, cc):
+        r = jax.lax.dynamic_slice_in_dim(rows, k, 1, axis=1)  # (BT, 1)
+        c = jax.lax.dynamic_slice_in_dim(cols, k, 1, axis=1)
+        r_oh = iota_m == r  # (BT, M) one-hot of this step's row
+        c_oh = iota_m == c
+        rcount = jnp.sum(jnp.where(r_oh, rc, 0), axis=1, keepdims=True)
+        ccount = jnp.sum(jnp.where(c_oh, cc, 0), axis=1, keepdims=True)
+        can = (rcount < n) & (ccount < n)  # (BT, 1)
+        # Single-bit OR in the sparsity.bitpack row-word layout (bit j of a
+        # row word = column j, LSB-first); the bulk pack/unpack goes through
+        # bitpack itself, and the bit-identity tests vs fused_solve_ref
+        # (which packs with bitpack.pack_rows) pin this update to it.
+        bit = jnp.left_shift(jnp.uint32(1), c.astype(jnp.uint32))  # (BT, 1)
+        words = jnp.where(r_oh & can, words | bit, words)
+        inc = can.astype(jnp.int32)
+        rc = rc + jnp.where(r_oh, inc, 0)
+        cc = cc + jnp.where(c_oh, inc, 0)
+        return words, rc, cc
+
+    unroll = 8
+    total = m * m
+    steps, tail = divmod(total, unroll)
+
+    def body(i, carry):
+        words, rc, cc = carry
+        for u in range(unroll):
+            words, rc, cc = take_one(unroll * i + u, words, rc, cc)
+        return words, rc, cc
+
+    carry = (
+        jnp.zeros((bt, m), jnp.uint32),
+        jnp.zeros((bt, m), jnp.int32),
+        jnp.zeros((bt, m), jnp.int32),
+    )
+    if steps:
+        carry = jax.lax.fori_loop(0, steps, body, carry)
+    words, rc, cc = carry
+    for k in range(total - tail, total):
+        words, rc, cc = take_one(k, words, rc, cc)
+    return words
+
+
+def _local_search(mask: jnp.ndarray, x: jnp.ndarray, n: int, steps: int):
+    """In-kernel twin of ``core.rounding.local_search`` (one-hot gathers).
+
+    One-hot selection reproduces the fancy-indexing gathers exactly (it picks
+    a single real value; the masked sum adds only zeros), so scores, argmax
+    tie-breaks and therefore masks match the XLA path bit for bit.
+
+    The loop exits as soon as a sweep applies no swap anywhere in the tile:
+    a swap-free sweep recomputes the identical state next sweep, so every
+    remaining sweep is a no-op and skipping them is exact.
+    """
+    bt, m, _ = mask.shape
+    iota_m = jax.lax.broadcasted_iota(jnp.int32, (bt, m), 1)
+    neg_inf = jnp.float32(-jnp.inf)
+
+    def sweep(mask):
+        rdef = jnp.sum(mask, axis=2) < n  # (BT, M) unsaturated rows
+        cdef = jnp.sum(mask, axis=1) < n
+        i = jnp.argmax(rdef, axis=1)  # first deficit row per block
+        j = jnp.argmax(cdef, axis=1)
+        need = jnp.any(rdef, axis=1) & jnp.any(cdef, axis=1)
+        i_oh = iota_m == i[:, None]  # (BT, M)
+        j_oh = iota_m == j[:, None]
+
+        w_row_i = jnp.sum(jnp.where(i_oh[:, :, None], x, 0.0), axis=1)  # x[b,i,:]
+        w_col_j = jnp.sum(jnp.where(j_oh[:, None, :], x, 0.0), axis=2)  # x[b,:,j]
+        score = w_row_i[:, None, :] + w_col_j[:, :, None] - x
+        s_row_i = jnp.any(mask & i_oh[:, :, None], axis=1)  # mask[b,i,:]
+        s_col_j = jnp.any(mask & j_oh[:, None, :], axis=2)  # mask[b,:,j]
+        valid = mask & ~s_row_i[:, None, :] & ~s_col_j[:, :, None]
+        score = jnp.where(valid, score, neg_inf)
+
+        flat = score.reshape(bt, m * m)
+        k = jnp.argmax(flat, axis=1)
+        smax = jnp.max(flat, axis=1)
+        ip, jp = k // m, k % m
+        do = need & (smax > 0)
+        ip_oh = iota_m == ip[:, None]
+        jp_oh = iota_m == jp[:, None]
+
+        d3 = do[:, None, None]
+        mask = jnp.where(d3 & ip_oh[:, :, None] & jp_oh[:, None, :], False, mask)
+        mask = jnp.where(d3 & ip_oh[:, :, None] & j_oh[:, None, :], True, mask)
+        mask = jnp.where(d3 & i_oh[:, :, None] & jp_oh[:, None, :], True, mask)
+        return mask, jnp.any(do)
+
+    def cond(carry):
+        _, it, changed = carry
+        return (it < steps) & changed
+
+    def body(carry):
+        mask, it, _ = carry
+        mask, changed = sweep(mask)
+        return mask, it + 1, changed
+
+    mask, _, _ = jax.lax.while_loop(cond, body, (mask, jnp.int32(0), True))
+    return mask
+
+
+def _fused_kernel(
+    x_ref, words_ref, iters_ref, *,
+    n: int, m: int, iters: int, ls_steps: int, tau_scale: float, tol: float,
+):
+    x = x_ref[...].astype(jnp.float32)  # (BT, M, M) |W| tile
+    bt = x.shape[0]
+    log_n = jnp.log(jnp.float32(n))
+
+    # tau scaling — same arithmetic as backends._batched_solve.
+    scale = jnp.max(x, axis=(1, 2), keepdims=True)
+    tau = tau_scale / jnp.maximum(scale, 1e-30)
+    s0 = tau * x
+
+    # Dykstra.  tol=0: log-space fixed-T, bit-identical to dense-jit.
+    # tol>0: adaptive fast mode.  The state stays in log space (the tau=200
+    # regime puts most entries hundreds of nats below the top — a linear
+    # iterate would underflow the tail that later becomes solution support),
+    # but exp(s) is maintained *incrementally*: the normalizations multiply
+    # it by the (BT, M, 1)-shaped factors n/rowsum / n/colsum, whose log is
+    # an M-vector transcendental, and only the capacity clamp re-exponenti-
+    # ates elementwise.  One per-element exp per iteration instead of the
+    # four exp/log sweeps of the logsumexp form — same dynamics to ~1e-4 —
+    # and a while_loop exits once the pre-clamp marginal violation (col sums
+    # are exactly N there, cf. core.dykstra.marginal_violation) drops to
+    # <= tol.
+    if tol <= 0.0:
+        s_log, _ = jax.lax.fori_loop(
+            0, iters,
+            lambda _, c: _iteration(c[0], c[1], log_n),
+            (s0, jnp.zeros_like(s0)),
+        )
+        plan = jnp.exp(s_log)
+        it = jnp.int32(iters)
+    else:
+        nf = jnp.float32(n)
+        # Iteration 1 uses the shifted logsumexp (tau*|W| reaches ~200, so
+        # a raw exp would overflow).  With q0 = 0 the capacity step is
+        # closed-form: s1 = min(s, 0), q1 = max(s, 0).
+        s = _normalized(s0, log_n)
+        q = jnp.maximum(s, 0.0)
+        s = jnp.minimum(s, 0.0)
+        e = jnp.exp(s)
+
+        def sweep(_, carry):
+            s, q, e = carry
+            fr = nf / jnp.maximum(jnp.sum(e, axis=2, keepdims=True), _SUM_FLOOR)
+            s = s + jnp.log(fr)  # (BT, M, 1) log — M-vector, not M^2
+            e = e * fr
+            fc = nf / jnp.maximum(jnp.sum(e, axis=1, keepdims=True), _SUM_FLOOR)
+            s = s + jnp.log(fc)
+            e = e * fc
+            tmp = s + q
+            s = jnp.minimum(tmp, 0.0)
+            q = tmp - s
+            e = jnp.exp(s)  # the single per-element transcendental
+            return s, q, e
+
+        def cond(carry):
+            _, _, _, it, viol = carry
+            return (it < iters) & (viol > tol)
+
+        def chunk(carry):
+            # Convergence is tested once per _CHECK_EVERY sweeps: the
+            # violation decays geometrically, so the strided check gives up
+            # little exit resolution while the inner sweeps stay branch- and
+            # reduction-free.  The final chunk shrinks so the total lands
+            # exactly on the ``iters`` cap.  The last sweep of each chunk is
+            # instrumented: its violation is read off the *pre-clamp*
+            # iterate (right after the column projection, where col sums are
+            # exactly N), cf. core.dykstra.marginal_violation.
+            s, q, e, it, _ = carry
+            plain = jnp.minimum(_CHECK_EVERY - 1, iters - it - 1)
+            s, q, e = jax.lax.fori_loop(0, plain, sweep, (s, q, e))
+            fr = nf / jnp.maximum(jnp.sum(e, axis=2, keepdims=True), _SUM_FLOOR)
+            s = s + jnp.log(fr)
+            e = e * fr
+            fc = nf / jnp.maximum(jnp.sum(e, axis=1, keepdims=True), _SUM_FLOOR)
+            s = s + jnp.log(fc)
+            e = e * fc
+            viol = jnp.max(jnp.abs(jnp.sum(e, axis=2) - nf)) / nf
+            tmp = s + q
+            s = jnp.minimum(tmp, 0.0)
+            q = tmp - s
+            e = jnp.exp(s)
+            return s, q, e, it + plain + 1, viol
+
+        _, _, plan, it, _ = jax.lax.while_loop(
+            cond, chunk, (s, q, e, jnp.int32(1), jnp.float32(jnp.inf))
+        )
+
+    # Descending-stable order of the fractional plan, then packed greedy.
+    order = _bitonic_argsort_desc(plan.reshape(bt, m * m))
+    words = _greedy_packed(order, n, m)
+
+    if ls_steps > 0:
+        # Unpack once into VMEM, run swap local search on |W|, repack —
+        # through the canonical bitpack helpers (traceable), so the kernel
+        # cannot drift from the layout the cache and scheduler consume.
+        mask = unpack_rows(words, m)
+        mask = _local_search(mask, x, n, ls_steps)
+        words = pack_rows(mask)
+
+    words_ref[...] = words
+    iters_ref[...] = jnp.full(iters_ref.shape, it, jnp.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "n", "iters", "ls_steps", "tau_scale", "tol", "block_b", "interpret"
+    ),
+)
+def fused_solve_pallas(
+    w_abs_blocks: jnp.ndarray,
+    n: int,
+    iters: int = 300,
+    ls_steps: int = 10,
+    tau_scale: float = 200.0,
+    tol: float = 0.0,
+    block_b: int | None = None,
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """End-to-end TSENOR solve of a (B, M, M) |W| batch in one kernel.
+
+    Returns ``(words, tile_iters)``: ``words`` is the (B, M) uint32
+    bit-packed mask (``bitpack.unpack_rows`` recovers the boolean blocks),
+    ``tile_iters`` is the (num_tiles,) int32 Dykstra iteration count each
+    tile ran before converging (== ``iters`` everywhere at ``tol=0``).
+    """
+    b, m, _ = w_abs_blocks.shape
+    if m > MAX_M:
+        raise ValueError(
+            f"fused solve packs one uint32 word per row and supports "
+            f"M <= {MAX_M}, got M={m}; use the 'dense-jit' or 'pallas' backend"
+        )
+    if interpret is None:
+        interpret = default_interpret()
+    bt = block_b or fused_block_b(m)
+    pb = -(-b // bt) * bt
+    x = jnp.asarray(w_abs_blocks, jnp.float32)
+    if pb != b:
+        # Sentinel all-zero blocks solve to an arbitrary-but-valid mask and
+        # are cropped below; they never touch real blocks.
+        x = jnp.pad(x, ((0, pb - b), (0, 0), (0, 0)))
+    grid = pb // bt
+    words, tile_iters = pl.pallas_call(
+        functools.partial(
+            _fused_kernel, n=n, m=m, iters=iters, ls_steps=ls_steps,
+            tau_scale=tau_scale, tol=tol,
+        ),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((bt, m, m), lambda i: (i, 0, 0))],
+        out_specs=[
+            pl.BlockSpec((bt, m), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((pb, m), jnp.uint32),
+            jax.ShapeDtypeStruct((grid, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x)
+    return words[:b], tile_iters[:, 0]

@@ -1,0 +1,22 @@
+"""Public jit'd wrappers for the fused single-pass solve kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.fused_solve.kernel import fused_block_b, fused_solve_pallas
+from repro.sparsity.bitpack import unpack_rows
+
+__all__ = ["fused_solve", "fused_solve_masks", "fused_block_b"]
+
+
+def fused_solve(
+    w_abs_blocks: jnp.ndarray, n: int, **kw
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(B, M, M) |W| -> ((B, M) uint32 packed mask rows, per-tile iters)."""
+    return fused_solve_pallas(w_abs_blocks, n, **kw)
+
+
+def fused_solve_masks(w_abs_blocks: jnp.ndarray, n: int, **kw) -> jnp.ndarray:
+    """Convenience: fused solve returning unpacked (B, M, M) bool masks."""
+    words, _ = fused_solve_pallas(w_abs_blocks, n, **kw)
+    return unpack_rows(words, w_abs_blocks.shape[-1])

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the fused solve kernel: the dense pipeline + packing.
+
+This is literally the ``dense-jit`` backend pipeline (tau scaling, log-space
+Dykstra, greedy + local-search rounding) followed by ``bitpack.pack_rows`` —
+the fused kernel must reproduce it bit for bit at ``tol=0``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dykstra import dykstra_log
+from repro.core.rounding import round_blocks
+from repro.sparsity.bitpack import pack_rows
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "iters", "ls_steps", "tau_scale", "tol")
+)
+def fused_solve_ref(
+    w_abs_blocks: jnp.ndarray,
+    n: int,
+    iters: int = 300,
+    ls_steps: int = 10,
+    tau_scale: float = 200.0,
+    tol: float = 0.0,
+) -> jnp.ndarray:
+    """(B, M, M) |W| -> (B, M) uint32 packed mask rows (XLA reference)."""
+    x = jnp.asarray(w_abs_blocks, jnp.float32)
+    scale = jnp.max(x, axis=(1, 2), keepdims=True)
+    tau = tau_scale / jnp.maximum(scale, 1e-30)
+    s_approx = dykstra_log(x, n, iters, tau=tau, tol=tol)
+    mask = round_blocks(s_approx, x, n, ls_steps)
+    return pack_rows(mask)

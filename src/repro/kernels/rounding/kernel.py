@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels import default_interpret
+from repro.kernels.vmem import VPU_ALIGN, vmem_plan
 
 
 def _greedy_kernel(order_ref, out_ref, *, n: int, m: int):
@@ -51,19 +52,31 @@ def _greedy_kernel(order_ref, out_ref, *, n: int, m: int):
     out_ref[...] = mask
 
 
+def default_rounding_block_b(m: int) -> int:
+    """VMEM-derived tile: order, mask, counters + temporaries live (~3)."""
+    return vmem_plan(m, live_buffers=3).block_b
+
+
 @functools.partial(jax.jit, static_argnames=("n", "block_b", "interpret"))
 def greedy_round_pallas(
     scores: jnp.ndarray,
     n: int,
-    block_b: int = 256,
+    block_b: int | None = None,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """(B, M, M) scores -> boolean mask, greedy selection in VMEM."""
+    """(B, M, M) scores -> boolean mask, greedy selection in VMEM.
+
+    The tile size comes from :func:`repro.kernels.vmem.vmem_plan`; small
+    batches are padded UP to the VPU sublane multiple (like
+    ``dykstra_pallas``) instead of running a ragged tile — the padded
+    sentinel rows are all-zero orders whose updates land in cropped rows.
+    """
     if interpret is None:
         interpret = default_interpret()
     b, m, _ = scores.shape
     order = jnp.argsort(-scores.reshape(b, m * m), axis=1).astype(jnp.int32)
-    bt = min(block_b, max(8, b))
+    bt = min(block_b or default_rounding_block_b(m),
+             -(-max(1, b) // VPU_ALIGN) * VPU_ALIGN)
     pb = -(-b // bt) * bt
     if pb != b:
         order = jnp.pad(order, ((0, pb - b), (0, 0)))

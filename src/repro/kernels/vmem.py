@@ -1,0 +1,104 @@
+"""VMEM budgeting for the block-solver Pallas kernels.
+
+Every solver kernel tiles the (B, M, M) block batch into VMEM-resident
+tiles of ``block_b`` blocks and keeps some number of live float32 copies of
+the tile (scores, Dykstra dual, mask, temporaries).  The right tile size is
+therefore a pure function of M, the number of live buffers, and the
+device's VMEM capacity — :func:`vmem_plan` computes it once and every
+kernel (and the service scheduler's bucket-ladder cost model) queries it
+instead of hard-coding its own heuristic.
+
+``default_block_b`` in ``kernels.dykstra.kernel`` and the tile choice in
+``kernels.rounding`` both delegate here, so the scheduler's buckets, the
+Dykstra tiles and the fused-solve tiles all agree on alignment.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+# Per-core VMEM by TPU generation (bytes).  Conservative; unknown kinds
+# (including CPU/GPU hosts running the kernels in interpret mode) fall back
+# to the v2-v4 figure so tiling stays portable.
+_VMEM_BYTES_BY_KIND = {
+    "TPU v5": 128 * 1024 * 1024,
+    "TPU v5p": 128 * 1024 * 1024,
+    "TPU v6": 128 * 1024 * 1024,
+}
+_DEFAULT_VMEM_BYTES = 16 * 1024 * 1024
+
+# The kernel may only plan against a fraction of physical VMEM: the Mosaic
+# compiler needs headroom for spills, semaphores and double-buffered DMA.
+_BUDGET_FRACTION = 0.5
+
+# Sublane granularity of float32 tiles on the VPU; block tiles are padded to
+# a multiple of this so the batch axis maps cleanly onto (8, 128) registers.
+VPU_ALIGN = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class VmemPlan:
+    """Tiling decision for one (kernel, M, device) combination."""
+
+    m: int                # block side
+    vmem_bytes: int       # physical per-core VMEM assumed for the device
+    budget_bytes: int     # fraction of it the kernel plans against
+    live_buffers: int     # live float32 tile copies the kernel keeps
+    block_b: int          # tile size in blocks (multiple of VPU_ALIGN)
+
+    @property
+    def bytes_per_block(self) -> int:
+        """Live VMEM bytes one block costs across all kernel buffers."""
+        return self.live_buffers * 4 * self.m * self.m
+
+    def tile_bytes(self) -> int:
+        return self.block_b * self.bytes_per_block
+
+
+def device_vmem_bytes(device=None) -> int:
+    """Per-core VMEM of ``device`` (default: first local jax device)."""
+    if device is None:
+        import jax
+
+        devices = jax.local_devices()
+        device = devices[0] if devices else None
+    kind = getattr(device, "device_kind", "") or ""
+    for prefix, size in _VMEM_BYTES_BY_KIND.items():
+        if kind.startswith(prefix):
+            return size
+    return _DEFAULT_VMEM_BYTES
+
+
+def vmem_plan(
+    m: int,
+    device=None,
+    *,
+    live_buffers: int = 4,
+    max_block_b: int = 512,
+) -> VmemPlan:
+    """Pick the block-tile size for an M x M block kernel on ``device``.
+
+    ``live_buffers`` is the kernel's own accounting of live float32 tile
+    copies (the Dykstra kernel keeps ~4: input, plan, dual, temporary; the
+    fused solve kernel ~6, adding the mask and local-search scores).
+    """
+    if m < 1:
+        raise ValueError(f"vmem_plan needs m >= 1, got {m}")
+    if live_buffers < 1:
+        raise ValueError(f"vmem_plan needs live_buffers >= 1, got {live_buffers}")
+    vmem = device_vmem_bytes(device)
+    budget = int(vmem * _BUDGET_FRACTION)
+    per_block = live_buffers * 4 * m * m
+    raw = budget // per_block
+    # Round DOWN to a power of two (>= VPU_ALIGN): the tile never exceeds
+    # budget, stays VPU-sublane aligned, and divides the scheduler's
+    # power-of-two bucket ladder exactly — so mega-batches never pad a
+    # partial tile.
+    pot = 1 << max(raw, 1).bit_length() - 1
+    aligned = max(VPU_ALIGN, pot)
+    return VmemPlan(
+        m=m,
+        vmem_bytes=vmem,
+        budget_bytes=budget,
+        live_buffers=live_buffers,
+        block_b=min(max_block_b, aligned),
+    )

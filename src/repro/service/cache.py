@@ -18,9 +18,15 @@ what makes re-pruning and crash-resume near-free.
 
 On-disk payload format (versioned via the ``cache_format`` field):
 
-* v2 (current): ``mask_bits`` — the bool block stream bit-packed with
-  ``np.packbits`` (8x smaller than raw bool) — plus ``shape``.
-* v1 (legacy): raw bool ``mask`` array.  Old entries still load.
+* v3 (current): ``mask_words`` — (B, M) uint32 bit-packed mask rows in the
+  ``repro.sparsity.bitpack`` layout (bit j of a row word = column j), plus
+  ``shape``.  This is exactly what the ``pallas-fused`` kernel writes and
+  what the packed scheduler path ships to the host, so a solved mega-batch
+  feeds the cache with no host-side repacking; it is also the in-memory
+  representation (32x smaller than raw bool).
+* v2 (legacy): ``mask_bits`` — the bool stream packed with ``np.packbits``
+  — plus ``shape``.  Still loads.
+* v1 (legacy): raw bool ``mask`` array.  Still loads.
 """
 from __future__ import annotations
 
@@ -33,9 +39,10 @@ import numpy as np
 from repro.checkpoint.manager import ContentStore
 from repro.core.solver import SolverConfig
 from repro.patterns import PatternSpec
+from repro.sparsity import bitpack
 
 _VERSION = "tsenor-mask-v1"
-_CACHE_FORMAT = 2  # v2: packbits payload; v1 raw-bool entries still load
+_CACHE_FORMAT = 3  # v3: uint32 row-words payload; v1/v2 entries still load
 
 
 def solver_fingerprint(config: SolverConfig) -> str:
@@ -51,9 +58,12 @@ def solver_fingerprint(config: SolverConfig) -> str:
         backend_part = f"use_kernel={config.backend == 'pallas'}"
     else:
         backend_part = f"backend={config.backend}"
+    # tol=0 keeps the historic fingerprint so pre-tol cache entries stay
+    # reachable; any other tolerance changes the solved mask and must miss.
+    tol_part = f";tol={config.tol!r}" if getattr(config, "tol", 0.0) else ""
     return (
         f"iters={config.iters};ls_steps={config.ls_steps};"
-        f"tau_scale={config.tau_scale!r};{backend_part}"
+        f"tau_scale={config.tau_scale!r};{backend_part}{tol_part}"
     )
 
 
@@ -85,52 +95,83 @@ def content_key(w_abs_blocks: np.ndarray, pattern, config=None, _legacy=None) ->
 
 
 class MaskCache:
-    """In-memory dict over an optional disk ContentStore; counts hits/misses."""
+    """In-memory dict over an optional disk ContentStore; counts hits/misses.
+
+    Entries are held (in memory and on disk) as ``(words, shape)``: the
+    (B, M) uint32 bit-packed rows of the (B, M, M) bool block masks.  The
+    packed accessors are the native path; ``get``/``put`` keep the bool API
+    for callers that want materialized masks.
+    """
 
     def __init__(self, store: Optional[ContentStore] = None):
         self.store = store
-        self._mem: dict[str, np.ndarray] = {}
+        self._mem: dict[str, tuple[np.ndarray, tuple[int, ...]]] = {}
         self.mem_hits = 0
         self.disk_hits = 0
         self.misses = 0
 
-    def get(self, key: str) -> Optional[np.ndarray]:
-        """Solved (B, M, M) bool mask blocks for ``key``, or None."""
+    def get_packed(
+        self, key: str
+    ) -> Optional[tuple[np.ndarray, tuple[int, ...]]]:
+        """((B, M) uint32 words, (B, M, M) shape) for ``key``, or None."""
         if key in self._mem:
             self.mem_hits += 1
             return self._mem[key]
         if self.store is not None and self.store.has(key):
-            mask = _decode_entry(self.store.get(key))
-            self._mem[key] = mask
+            entry = _decode_entry(self.store.get(key))
+            self._mem[key] = entry
             self.disk_hits += 1
-            return mask
+            return entry
         self.misses += 1
         return None
 
-    def put(self, key: str, mask_blocks: np.ndarray) -> None:
-        mask = np.asarray(mask_blocks, dtype=bool)
-        self._mem[key] = mask
+    def get(self, key: str) -> Optional[np.ndarray]:
+        """Solved (B, M, M) bool mask blocks for ``key``, or None."""
+        entry = self.get_packed(key)
+        if entry is None:
+            return None
+        words, shape = entry
+        return bitpack.unpack_rows_np(words, shape[-1]).reshape(shape)
+
+    def put_packed(
+        self, key: str, words: np.ndarray, shape: tuple[int, ...]
+    ) -> None:
+        """Store bit-packed mask rows verbatim (no repacking round-trip)."""
+        words = np.asarray(words, np.uint32)
+        shape = tuple(int(v) for v in shape)
+        self._mem[key] = (words, shape)
         if self.store is not None:
             self.store.put(
                 key,
-                mask_bits=np.packbits(mask.reshape(-1)),
-                shape=np.asarray(mask.shape, np.int64),
+                mask_words=words,
+                shape=np.asarray(shape, np.int64),
                 cache_format=np.asarray(_CACHE_FORMAT, np.int64),
             )
+
+    def put(self, key: str, mask_blocks: np.ndarray) -> None:
+        mask = np.asarray(mask_blocks, dtype=bool)
+        self.put_packed(key, bitpack.pack_rows_np(mask), mask.shape)
 
     @property
     def hits(self) -> int:
         return self.mem_hits + self.disk_hits
 
 
-def _decode_entry(data: dict[str, np.ndarray]) -> np.ndarray:
-    """Decode a stored cache entry, tolerating the v1 raw-bool format."""
-    if "mask_bits" in data:
+def _decode_entry(
+    data: dict[str, np.ndarray]
+) -> tuple[np.ndarray, tuple[int, ...]]:
+    """Decode a stored entry to (words, shape), tolerating v1/v2 formats."""
+    if "mask_words" in data:  # v3: native packed rows
+        shape = tuple(int(v) for v in data["shape"])
+        return np.asarray(data["mask_words"], np.uint32), shape
+    if "mask_bits" in data:  # v2: np.packbits payload
         shape = tuple(int(v) for v in data["shape"])
         count = int(np.prod(shape)) if shape else 0
-        return (
+        mask = (
             np.unpackbits(data["mask_bits"], count=count)
             .astype(bool)
             .reshape(shape)
         )
-    return data["mask"].astype(bool)  # v1: raw bool blocks
+    else:  # v1: raw bool blocks
+        mask = data["mask"].astype(bool)
+    return bitpack.pack_rows_np(mask), mask.shape

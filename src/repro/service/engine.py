@@ -42,10 +42,16 @@ from repro.service.scheduler import (
     solve_stream,
     tensor_to_blocks,
 )
+from repro.sparsity import bitpack
 
 
 class MaskHandle:
-    """Future for one submitted tensor's transposable N:M mask."""
+    """Future for one submitted tensor's transposable N:M mask.
+
+    Resolved handles hold the mask in the bit-packed row-word form the
+    solver pipeline produces (32x smaller than bool blocks); ``result()``
+    unpacks on access.
+    """
 
     def __init__(self, service: "MaskService", name: str, pattern: PatternSpec,
                  key: str, geom: dict):
@@ -54,7 +60,7 @@ class MaskHandle:
         self.pattern = pattern
         self.key = key
         self._geom = geom
-        self._mask_blocks: Optional[np.ndarray] = None
+        self._words: Optional[np.ndarray] = None
 
     @property
     def n(self) -> int:
@@ -66,17 +72,22 @@ class MaskHandle:
 
     @property
     def done(self) -> bool:
-        return self._mask_blocks is not None
+        return self._words is not None
 
-    def _resolve(self, mask_blocks: np.ndarray) -> None:
-        self._mask_blocks = mask_blocks
+    def _resolve(self, words: np.ndarray) -> None:
+        self._words = words
+
+    def mask_blocks(self) -> np.ndarray:
+        """The solved (B, M, M) bool block stream (unpacked on access)."""
+        assert self.done, f"{self.name!r} is not resolved"
+        return bitpack.unpack_rows_np(self._words, self.pattern.m)
 
     def result(self) -> jnp.ndarray:
         """The solved bool mask, shaped like the submitted tensor."""
         if not self.done:
             self.service.flush()
         assert self.done, f"flush did not resolve {self.name!r}"
-        return jnp.asarray(blocks_to_mask(self._mask_blocks, self._geom))
+        return jnp.asarray(blocks_to_mask(self.mask_blocks(), self._geom))
 
 
 @dataclasses.dataclass
@@ -110,14 +121,20 @@ class MaskService:
     def __init__(
         self,
         config: SolverConfig = SolverConfig(),
-        policy: BucketPolicy = BucketPolicy(),
+        policy: Optional[BucketPolicy] = None,
         cache: Optional[MaskCache] = None,
         journal: Optional[Journal] = None,
         directory: Optional[str] = None,
     ):
         """``directory`` is the one-argument persistent setup: it wires a
         disk-backed cache (``<dir>/store``) and a completion journal
-        (``<dir>/journal.jsonl``) unless explicit ones are passed."""
+        (``<dir>/journal.jsonl``) unless explicit ones are passed.
+
+        ``policy=None`` (the default) derives a VMEM-aware bucket ladder per
+        pattern at flush time (:meth:`BucketPolicy.for_device`), informed by
+        the padding waste this service has already observed; pass an explicit
+        :class:`BucketPolicy` to pin one.
+        """
         self.config = config
         self.policy = policy
         if directory is not None:
@@ -157,14 +174,14 @@ class MaskService:
         self.stats.submitted += 1
 
         disk_hits_before = self.cache.disk_hits
-        cached = self.cache.get(key)
+        cached = self.cache.get_packed(key)
         if cached is not None:
             if self.cache.disk_hits > disk_hits_before \
                     and self.journal is not None \
                     and self.journal.lookup(name) is not None:
                 self.stats.journal_skips += 1
             self.stats.cache_hits += 1
-            handle._resolve(cached)
+            handle._resolve(cached[0])
             self._record(handle)
             return handle
 
@@ -172,7 +189,13 @@ class MaskService:
         return handle
 
     def flush(self) -> None:
-        """Solve every pending submission in shape-bucketed mega-batches."""
+        """Solve every pending submission in shape-bucketed mega-batches.
+
+        The whole drain runs bit-packed: mega-batches come back from the
+        device as uint32 row words (32x less transfer), handles hold the
+        words, and the cache stores them verbatim (format v3) — the mask is
+        only ever unpacked on ``result()`` access.
+        """
         pending, self._pending = self._pending, []
         if not pending:
             return
@@ -182,16 +205,21 @@ class MaskService:
         for handle, blocks in pending:
             groups.setdefault(handle.pattern, []).append((handle, blocks))
         for spec, entries in groups.items():
+            policy = self.policy if self.policy is not None else \
+                BucketPolicy.for_device(spec.m, stats=self.stats.stream)
             solved = solve_stream(
                 [blocks for _, blocks in entries],
                 spec,
                 self.config,
-                self.policy,
+                policy,
                 self.stats.stream,
+                packed=True,
             )
-            for (handle, _), mask_blocks in zip(entries, solved):
-                handle._resolve(mask_blocks)
-                self.cache.put(handle.key, mask_blocks)
+            for (handle, blocks), words in zip(entries, solved):
+                handle._resolve(words)
+                self.cache.put_packed(
+                    handle.key, words, (blocks.shape[0], spec.m, spec.m)
+                )
                 self._record(handle)
 
     def solve(self, w, pattern=None, *legacy, name: Optional[str] = None,

@@ -14,11 +14,19 @@ of shape-bucketed mega-batches:
   * bucket sizes are the geometric ladder ``base * growth^k`` capped at
     ``max_bucket`` — every workload compiles at most ``len(ladder)`` programs
     per pattern instead of one per tensor;
+  * :meth:`BucketPolicy.for_device` derives the ladder from the solve
+    kernel's VMEM plan (``repro.kernels.vmem``): the base bucket is exactly
+    one kernel tile and every rung a tile multiple, so mega-batches never
+    pad a partial tile, and the ladder growth is tuned against the measured
+    :meth:`StreamStats.padding_waste` of earlier streams (high observed
+    waste -> finer ladder);
   * the plan greedily emits the largest bucket that fits the remaining
-    stream, then rounds the tail UP to the smallest bucket that covers it,
-    padding with all-zero sentinel blocks (blocks are independent, so
-    sentinels can never contaminate real results — they are sliced off after
-    the solve);
+    stream, then rounds the tail UP to the smallest bucket that covers it
+    (or, with ``tail_decompose`` — the ``for_device`` default — covers the
+    tail with a descending run of smaller rungs so padding is bounded by
+    ``base`` instead of by the covering rung), padding with all-zero
+    sentinel blocks (blocks are independent, so sentinels can never
+    contaminate real results — they are sliced off after the solve);
   * mega-batches are dispatched back-to-back without blocking, so host-side
     packing of batch ``k+1`` overlaps the device solve of batch ``k`` (JAX
     async dispatch);
@@ -65,6 +73,12 @@ class BucketPolicy:
     growth: int = 4        # ladder ratio
     max_bucket: int = 32768  # device-memory cap per dispatch
     shard_devices: bool = True  # split mega-batches over local devices
+    tail_decompose: bool = False  # cover the tail with smaller rungs instead
+    #                               of one covering bucket (padding < base)
+
+    # Observed padding-waste fraction above which ``for_device`` drops to a
+    # finer ladder growth.
+    WASTE_THRESHOLD = 0.25
 
     def ladder(self) -> tuple[int, ...]:
         sizes = [self.base]
@@ -81,9 +95,58 @@ class BucketPolicy:
         while remaining >= sizes[-1]:
             out.append(sizes[-1])
             remaining -= sizes[-1]
-        if remaining:
+        if remaining and self.tail_decompose:
+            # Descending run of rungs: each compiles once like any ladder
+            # member, and the final round-up to ``base`` bounds the sentinel
+            # padding by base-1 blocks instead of by the covering rung.
+            for s in reversed(sizes):
+                while remaining >= s:
+                    out.append(s)
+                    remaining -= s
+            if remaining:
+                out.append(sizes[0])
+        elif remaining:
             out.append(next(s for s in sizes if s >= remaining))
         return out
+
+    @classmethod
+    def for_device(
+        cls,
+        m: int,
+        device=None,
+        *,
+        stats: "StreamStats | None" = None,
+        max_bucket_bytes: int = 256 * 1024 * 1024,
+        shard_devices: bool = True,
+    ) -> "BucketPolicy":
+        """VMEM-aware ladder for M x M blocks on ``device``.
+
+        The base bucket is one tile of the fused solve kernel (the binding
+        VMEM constraint among the solver kernels), so every rung is a tile
+        multiple and the kernels never pad a partial tile.  ``max_bucket``
+        caps a dispatch's |W| bytes at ``max_bucket_bytes``.  When ``stats``
+        from earlier streams show more than ``WASTE_THRESHOLD`` padding at
+        some bucket size, the ladder growth drops from 4 to 2 — trading one
+        or two extra compiles for proportionally less sentinel work.
+        """
+        from repro.kernels.fused_solve import fused_block_b
+
+        base = fused_block_b(m, device)
+        max_bucket = max(
+            base, (max_bucket_bytes // (4 * m * m)) // base * base
+        )
+        growth = 4
+        if stats is not None:
+            waste = stats.padding_waste()
+            if waste and max(waste.values()) > cls.WASTE_THRESHOLD:
+                growth = 2
+        return cls(
+            base=base,
+            growth=growth,
+            max_bucket=max_bucket,
+            shard_devices=shard_devices,
+            tail_decompose=True,
+        )
 
 
 @dataclasses.dataclass
@@ -184,8 +247,26 @@ def _block_mesh(ndev: int):
     )
 
 
+def _solve_packed_fn(backend, pattern, config):
+    """Device-side (B, M, M) -> (B, M) uint32 packed solve for ``backend``.
+
+    Backends exposing ``solve_packed`` (the fused kernel) emit the words
+    directly — the mask never exists unpacked on the device; for the rest
+    the bool solve is bit-packed on device, so only the 32x-smaller words
+    ever cross to the host.
+    """
+    from repro.sparsity import bitpack
+
+    if hasattr(backend, "solve_packed"):
+        return lambda blocks: backend.solve_packed(blocks, pattern, config)
+    return lambda blocks: bitpack.pack_rows(
+        backend.solve(blocks, pattern, config)
+    )
+
+
 @functools.lru_cache(maxsize=None)
-def _sharded_solver(backend, n, m, iters, ls_steps, tau_scale, ndev):
+def _sharded_solver(backend, n, m, iters, ls_steps, tau_scale, tol, ndev,
+                    packed):
     """jitted shard_map of ``backend.solve`` over the local-device mesh.
 
     Cached per (backend *instance*, pattern, solver statics, device count) so
@@ -195,11 +276,15 @@ def _sharded_solver(backend, n, m, iters, ls_steps, tau_scale, ndev):
     """
     pattern = PatternSpec(n, m, True)
     config = SolverConfig(
-        iters=iters, ls_steps=ls_steps, tau_scale=tau_scale, backend=backend.name
+        iters=iters, ls_steps=ls_steps, tau_scale=tau_scale, tol=tol,
+        backend=backend.name,
     )
 
-    def solve_shard(blocks):
-        return backend.solve(blocks, pattern, config)
+    if packed:
+        solve_shard = _solve_packed_fn(backend, pattern, config)
+    else:
+        def solve_shard(blocks):
+            return backend.solve(blocks, pattern, config)
 
     fn = compat.shard_map(
         solve_shard,
@@ -217,16 +302,20 @@ def dispatch_batch(
     pattern: PatternSpec,
     config: SolverConfig,
     shard_devices: bool = True,
+    packed: bool = False,
 ) -> tuple[jnp.ndarray, int]:
     """Solve one mega-batch, sharded over local devices when possible.
 
-    Returns ``(mask_blocks, device_pad)`` where ``device_pad`` counts the
-    sentinel blocks appended to make the batch divisible by the device count
-    (already cropped from the returned masks).
+    Returns ``(result, device_pad)`` where ``result`` is (B, M, M) bool
+    masks, or (B, M) uint32 bit-packed rows when ``packed`` (32x less
+    device->host traffic), and ``device_pad`` counts the sentinel blocks
+    appended to make the batch divisible by the device count (already
+    cropped from the result).
     """
     backend = get_backend(config.backend)
     ndev = jax.local_device_count()
-    if shard_devices and ndev > 1 and getattr(backend, "traceable", False):
+    traceable = getattr(backend, "traceable", False)
+    if shard_devices and ndev > 1 and traceable:
         pad = (-batch.shape[0]) % ndev
         if pad:
             batch = np.concatenate(
@@ -234,10 +323,22 @@ def dispatch_batch(
             )
         solver = _sharded_solver(
             backend, pattern.n, pattern.m,
-            config.iters, config.ls_steps, config.tau_scale, ndev,
+            config.iters, config.ls_steps, config.tau_scale, config.tol,
+            ndev, packed,
         )
         solved = solver(batch)
         return (solved[: solved.shape[0] - pad] if pad else solved), pad
+    if packed:
+        if traceable:
+            return _solve_packed_fn(backend, pattern, config)(
+                jnp.asarray(batch)
+            ), 0
+        from repro.sparsity import bitpack
+
+        # Host-side backend (e.g. "exact"): pack on the host and stay there
+        # — the consumer scatters from host memory anyway.
+        solved = np.asarray(backend.solve(jnp.asarray(batch), pattern, config))
+        return bitpack.pack_rows_np(solved), 0
     return backend.solve(jnp.asarray(batch), pattern, config), 0
 
 
@@ -247,9 +348,13 @@ def solve_stream(
     config: SolverConfig = SolverConfig(),
     policy: BucketPolicy = BucketPolicy(),
     stats: StreamStats | None = None,
+    packed: bool = False,
 ) -> list[np.ndarray]:
     """Solve a list of per-tensor (B_i, M, M) block streams as one bucketed
-    mega-batch sequence; returns per-tensor bool mask block streams.
+    mega-batch sequence; returns per-tensor bool mask block streams — or,
+    with ``packed=True``, per-tensor (B_i, M) uint32 bit-packed mask rows
+    (``repro.sparsity.bitpack`` layout; 32x less device->host traffic, and
+    the format the service cache stores verbatim).
 
     All arrays must share the same M.  The concatenated stream is cut at
     bucket boundaries regardless of tensor boundaries, so one tensor may span
@@ -291,15 +396,26 @@ def solve_stream(
             parts.append(np.zeros((bucket - filled, m, m), np.float32))
         batch = np.concatenate(parts, axis=0) if len(parts) > 1 else parts[0]
         solved, device_pad = dispatch_batch(
-            batch, spec, config, shard_devices=policy.shard_devices
+            batch, spec, config, shard_devices=policy.shard_devices,
+            packed=packed,
         )
         for st in (stats, local):
             st.note_batch(bucket, filled, (bucket - filled) + device_pad)
         pending.append((solved, segmap))
 
-    outs = [
-        np.empty((a.shape[0], m, m), dtype=bool) for a in block_arrays
-    ]
+    if packed:
+        from repro.sparsity.bitpack import words_per_row
+
+        wpr = words_per_row(m)
+        word_shape = (m,) if wpr == 1 else (m, wpr)
+        outs = [
+            np.empty((a.shape[0],) + word_shape, dtype=np.uint32)
+            for a in block_arrays
+        ]
+    else:
+        outs = [
+            np.empty((a.shape[0], m, m), dtype=bool) for a in block_arrays
+        ]
     for solved, segmap in pending:
         host = np.asarray(solved)  # blocks until this bucket's solve is done
         for tensor_idx, tensor_off, count, bucket_off in segmap:

@@ -1,12 +1,30 @@
-"""N:M sparsity substrate: mask application, compressed storage formats."""
-from repro.sparsity.compressed import compress_nm, decompress_nm, compressed_bytes
-from repro.sparsity.masks import apply_mask, mask_sparsity, sparsify_pytree
+"""N:M sparsity substrate: mask application, compressed storage formats,
+bit-packed mask rows.
 
-__all__ = [
-    "compress_nm",
-    "decompress_nm",
-    "compressed_bytes",
-    "apply_mask",
-    "mask_sparsity",
-    "sparsify_pytree",
-]
+Re-exports are lazy (PEP 562): ``repro.sparsity.bitpack`` is imported by
+the mask-service cache, which is itself imported by ``sparsity.masks`` —
+eager re-exports here would close that cycle.
+"""
+
+_EXPORTS = {
+    "compress_nm": "repro.sparsity.compressed",
+    "decompress_nm": "repro.sparsity.compressed",
+    "compressed_bytes": "repro.sparsity.compressed",
+    "apply_mask": "repro.sparsity.masks",
+    "mask_sparsity": "repro.sparsity.masks",
+    "sparsify_pytree": "repro.sparsity.masks",
+}
+
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        import importlib
+
+        return getattr(importlib.import_module(_EXPORTS[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

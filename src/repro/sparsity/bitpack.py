@@ -1,0 +1,103 @@
+"""Bit-packed mask rows: the wire/cache format of the fused solve pipeline.
+
+A solved (B, M, M) boolean block mask is stored as ``uint32`` row words,
+bit ``j`` (LSB-first) of word ``k`` = column ``32k + j``:
+
+* M <= 32 (every pattern the paper evaluates, and the only layout the
+  ``pallas-fused`` kernel emits): one word per row — shape (B, M), a 32x
+  cut in mask write bandwidth at M=32;
+* M > 32 (service generality): ``W = ceil(M/32)`` words per row — shape
+  (B, M, W).
+
+The service cache stores these words verbatim (``cache_format=3``), so a
+fused solve feeds the cache without any host-side repacking round-trip.
+
+Both jnp (device, traceable) and numpy (host) variants are provided; they
+are bit-for-bit interchangeable.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+MAX_M = 32  # single-word rows; the fused kernel's (and row-word) fast path
+
+
+def words_per_row(m: int) -> int:
+    if m < 1:
+        raise ValueError(f"mask rows need m >= 1, got {m}")
+    return -(-m // 32)
+
+
+def pack_rows(mask_blocks: jnp.ndarray) -> jnp.ndarray:
+    """(..., M, M) bool -> (..., M) uint32 (M <= 32) or (..., M, W) uint32.
+
+    Bit j (LSB-first) of word k = column 32k + j.  Traceable.
+    """
+    m = mask_blocks.shape[-1]
+    w = words_per_row(m)
+    segs = []
+    for k in range(w):
+        seg = mask_blocks[..., 32 * k : min(32 * (k + 1), m)]
+        weights = jnp.left_shift(
+            jnp.uint32(1), jnp.arange(seg.shape[-1], dtype=jnp.uint32)
+        )
+        segs.append(
+            jnp.sum(jnp.where(seg, weights, jnp.uint32(0)), axis=-1,
+                    dtype=jnp.uint32)
+        )
+    return segs[0] if w == 1 else jnp.stack(segs, axis=-1)
+
+
+def unpack_rows(words: jnp.ndarray, m: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_rows`: row words -> (..., M, M) bool."""
+    w = words_per_row(m)
+    if w == 1:
+        shifts = jnp.arange(m, dtype=jnp.uint32)
+        return (
+            jnp.right_shift(words[..., None], shifts) & jnp.uint32(1)
+        ).astype(bool)
+    cols = []
+    for k in range(w):
+        width = min(32, m - 32 * k)
+        shifts = jnp.arange(width, dtype=jnp.uint32)
+        cols.append(
+            (jnp.right_shift(words[..., k, None], shifts) & jnp.uint32(1))
+            .astype(bool)
+        )
+    return jnp.concatenate(cols, axis=-1)
+
+
+def pack_rows_np(mask_blocks: np.ndarray) -> np.ndarray:
+    """Host-side twin of :func:`pack_rows`."""
+    mask_blocks = np.asarray(mask_blocks, bool)
+    m = mask_blocks.shape[-1]
+    w = words_per_row(m)
+    segs = []
+    for k in range(w):
+        seg = mask_blocks[..., 32 * k : min(32 * (k + 1), m)]
+        weights = np.left_shift(
+            np.uint32(1), np.arange(seg.shape[-1], dtype=np.uint32)
+        )
+        segs.append(
+            np.sum(np.where(seg, weights, np.uint32(0)), axis=-1,
+                   dtype=np.uint32)
+        )
+    return segs[0] if w == 1 else np.stack(segs, axis=-1)
+
+
+def unpack_rows_np(words: np.ndarray, m: int) -> np.ndarray:
+    """Host-side twin of :func:`unpack_rows`."""
+    words = np.asarray(words, np.uint32)
+    w = words_per_row(m)
+    if w == 1:
+        shifts = np.arange(m, dtype=np.uint32)
+        return ((words[..., None] >> shifts) & np.uint32(1)).astype(bool)
+    cols = []
+    for k in range(w):
+        width = min(32, m - 32 * k)
+        shifts = np.arange(width, dtype=np.uint32)
+        cols.append(
+            ((words[..., k, None] >> shifts) & np.uint32(1)).astype(bool)
+        )
+    return np.concatenate(cols, axis=-1)

@@ -335,8 +335,8 @@ class TestMeshDispatch:
         rng = np.random.default_rng(9)
         blocks = np.abs(rng.normal(size=(12, 8, 8))).astype(np.float32)
         fn = _sharded_solver(get_backend("dense-jit"), 4, 8, FAST.iters,
-                             FAST.ls_steps, FAST.tau_scale,
-                             jax.local_device_count())
+                             FAST.ls_steps, FAST.tau_scale, FAST.tol,
+                             jax.local_device_count(), False)
         got = np.array(fn(blocks))
         want = np.array(get_backend("dense-jit").solve(
             jnp.asarray(blocks), PatternSpec(4, 8), FAST))
@@ -397,7 +397,7 @@ def test_stream_stats_padding_waste():
 # ---------------------------------------------------------------------------
 
 
-def test_cache_packbits_and_legacy_format(tmp_path):
+def test_cache_packed_words_and_legacy_formats(tmp_path):
     from repro.checkpoint import ContentStore
     from repro.service.cache import MaskCache
 
@@ -407,14 +407,23 @@ def test_cache_packbits_and_legacy_format(tmp_path):
     cache = MaskCache(store)
     cache.put("k-new", mask)
     payload = dict(np.load(str(tmp_path / "k-new.npz")))
-    assert "mask_bits" in payload and int(payload["cache_format"]) == 2
-    assert payload["mask_bits"].nbytes < mask.nbytes // 7  # ~8x smaller
+    assert "mask_words" in payload and int(payload["cache_format"]) == 3
+    assert payload["mask_words"].shape == (5, 8)  # one uint32 word per row
 
-    store.put("k-old", mask=mask)  # a v1 raw-bool entry from an old run
+    store.put("k-v1", mask=mask)  # a v1 raw-bool entry from an old run
+    store.put(  # a v2 np.packbits entry from a PR-2-era run
+        "k-v2",
+        mask_bits=np.packbits(mask.reshape(-1)),
+        shape=np.asarray(mask.shape, np.int64),
+        cache_format=np.asarray(2, np.int64),
+    )
     fresh = MaskCache(ContentStore(str(tmp_path)))
     assert (fresh.get("k-new") == mask).all()
-    assert (fresh.get("k-old") == mask).all()
-    assert fresh.disk_hits == 2
+    assert (fresh.get("k-v1") == mask).all()
+    assert (fresh.get("k-v2") == mask).all()
+    assert fresh.disk_hits == 3
+    words, shape = fresh.get_packed("k-v1")
+    assert shape == mask.shape and words.dtype == np.uint32
 
 
 def test_prune_fn_legacy_n_keyword():

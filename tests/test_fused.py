@@ -1,0 +1,266 @@
+"""pallas-fused single-pass solve: bit-identity, early exit, bit-packing,
+VMEM plans and the VMEM-aware bucket ladder (interpret mode)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import PatternSpec, SolverConfig, get_backend, is_transposable_nm
+from repro.core.dykstra import dykstra_log
+from repro.core.solver import nm_mask, objective, solve_mask
+from repro.kernels.fused_solve.kernel import fused_block_b, fused_solve_pallas
+from repro.kernels.fused_solve.ref import fused_solve_ref
+from repro.kernels.rounding.kernel import default_rounding_block_b
+from repro.kernels.vmem import VPU_ALIGN, vmem_plan
+from repro.service.scheduler import BucketPolicy, StreamStats
+from repro.sparsity import bitpack
+
+RNG = np.random.default_rng(7)
+
+PATTERNS = [
+    ("t1:4", 5), ("t2:4", 9), ("t4:8", 6), ("t16:32", 3),
+]
+
+
+def _blocks(b, m, seed=None):
+    rng = np.random.default_rng(seed) if seed is not None else RNG
+    return np.abs(rng.normal(size=(b, m, m))).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Mask identity: pallas-fused == dense-jit at tol=0.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("pattern,b", PATTERNS)
+def test_fused_backend_mask_identical_to_dense_jit(pattern, b):
+    spec = PatternSpec.parse(pattern)
+    config = SolverConfig(iters=80, backend="pallas-fused")
+    blocks = jnp.asarray(_blocks(b, spec.m))
+    got = np.array(get_backend("pallas-fused").solve(blocks, spec, config))
+    want = np.array(get_backend("dense-jit").solve(blocks, spec, config))
+    assert (got == want).all()
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_fused_kernel_identical_to_ref_random_shapes(seed):
+    """Property sweep: random (B, M, N) vs the XLA reference, incl. tile
+    padding (B not a multiple of block_b) and duplicate magnitudes."""
+    rng = np.random.default_rng(100 + seed)
+    m = int(rng.choice([2, 4, 6, 8, 16, 32]))
+    n = int(rng.integers(1, m + 1))
+    b = int(rng.integers(1, 20))
+    w = np.abs(rng.normal(size=(b, m, m))).astype(np.float32)
+    if seed % 2:  # force ties: quantize magnitudes
+        w = np.round(w, 1)
+    words, _ = fused_solve_pallas(jnp.asarray(w), n, iters=60, block_b=8)
+    ref = fused_solve_ref(jnp.asarray(w), n, iters=60)
+    assert (np.array(words) == np.array(ref)).all(), (m, n, b)
+
+
+@pytest.mark.parametrize("m,n", [(3, 1), (6, 3), (12, 5)])
+def test_fused_non_power_of_two_m_identical(m, n):
+    """Odd/non-power-of-two block sides go through the sentinel-padded
+    bitonic sort and must still match dense-jit exactly."""
+    w = jnp.asarray(_blocks(7, m, seed=21))
+    words, _ = fused_solve_pallas(w, n, iters=60, block_b=8)
+    assert (np.array(words) == np.array(fused_solve_ref(w, n, iters=60))).all()
+
+
+def test_fused_solve_mask_end_to_end():
+    """Whole-matrix solve through solve_mask with pad/crop geometry."""
+    w = RNG.normal(size=(20, 12)).astype(np.float32)
+    spec = PatternSpec(2, 4)
+    got = np.array(solve_mask(jnp.asarray(w), spec,
+                              SolverConfig(iters=60, backend="pallas-fused")))
+    want = np.array(solve_mask(jnp.asarray(w), spec, SolverConfig(iters=60)))
+    assert (got == want).all()
+
+
+# ---------------------------------------------------------------------------
+# Early exit (tol > 0): feasible masks, objective within 0.1% of full-T.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("pattern", ["t2:4", "t4:8", "t16:32"])
+def test_fused_early_exit_feasible_and_near_optimal(pattern):
+    spec = PatternSpec.parse(pattern)
+    w = _blocks(24, spec.m, seed=13)
+    full = SolverConfig(iters=300, backend="pallas-fused")
+    early = SolverConfig(iters=300, backend="pallas-fused", tol=1e-4)
+    backend = get_backend("pallas-fused")
+    mask_full = np.array(backend.solve(jnp.asarray(w), spec, full))
+    mask_early = np.array(backend.solve(jnp.asarray(w), spec, early))
+    for blk in mask_early:
+        assert is_transposable_nm(blk, spec.n, spec.m)
+    obj_full = sum(float(objective(mask_full[i], w[i])) for i in range(len(w)))
+    obj_early = sum(float(objective(mask_early[i], w[i])) for i in range(len(w)))
+    assert obj_early >= 0.999 * obj_full
+
+
+def test_dense_jit_while_loop_early_exit_matches_semantics():
+    """The dense path's tol mirrors the kernel: bounded iterations, reported
+    count, and tol=0 bit-identical to the historical fori_loop."""
+    w = jnp.asarray(_blocks(8, 8, seed=14))
+    s_fixed = np.array(dykstra_log(w, 4, iters=60))
+    s_tol0 = np.array(dykstra_log(w, 4, iters=60, tol=0.0))
+    assert (s_fixed == s_tol0).all()
+    _, it = dykstra_log(w, 4, iters=300, tol=0.3, return_iters=True)
+    assert 0 < int(it) <= 300
+    _, it_full = dykstra_log(w, 4, iters=300, return_iters=True)
+    assert int(it_full) == 300
+    # A loose tolerance must actually exit early on this batch.
+    assert int(it) < 300
+
+
+def test_fused_tile_iters_reported():
+    w = jnp.asarray(_blocks(20, 8, seed=15))
+    _, tile_iters = fused_solve_pallas(w, 4, iters=300, tol=5e-2, block_b=8)
+    assert tile_iters.shape == (3,)  # ceil(20/8) tiles
+    assert (np.array(tile_iters) <= 300).all() and (np.array(tile_iters) > 0).all()
+
+
+@pytest.mark.parametrize("iters", [1, 2, 4, 5, 9])
+def test_fused_adaptive_mode_honors_small_iteration_caps(iters):
+    """The chunked convergence loop must land exactly on a cap smaller than
+    (or not divisible by) its check stride, not skip the loop entirely."""
+    w = jnp.asarray(_blocks(8, 8, seed=17))
+    _, tile_iters = fused_solve_pallas(w, 4, iters=iters, tol=1e-9, block_b=8)
+    assert int(np.array(tile_iters)[0]) == iters
+
+
+# ---------------------------------------------------------------------------
+# Bit-packed output.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m", [1, 4, 8, 31, 32, 40, 64, 70])
+def test_bitpack_roundtrip_exact(m):
+    mask = RNG.random((3, m, m)) > 0.4
+    words = bitpack.pack_rows_np(mask)
+    assert words.dtype == np.uint32
+    assert (bitpack.unpack_rows_np(words, m) == mask).all()
+    words_j = np.array(bitpack.pack_rows(jnp.asarray(mask)))
+    assert (words_j == words).all()
+    assert (np.array(bitpack.unpack_rows(jnp.asarray(words), m)) == mask).all()
+
+
+def test_fused_packed_output_unpacks_to_solve_mask():
+    spec = PatternSpec(4, 8)
+    config = SolverConfig(iters=60, backend="pallas-fused")
+    blocks = jnp.asarray(_blocks(10, 8, seed=16))
+    backend = get_backend("pallas-fused")
+    words = np.array(backend.solve_packed(blocks, spec, config))
+    assert words.shape == (10, 8) and words.dtype == np.uint32
+    mask = np.array(backend.solve(blocks, spec, config))
+    assert (bitpack.unpack_rows_np(words, 8) == mask).all()
+
+
+def test_fused_backend_rejects_wide_blocks():
+    spec = PatternSpec(2, 64)
+    config = SolverConfig(iters=10, backend="pallas-fused")
+    with pytest.raises(ValueError, match="M <= 32"):
+        get_backend("pallas-fused").solve(
+            jnp.asarray(_blocks(2, 64)), spec, config
+        )
+
+
+# ---------------------------------------------------------------------------
+# nm_mask non-multiple rows (satellite regression).
+# ---------------------------------------------------------------------------
+
+
+def test_nm_mask_pads_non_multiple_rows():
+    w = RNG.normal(size=(10, 6)).astype(np.float32)  # 10 % 4 != 0
+    mask = np.array(nm_mask(jnp.asarray(w), 2, 4, axis=0))
+    assert mask.shape == (10, 6)
+    # Full groups keep exactly N; the partial 2-row group keeps min(n, size).
+    assert (mask[:8].reshape(2, 4, 6).sum(1) == 2).all()
+    assert (mask[8:].sum(0) == 2).all()
+    # Real entries must win over the zero padding: padded result == computing
+    # on the explicitly padded matrix then cropping.
+    wp = np.concatenate([w, np.zeros((2, 6), np.float32)])
+    want = np.array(nm_mask(jnp.asarray(wp), 2, 4, axis=0))[:10]
+    assert (mask == want).all()
+    # axis=1 goes through the same path via transpose
+    mask1 = np.array(nm_mask(jnp.asarray(w.T), 2, 4, axis=1))
+    assert (mask1 == mask.T).all()
+
+
+def test_solve_mask_standard_pattern_non_multiple():
+    w = RNG.normal(size=(13, 8)).astype(np.float32)
+    mask = np.array(solve_mask(jnp.asarray(w), PatternSpec(2, 4, False)))
+    assert mask.shape == (13, 8)
+
+
+# ---------------------------------------------------------------------------
+# VMEM plan + VMEM-aware bucket ladder.
+# ---------------------------------------------------------------------------
+
+
+def test_vmem_plan_budget_and_alignment():
+    for m in (4, 8, 16, 32):
+        for live in (3, 4, 6):
+            plan = vmem_plan(m, live_buffers=live)
+            assert plan.block_b % VPU_ALIGN == 0
+            assert plan.block_b & (plan.block_b - 1) == 0  # power of two
+            assert plan.tile_bytes() <= plan.budget_bytes or \
+                plan.block_b == VPU_ALIGN
+    # More live buffers can never mean a bigger tile.
+    assert vmem_plan(32, live_buffers=6).block_b <= \
+        vmem_plan(32, live_buffers=4).block_b
+
+
+def test_kernel_tiles_derive_from_vmem_plan():
+    assert fused_block_b(32) == vmem_plan(32, live_buffers=6).block_b
+    assert default_rounding_block_b(16) == vmem_plan(16, live_buffers=3).block_b
+
+
+def test_bucket_policy_for_device_tile_aligned():
+    policy = BucketPolicy.for_device(32)
+    tile = fused_block_b(32)
+    assert policy.base == tile
+    for rung in policy.ladder():
+        assert rung % tile == 0
+    # |W| bytes per dispatch stay under the cap.
+    assert policy.max_bucket * 32 * 32 * 4 <= 256 * 1024 * 1024
+
+
+def test_bucket_policy_tail_decompose_bounds_padding():
+    policy = BucketPolicy(base=8, growth=4, max_bucket=128, tail_decompose=True)
+    plan = policy.plan(128 * 3 + 41)  # tail 41 -> 32 + 8 + 8 (padding 7 < 8)
+    assert plan == [128, 128, 128, 32, 8, 8]
+    assert sum(plan) - (128 * 3 + 41) < policy.base
+    # Default (covering) behavior unchanged.
+    assert BucketPolicy(base=8, growth=4, max_bucket=128).plan(9) == [32]
+
+
+def test_bucket_policy_growth_adapts_to_observed_waste():
+    wasteful = StreamStats()
+    wasteful.note_batch(512, real=100, padded=412)  # 80% waste
+    lean = StreamStats()
+    lean.note_batch(512, real=512, padded=0)
+    assert BucketPolicy.for_device(8, stats=wasteful).growth == 2
+    assert BucketPolicy.for_device(8, stats=lean).growth == 4
+    assert BucketPolicy.for_device(8, stats=None).growth == 4
+
+
+# ---------------------------------------------------------------------------
+# Packed service path (cache + scheduler round-trip).
+# ---------------------------------------------------------------------------
+
+
+def test_service_packed_path_bit_exact_with_fused_backend(tmp_path):
+    from repro.service import MaskService
+
+    w = RNG.normal(size=(40, 24)).astype(np.float32)
+    spec = PatternSpec(4, 8)
+    config = SolverConfig(iters=60, backend="pallas-fused")
+    svc = MaskService(config, directory=str(tmp_path))
+    got = np.array(svc.solve(w, spec, name="w"))
+    want = np.array(solve_mask(jnp.asarray(w), spec, SolverConfig(iters=60)))
+    assert (got == want).all()
+    # The store payload is the packed-words v3 format, served back verbatim.
+    svc2 = MaskService(config, directory=str(tmp_path))
+    got2 = np.array(svc2.solve(w, spec, name="w"))
+    assert (got2 == want).all()
+    assert svc2.stats.blocks_solved == 0 and svc2.cache.disk_hits == 1
