@@ -16,6 +16,13 @@ frameworks" lives here:
   workloads with bucketed mega-batches, multi-device sharding, caching and
   journaled resume.
 
+Every pruning method routes its transposable mask solves through the
+service: importance-scored methods (Wanda, magnitude) as one up-front
+batch, sequential methods (SparseGPT, ALPS) through the ``solve_plan``
+generator protocol driven by :func:`repro.pruning.plan.drive_solve_plans`
+— so the fused backend, bucketed mega-batches, bit-packed transport and
+content cache apply uniformly.
+
 Typical use::
 
     from repro.api import MaskService, PatternSpec, SolverConfig
@@ -24,7 +31,8 @@ Typical use::
     mask = service.solve(w, PatternSpec(2, 4))
 
 See ``examples/custom_backend.py`` for registering a custom solver backend
-and pruning method.
+and pruning method, ``docs/architecture.md`` for the layer map and solve
+request lifecycle, and ``docs/solver_math.md`` for the algorithm.
 """
 from repro.patterns import PatternSpec, pattern_from_args
 from repro.core.backends import (

@@ -39,7 +39,17 @@ Third parties register their own::
 ``traceable`` declares the solve is pure JAX, which lets the service
 scheduler wrap it in ``shard_map`` for multi-device mega-batch dispatch;
 host-side backends (like ``"exact"``) set it False and are dispatched on a
-single device.
+single device.  A backend may additionally expose
+``solve_packed(w_abs_blocks, pattern, config) -> (B, M) uint32`` returning
+bit-packed mask rows (``repro.sparsity.bitpack`` layout); the scheduler and
+cache consume those verbatim, skipping the unpack/repack round-trip.
+
+Every mask in the repo comes through here: ``solve_mask`` for one tensor,
+``MaskService`` mega-batches for whole models, and — since the
+``solve_plan`` routing — SparseGPT/ALPS sequential sweeps as well, so a
+registered backend accelerates every pruning framework at once.  See
+``docs/architecture.md`` ("which backend when") for selection guidance and
+``docs/solver_math.md`` for the algorithm the built-ins implement.
 """
 from __future__ import annotations
 
@@ -57,7 +67,13 @@ from repro.patterns import PatternSpec
 
 @runtime_checkable
 class SolverBackend(Protocol):
-    """Protocol every solver backend implements."""
+    """Protocol every solver backend implements.
+
+    ``name`` keys the registry (``SolverConfig.backend`` selects by it);
+    ``traceable`` declares the solve safe under jit/``shard_map``.  The
+    optional ``solve_packed`` method (see module docstring) returns
+    bit-packed uint32 mask rows instead of bool blocks.
+    """
 
     name: str
     traceable: bool

@@ -10,7 +10,8 @@ is delegated to a pluggable :mod:`repro.core.backends` entry selected by
 The canonical entry points are :func:`solve_mask` (one tensor, any
 :class:`repro.patterns.PatternSpec`) and — for whole-model workloads —
 ``repro.service.MaskService.solve``.  ``transposable_nm_mask(w, n, m)`` is
-kept as a deprecated shim.
+kept as a deprecated shim.  The algorithm is documented in
+``docs/solver_math.md``; dispatch and batching in ``docs/architecture.md``.
 """
 from __future__ import annotations
 

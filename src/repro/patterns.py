@@ -12,6 +12,8 @@ Canonical string form (accepted everywhere a pattern is accepted):
     "2:4"     standard row-wise 2:4
 
 The module is dependency-free (no jax/numpy) so every layer can import it.
+See ``docs/architecture.md`` for where PatternSpec sits in the layer map and
+``docs/solver_math.md`` for what the transposable constraint means.
 """
 from __future__ import annotations
 

@@ -12,8 +12,19 @@ changing penalty ρ_t is two dense matmuls:
 The Assumption-1 safeguard keeps the previous mask whenever the new one would
 *decrease* the D-subproblem objective — this is what makes Theorem 1
 (convergence of W(t), D(t) to a common limit) hold with an inexact mask
-solver.  ρ_t grows geometrically so Σ 1/ρ_t < ∞.  The whole ADMM loop is one
-jitted ``lax.fori_loop`` with the TSENOR solve inlined.
+solver.  ρ_t grows geometrically so Σ 1/ρ_t < ∞.
+
+Like SparseGPT (see ``repro.pruning.sparsegpt``), three solve routes share
+the same per-iteration compute chain (``solve_via=``): ``"service"``
+(default) drives the ADMM loop from the host with the W/D/V updates jitted
+(:func:`_alps_w_step` / :func:`_alps_apply_mask`) and every projection-step
+mask solve routed through a batched :class:`~repro.service.MaskService` —
+:func:`alps_solve_plan` exposes the same structure to the lockstep driver in
+:mod:`repro.pruning.plan`; ``"callback"`` keeps ONE jitted ``lax.scan`` and
+escapes to the service via ``io_callback``; ``"inline"`` is the historical
+single-jit ``fori_loop`` with the TSENOR solve inlined, kept as the
+bit-identity reference.  All three match bit for bit at
+``SolverConfig.tol = 0`` (``tests/test_pruning_service.py``).
 """
 from __future__ import annotations
 
@@ -27,11 +38,21 @@ from repro.core import blocks as blk
 from repro.core.dykstra import dykstra_log
 from repro.core.rounding import round_blocks
 from repro.core.solver import SolverConfig
-from repro.patterns import pattern_from_args
+from repro.patterns import PatternSpec, pattern_from_args
 
 
 @dataclasses.dataclass(frozen=True)
 class AlpsConfig:
+    """ADMM hyper-parameters for :func:`alps_prune`.
+
+    ``rho0_rel`` scales the initial penalty by ``mean(diag H)``;
+    ``rho_growth`` is the geometric growth factor (Σ 1/ρ_t < ∞ ⇒ Thm. 1
+    applies); ``solver`` configures the per-iteration TSENOR mask solves
+    (on the ``"service"`` route the service's own :class:`SolverConfig`
+    governs them instead — pass the same config to both, as
+    ``prune_transformer`` does).
+    """
+
     iters: int = 80
     rho0_rel: float = 0.03       # rho0 = rho0_rel * mean(diag H)
     rho_growth: float = 1.05
@@ -50,6 +71,102 @@ def _mask_for(scores, n, m, transposable, iters, ls_steps, tau_scale):
     g = scores.reshape(r // m, m, c)
     rank = jnp.argsort(jnp.argsort(-g, axis=1), axis=1)
     return (rank < n).reshape(r, c)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "m"))
+def _topn_mask(scores, n, m):
+    """Standard (non-transposable) N:M mask along the input groups."""
+    r, c = scores.shape
+    g = scores.reshape(r // m, m, c)
+    rank = jnp.argsort(jnp.argsort(-g, axis=1), axis=1)
+    return (rank < n).reshape(r, c)
+
+
+@jax.jit
+def _alps_prep(w_hat, h):
+    """One-time ADMM setup: eigendecomposition and the fixed H·What term."""
+    evals, q = jnp.linalg.eigh(h)
+    return evals, q, h @ w_hat
+
+
+@jax.jit
+def _alps_obj(w_hat, h, d):
+    """Layer-wise objective 0.5 ||X(D - What)||² expressed through H."""
+    diff = d - w_hat
+    return 0.5 * jnp.sum(diff * (h @ diff))
+
+
+@jax.jit
+def _alps_w_step(q, evals, hw, v, d, rho):
+    """W-update + projection target (the solve request of one iteration)."""
+    w = q @ ((q.T @ (hw - v + rho * d)) / (evals + rho)[:, None])
+    target = w + v / rho
+    return w, target, target**2
+
+
+@functools.partial(jax.jit, static_argnames=("rho_growth",))
+def _alps_apply_mask(
+    w_hat, h, mask, scores, new_mask, target, w, v, rho, rho_growth,
+    best_d, best_mask, best_obj,
+):
+    """Post-solve half of one ADMM iteration: Assumption-1 safeguard, D/V
+    updates, penalty growth and best-iterate tracking."""
+    keep_new = jnp.sum(scores * new_mask) >= jnp.sum(scores * mask)
+    mask = jnp.where(keep_new, new_mask, mask)
+    d = jnp.where(mask, target, 0.0)
+    v = v + rho * (w - d)
+    rho = rho * rho_growth
+    diff = d - w_hat
+    obj = 0.5 * jnp.sum(diff * (h @ diff))
+    better = obj < best_obj
+    best_d = jnp.where(better, d, best_d)
+    best_mask = jnp.where(better, mask, best_mask)
+    best_obj = jnp.where(better, obj, best_obj)
+    return mask, d, v, rho, best_d, best_mask, best_obj
+
+
+def alps_solve_plan(
+    w_hat: jnp.ndarray,
+    h: jnp.ndarray,
+    pattern,
+    config: AlpsConfig = AlpsConfig(),
+):
+    """The ``solve_plan`` generator for ALPS (see ``repro.pruning.plan``).
+
+    Yields the projection-step score matrix of every ADMM iteration (plus
+    the |What| init solve) and expects the solved boolean mask back via
+    ``send``; returns ``(best ADMM D iterate, mask)``.  Everything between
+    yields — W-update, safeguard, D/V updates, best tracking — is jitted.
+
+    For non-transposable patterns no request is yielded; the cheap top-N
+    mask replaces every solve and the generator returns after zero sweeps
+    of service traffic.
+    """
+    spec = PatternSpec.coerce(pattern)
+    w_hat = jnp.asarray(w_hat, jnp.float32)
+    h = jnp.asarray(h, jnp.float32)
+    rho0 = float(config.rho0_rel) * float(jnp.mean(jnp.diag(h)))
+    evals, q, hw = _alps_prep(w_hat, h)
+
+    def solve(scores):
+        if spec.transposable:
+            mask = yield scores
+            return jnp.asarray(mask, bool)
+        return _topn_mask(scores, spec.n, spec.m)
+
+    mask = yield from solve(jnp.abs(w_hat))
+    d = jnp.where(mask, w_hat, 0.0)
+    v = jnp.zeros_like(w_hat)
+    rho = jnp.float32(rho0)
+    best_d, best_mask, best_obj = d, mask, _alps_obj(w_hat, h, d)
+    for _ in range(config.iters):
+        w, target, scores = _alps_w_step(q, evals, hw, v, d, rho)
+        new_mask = yield from solve(scores)
+        mask, d, v, rho, best_d, best_mask, best_obj = _alps_apply_mask(
+            w_hat, h, mask, scores, new_mask, target, w, v, rho,
+            float(config.rho_growth), best_d, best_mask, best_obj,
+        )
+    return best_d, best_mask
 
 
 @functools.partial(
@@ -103,6 +220,70 @@ def _alps_jit(
     return best_d, best_mask
 
 
+def _callback_admm(service, spec: PatternSpec, iters: int, rho_growth: float):
+    """One jitted ADMM loop whose projection solves escape to ``service``
+    through ``io_callback`` — the ``solve_via="callback"`` program.
+
+    Uses ``lax.scan`` over iterations (same carry chain as the inline
+    ``fori_loop``) because ordered host callbacks thread a token that scan
+    handles natively.  The compiled program is cached on the service
+    instance (see ``sparsegpt._service_program_cache``), so pass a
+    persistent service for cross-call reuse.
+    """
+    from repro.pruning.sparsegpt import _service_program_cache
+
+    cache = _service_program_cache(service)
+    key = ("alps", spec, iters, rho_growth)
+    if key in cache:
+        return cache[key]
+
+    from jax.experimental import io_callback
+
+    def host_solve(scores):
+        return jax.device_get(service.solve(scores, spec)).astype(bool)
+
+    @jax.jit
+    def run(w_hat, h, rho0):
+        evals, q = jnp.linalg.eigh(h)
+        hw = h @ w_hat
+        shape = jax.ShapeDtypeStruct(w_hat.shape, bool)
+
+        def layer_obj(d):
+            diff = d - w_hat
+            return 0.5 * jnp.sum(diff * (h @ diff))
+
+        mask0 = io_callback(host_solve, shape, jnp.abs(w_hat), ordered=True)
+        d0 = jnp.where(mask0, w_hat, 0.0)
+        v0 = jnp.zeros_like(w_hat)
+
+        def body(carry, _):
+            mask, d, v, rho, best_d, best_mask, best_obj = carry
+            w = q @ ((q.T @ (hw - v + rho * d)) / (evals + rho)[:, None])
+            target = w + v / rho
+            scores = target**2
+            new_mask = io_callback(host_solve, shape, scores, ordered=True)
+            keep_new = jnp.sum(scores * new_mask) >= jnp.sum(scores * mask)
+            mask = jnp.where(keep_new, new_mask, mask)
+            d = jnp.where(mask, target, 0.0)
+            v = v + rho * (w - d)
+            rho = rho * rho_growth
+            obj = layer_obj(d)
+            better = obj < best_obj
+            best_d = jnp.where(better, d, best_d)
+            best_mask = jnp.where(better, mask, best_mask)
+            best_obj = jnp.where(better, obj, best_obj)
+            return (mask, d, v, rho, best_d, best_mask, best_obj), None
+
+        init = (mask0, d0, v0, rho0, d0, mask0, layer_obj(d0))
+        (_, _, _, _, best_d, best_mask, _), _ = jax.lax.scan(
+            body, init, None, length=iters
+        )
+        return best_d, best_mask
+
+    cache[key] = run
+    return run
+
+
 def alps_prune(
     w_hat: jnp.ndarray,
     h: jnp.ndarray,
@@ -112,26 +293,58 @@ def alps_prune(
     config: AlpsConfig = AlpsConfig(),
     *,
     n=None,
+    solve_via: str = "service",
+    service=None,
 ):
     """Returns (pruned W = best ADMM D iterate, mask).
 
-    ``pattern``: :class:`~repro.patterns.PatternSpec` (or canonical string);
-    the deprecated ``(n, m[, transposable])`` triple still works.
+    Args:
+      w_hat: (in, out) dense weights; ``h``: damped Gram (in, in).
+      pattern: :class:`~repro.patterns.PatternSpec` (or canonical string);
+        the deprecated ``(n, m[, transposable])`` triple still works.
+      config: :class:`AlpsConfig` ADMM hyper-parameters.
+      solve_via: ``"service"`` (default) routes every ADMM projection solve
+        through a batched :class:`~repro.service.MaskService`;
+        ``"callback"`` keeps one jitted loop and escapes via
+        ``io_callback``; ``"inline"`` is the historical single-jit path.
+        All three are bit-identical at ``tol = 0``.
+      service: the :class:`~repro.service.MaskService` to route through;
+        a per-call in-memory one built from ``config.solver`` by default.
+
+    See ``docs/architecture.md`` ("which route when") for guidance.
     """
     spec = pattern_from_args(pattern, m, transposable, n=n, caller="alps_prune")
     w_hat = jnp.asarray(w_hat, jnp.float32)
     h = jnp.asarray(h, jnp.float32)
     rho0 = float(config.rho0_rel) * float(jnp.mean(jnp.diag(h)))
-    return _alps_jit(
-        w_hat,
-        h,
-        spec.n,
-        spec.m,
-        spec.transposable,
-        config.iters,
-        rho0,
-        config.rho_growth,
-        config.solver.iters,
-        config.solver.ls_steps,
-        config.solver.tau_scale,
-    )
+    if solve_via not in ("service", "callback", "inline"):
+        raise ValueError(
+            f"alps_prune: unknown solve_via {solve_via!r} "
+            "(expected 'service', 'callback' or 'inline')"
+        )
+    if solve_via == "inline" or not spec.transposable:
+        return _alps_jit(
+            w_hat,
+            h,
+            spec.n,
+            spec.m,
+            spec.transposable,
+            config.iters,
+            rho0,
+            config.rho_growth,
+            config.solver.iters,
+            config.solver.ls_steps,
+            config.solver.tau_scale,
+        )
+    if service is None:
+        from repro.service.engine import MaskService
+
+        service = MaskService(config.solver)
+    if solve_via == "callback":
+        return _callback_admm(
+            service, spec, config.iters, float(config.rho_growth)
+        )(w_hat, h, jnp.float32(rho0))
+    from repro.pruning.plan import drive_solve_plans
+
+    plan = alps_solve_plan(w_hat, h, spec, config)
+    return drive_solve_plans({"alps": plan}, service, spec)["alps"]

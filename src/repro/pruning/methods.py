@@ -20,11 +20,21 @@ plug in without touching ``runner.py``::
         ...
         return w_pruned, mask
 
-Methods whose mask depends only on a per-weight importance score (Wanda,
-magnitude) additionally expose ``importance(w, ctx)``; the runner uses it to
-route their transposable mask solves through the batched
-:class:`~repro.service.MaskService` (one bucketed mega-batch per projection
-group) instead of one solve per tensor.
+Two optional hooks let the runner batch a method's transposable mask solves
+through the :class:`~repro.service.MaskService` instead of one solve per
+tensor (see ``docs/architecture.md``, "The solve request lifecycle"):
+
+* ``importance(w, ctx) -> scores`` — for methods whose mask is a pure
+  function of a per-weight importance matrix (Wanda, magnitude).  The
+  runner submits every tensor's scores up front and solves the whole
+  projection group as ONE bucketed flush.
+* ``solve_plan(w, gram, pattern, ctx) -> generator`` — for *sequential*
+  methods whose solve requests depend on earlier solve results (SparseGPT's
+  column-block sweep, ALPS's ADMM loop).  The generator yields score
+  matrices and receives solved masks (see :mod:`repro.pruning.plan`); the
+  runner drives all tensors of a projection group in lockstep, flushing the
+  service once per sweep, so even sequential methods get mega-batched
+  dispatch, the fused backend and content-cache hits.
 """
 from __future__ import annotations
 
@@ -35,10 +45,10 @@ import jax.numpy as jnp
 
 from repro.core.solver import SolverConfig
 from repro.patterns import PatternSpec
-from repro.pruning.alps import AlpsConfig, alps_prune
+from repro.pruning.alps import AlpsConfig, alps_prune, alps_solve_plan
 from repro.pruning.calib import gram_matrix
 from repro.pruning.magnitude import magnitude_prune
-from repro.pruning.sparsegpt import sparsegpt_prune
+from repro.pruning.sparsegpt import sparsegpt_prune, sparsegpt_solve_plan
 from repro.pruning.wanda import wanda_importance, wanda_prune
 
 
@@ -51,6 +61,10 @@ class PruneContext:
     ``alps``: ADMM config for ALPS-style methods.
     ``mask_fn``: optional ``(scores, pattern) -> mask`` override routing
     transposable solves through a service.
+    ``service``: optional :class:`~repro.service.MaskService`; methods that
+    support service routing (``sparsegpt``/``alps`` ``solve_via``) use it
+    for their mask solves so the whole prune run shares one cache, bucket
+    ladder and stats counter.
     """
 
     x: Optional[jnp.ndarray] = None
@@ -59,6 +73,7 @@ class PruneContext:
     )
     alps: Optional[AlpsConfig] = None
     mask_fn: Optional[Callable] = None
+    service: Optional[Any] = None
     _gram: Any = dataclasses.field(default=None, repr=False)
 
     def gram(self) -> jnp.ndarray:
@@ -72,7 +87,13 @@ class PruneContext:
 
 @runtime_checkable
 class PruneMethod(Protocol):
-    """Protocol every registered pruning method implements."""
+    """Protocol every registered pruning method implements.
+
+    The two batching hooks (``importance``, ``solve_plan``) are optional
+    attributes, surfaced through :func:`method_importance` /
+    :func:`method_solve_plan` rather than the protocol itself so plain
+    ``(w, gram, pattern, ctx)`` functions keep satisfying it.
+    """
 
     name: str
     needs_gram: bool
@@ -92,6 +113,7 @@ class _RegisteredMethod:
     fn: Callable
     needs_gram: bool = False
     importance: Optional[Callable] = None  # (w, ctx) -> scores, or None
+    solve_plan: Optional[Callable] = None  # (w, gram, pattern, ctx) -> gen
 
     def __call__(self, w, gram, pattern, ctx):
         return self.fn(w, gram, pattern, ctx)
@@ -106,13 +128,16 @@ def register_method(
     *,
     needs_gram: bool = False,
     importance: Optional[Callable] = None,
+    solve_plan: Optional[Callable] = None,
     overwrite: bool = False,
 ):
     """Register a pruning method under ``name``.
 
     Usable as a decorator on a ``(w, gram, pattern, ctx)`` function, or
     called directly with any object satisfying :class:`PruneMethod`.
-    Registering an existing name without ``overwrite=True`` is an error.
+    ``importance`` and ``solve_plan`` are the optional service-batching
+    hooks (see the module docstring).  Registering an existing name without
+    ``overwrite=True`` is an error.
     """
 
     def _register(obj):
@@ -120,7 +145,8 @@ def register_method(
             inst = obj
         elif callable(obj):  # plain (w, gram, pattern, ctx) function
             inst = _RegisteredMethod(
-                name, obj, needs_gram=needs_gram, importance=importance
+                name, obj, needs_gram=needs_gram, importance=importance,
+                solve_plan=solve_plan,
             )
         else:
             raise TypeError(f"cannot register {obj!r} as a pruning method")
@@ -158,6 +184,7 @@ def get_method(method) -> PruneMethod:
 
 
 def available_methods() -> tuple[str, ...]:
+    """Sorted names of every registered pruning method."""
     return tuple(sorted(_REGISTRY))
 
 
@@ -169,6 +196,17 @@ def method_importance(method: PruneMethod) -> Optional[Callable]:
     MaskService and apply ``w * mask`` itself.
     """
     return getattr(method, "importance", None)
+
+
+def method_solve_plan(method: PruneMethod) -> Optional[Callable]:
+    """The method's ``solve_plan(w, gram, pattern, ctx)`` hook, or None.
+
+    A non-None hook means the method can express its sequential mask solves
+    as a generator of batched service requests; the runner drives all plans
+    of a projection group in lockstep through ONE MaskService
+    (:func:`repro.pruning.plan.drive_solve_plans`).
+    """
+    return getattr(method, "solve_plan", None)
 
 
 # ---------------------------------------------------------------------------
@@ -186,14 +224,26 @@ def _wanda(w, gram, pattern, ctx):
     return wanda_prune(w, ctx.x, pattern, config=ctx.solver, mask_fn=ctx.mask_fn)
 
 
-@register_method("sparsegpt", needs_gram=True)
+def _sparsegpt_plan(w, gram, pattern, ctx):
+    h = gram if gram is not None else ctx.gram()
+    return sparsegpt_solve_plan(w, h, pattern)
+
+
+@register_method("sparsegpt", needs_gram=True, solve_plan=_sparsegpt_plan)
 def _sparsegpt(w, gram, pattern, ctx):
     h = gram if gram is not None else ctx.gram()
-    return sparsegpt_prune(w, h, pattern, config=ctx.solver)
+    return sparsegpt_prune(w, h, pattern, config=ctx.solver,
+                           service=ctx.service)
 
 
-@register_method("alps", needs_gram=True)
+def _alps_plan(w, gram, pattern, ctx):
+    h = gram if gram is not None else ctx.gram()
+    cfg = ctx.alps if ctx.alps is not None else AlpsConfig(solver=ctx.solver)
+    return alps_solve_plan(w, h, pattern, config=cfg)
+
+
+@register_method("alps", needs_gram=True, solve_plan=_alps_plan)
 def _alps(w, gram, pattern, ctx):
     h = gram if gram is not None else ctx.gram()
     cfg = ctx.alps if ctx.alps is not None else AlpsConfig(solver=ctx.solver)
-    return alps_prune(w, h, pattern, config=cfg)
+    return alps_prune(w, h, pattern, config=cfg, service=ctx.service)

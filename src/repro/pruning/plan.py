@@ -1,0 +1,100 @@
+"""Lockstep driver for ``PruneMethod.solve_plan`` generators.
+
+Sequential pruning methods (SparseGPT's column-block sweep, ALPS's ADMM
+loop) cannot hand the service their whole mask workload up front: each
+solve request depends on the previous solve's result.  What they *can* do
+is express the dependency structure as a generator — the ``solve_plan``
+protocol (see :mod:`repro.pruning.methods`):
+
+    def my_solve_plan(w, gram, pattern, ctx):
+        for step in ...:
+            scores = <jitted device work>
+            mask = yield scores          # one batched mask-solve request
+            <jitted device work using mask>
+        return w_pruned, mask
+
+:func:`drive_solve_plans` runs several such generators *in lockstep*
+against one :class:`~repro.service.MaskService`: at every sweep it collects
+the current request of every live plan, submits them all, flushes the
+service ONCE (one bucketed mega-batch, cache consulted per request), and
+sends each result back into its generator.  Tensors that share a sweep
+structure (e.g. the wq/wk/wv projections of one layer under SparseGPT)
+therefore batch their per-step solves even though each tensor's steps are
+strictly sequential.
+
+The driver is deliberately dumb: it never inspects the yielded scores and
+never reorders sends, so a plan's internal compute chain is identical to
+the method's inline implementation — which is what makes the service-routed
+masks bit-identical to the inline ones at ``SolverConfig.tol = 0``
+(``tests/test_pruning_service.py``).
+
+See ``docs/architecture.md`` ("The solve_plan path") for the full request
+lifecycle.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Generator, Mapping
+
+import numpy as np
+
+from repro.patterns import PatternSpec
+
+SolvePlan = Generator[Any, Any, Any]
+
+
+def drive_solve_plans(
+    plans: Mapping[str, SolvePlan],
+    service,
+    pattern,
+) -> Dict[str, Any]:
+    """Advance every plan generator in lockstep; one service flush per sweep.
+
+    Args:
+      plans: name -> generator following the ``solve_plan`` protocol (yields
+        score matrices, receives boolean masks, returns the method's final
+        value via ``return`` / ``StopIteration``).
+      service: a :class:`repro.service.MaskService`; every yielded request is
+        submitted to it and all requests of one sweep are solved by a single
+        ``flush()``.
+      pattern: the transposable :class:`~repro.patterns.PatternSpec` every
+        request is solved under.
+
+    Returns:
+      name -> the generator's return value, for every plan.  Plans may run
+      different numbers of sweeps; finished plans simply drop out of later
+      flushes.
+    """
+    spec = PatternSpec.coerce(pattern)
+    live = dict(plans)
+    inbox: Dict[str, Any] = {}
+    results: Dict[str, Any] = {}
+    step = 0
+    while live:
+        requests = {}
+        for name in list(live):
+            gen = live[name]
+            try:
+                if step == 0:
+                    scores = next(gen)
+                else:
+                    scores = gen.send(inbox[name])
+            except StopIteration as stop:
+                results[name] = stop.value
+                del live[name]
+                continue
+            requests[name] = scores
+        if requests:
+            # journal=False: sweep requests are ephemeral — their resume
+            # path is the content cache, and a journal record per sweep
+            # per tensor would fsync thousands of times per layer.
+            handles = {
+                name: service.submit(
+                    f"{name}/sweep{step:05d}", scores, spec, journal=False
+                )
+                for name, scores in requests.items()
+            }
+            service.flush()  # ONE bucketed mega-batch for the whole sweep
+            for name, handle in handles.items():
+                inbox[name] = np.asarray(handle.result())
+        step += 1
+    return results

@@ -18,6 +18,12 @@ through :class:`repro.service.MaskService`:
     together and solved as one bucketed batch (the sequential calibration
     dependency forbids batching across layers — each layer's activations
     need the previous layers already pruned);
+  * methods exposing a ``solve_plan`` hook (SparseGPT/ALPS) have the plans
+    of all projections in a group driven in lockstep
+    (:func:`repro.pruning.plan.drive_solve_plans`): every sweep's solve
+    requests across the group go through ONE service flush, so even
+    sequential methods get mega-batched dispatch, the fused backend,
+    bit-packed transport and content-cache hits;
   * with ``journal_dir`` set, every pruned tensor is persisted to a
     content-addressed store and journaled, so a killed run resumes
     mid-model: completed tensors restore from disk (the cheap forward
@@ -27,6 +33,7 @@ through :class:`repro.service.MaskService`:
 from __future__ import annotations
 
 import hashlib
+import logging
 import os
 from typing import Optional
 
@@ -41,10 +48,18 @@ from repro.models.config import ModelConfig
 from repro.models.layers import rms_norm, embed_tokens
 from repro.patterns import PatternSpec, pattern_from_args
 from repro.pruning.alps import AlpsConfig
-from repro.pruning.methods import PruneContext, get_method, method_importance
+from repro.pruning.methods import (
+    PruneContext,
+    get_method,
+    method_importance,
+    method_solve_plan,
+)
+from repro.pruning.plan import drive_solve_plans
 from repro.service.cache import solver_fingerprint
 from repro.service.engine import MaskService
 from repro.service.journal import Journal
+
+_logger = logging.getLogger(__name__)
 
 
 def _digest(arr) -> bytes:
@@ -130,10 +145,13 @@ def prune_transformer(
     masks_attn = {k: [] for k in ("wq", "wk", "wv", "wo")}
     masks_mlp = {k: [] for k in ("gate", "up", "down")}
 
-    # Importance-scored methods' masks depend only on (W, X): they can ride
-    # the batched service path; gram-based methods (SparseGPT/ALPS) inline
-    # the solve in their jitted loops.
+    # Importance-scored methods' masks depend only on (W, X): they ride the
+    # one-shot batched service path.  Sequential methods (SparseGPT/ALPS)
+    # expose solve_plan generators instead and are driven in lockstep, so
+    # their per-sweep solves also dispatch through the service.
+    plan_fn = method_solve_plan(meth)
     group_batched = spec.transposable and importance is not None
+    plan_routed = spec.transposable and not group_batched and plan_fn is not None
 
     def restore(tname, key):
         if journal is None or key is None:
@@ -158,12 +176,13 @@ def prune_transformer(
         x_flat = x_act.reshape(-1, x_act.shape[-1])
         # Gram-based methods pull ctx.gram() lazily (cached per group), so a
         # fully-journaled resume never pays the O(tokens * d^2) matmul.
-        ctx = PruneContext(x=x_flat, solver=solver, alps=alps_cfg)
+        ctx = PruneContext(x=x_flat, solver=solver, alps=alps_cfg, service=svc)
         results, todo = {}, {}
-        # Hashing is journal-only work; the batched methods' masks come from
-        # the service, so the key must fingerprint ITS config, not ``solver``.
+        # Hashing is journal-only work; the batched/plan-routed methods'
+        # masks come from the service, so the key must fingerprint ITS
+        # config, not ``solver``.
         x_digest = _digest(x_flat) if journal is not None else b""
-        mask_cfg = svc.config if group_batched else solver
+        mask_cfg = svc.config if (group_batched or plan_routed) else solver
         for name, w in ws.items():
             tname = f"layer{l:03d}/{grp}/{name}"
             w32 = w.astype(jnp.float32)
@@ -177,13 +196,27 @@ def prune_transformer(
             else:
                 todo[name] = (tname, key, w32)
         if group_batched and todo:
-            handles = {}
-            for name, (tname, _key, w32) in todo.items():
-                handles[name] = svc.submit(tname, importance(w32, ctx), spec)
+            handles = dict(zip(todo, svc.submit_many(
+                ((tname, importance(w32, ctx))
+                 for tname, _key, w32 in todo.values()), spec,
+            )))
             svc.flush()  # one bucketed solve for the whole group
             for name, (tname, key, w32) in todo.items():
                 mask = handles[name].result()
                 wp = jnp.where(mask, w32, 0)
+                persist(tname, key, wp, mask)
+                results[name] = (wp, mask)
+                log(f"[prune] layer {l} {name}: done")
+        elif plan_routed and todo:
+            # Drive every projection's solve plan in lockstep: the group's
+            # step-k requests are solved by ONE flush before any step k+1.
+            plans = {
+                tname: plan_fn(w32, None, spec, ctx)
+                for tname, _key, w32 in todo.values()
+            }
+            solved = drive_solve_plans(plans, svc, spec)
+            for name, (tname, key, _w32) in todo.items():
+                wp, mask = solved[tname]
                 persist(tname, key, wp, mask)
                 results[name] = (wp, mask)
                 log(f"[prune] layer {l} {name}: done")
@@ -229,6 +262,11 @@ def prune_transformer(
         masks_mlp["down"].append(mk)
         new_mlp["down"].append(mp["down"])
         x = x + hidden @ mp["down"].astype(h2.dtype)
+
+    # The one-per-run padding/waste report (ServiceStats.summary embeds
+    # StreamStats.summary; per-stream figures stay at DEBUG in solve_stream).
+    _logger.info("mask service: %s", svc.stats.summary())
+    log(f"[prune] mask service: {svc.stats.summary()}")
 
     new_blocks = dict(blocks)
     new_blocks["attn"] = {k: jnp.stack(v) for k, v in new_attn.items()}

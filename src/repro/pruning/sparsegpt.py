@@ -6,10 +6,27 @@ scores (W_ij / [H^-1]_ii)^2 (paper Sec. 4, "Integration with SparseGPT"), and
 the remaining rows receive the standard OBS compensation update through the
 upper Cholesky factor of H^{-1}.
 
-The whole pass — group scan, TSENOR solve, within-group OBS recursion — is a
-single jitted ``lax.scan``; the sequential row update exploits the upper-
-triangular structure of the Cholesky factor (hinv[i, :i] = 0) to stay
-shape-static.
+Three solve routes share the exact same per-group compute chain
+(``solve_via=``):
+
+* ``"service"`` (default) — the column-block sweep is restructured around
+  the batched :class:`~repro.service.MaskService`: each group's OBS score
+  slice is a solve *request*, the jit boundary sits at the per-group score
+  computation and error-propagation update (:func:`_group_scores` /
+  :func:`_obs_group_update`), and the host drives the sweep.  Through
+  :func:`sparsegpt_solve_plan` the same structure batches across tensors
+  (see :func:`repro.pruning.plan.drive_solve_plans`), so the fused backend,
+  bit-packed transport and content cache of the service apply to SparseGPT.
+* ``"callback"`` — for callers who must keep ONE jitted loop (e.g. an
+  enclosing ``lax.scan`` over layers): the sweep stays a single jitted
+  ``lax.scan`` and each group's solve escapes to the service through
+  ``jax.experimental.io_callback``.
+* ``"inline"`` — the historical fully-jitted path with the Dykstra solve
+  inlined in the group scan; kept as the bit-identity reference.
+
+All three produce bit-identical masks at ``SolverConfig.tol = 0``
+(``tests/test_pruning_service.py``).  See ``docs/architecture.md`` for the
+request lifecycle and ``docs/solver_math.md`` for the solver itself.
 """
 from __future__ import annotations
 
@@ -23,7 +40,7 @@ from repro.core import blocks as blk
 from repro.core.rounding import round_blocks
 from repro.core.dykstra import dykstra_log
 from repro.core.solver import SolverConfig
-from repro.patterns import pattern_from_args
+from repro.patterns import PatternSpec, pattern_from_args
 
 
 def upper_chol_of_inverse(h: jnp.ndarray) -> jnp.ndarray:
@@ -43,6 +60,84 @@ def _tsenor_group_mask(scores, n, m, iters, ls_steps, tau_scale):
     s_approx = dykstra_log(blocks, n, iters, tau=tau)
     mask = round_blocks(s_approx, blocks, n, ls_steps)
     return blk.from_blocks(mask, scores.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def _topn_group_mask(scores, n):
+    """Standard (non-transposable) per-group top-N mask along axis 0."""
+    rank = jnp.argsort(jnp.argsort(-scores, axis=0), axis=0)
+    return rank < n
+
+
+@functools.partial(jax.jit, static_argnames=("m",))
+def _group_scores(w, diag, s, m):
+    """OBS scores (W_ij / [H^-1]_ii)^2 of the M-row group starting at ``s``."""
+    dslice = jax.lax.dynamic_slice_in_dim(diag, s, m)
+    wg = jax.lax.dynamic_slice_in_dim(w, s, m, axis=0)
+    return (wg / dslice[:, None]) ** 2
+
+
+@functools.partial(jax.jit, static_argnames=("m",))
+def _obs_group_update(w, hinv, diag, gmask, s, m):
+    """OBS error propagation for one masked group (jit boundary of the
+    service-routed sweep): prune the group's rows to ``gmask`` and push each
+    row's error into the not-yet-processed rows through the upper Cholesky
+    factor of H^-1 — the same recursion the inline scan runs."""
+    in_dim = w.shape[0]
+    row_gt = jnp.arange(in_dim)
+    dslice = jax.lax.dynamic_slice_in_dim(diag, s, m)
+
+    def row_step(r, w):
+        i = s + r
+        row = jax.lax.dynamic_index_in_dim(w, i, 0, keepdims=False)
+        q = jnp.where(gmask[r], row, 0.0)
+        hrow = jax.lax.dynamic_index_in_dim(hinv, i, 0, keepdims=False)
+        d = jax.lax.dynamic_index_in_dim(dslice, r, 0, keepdims=False)
+        err = (row - q) / d
+        w = jax.lax.dynamic_update_index_in_dim(w, q, i, 0)
+        # hinv is upper-triangular, so masking j > i reproduces hinv[i, i+1:].
+        return w - jnp.outer(jnp.where(row_gt > i, hrow, 0.0), err)
+
+    return jax.lax.fori_loop(0, m, row_step, w)
+
+
+def sparsegpt_solve_plan(
+    w_hat: jnp.ndarray,
+    h: jnp.ndarray,
+    pattern,
+):
+    """The ``solve_plan`` generator for SparseGPT (see ``repro.pruning.plan``).
+
+    Yields one (M, out) OBS score matrix per column-block sweep step and
+    expects the solved boolean mask of the same shape back via ``send``;
+    returns ``(pruned + OBS-updated W, mask)``.  All device work between
+    yields is jitted.  There is deliberately no solver-config parameter:
+    every knob that shapes the masks lives in the driving
+    :class:`~repro.service.MaskService`'s :class:`SolverConfig` (the
+    generator only produces scores and consumes masks).
+
+    For non-transposable patterns no request is ever yielded — the cheap
+    top-N group mask is computed inline and the generator returns after
+    zero sweeps of service traffic.
+    """
+    spec = PatternSpec.coerce(pattern)
+    w = jnp.asarray(w_hat, jnp.float32)
+    in_dim, out_dim = w.shape
+    assert in_dim % spec.m == 0 and out_dim % spec.m == 0, (w.shape, spec.m)
+    hinv = upper_chol_of_inverse(jnp.asarray(h, jnp.float32))
+    diag = jnp.diag(hinv)
+    gmasks = []
+    for s in range(0, in_dim, spec.m):
+        scores = _group_scores(w, diag, s, spec.m)
+        if spec.transposable:
+            gmask = yield scores
+            gmask = jnp.asarray(gmask, bool)
+        else:
+            gmask = _topn_group_mask(scores, spec.n)
+        w = _obs_group_update(w, hinv, diag, gmask, s, spec.m)
+        gmasks.append(gmask)
+    mask = jnp.concatenate(gmasks, axis=0)
+    return jnp.where(mask, w, 0.0), mask
 
 
 @functools.partial(
@@ -84,6 +179,70 @@ def _sparsegpt_jit(w_hat, h, n, m, transposable, iters, ls_steps, tau_scale):
     return jnp.where(mask, w, 0.0), mask
 
 
+def _service_program_cache(service) -> dict:
+    """Compiled-program cache living ON the service instance, so program
+    lifetime is tied to the service (no global registry pinning dead
+    services and their mask caches) and repeat calls with the same service
+    reuse the traced closure.  Callers who want cross-call program reuse on
+    the callback route should therefore pass a persistent ``service``."""
+    return service.__dict__.setdefault("_callback_programs", {})
+
+
+def _callback_sweep(service, spec: PatternSpec, m: int):
+    """One jitted SparseGPT sweep whose group solves escape to ``service``
+    through ``io_callback`` — the ``solve_via="callback"`` program."""
+    cache = _service_program_cache(service)
+    key = ("sparsegpt", spec, m)
+    if key in cache:
+        return cache[key]
+
+    from jax.experimental import io_callback
+
+    def host_solve(scores):
+        return jax.device_get(service.solve(scores, spec)).astype(bool)
+
+    @jax.jit
+    def run(w_hat, h):
+        in_dim, out_dim = w_hat.shape
+        hinv = upper_chol_of_inverse(h)
+        diag = jnp.diag(hinv)
+        row_gt = jnp.arange(in_dim)
+
+        def group_step(w, s):
+            dslice = jax.lax.dynamic_slice_in_dim(diag, s, m)
+            wg = jax.lax.dynamic_slice_in_dim(w, s, m, axis=0)
+            scores = (wg / dslice[:, None]) ** 2
+            gmask = io_callback(
+                host_solve,
+                jax.ShapeDtypeStruct((m, out_dim), bool),
+                scores,
+                ordered=True,
+            )
+
+            def row_step(r, w):
+                i = s + r
+                row = jax.lax.dynamic_index_in_dim(w, i, 0, keepdims=False)
+                q = jnp.where(gmask[r], row, 0.0)
+                hrow = jax.lax.dynamic_index_in_dim(hinv, i, 0, keepdims=False)
+                d = jax.lax.dynamic_index_in_dim(dslice, r, 0, keepdims=False)
+                err = (row - q) / d
+                w = jax.lax.dynamic_update_index_in_dim(w, q, i, 0)
+                return w - jnp.outer(jnp.where(row_gt > i, hrow, 0.0), err)
+
+            w = jax.lax.fori_loop(0, m, row_step, w)
+            return w, gmask
+
+        starts = jnp.arange(0, in_dim, m)
+        w, gmasks = jax.lax.scan(
+            group_step, jnp.asarray(w_hat, jnp.float32), starts
+        )
+        mask = gmasks.reshape(in_dim, out_dim)
+        return jnp.where(mask, w, 0.0), mask
+
+    cache[key] = run
+    return run
+
+
 def sparsegpt_prune(
     w_hat: jnp.ndarray,
     h: jnp.ndarray,
@@ -93,25 +252,57 @@ def sparsegpt_prune(
     config: SolverConfig = SolverConfig(iters=150),
     *,
     n=None,
+    solve_via: str = "service",
+    service=None,
 ):
     """Returns (pruned + OBS-updated W, mask).
 
-    ``w_hat``: (in, out) dense weights; ``h``: damped Gram XᵀX + λI (in, in).
-    ``pattern``: :class:`~repro.patterns.PatternSpec` (or canonical string);
-    the deprecated ``(n, m[, transposable])`` triple still works.  The mask
-    solve is inlined in the jitted group scan (dense Dykstra path; see
-    ROADMAP for service routing).
+    Args:
+      w_hat: (in, out) dense weights.
+      h: damped Gram ``XᵀX + λI`` of shape (in, in).
+      pattern: :class:`~repro.patterns.PatternSpec` (or canonical string);
+        the deprecated ``(n, m[, transposable])`` triple still works.
+      config: TSENOR solver hyper-parameters for the mask solves.
+      solve_via: ``"service"`` (default) routes every column-block solve
+        through a batched :class:`~repro.service.MaskService` (cache + fused
+        backend active); ``"callback"`` keeps one jitted ``lax.scan`` and
+        escapes to the service via ``io_callback``; ``"inline"`` is the
+        historical fully-jitted path.  All three are bit-identical at
+        ``config.tol = 0``.
+      service: the :class:`~repro.service.MaskService` to route through
+        (``"service"``/``"callback"`` only); a per-call in-memory one built
+        from ``config`` is used by default.
+
+    See ``docs/architecture.md`` ("which route when") for guidance.
     """
     spec = pattern_from_args(pattern, m, transposable, n=n, caller="sparsegpt_prune")
     in_dim, out_dim = w_hat.shape
     assert in_dim % spec.m == 0 and out_dim % spec.m == 0, (w_hat.shape, spec.m)
-    return _sparsegpt_jit(
-        jnp.asarray(w_hat, jnp.float32),
-        jnp.asarray(h, jnp.float32),
-        spec.n,
-        spec.m,
-        spec.transposable,
-        config.iters,
-        config.ls_steps,
-        config.tau_scale,
-    )
+    if solve_via not in ("service", "callback", "inline"):
+        raise ValueError(
+            f"sparsegpt_prune: unknown solve_via {solve_via!r} "
+            "(expected 'service', 'callback' or 'inline')"
+        )
+    if solve_via == "inline" or not spec.transposable:
+        return _sparsegpt_jit(
+            jnp.asarray(w_hat, jnp.float32),
+            jnp.asarray(h, jnp.float32),
+            spec.n,
+            spec.m,
+            spec.transposable,
+            config.iters,
+            config.ls_steps,
+            config.tau_scale,
+        )
+    if service is None:
+        from repro.service.engine import MaskService
+
+        service = MaskService(config)
+    if solve_via == "callback":
+        return _callback_sweep(service, spec, spec.m)(
+            jnp.asarray(w_hat, jnp.float32), jnp.asarray(h, jnp.float32)
+        )
+    from repro.pruning.plan import drive_solve_plans
+
+    plan = sparsegpt_solve_plan(w_hat, h, spec)
+    return drive_solve_plans({"sparsegpt": plan}, service, spec)["sparsegpt"]

@@ -19,6 +19,13 @@ throughput optimization, never a correctness concern.  Everything is
 single-process; the "service" boundary is the submit/flush API, which is
 what a multi-tenant deployment would put behind an RPC layer.  Mega-batches
 shard over all local devices (``BucketPolicy.shard_devices``).
+
+Sequential solvers (SparseGPT's column-block sweep, ALPS's ADMM loop) feed
+the same queue through the ``solve_plan`` protocol — see
+:mod:`repro.pruning.plan` and ``docs/architecture.md`` — using
+:meth:`MaskService.submit_many`/:meth:`MaskService.results` for per-sweep
+batches; ``flush`` is re-entrant, so ``io_callback``-style solves that fire
+mid-drain are folded into the active flush.
 """
 from __future__ import annotations
 
@@ -54,11 +61,12 @@ class MaskHandle:
     """
 
     def __init__(self, service: "MaskService", name: str, pattern: PatternSpec,
-                 key: str, geom: dict):
+                 key: str, geom: dict, journal: bool = True):
         self.service = service
         self.name = name
         self.pattern = pattern
         self.key = key
+        self.journal = journal
         self._geom = geom
         self._words: Optional[np.ndarray] = None
 
@@ -106,12 +114,12 @@ class ServiceStats:
         return self.stream.batches
 
     def summary(self) -> str:
+        """One-line service report: submit/cache counters + the dispatch
+        aggregate delegated to :meth:`StreamStats.summary` (the single
+        padding-waste formatter — emitted once per run, not per stream)."""
         return (
             f"submitted={self.submitted} cache_hits={self.cache_hits} "
-            f"solved_blocks={self.stream.blocks_solved} "
-            f"batches={self.stream.batches} "
-            f"padded_blocks={self.stream.blocks_padded} "
-            f"waste=[{self.stream.waste_summary()}]"
+            f"{self.stream.summary()}"
         )
 
 
@@ -150,15 +158,18 @@ class MaskService:
     # -- submit/future API --------------------------------------------------
 
     def submit(self, name: Optional[str], w, pattern=None, m=None, *,
-               n=None) -> MaskHandle:
+               n=None, journal: bool = True) -> MaskHandle:
         """Enqueue one tensor (2-D, or stacked (L, R, C) as one submission).
 
         The mask objective uses |w|, so callers pass either raw weights or an
         importance matrix.  ``pattern`` is a :class:`PatternSpec` (or
         canonical string); the deprecated ``submit(name, w, n, m)`` form
         still works.  ``name=None`` derives a content-addressed name.
-        Returns immediately; the solve happens at the next ``flush()``
-        (or lazily at ``result()``).
+        ``journal=False`` skips the per-completion journal record (one
+        fsync each) while keeping the content cache: the right setting for
+        high-rate ephemeral requests like solve-plan sweeps, whose resume
+        path is the cache, not the name.  Returns immediately; the solve
+        happens at the next ``flush()`` (or lazily at ``result()``).
         """
         spec = pattern_from_args(pattern, m, None, n=n, caller="MaskService.submit")
         if not spec.transposable:
@@ -170,14 +181,14 @@ class MaskService:
         key = content_key(blocks, spec, self.config)
         if name is None:
             name = f"mask:{key[:12]}"
-        handle = MaskHandle(self, name, spec, key, geom)
+        handle = MaskHandle(self, name, spec, key, geom, journal=journal)
         self.stats.submitted += 1
 
         disk_hits_before = self.cache.disk_hits
         cached = self.cache.get_packed(key)
         if cached is not None:
             if self.cache.disk_hits > disk_hits_before \
-                    and self.journal is not None \
+                    and journal and self.journal is not None \
                     and self.journal.lookup(name) is not None:
                 self.stats.journal_skips += 1
             self.stats.cache_hits += 1
@@ -188,6 +199,36 @@ class MaskService:
         self._pending.append((handle, blocks))
         return handle
 
+    def submit_many(self, items, pattern=None, *, n=None,
+                    m=None) -> list[MaskHandle]:
+        """Enqueue a batch of ``(name, w)`` pairs under one pattern.
+
+        The batched-futures twin of :meth:`submit`: returns one
+        :class:`MaskHandle` per item, in input order, without flushing —
+        pair with :meth:`results` (or one :meth:`flush`) so the whole batch
+        solves as a single bucketed mega-batch sequence.
+        """
+        spec = pattern_from_args(pattern, m, None, n=n,
+                                 caller="MaskService.submit_many")
+        return [self.submit(name, w, spec) for name, w in items]
+
+    def results(self, handles) -> list[jnp.ndarray]:
+        """Resolve a batch of handles with at most one flush.
+
+        Flushes only if some handle is still pending, then returns every
+        handle's mask in input order.  Handles from other services are
+        rejected — their pending work lives in a different queue.
+        """
+        handles = list(handles)
+        for h in handles:
+            if h.service is not self:
+                raise ValueError(
+                    f"handle {h.name!r} belongs to a different MaskService"
+                )
+        if any(not h.done for h in handles):
+            self.flush()
+        return [h.result() for h in handles]
+
     def flush(self) -> None:
         """Solve every pending submission in shape-bucketed mega-batches.
 
@@ -195,32 +236,39 @@ class MaskService:
         device as uint32 row words (32x less transfer), handles hold the
         words, and the cache stores them verbatim (format v3) — the mask is
         only ever unpacked on ``result()`` access.
+
+        Re-entrant: submissions that arrive *while* the drain is running —
+        an ``io_callback`` solve escaping a jitted loop, a solve-plan
+        driver, a backend that itself consults the service — are folded
+        into this same ``flush`` call (the drain loops until the queue is
+        quiescent), so no caller ever returns from ``flush`` with work it
+        enqueued still unsolved.
         """
-        pending, self._pending = self._pending, []
-        if not pending:
-            return
-        # One stream per pattern: block shape and the solver's static args
-        # both depend on it.  Submission order is preserved within a group.
-        groups: dict[PatternSpec, list[tuple[MaskHandle, np.ndarray]]] = {}
-        for handle, blocks in pending:
-            groups.setdefault(handle.pattern, []).append((handle, blocks))
-        for spec, entries in groups.items():
-            policy = self.policy if self.policy is not None else \
-                BucketPolicy.for_device(spec.m, stats=self.stats.stream)
-            solved = solve_stream(
-                [blocks for _, blocks in entries],
-                spec,
-                self.config,
-                policy,
-                self.stats.stream,
-                packed=True,
-            )
-            for (handle, blocks), words in zip(entries, solved):
-                handle._resolve(words)
-                self.cache.put_packed(
-                    handle.key, words, (blocks.shape[0], spec.m, spec.m)
+        while self._pending:
+            pending, self._pending = self._pending, []
+            # One stream per pattern: block shape and the solver's static
+            # args both depend on it.  Submission order is preserved within
+            # a group.
+            groups: dict[PatternSpec, list[tuple[MaskHandle, np.ndarray]]] = {}
+            for handle, blocks in pending:
+                groups.setdefault(handle.pattern, []).append((handle, blocks))
+            for spec, entries in groups.items():
+                policy = self.policy if self.policy is not None else \
+                    BucketPolicy.for_device(spec.m, stats=self.stats.stream)
+                solved = solve_stream(
+                    [blocks for _, blocks in entries],
+                    spec,
+                    self.config,
+                    policy,
+                    self.stats.stream,
+                    packed=True,
                 )
-                self._record(handle)
+                for (handle, blocks), words in zip(entries, solved):
+                    handle._resolve(words)
+                    self.cache.put_packed(
+                        handle.key, words, (blocks.shape[0], spec.m, spec.m)
+                    )
+                    self._record(handle)
 
     def solve(self, w, pattern=None, *legacy, name: Optional[str] = None,
               n=None, m=None) -> jnp.ndarray:
@@ -228,7 +276,20 @@ class MaskService:
 
             mask = service.solve(w, PatternSpec(2, 4))       # or "t2:4"
 
-        The deprecated ``solve(name, w, n, m)`` form still works.
+        Args:
+          w: 2-D weight/score matrix (or a scan-stacked 3-D tensor treated
+            as one submission).  The solve objective uses ``|w|``.
+          pattern: transposable :class:`~repro.patterns.PatternSpec` or
+            canonical string like ``"t2:4"``.
+          name: journal/debug name; content-addressed when omitted.
+
+        Returns the boolean mask shaped like ``w``.  Bit-identical to
+        :func:`repro.core.solver.solve_mask` under the same
+        :class:`SolverConfig`; repeated solves of identical content are
+        cache hits and never re-dispatch.  The deprecated
+        ``solve(name, w, n, m)`` form still works.  See
+        ``docs/architecture.md`` for how a solve travels through the
+        scheduler, cache and backends.
         """
         if isinstance(w, str):  # legacy solve(name, w, n, m)
             warnings.warn(
@@ -256,7 +317,7 @@ class MaskService:
     # -- internals ----------------------------------------------------------
 
     def _record(self, handle: MaskHandle) -> None:
-        if self.journal is not None:
+        if self.journal is not None and handle.journal:
             prior = self.journal.lookup(handle.name)
             if prior is None or prior.get("key") != handle.key:
                 self.journal.record(

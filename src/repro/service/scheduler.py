@@ -44,7 +44,15 @@ identical to ``solve_mask`` bit for bit — sharded or not.
 
 :class:`StreamStats` additionally tracks padding waste per bucket size
 (padded blocks / dispatched blocks), giving the ROADMAP cost-model work a
-measurable baseline; ``solve_stream`` logs it per stream.
+measurable baseline; per-stream figures log at DEBUG and the aggregate is
+emitted once via :meth:`StreamStats.summary` (a sequential solver produces
+thousands of tiny streams — one INFO line each would flood the log).
+
+Sequential solvers also motivate the ladder's ``sub_rungs``: their per-sweep
+flushes are far smaller than a VMEM-sized base bucket, so
+:meth:`BucketPolicy.for_device` extends the ladder below the kernel tile
+with power-of-two rungs down to ``VPU_ALIGN``, bounding sentinel padding per
+stream by one sublane instead of one tile.
 """
 from __future__ import annotations
 
@@ -69,12 +77,14 @@ logger = logging.getLogger(__name__)
 class BucketPolicy:
     """Geometric ladder of mega-batch sizes (in blocks)."""
 
-    base: int = 512        # smallest dispatched batch
+    base: int = 512        # smallest full-rate dispatched batch
     growth: int = 4        # ladder ratio
     max_bucket: int = 32768  # device-memory cap per dispatch
     shard_devices: bool = True  # split mega-batches over local devices
     tail_decompose: bool = False  # cover the tail with smaller rungs instead
     #                               of one covering bucket (padding < base)
+    min_bucket: int = 0    # smallest sub-base rung for tiny streams; 0 keeps
+    #                        the historic behavior (tails round up to base)
 
     # Observed padding-waste fraction above which ``for_device`` drops to a
     # finer ladder growth.
@@ -85,6 +95,33 @@ class BucketPolicy:
         while sizes[-1] * self.growth <= self.max_bucket:
             sizes.append(sizes[-1] * self.growth)
         return tuple(sizes)
+
+    def sub_rungs(self) -> tuple[int, ...]:
+        """Descending power-of-two rungs below ``base``, down to
+        ``min_bucket`` — the small-stream ladder extension.
+
+        Sequential solvers (SparseGPT sweeps, ALPS iterations) flush many
+        *tiny* streams: a handful of blocks per request, far below the
+        VMEM-sized ``base``.  Rounding every such stream up to ``base``
+        (the historic tail rule) made sentinel padding dominate real work.
+        Sub-base rungs bound that padding by ``min_bucket - 1`` blocks per
+        stream while staying a fixed power-of-two set, so the compile count
+        stays bounded by ``log2(base / min_bucket)`` extra programs.
+        Empty when ``min_bucket`` is 0 (historic behavior).
+        """
+        if not self.min_bucket:
+            return ()
+        floor = min(self.min_bucket, self.base)
+        rungs, s = [], self.base // 2
+        while s >= floor and s > 0:
+            rungs.append(s)
+            s //= 2
+        return tuple(rungs)
+
+    def _covering(self, remaining: int) -> int:
+        """Smallest rung (sub-base rungs included) covering ``remaining``."""
+        candidates = sorted(self.sub_rungs()) + list(self.ladder())
+        return next(s for s in candidates if s >= remaining)
 
     def plan(self, total: int) -> list[int]:
         """Bucket sizes covering ``total`` blocks (sum(plan) >= total)."""
@@ -97,16 +134,20 @@ class BucketPolicy:
             remaining -= sizes[-1]
         if remaining and self.tail_decompose:
             # Descending run of rungs: each compiles once like any ladder
-            # member, and the final round-up to ``base`` bounds the sentinel
-            # padding by base-1 blocks instead of by the covering rung.
+            # member, and the final round-up bounds the sentinel padding by
+            # the smallest rung instead of by the covering bucket.
             for s in reversed(sizes):
                 while remaining >= s:
                     out.append(s)
                     remaining -= s
+            for s in self.sub_rungs():
+                while remaining >= s:
+                    out.append(s)
+                    remaining -= s
             if remaining:
-                out.append(sizes[0])
+                out.append(self._covering(remaining))
         elif remaining:
-            out.append(next(s for s in sizes if s >= remaining))
+            out.append(self._covering(remaining))
         return out
 
     @classmethod
@@ -128,8 +169,15 @@ class BucketPolicy:
         from earlier streams show more than ``WASTE_THRESHOLD`` padding at
         some bucket size, the ladder growth drops from 4 to 2 — trading one
         or two extra compiles for proportionally less sentinel work.
+
+        The ladder is extended *below* the tile with power-of-two
+        ``sub_rungs`` down to one VPU sublane (``min_bucket = VPU_ALIGN``),
+        so the many-small-blocks streams of sequential solvers (SparseGPT /
+        ALPS driving the service one sweep at a time) pad by at most
+        ``VPU_ALIGN - 1`` sentinel blocks instead of a whole kernel tile.
         """
         from repro.kernels.fused_solve import fused_block_b
+        from repro.kernels.vmem import VPU_ALIGN
 
         base = fused_block_b(m, device)
         max_bucket = max(
@@ -146,6 +194,7 @@ class BucketPolicy:
             max_bucket=max_bucket,
             shard_devices=shard_devices,
             tail_decompose=True,
+            min_bucket=min(VPU_ALIGN, base),
         )
 
 
@@ -177,6 +226,21 @@ class StreamStats:
         return " ".join(
             f"{b}:{frac:.3f}" for b, frac in self.padding_waste().items()
         ) or "-"
+
+    def summary(self) -> str:
+        """One-line aggregate of everything dispatched through these stats.
+
+        This is the padding-waste report: ``solve_stream`` only *accumulates*
+        here (per-stream chatter stays at DEBUG — a sequential solver calls
+        ``solve_stream`` once per sweep, which used to flood the log with
+        one INFO line per chunk), and consumers emit this line once per
+        run (e.g. ``prune_transformer`` at the end of a prune).
+        """
+        return (
+            f"blocks={self.blocks_solved} batches={self.batches} "
+            f"padded={self.blocks_padded} "
+            f"waste_per_bucket=[{self.waste_summary()}]"
+        )
 
 
 def pad_blocks_2d(w_abs: np.ndarray, m: int) -> tuple[np.ndarray, tuple[int, int]]:
@@ -422,7 +486,11 @@ def solve_stream(
             outs[tensor_idx][tensor_off : tensor_off + count] = host[
                 bucket_off : bucket_off + count
             ]
-    logger.info(
+    # Per-stream accounting stays at DEBUG: sequential solvers invoke
+    # solve_stream once per sweep, so an INFO line here fires per chunk of
+    # the overall workload.  The aggregate is emitted once via
+    # ``StreamStats.summary()`` (see ``MaskService.stats``).
+    logger.debug(
         "solve_stream pattern=%s tensors=%d blocks=%d batches=%d padded=%d "
         "waste_per_bucket=[%s]",
         spec.canonical, len(block_arrays), local.blocks_solved, local.batches,

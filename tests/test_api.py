@@ -389,7 +389,7 @@ def test_stream_stats_padding_waste():
     assert sum(stats.bucket_padded.values()) == stats.blocks_padded
     assert (sum(stats.bucket_blocks.values())
             == stats.blocks_solved + stats.blocks_padded)
-    assert "waste=" in svc.stats.summary()
+    assert "waste_per_bucket=" in svc.stats.summary()
 
 
 # ---------------------------------------------------------------------------

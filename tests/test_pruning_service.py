@@ -1,0 +1,455 @@
+"""Service-routed SparseGPT/ALPS: bit-identity, re-entrancy, caching.
+
+The PR 4 contract: every ``PruneMethod`` — including the sequential,
+gram-based ones — dispatches its transposable block solves through the
+batched ``MaskService`` (``solve_plan`` / ``solve_via``), and the routed
+masks are bit-identical to the historical inline jitted path at
+``SolverConfig.tol = 0``.
+"""
+import logging
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.backends import register_backend, unregister_backend
+from repro.core.solver import SolverConfig, solve_mask
+from repro.patterns import PatternSpec
+from repro.pruning.alps import AlpsConfig, alps_prune, alps_solve_plan
+from repro.pruning.calib import gram_matrix
+from repro.pruning.methods import (
+    method_solve_plan,
+    get_method,
+    register_method,
+    unregister_method,
+)
+from repro.pruning.plan import drive_solve_plans
+from repro.pruning.sparsegpt import sparsegpt_prune, sparsegpt_solve_plan
+from repro.service import BucketPolicy, MaskService
+from repro.service.scheduler import StreamStats, solve_stream
+
+FAST = SolverConfig(iters=50)
+TINY = BucketPolicy(base=8, growth=2, max_bucket=32)
+
+
+def make_layer(seed=0, t=256, din=64, dout=96):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(t, din)).astype(np.float32)
+    w = rng.normal(size=(din, dout)).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(w)
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity: service / callback routes vs the historical inline path.
+# ---------------------------------------------------------------------------
+
+
+class TestBitIdentity:
+    @pytest.mark.parametrize("spec", [PatternSpec(4, 8), PatternSpec(2, 4)])
+    def test_sparsegpt_routes_identical(self, spec):
+        x, w = make_layer(seed=1)
+        h = gram_matrix(x)
+        wi, mi = sparsegpt_prune(w, h, spec, config=FAST, solve_via="inline")
+        svc = MaskService(FAST, policy=TINY)
+        ws, ms = sparsegpt_prune(w, h, spec, config=FAST,
+                                 solve_via="service", service=svc)
+        np.testing.assert_array_equal(np.array(mi), np.array(ms))
+        np.testing.assert_array_equal(np.array(wi), np.array(ws))
+        # every group's block solve went through the service
+        assert svc.stats.submitted == w.shape[0] // spec.m
+        assert svc.stats.blocks_solved == (
+            (w.shape[0] // spec.m) * (w.shape[1] // spec.m)
+        )
+        wc, mc = sparsegpt_prune(w, h, spec, config=FAST,
+                                 solve_via="callback",
+                                 service=MaskService(FAST, policy=TINY))
+        np.testing.assert_array_equal(np.array(mi), np.array(mc))
+        np.testing.assert_array_equal(np.array(wi), np.array(wc))
+
+    def test_alps_routes_identical(self):
+        x, w = make_layer(seed=2, din=64, dout=64)
+        h = gram_matrix(x)
+        spec = PatternSpec(4, 8)
+        cfg = AlpsConfig(iters=20, solver=FAST)
+        wi, mi = alps_prune(w, h, spec, config=cfg, solve_via="inline")
+        svc = MaskService(FAST, policy=TINY)
+        ws, ms = alps_prune(w, h, spec, config=cfg,
+                            solve_via="service", service=svc)
+        np.testing.assert_array_equal(np.array(mi), np.array(ms))
+        np.testing.assert_array_equal(np.array(wi), np.array(ws))
+        # init solve + one per ADMM iteration, all through the service
+        assert svc.stats.submitted == cfg.iters + 1
+        wc, mc = alps_prune(w, h, spec, config=cfg, solve_via="callback",
+                            service=MaskService(FAST, policy=TINY))
+        np.testing.assert_array_equal(np.array(mi), np.array(mc))
+        np.testing.assert_array_equal(np.array(wi), np.array(wc))
+
+    def test_non_transposable_skips_service(self):
+        x, w = make_layer(seed=3)
+        h = gram_matrix(x)
+        spec = PatternSpec(4, 8, transposable=False)
+        svc = MaskService(FAST, policy=TINY)
+        _, ms = sparsegpt_prune(w, h, spec, config=FAST,
+                                solve_via="service", service=svc)
+        _, mi = sparsegpt_prune(w, h, spec, config=FAST, solve_via="inline")
+        np.testing.assert_array_equal(np.array(mi), np.array(ms))
+        assert svc.stats.submitted == 0  # standard N:M never hits the service
+
+    def test_unknown_solve_via_rejected(self):
+        x, w = make_layer(seed=4)
+        h = gram_matrix(x)
+        with pytest.raises(ValueError, match="solve_via"):
+            sparsegpt_prune(w, h, PatternSpec(4, 8), solve_via="nope")
+        with pytest.raises(ValueError, match="solve_via"):
+            alps_prune(w, h, PatternSpec(4, 8), solve_via="nope")
+
+
+# ---------------------------------------------------------------------------
+# The solve_plan protocol + lockstep driver.
+# ---------------------------------------------------------------------------
+
+
+class _StubHandle:
+    def __init__(self, mask):
+        self._mask = mask
+
+    def result(self):
+        return self._mask
+
+
+class _StubService:
+    """Counts sweeps; returns all-ones masks without solving anything."""
+
+    def __init__(self):
+        self.flush_sizes = []
+        self._batch = 0
+
+    def submit(self, name, w, spec, *, journal=True):
+        assert not journal  # sweep requests must not hit the journal
+        self._batch += 1
+        return _StubHandle(np.ones(np.asarray(w).shape, bool))
+
+    def flush(self):
+        self.flush_sizes.append(self._batch)
+        self._batch = 0
+
+
+class TestPlanDriver:
+    def test_lockstep_batches_per_sweep(self):
+        def plan(n_steps, tag):
+            got = []
+            for i in range(n_steps):
+                mask = yield np.full((4, 4), i + 1, np.float32)
+                got.append(mask)
+            return tag, got
+
+        svc = _StubService()
+        out = drive_solve_plans(
+            {"a": plan(2, "A"), "b": plan(4, "B")}, svc, PatternSpec(2, 4)
+        )
+        # sweeps: {a,b}, {a,b}, {b}, {b} — one flush each, no trailing flush
+        assert svc.flush_sizes == [2, 2, 1, 1]
+        tag_a, masks_a = out["a"]
+        tag_b, masks_b = out["b"]
+        assert (tag_a, tag_b) == ("A", "B")
+        assert len(masks_a) == 2 and len(masks_b) == 4
+        assert all(m.dtype == bool for m in masks_a + masks_b)
+
+    def test_plan_with_no_requests(self):
+        def plan():
+            return "done", []
+            yield  # pragma: no cover - makes this a generator
+
+        out = drive_solve_plans({"p": plan()}, _StubService(), PatternSpec(2, 4))
+        assert out["p"] == ("done", [])
+
+    def test_sweep_requests_skip_journal_but_cache(self, tmp_path):
+        """Per-sweep solve requests must not fsync a journal record each
+        (thousands per layer at scale) — but they DO populate the content
+        cache, which is what a resumed run replays from."""
+        x, w = make_layer(seed=11, din=16, dout=16)
+        h = gram_matrix(x)
+        spec = PatternSpec(2, 4)
+        svc = MaskService(FAST, policy=TINY, directory=str(tmp_path))
+        _, mask = sparsegpt_prune(w, h, spec, config=FAST,
+                                  solve_via="service", service=svc)
+        assert svc.stats.blocks_solved > 0
+        assert svc.journal.completed() == {}  # no per-sweep records
+
+        # A fresh service over the same directory resumes from the cache.
+        svc2 = MaskService(FAST, policy=TINY, directory=str(tmp_path))
+        _, mask2 = sparsegpt_prune(w, h, spec, config=FAST,
+                                   solve_via="service", service=svc2)
+        assert svc2.stats.blocks_solved == 0  # pure disk-cache hits
+        np.testing.assert_array_equal(np.array(mask), np.array(mask2))
+
+    def test_registered_methods_expose_plans(self):
+        assert method_solve_plan(get_method("sparsegpt")) is not None
+        assert method_solve_plan(get_method("alps")) is not None
+        assert method_solve_plan(get_method("wanda")) is None
+
+    def test_plan_generators_match_prune_functions(self):
+        x, w = make_layer(seed=5, din=32, dout=32)
+        h = gram_matrix(x)
+        spec = PatternSpec(2, 4)
+        svc = MaskService(FAST, policy=TINY)
+        plans = {
+            "sgpt": sparsegpt_solve_plan(w, h, spec),
+            "alps": alps_solve_plan(w, h, spec, AlpsConfig(iters=5, solver=FAST)),
+        }
+        solved = drive_solve_plans(plans, svc, spec)
+        _, m_ref = sparsegpt_prune(w, h, spec, config=FAST, solve_via="inline")
+        np.testing.assert_array_equal(np.array(solved["sgpt"][1]), np.array(m_ref))
+        _, a_ref = alps_prune(w, h, spec, config=AlpsConfig(iters=5, solver=FAST),
+                              solve_via="inline")
+        np.testing.assert_array_equal(np.array(solved["alps"][1]), np.array(a_ref))
+
+
+# ---------------------------------------------------------------------------
+# Engine: re-entrant submit during an active flush; batched futures.
+# ---------------------------------------------------------------------------
+
+
+class _ReentrantBackend:
+    """Delegates to dense-jit but submits a NEW tensor to the service the
+    first time it solves — simulating an io_callback firing mid-flush."""
+
+    name = "reentrant-test"
+    traceable = False
+
+    def __init__(self):
+        self.service = None
+        self.extra = None
+        self.inner_handle = None
+
+    def solve(self, w_abs_blocks, pattern, config):
+        from repro.core.backends import get_backend
+
+        if self.inner_handle is None and self.service is not None:
+            self.inner_handle = self.service.submit(
+                "inner", self.extra, pattern
+            )
+        inner_cfg = SolverConfig(
+            iters=config.iters, ls_steps=config.ls_steps,
+            tau_scale=config.tau_scale, tol=config.tol,
+        )
+        return get_backend("dense-jit").solve(w_abs_blocks, pattern, inner_cfg)
+
+
+class TestReentrantFlush:
+    def test_submit_during_flush_resolves_in_same_call(self):
+        backend = _ReentrantBackend()
+        register_backend(backend, overwrite=True)
+        try:
+            cfg = SolverConfig(iters=50, backend="reentrant-test")
+            svc = MaskService(cfg, policy=TINY)
+            rng = np.random.default_rng(6)
+            outer = rng.normal(size=(8, 8)).astype(np.float32)
+            extra = rng.normal(size=(8, 16)).astype(np.float32)
+            backend.service, backend.extra = svc, extra
+
+            h = svc.submit("outer", outer, PatternSpec(4, 8))
+            svc.flush()
+            # both the outer tensor and the mid-flush submission resolved
+            assert h.done and backend.inner_handle is not None
+            assert backend.inner_handle.done
+            want = np.array(solve_mask(jnp.asarray(extra), PatternSpec(4, 8), FAST))
+            np.testing.assert_array_equal(
+                np.array(backend.inner_handle.result()), want
+            )
+        finally:
+            unregister_backend("reentrant-test")
+
+    def test_submit_many_and_results(self):
+        svc = MaskService(FAST, policy=TINY)
+        rng = np.random.default_rng(7)
+        tensors = [(f"t{i}", rng.normal(size=(8, 8)).astype(np.float32))
+                   for i in range(3)]
+        handles = svc.submit_many(tensors, PatternSpec(4, 8))
+        assert [h.name for h in handles] == ["t0", "t1", "t2"]
+        batches_before = svc.stats.batches
+        masks = svc.results(handles)
+        assert all(h.done for h in handles)
+        assert len(masks) == 3
+        for (_, w), mask in zip(tensors, masks):
+            np.testing.assert_array_equal(
+                np.array(mask),
+                np.array(solve_mask(jnp.asarray(w), PatternSpec(4, 8), FAST)),
+            )
+        # resolving again is free: no extra flush work
+        svc.results(handles)
+        assert svc.stats.batches == batches_before + 1
+
+    def test_results_rejects_foreign_handles(self):
+        svc1 = MaskService(FAST, policy=TINY)
+        svc2 = MaskService(FAST, policy=TINY)
+        h = svc1.submit("w", np.ones((8, 8), np.float32), PatternSpec(4, 8))
+        with pytest.raises(ValueError, match="different MaskService"):
+            svc2.results([h])
+        svc1.flush()
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: sub-base rungs for many-small-blocks streams; log-once fix.
+# ---------------------------------------------------------------------------
+
+
+class TestSmallStreamBucketing:
+    def test_sub_rungs_ladder(self):
+        p = BucketPolicy(base=64, growth=4, max_bucket=256, min_bucket=8)
+        assert p.sub_rungs() == (32, 16, 8)
+        assert BucketPolicy(base=64).sub_rungs() == ()  # historic default
+
+    def test_plan_small_stream_avoids_base_roundup(self):
+        p = BucketPolicy(base=64, growth=4, max_bucket=256, min_bucket=8,
+                         tail_decompose=True)
+        assert p.plan(12) == [8, 8]          # padding 4, not 52
+        assert p.plan(3) == [8]
+        assert p.plan(100) == [64, 32, 8]    # padding 4
+        assert p.plan(64) == [64]
+        # covering-rung mode picks the smallest sub rung that covers
+        q = BucketPolicy(base=64, growth=4, max_bucket=256, min_bucket=8)
+        assert q.plan(12) == [16]
+
+    def test_min_bucket_zero_is_bit_compatible(self):
+        # the exact cases of test_service.test_bucket_plan_ladder
+        p = BucketPolicy(base=8, growth=4, max_bucket=128)
+        assert p.plan(128 * 3 + 40) == [128, 128, 128, 128]
+        assert p.plan(7) == [8]
+        assert p.plan(9) == [32]
+
+    def test_for_device_sets_min_bucket(self):
+        from repro.kernels.vmem import VPU_ALIGN
+
+        p = BucketPolicy.for_device(8)
+        assert p.min_bucket == min(VPU_ALIGN, p.base)
+        assert p.tail_decompose
+
+    def test_small_streams_solve_bit_exact(self):
+        rng = np.random.default_rng(8)
+        w = rng.normal(size=(8, 24)).astype(np.float32)  # 3 blocks << base
+        policy = BucketPolicy(base=64, growth=4, max_bucket=256, min_bucket=8,
+                              tail_decompose=True)
+        svc = MaskService(FAST, policy=policy)
+        mask = svc.solve(w, PatternSpec(4, 8))
+        np.testing.assert_array_equal(
+            np.array(mask),
+            np.array(solve_mask(jnp.asarray(w), PatternSpec(4, 8), FAST)),
+        )
+        assert svc.stats.stream.blocks_padded == 5  # 3 real in one 8-bucket
+
+
+class TestPaddingWasteLogging:
+    def test_solve_stream_is_quiet_at_info(self, caplog):
+        blocks = np.abs(np.random.default_rng(9).normal(size=(4, 8, 8))
+                        ).astype(np.float32)
+        stats = StreamStats()
+        with caplog.at_level(logging.INFO, logger="repro.service.scheduler"):
+            for _ in range(3):  # sequential solvers call this once per sweep
+                solve_stream([blocks], PatternSpec(4, 8), FAST, TINY, stats)
+        assert not [r for r in caplog.records
+                    if r.name == "repro.service.scheduler"
+                    and r.levelno >= logging.INFO]
+
+    def test_stream_stats_summary_aggregates(self):
+        stats = StreamStats()
+        stats.note_batch(8, 6, 2)
+        stats.note_batch(8, 8, 0)
+        stats.note_batch(16, 10, 6)
+        line = stats.summary()
+        assert "blocks=24" in line and "batches=3" in line
+        assert "padded=8" in line and "waste_per_bucket=" in line
+        assert "8:0.125" in line and "16:0.375" in line
+
+
+# ---------------------------------------------------------------------------
+# prune_transformer: service-routed SparseGPT/ALPS vs pre-PR inline masks,
+# and cache hits across a two-model prune.
+# ---------------------------------------------------------------------------
+
+
+def _tiny_lm(seed=0):
+    from repro.models.config import ModelConfig
+    from repro.models import lm
+
+    cfg = ModelConfig("psvc-test", "dense", num_layers=2, d_model=32,
+                      num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=64,
+                      remat="none", dtype="float32")
+    params = lm.init_params(cfg, jax.random.PRNGKey(seed))
+    tokens = jnp.asarray(
+        np.random.default_rng(seed).integers(0, 64, size=(2, 16))
+    )
+    return cfg, params, tokens
+
+
+def _register_inline_twin(method_name):
+    """The pre-PR behavior: same method, solves inlined in its jitted loop."""
+    if method_name == "sparsegpt":
+        def fn(w, gram, pattern, ctx):
+            h = gram if gram is not None else ctx.gram()
+            return sparsegpt_prune(w, h, pattern, config=ctx.solver,
+                                   solve_via="inline")
+        return register_method("inline-twin", fn, needs_gram=True,
+                               overwrite=True)
+    def fn(w, gram, pattern, ctx):
+        h = gram if gram is not None else ctx.gram()
+        cfg = ctx.alps if ctx.alps is not None else AlpsConfig(solver=ctx.solver)
+        return alps_prune(w, h, pattern, config=cfg, solve_via="inline")
+    return register_method("inline-twin", fn, needs_gram=True, overwrite=True)
+
+
+@pytest.mark.parametrize("method,alps_iters", [("sparsegpt", None), ("alps", 4)])
+def test_prune_transformer_service_routed_matches_inline(method, alps_iters):
+    from repro.pruning.runner import prune_transformer
+
+    cfg, params, tokens = _tiny_lm()
+    solver = SolverConfig(iters=40)
+    alps_cfg = AlpsConfig(iters=alps_iters, solver=solver) if alps_iters else None
+    svc = MaskService(solver, policy=TINY)
+    pruned, masks = prune_transformer(
+        params, cfg, tokens=tokens, method=method, pattern=PatternSpec(2, 4),
+        solver=solver, alps_cfg=alps_cfg, service=svc,
+    )
+    # ALL of the method's transposable block solves went through the service
+    assert svc.stats.submitted > 0 and svc.stats.blocks_solved > 0
+
+    _register_inline_twin(method)
+    try:
+        pruned_ref, masks_ref = prune_transformer(
+            params, cfg, tokens=tokens, method="inline-twin",
+            pattern=PatternSpec(2, 4), solver=solver, alps_cfg=alps_cfg,
+        )
+    finally:
+        unregister_method("inline-twin")
+    for a, b in zip(jax.tree.leaves(masks), jax.tree.leaves(masks_ref)):
+        np.testing.assert_array_equal(np.array(a), np.array(b))
+    for a, b in zip(jax.tree.leaves(pruned), jax.tree.leaves(pruned_ref)):
+        np.testing.assert_array_equal(np.array(a), np.array(b))
+
+
+def test_two_model_prune_hits_cache():
+    """Pruning a second identical model re-solves NOTHING: every sequential
+    solve request is content-addressed, so model #2 is pure cache hits."""
+    from repro.pruning.runner import prune_transformer
+
+    cfg, params, tokens = _tiny_lm()
+    solver = SolverConfig(iters=40)
+    svc = MaskService(solver, policy=TINY)
+    _, masks1 = prune_transformer(
+        params, cfg, tokens=tokens, method="sparsegpt",
+        pattern=PatternSpec(2, 4), solver=solver, service=svc,
+    )
+    solved_first = svc.stats.blocks_solved
+    submitted_first = svc.stats.submitted
+    hits_first = svc.stats.cache_hits
+    assert solved_first > 0 and hits_first == 0
+
+    _, masks2 = prune_transformer(
+        params, cfg, tokens=tokens, method="sparsegpt",
+        pattern=PatternSpec(2, 4), solver=solver, service=svc,
+    )
+    assert svc.stats.blocks_solved == solved_first      # zero new solves
+    assert svc.stats.cache_hits - hits_first == svc.stats.submitted - submitted_first
+    for a, b in zip(jax.tree.leaves(masks1), jax.tree.leaves(masks2)):
+        np.testing.assert_array_equal(np.array(a), np.array(b))

@@ -1,0 +1,151 @@
+"""Docs gate: markdown link check + doctest-style execution of examples.
+
+Two checks, run by the CI ``docs`` job and by ``tests/test_docs.py``:
+
+1. **Links** — every relative markdown link in ``docs/*.md`` and
+   ``README.md`` must point at an existing file, and every in-document
+   anchor (``#...``, own-file or cross-file) must match a heading slug of
+   the target document (GitHub slugification).  External ``http(s)``/
+   ``mailto`` links are not fetched (CI must pass offline).
+2. **Examples** — every fenced ```` ```python ```` block in ``docs/*.md``
+   is executed, top to bottom, with one shared namespace per file (so
+   later blocks may build on earlier ones, like a doctest session).  Use a
+   different fence language (``text``, ``pycon``) for non-executable
+   listings.
+
+Usage::
+
+    PYTHONPATH=src python tools/check_docs.py [--no-exec]
+
+Exits non-zero with a per-finding report on any failure.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+# [text](target) — excluding images' leading "!" is unnecessary: image
+# targets must exist just like link targets.
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING_RE = re.compile(r"^(#{1,6})\s+(.*?)\s*$", re.MULTILINE)
+_FENCE_RE = re.compile(r"^```(\w*)\s*$")
+
+
+def doc_files() -> list[pathlib.Path]:
+    return sorted((REPO / "docs").glob("*.md")) + [REPO / "README.md"]
+
+
+def _rel(path: pathlib.Path) -> str:
+    try:
+        return str(path.relative_to(REPO))
+    except ValueError:  # e.g. a test fixture under /tmp
+        return str(path)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug for a heading line (good enough for our docs):
+    drop code ticks, lowercase, strip non [alnum spaces hyphens underscores],
+    spaces -> hyphens."""
+    s = heading.replace("`", "").lower()
+    s = re.sub(r"[^\w\- ]", "", s)
+    return s.replace(" ", "-")
+
+
+def heading_slugs(path: pathlib.Path) -> set[str]:
+    text = path.read_text()
+    slugs: set[str] = set()
+    # Headings inside fenced blocks are not anchors; strip fences first.
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    for _level, title in _HEADING_RE.findall(text):
+        slugs.add(github_slug(title))
+    return slugs
+
+
+def check_links(paths=None) -> list[str]:
+    """Returns a list of human-readable problems (empty = all links OK)."""
+    problems = []
+    for path in paths if paths is not None else doc_files():
+        text = path.read_text()
+        text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)  # skip code
+        for target in _LINK_RE.findall(text):
+            if re.match(r"^[a-z][a-z0-9+.-]*:", target):  # http:, mailto:, …
+                continue
+            file_part, _, anchor = target.partition("#")
+            if file_part:
+                dest = (path.parent / file_part).resolve()
+                if not dest.exists():
+                    problems.append(f"{_rel(path)}: broken link "
+                                    f"-> {target} (no such file)")
+                    continue
+            else:
+                dest = path
+            if anchor and dest.suffix == ".md":
+                if github_slug(anchor) not in heading_slugs(dest):
+                    problems.append(
+                        f"{_rel(path)}: broken anchor -> "
+                        f"{target} (no heading '#{anchor}' in "
+                        f"{_rel(dest)})"
+                    )
+    return problems
+
+
+def python_blocks(path: pathlib.Path) -> list[tuple[int, str]]:
+    """(start line, source) for every ```python fenced block in ``path``."""
+    blocks = []
+    lines = path.read_text().splitlines()
+    in_block, lang, start, buf = False, "", 0, []
+    for i, line in enumerate(lines, 1):
+        fence = _FENCE_RE.match(line)
+        if fence and not in_block:
+            in_block, lang, start, buf = True, fence.group(1), i + 1, []
+        elif line.strip() == "```" and in_block:
+            if lang == "python":
+                blocks.append((start, "\n".join(buf)))
+            in_block = False
+        elif in_block:
+            buf.append(line)
+    return blocks
+
+
+def run_python_blocks(path: pathlib.Path) -> list[str]:
+    """Execute a file's python blocks in one shared namespace; returns
+    problems (empty = every example ran)."""
+    namespace: dict = {"__name__": f"docs:{path.name}"}
+    problems = []
+    for start, source in python_blocks(path):
+        try:
+            code = compile(source, f"{path}:{start}", "exec")
+            exec(code, namespace)  # noqa: S102 - that's the point
+        except Exception as exc:  # pragma: no cover - failure reporting
+            problems.append(
+                f"{_rel(path)}:{start}: example failed: "
+                f"{type(exc).__name__}: {exc}"
+            )
+            break  # later blocks in this file depend on this one
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--no-exec", action="store_true",
+                    help="only check links, skip running the examples")
+    args = ap.parse_args(argv)
+
+    problems = check_links()
+    if not args.no_exec:
+        for path in sorted((REPO / "docs").glob("*.md")):
+            problems += run_python_blocks(path)
+    for p in problems:
+        print(f"FAIL {p}")
+    if not problems:
+        n_docs = len(list((REPO / 'docs').glob('*.md')))
+        print(f"docs OK: {n_docs} docs + README links good, examples ran")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
