@@ -4,11 +4,21 @@ masks, with fault-tolerant checkpointing throughout.
     PYTHONPATH=src python examples/sparse_finetune.py               # ~30M params
     PYTHONPATH=src python examples/sparse_finetune.py --preset tiny # CI-sized
     PYTHONPATH=src python examples/sparse_finetune.py --preset 100m # full driver
+    PYTHONPATH=src python examples/sparse_finetune.py --compressed  # SparseParams
 
 This is the paper's motivating workload: after TSENOR pruning, BOTH the
 forward matmuls (W·x) and the backward input-gradient matmuls (Wᵀ·g) of the
 fine-tune are N:M-sparse-accelerable, because the masks are transposable.
-Interrupt it (Ctrl-C) and re-run: it resumes from the latest checkpoint.
+With ``--compressed`` the fine-tune actually executes that way: the pruned
+projections are stored as (values, int8 indices) ``NMCompressed`` buffers,
+every matmul streams them through the nm_spmm kernel, and the optimizer
+state lives on the compressed shapes.  Note the two runs are not directly
+comparable: ``--compressed`` prunes the projection matmuls only
+(``projection_prunable`` — the surface the kernel executes), while the
+default run also masks the embed/unembed tables.  Over the *same* mask set
+the compressed step is bit-identical to masked-dense training — that
+property is asserted in ``tests/test_compressed_exec.py``.  Interrupt it
+(Ctrl-C) and re-run: it resumes from the latest checkpoint.
 """
 import argparse
 import os
@@ -24,7 +34,14 @@ from repro.models import lm
 from repro.models.config import ModelConfig
 from repro.optim import AdamW, warmup_cosine
 from repro.sparsity.masks import apply_mask, mask_sparsity, sparsify_pytree
+from repro.sparsity.params import (
+    compress_params,
+    decompress_params,
+    projection_prunable,
+    sparse_param_bytes,
+)
 from repro.train import TrainLoop, TrainLoopConfig, build_train_step, make_train_state
+from repro.train.step import StepConfig
 
 PRESETS = {
     "tiny": ModelConfig("ft-tiny", "dense", num_layers=2, d_model=64,
@@ -49,6 +66,9 @@ def main():
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_sparse_finetune")
+    ap.add_argument("--compressed", action="store_true",
+                    help="fine-tune from SparseParams (NMCompressed buffers) "
+                         "instead of masked dense weights")
     args = ap.parse_args()
 
     cfg = PRESETS[args.preset]
@@ -69,18 +89,35 @@ def main():
 
     # Phase 2: TSENOR transposable masks for every projection.
     print(f"== solving transposable {args.n}:{args.m} masks (TSENOR) ==")
+    prunable_kw = dict(prunable=projection_prunable) if args.compressed else {}
     masks = sparsify_pytree(state.params, PatternSpec(args.n, args.m),
-                            config=SolverConfig(iters=200, block_batch=1 << 15))
+                            config=SolverConfig(iters=200, block_batch=1 << 15),
+                            **prunable_kw)
     print(f"mask sparsity {mask_sparsity(masks):.3f}")
     pruned = apply_mask(state.params, masks)
 
-    # Phase 3: sparse fine-tune — both passes N:M-accelerable.
+    # Phase 3: sparse fine-tune — both passes N:M-accelerable.  With
+    # --compressed the step consumes SparseParams: no masks, no dense W.
     opt_ft = AdamW(learning_rate=warmup_cosine(1e-3, 10, args.finetune_steps))
-    ckpt_ft = CheckpointManager(os.path.join(args.ckpt_dir, cfg.name, "sparse"),
+    subdir = "compressed" if args.compressed else "sparse"
+    ckpt_ft = CheckpointManager(os.path.join(args.ckpt_dir, cfg.name, subdir),
                                 keep_n=2)
-    st = make_train_state(cfg, opt_ft, jax.random.PRNGKey(1))
-    st = st._replace(params=jax.tree.map(jnp.copy, pruned))
-    loop_ft = TrainLoop(build_train_step(cfg, opt_ft, masks=masks), data, ckpt_ft,
+    if args.compressed:
+        sp = compress_params(pruned, masks, PatternSpec(args.n, args.m))
+        acc = sparse_param_bytes(sp)
+        print(f"== compressed projections: {acc['compressed'] / 1e6:.2f} MB "
+              f"({acc['ratio']:.3f}x of {acc['dense'] / 1e6:.2f} MB dense) ==")
+        # Copy before the donating loop: dense leaves (embed/norms) share
+        # buffers with the evaluation params.
+        st = make_train_state(cfg, opt_ft, jax.random.PRNGKey(1),
+                              params=jax.tree.map(jnp.copy, sp))
+        step_ft = build_train_step(cfg, opt_ft,
+                                   step_cfg=StepConfig(mask_mode="compressed"))
+    else:
+        st = make_train_state(cfg, opt_ft, jax.random.PRNGKey(1),
+                              params=jax.tree.map(jnp.copy, pruned))
+        step_ft = build_train_step(cfg, opt_ft, masks=masks)
+    loop_ft = TrainLoop(step_ft, data, ckpt_ft,
                         TrainLoopConfig(total_steps=args.finetune_steps,
                                         ckpt_every=50, log_every=20))
     st, hist_ft = loop_ft.run(st)
@@ -92,9 +129,19 @@ def main():
             for i in range(4)
         ]))
 
+    if args.compressed:
+        ft_params = st.params  # evaluate straight from the compressed tree
+        # Exact only when every projection fits one nm_spmm K-tile (256);
+        # larger dims accumulate per tile and differ from dense in ULPs.
+        # Same f32-roundoff tolerance as benchmarks/train_step_sparse.py.
+        drift = abs(eval_loss(ft_params) - eval_loss(decompress_params(st.params)))
+        print(f"compressed vs decompressed-dense eval delta: {drift:.3e}")
+        assert drift < 1e-4, drift
+    else:
+        ft_params = apply_mask(st.params, masks)
     print(f"dense {eval_loss(state.params):.4f} | "
           f"pruned {eval_loss(pruned):.4f} | "
-          f"sparse-finetuned {eval_loss(apply_mask(st.params, masks)):.4f}")
+          f"sparse-finetuned {eval_loss(ft_params):.4f}")
 
 
 if __name__ == "__main__":

@@ -43,6 +43,12 @@ _API_NAMES = (
     "apply_mask",
     "mask_sparsity",
     "sparsify_pytree",
+    "NMCompressed",
+    "compress_params",
+    "decompress_params",
+    "is_sparse_params",
+    "masks_from_params",
+    "sparse_param_bytes",
 )
 
 __all__ = list(_API_NAMES) + ["api", "compat"]

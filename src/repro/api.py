@@ -15,6 +15,12 @@ frameworks" lives here:
   :class:`MaskService` (``service.solve(w, pattern)``) for whole-model
   workloads with bucketed mega-batches, multi-device sharding, caching and
   journaled resume.
+* **Compressed execution** — :class:`NMCompressed` /
+  :func:`compress_params` / :func:`decompress_params`: SparseParams trees
+  whose pruned projections train and serve straight from ``(values,
+  indices)`` buffers through the nm_spmm kernel
+  (``prune_transformer(emit="compressed")``,
+  ``StepConfig(mask_mode="compressed")``).
 
 Every pruning method routes its transposable mask solves through the
 service: importance-scored methods (Wanda, magnitude) as one up-front
@@ -71,6 +77,14 @@ from repro.pruning.methods import (
 )
 from repro.pruning.runner import prune_transformer
 from repro.sparsity.masks import apply_mask, mask_sparsity, sparsify_pytree
+from repro.sparsity.params import (
+    NMCompressed,
+    compress_params,
+    decompress_params,
+    is_sparse_params,
+    masks_from_params,
+    sparse_param_bytes,
+)
 
 __all__ = [
     # pattern
@@ -110,4 +124,11 @@ __all__ = [
     "apply_mask",
     "mask_sparsity",
     "sparsify_pytree",
+    # compressed execution (SparseParams)
+    "NMCompressed",
+    "compress_params",
+    "decompress_params",
+    "is_sparse_params",
+    "masks_from_params",
+    "sparse_param_bytes",
 ]

@@ -22,10 +22,13 @@ import json
 import os
 import shutil
 import threading
+import time
 from typing import Any, Optional
 
 import jax
 import numpy as np
+
+from repro.treepath import path_str
 
 _SEP = "__"
 
@@ -34,19 +37,8 @@ def _flatten(tree) -> dict[str, np.ndarray]:
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     out = {}
     for path, leaf in flat:
-        key = _SEP.join(_path_str(p) for p in path)
-        out[key] = np.asarray(leaf)
+        out[path_str(path, _SEP)] = np.asarray(leaf)
     return out
-
-
-def _path_str(p) -> str:
-    if hasattr(p, "key"):
-        return str(p.key)
-    if hasattr(p, "idx"):
-        return str(p.idx)
-    if hasattr(p, "name"):
-        return str(p.name)
-    return str(p)
 
 
 class ContentStore:
@@ -58,6 +50,12 @@ class ContentStore:
     mid-write never leaves a readable-but-corrupt entry.  Used by
     ``repro.service`` to persist solved masks / pruned tensors across runs:
     because keys are content hashes, restarts and re-runs dedupe for free.
+
+    Retention: model-scale stores grow without bound (every distinct tensor
+    content is a new immutable entry), so ``prune(max_bytes=...)`` evicts
+    least-recently-*accessed* entries until the store fits.  Each ``get``/
+    ``put`` bumps the entry's mtime, which is the LRU clock — cheap, crash
+    safe, and survives process restarts.
     """
 
     def __init__(self, directory: str):
@@ -70,8 +68,18 @@ class ContentStore:
     def has(self, key: str) -> bool:
         return os.path.exists(self.path(key))
 
+    def touch(self, key: str) -> None:
+        """Bump the entry's LRU clock (mtime = last access) without IO of
+        the payload — callers with their own memory front use this so their
+        hits still count as recency for :meth:`prune`."""
+        try:
+            os.utime(self.path(key))
+        except OSError:
+            pass
+
     def put(self, key: str, **arrays: np.ndarray) -> None:
         if self.has(key):  # immutable: same key == same content
+            self.touch(key)
             return
         tmp = self.path(key) + f".tmp.{os.getpid()}"
         with open(tmp, "wb") as f:
@@ -80,12 +88,61 @@ class ContentStore:
 
     def get(self, key: str) -> dict[str, np.ndarray]:
         with np.load(self.path(key)) as z:
-            return {k: z[k] for k in z.files}
+            out = {k: z[k] for k in z.files}
+        self.touch(key)
+        return out
 
     def keys(self) -> list[str]:
         return sorted(
             name[:-4] for name in os.listdir(self.dir) if name.endswith(".npz")
         )
+
+    def size_bytes(self) -> int:
+        total = 0
+        for name in os.listdir(self.dir):
+            if name.endswith(".npz"):
+                try:
+                    total += os.path.getsize(os.path.join(self.dir, name))
+                except OSError:
+                    pass  # concurrently evicted
+        return total
+
+    def prune(self, max_bytes: int, tmp_max_age: float = 3600.0) -> list[str]:
+        """Evict least-recently-accessed entries until the store holds at
+        most ``max_bytes``; returns the evicted keys (oldest first).
+
+        Also garbage-collects ``*.tmp.<pid>`` orphans older than
+        ``tmp_max_age`` seconds — writers killed mid-``put`` leave them
+        behind, invisible to the ``.npz`` accounting but still on disk.
+        """
+        cutoff = time.time() - tmp_max_age
+        for name in os.listdir(self.dir):
+            if ".tmp." in name:
+                path = os.path.join(self.dir, name)
+                try:
+                    if os.path.getmtime(path) < cutoff:
+                        os.remove(path)
+                except OSError:
+                    pass
+        entries = []
+        for key in self.keys():
+            try:
+                st = os.stat(self.path(key))
+            except OSError:
+                continue
+            entries.append((st.st_mtime, st.st_size, key))
+        total = sum(size for _, size, _ in entries)
+        evicted = []
+        for _mtime, size, key in sorted(entries):
+            if total <= max_bytes:
+                break
+            try:
+                os.remove(self.path(key))
+            except OSError:
+                continue
+            total -= size
+            evicted.append(key)
+        return evicted
 
 
 class CheckpointManager:
@@ -173,7 +230,7 @@ class CheckpointManager:
         )
         leaves = []
         for (path, leaf), sh in zip(flat[0], shard_leaves):
-            key = _SEP.join(_path_str(p) for p in path)
+            key = path_str(path, _SEP)
             arr = np.load(os.path.join(base, key + ".npy"))
             if hasattr(leaf, "dtype"):
                 arr = arr.astype(leaf.dtype)

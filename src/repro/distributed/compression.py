@@ -32,6 +32,8 @@ def compressed_psum(grads, ef, axis_name: str):
     n = axis_size(axis_name)
 
     def one(g, e):
+        if g.size == 0:  # non-diff placeholder (compressed N:M indices)
+            return g, jnp.zeros_like(g)
         g32 = g.astype(jnp.float32)
         if e is not None:
             g32 = g32 + e.astype(jnp.float32)

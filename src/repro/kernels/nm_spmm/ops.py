@@ -5,6 +5,12 @@ forward pass computes X·W from the compressed buffer, and the backward pass
 computes dX = dY·Wᵀ from the *same* buffer (transposable masks make the
 transposed view N:M too).  dW is returned densely against the mask support —
 weight gradients are only needed at mask positions.
+
+``nm_linear_nd`` is the model-facing variant: it accepts activations with any
+leading batch dims (``(B, S, K)`` training tensors, ``(B, 1, K)`` decode
+steps) by flattening them into the kernel's ``(rows, K)`` layout — this is
+what :func:`repro.models.layers.proj` dispatches compressed parameter leaves
+through.
 """
 from __future__ import annotations
 
@@ -40,8 +46,25 @@ def _bwd(m, res, dy):
     dw = (x.astype(jnp.float32).T @ dy.astype(jnp.float32))  # (K, F)
     g, n, f = vals.shape
     dwg = dw.reshape(g, m, f)
-    dvals = jnp.take_along_axis(dwg, idx.astype(jnp.int32), axis=1).astype(vals.dtype)
+    gathered = jnp.take_along_axis(
+        dwg, jnp.maximum(idx.astype(jnp.int32), 0), axis=1
+    )
+    # Dead slots (idx == -1, groups with fewer than N nonzeros) must not
+    # gather another position's gradient: their value stays pinned at 0.
+    dvals = jnp.where(idx >= 0, gathered, 0.0).astype(vals.dtype)
     return dx, dvals, None
 
 
 nm_linear.defvjp(_fwd, _bwd)
+
+
+def nm_linear_nd(x, vals, idx, m):
+    """``nm_linear`` over activations with arbitrary leading dims.
+
+    ``x``: ``(..., K)`` -> returns ``(..., F)`` in ``x.dtype``.  Leading dims
+    are flattened into the kernel's row dimension (rows are independent, so
+    this is exact) and restored on the way out.
+    """
+    lead = x.shape[:-1]
+    y = nm_linear(x.reshape(-1, x.shape[-1]), vals, idx, m)
+    return y.reshape(*lead, y.shape[-1])

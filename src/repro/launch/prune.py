@@ -31,6 +31,9 @@ def main():
     ap.add_argument("--calib-tokens", type=int, default=8192)
     ap.add_argument("--restore", default=None, help="checkpoint dir to prune")
     ap.add_argument("--out", default=None, help="save pruned params here")
+    ap.add_argument("--emit", default="dense", choices=["dense", "compressed"],
+                    help="compressed: return/save SparseParams (NMCompressed "
+                         "buffers) ready for sparse fine-tune + serving")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
@@ -56,10 +59,16 @@ def main():
           f"{'standard' if args.standard else 'transposable'} {spec.n}:{spec.m}")
     pruned, masks = prune_transformer(
         params, cfg, tokens=calib, method=args.method, pattern=spec,
-        solver=SolverConfig(iters=150), log=print,
+        solver=SolverConfig(iters=150), log=print, emit=args.emit,
     )
     nz = float(np.mean([float(jnp.mean(mk)) for mk in jax.tree.leaves(masks)]))
     print(f"[prune] kept fraction {nz:.3f} (target {spec.density:.3f})")
+    if args.emit == "compressed":
+        from repro.sparsity.params import sparse_param_bytes
+
+        acc = sparse_param_bytes(pruned)
+        print(f"[prune] compressed projections: {acc['compressed'] / 1e6:.2f} MB "
+              f"({acc['ratio']:.3f}x of their {acc['dense'] / 1e6:.2f} MB dense)")
     if args.out:
         mgr = CheckpointManager(args.out, async_save=False)
         mgr.save(0, {"params": pruned, "masks": masks})

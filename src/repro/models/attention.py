@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.distributed.sharding import current_mesh, model_axis_size, shard
 from repro.models.config import ModelConfig
+from repro.models.layers import proj
 
 NEG_INF = -1e30
 
@@ -173,9 +174,9 @@ def attention(
     b, s, d = x.shape
     h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     g = h // kv
-    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, h, hd)
-    k = (x @ p["wk"].astype(x.dtype)).reshape(b, s, kv, hd)
-    v = (x @ p["wv"].astype(x.dtype)).reshape(b, s, kv, hd)
+    q = proj(x, p["wq"]).reshape(b, s, h, hd)
+    k = proj(x, p["wk"]).reshape(b, s, kv, hd)
+    v = proj(x, p["wv"]).reshape(b, s, kv, hd)
     if _use_seq_parallel_attn(cfg, s):
         q = shard(q, "act_batch", "act_attn_seq", None, None)
         k = shard(k, "act_batch", None, None, None)
@@ -264,7 +265,7 @@ def attention(
         out = shard(out, "act_batch", "act_seq", "act_heads")
     if capture is not None:
         capture["pre_out"] = out  # inputs to wo — used by layer-wise pruning
-    return out @ p["wo"].astype(x.dtype), new_cache
+    return proj(out, p["wo"]), new_cache
 
 
 def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> KVCache:

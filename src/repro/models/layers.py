@@ -1,10 +1,31 @@
-"""Shared building blocks: norms, MLP, embeddings, init helpers."""
+"""Shared building blocks: norms, MLP, embeddings, init helpers.
+
+Projection matmuls go through :func:`proj`, which dispatches per parameter
+leaf at trace time: dense leaves stay plain ``x @ w`` (bit-identical to the
+historical path), :class:`~repro.sparsity.params.NMCompressed` leaves execute
+through the compressed transposable-N:M kernel (``nm_linear_nd``) — forward
+AND input-gradient matmuls read the same compressed buffer, never a dense W.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import shard
+from repro.kernels.nm_spmm.ops import nm_linear_nd
+from repro.sparsity.params import NMCompressed
+
+
+def proj(x: jnp.ndarray, w) -> jnp.ndarray:
+    """``x @ w`` for a dense OR compressed (``NMCompressed``) weight leaf.
+
+    The isinstance branch resolves at trace time, so under ``jit`` each leaf
+    compiles to exactly one of the two paths — mixed trees (pruned
+    projections compressed, embeddings dense) cost nothing extra.
+    """
+    if isinstance(w, NMCompressed):
+        return nm_linear_nd(x, w.values, w.indices, w.m)
+    return x @ w.astype(x.dtype)
 
 
 def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
@@ -16,9 +37,9 @@ def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
 
 def swiglu_mlp(p: dict, x: jnp.ndarray) -> jnp.ndarray:
     """Gated MLP: down( silu(x@gate) * (x@up) )."""
-    h = jax.nn.silu(x @ p["gate"].astype(x.dtype)) * (x @ p["up"].astype(x.dtype))
+    h = jax.nn.silu(proj(x, p["gate"])) * proj(x, p["up"])
     h = shard(h, "act_batch", "act_seq", "act_heads")
-    return h @ p["down"].astype(x.dtype)
+    return proj(h, p["down"])
 
 
 def embed_tokens(table: jnp.ndarray, tokens: jnp.ndarray, dtype) -> jnp.ndarray:

@@ -6,6 +6,13 @@ Block kinds:
   * ssm block ("ssm"): pre-RMSNorm Mamba2/SSD (no MLP, following Mamba2).
   * hybrid ("hybrid", zamba2-style): ssm blocks; one *shared-weight*
     attention+MLP block applied after every ``hybrid_attn_every`` layers.
+
+Attention/MLP projection leaves may be dense arrays OR compressed
+:class:`~repro.sparsity.params.NMCompressed` buffers (SparseParams): the
+matmuls route through :func:`repro.models.layers.proj`, which dispatches
+per leaf, so the same block code serves dense training, masked fine-tuning
+and fully compressed execution.  MoE expert tensors and Mamba projections
+stay dense (their einsums don't route through ``proj``).
 """
 from __future__ import annotations
 

@@ -4,6 +4,12 @@ Moments inherit the parameter sharding (elementwise update), so under the
 FSDP("data") x TP("model") rules the optimizer state is fully ZeRO-sharded
 for free.  ``moment_dtype="bfloat16"`` halves optimizer HBM for the 100B+
 archs (see EXPERIMENTS.md §Dry-run memory table).
+
+Compressed SparseParams trees work out of the box: moments are allocated on
+the *stored* leaf shapes, so an :class:`~repro.sparsity.params.NMCompressed`
+projection's moments live on its ``(G, N, F)`` values — N/M of the dense
+optimizer memory — and its integer ``indices`` leaf gets a size-0
+placeholder and passes through every update untouched.
 """
 from __future__ import annotations
 
@@ -34,6 +40,8 @@ class AdamW:
         dt = jnp.dtype(self.moment_dtype) if self.moment_dtype else None
 
         def zeros(p):
+            if not jnp.issubdtype(p.dtype, jnp.inexact):
+                return jnp.zeros((0,), jnp.float32)  # non-diff (e.g. indices)
             return jnp.zeros(p.shape, dt or p.dtype)
 
         return AdamWState(
@@ -52,7 +60,8 @@ class AdamW:
         if self.clip_norm:
             gnorm = jnp.sqrt(
                 sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
-                    for g in jax.tree.leaves(grads))
+                    for g in jax.tree.leaves(grads)
+                    if g.dtype != jax.dtypes.float0)
             )
             scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
         else:
@@ -63,6 +72,8 @@ class AdamW:
         c2 = 1.0 - self.b2**step.astype(jnp.float32)
 
         def upd(g, m, v, p):
+            if not jnp.issubdtype(p.dtype, jnp.inexact):
+                return p, m, v  # integer leaf (compressed indices): frozen
             g = g.astype(jnp.float32) * scale
             m_new = self.b1 * m.astype(jnp.float32) + (1 - self.b1) * g
             v_new = self.b2 * v.astype(jnp.float32) + (1 - self.b2) * g * g

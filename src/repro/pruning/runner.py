@@ -107,6 +107,7 @@ def prune_transformer(
     log=lambda s: None,
     service: Optional[MaskService] = None,
     journal_dir: Optional[str] = None,
+    emit: str = "dense",
 ):
     """Returns (pruned params, {proj_name: stacked masks}).
 
@@ -119,10 +120,38 @@ def prune_transformer(
     ``journal_dir``: persist every pruned (W, mask) pair content-addressed
     under this directory and journal completions; re-running with the same
     inputs resumes after an interruption without re-solving finished tensors.
+    ``emit``: ``"dense"`` returns masked dense weights (historical);
+    ``"compressed"`` returns a SparseParams tree — each pruned projection a
+    scan-stacked :class:`~repro.sparsity.params.NMCompressed` buffer, ready
+    to hand straight to ``build_train_step(mask_mode="compressed")`` /
+    ``ServeEngine`` with no dense masked weights in the returned tree.
     """
     assert cfg.family in ("dense", "vlm", "audio"), cfg.family
+    if emit not in ("dense", "compressed"):
+        raise ValueError(f"emit must be 'dense' or 'compressed', got {emit!r}")
     spec = pattern_from_args(pattern, m, transposable, n=n,
                              caller="prune_transformer")
+    if emit == "compressed" and not spec.transposable:
+        raise ValueError(
+            "emit='compressed' needs a transposable pattern: the compressed "
+            "buffer must serve both W and W^T"
+        )
+    if emit == "compressed":
+        # Fail BEFORE solving, not after a model-scale prune: the dense
+        # path pads non-multiple dims, but the (values, indices) layout
+        # has no partial groups.
+        blk = params["blocks"]
+        for grp, names in (("attn", ("wq", "wk", "wv", "wo")),
+                           ("mlp", ("gate", "up", "down"))):
+            for name in names:
+                k_dim = blk[grp][name].shape[-2]
+                if k_dim % spec.m != 0:
+                    raise ValueError(
+                        f"emit='compressed': {grp}/{name} reduction dim "
+                        f"{k_dim} is not a multiple of M={spec.m}; "
+                        "compressed storage cannot crop partial groups "
+                        "(use emit='dense' or a divisible pattern)"
+                    )
     meth = get_method(method)
     importance = method_importance(meth)
     alps_cfg = alps_cfg or AlpsConfig(iters=50, solver=solver)
@@ -269,10 +298,25 @@ def prune_transformer(
     log(f"[prune] mask service: {svc.stats.summary()}")
 
     new_blocks = dict(blocks)
-    new_blocks["attn"] = {k: jnp.stack(v) for k, v in new_attn.items()}
-    new_blocks["mlp"] = {k: jnp.stack(v) for k, v in new_mlp.items()}
     masks = {
         "attn": {k: jnp.stack(v) for k, v in masks_attn.items()},
         "mlp": {k: jnp.stack(v) for k, v in masks_mlp.items()},
     }
+    if emit == "compressed":
+        # Hand back SparseParams: each projection's per-layer (wp, mask)
+        # pairs collapse into one scan-stacked compressed buffer — the
+        # returned tree holds no dense masked weights at all.
+        from repro.sparsity.params import compress_leaf
+
+        new_blocks["attn"] = {
+            k: compress_leaf(jnp.stack(v), masks["attn"][k], spec)
+            for k, v in new_attn.items()
+        }
+        new_blocks["mlp"] = {
+            k: compress_leaf(jnp.stack(v), masks["mlp"][k], spec)
+            for k, v in new_mlp.items()
+        }
+    else:
+        new_blocks["attn"] = {k: jnp.stack(v) for k, v in new_attn.items()}
+        new_blocks["mlp"] = {k: jnp.stack(v) for k, v in new_mlp.items()}
     return dict(params, blocks=new_blocks), masks

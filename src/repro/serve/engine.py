@@ -5,6 +5,12 @@ lowers for the decode_* shape cells: one new token against a KV cache (or SSM
 state) of the cell's seq_len.  The engine wraps it with greedy/temperature
 sampling and a fixed-slot batch (continuous batching would swap finished
 slots; we keep slot management host-side and simple).
+
+``params`` may be a dense tree OR a compressed SparseParams tree (pruned
+projections stored as :class:`~repro.sparsity.params.NMCompressed` buffers,
+e.g. from ``prune_transformer(..., emit="compressed")``): the model layers
+dispatch per-leaf, so prefill and decode stream the compressed weights
+through the nm_spmm kernel and no dense W is ever materialized in HBM.
 """
 from __future__ import annotations
 
@@ -59,6 +65,8 @@ class ServeEngine:
         """Greedy/temperature generation; returns (B, max_new_tokens)."""
         b = prompts.shape[0] if prompts is not None else embeds.shape[0]
         s0 = prompts.shape[1] if prompts is not None else embeds.shape[1]
+        if max_new_tokens <= 0:  # nothing to generate: no prefill, no sample
+            return jnp.zeros((b, 0), jnp.int32)
         caches = lm.init_cache(self.cfg, b, self.max_len)
         logits, caches = self._prefill(
             self.params, caches,

@@ -103,8 +103,13 @@ class MaskCache:
     for callers that want materialized masks.
     """
 
-    def __init__(self, store: Optional[ContentStore] = None):
+    def __init__(self, store: Optional[ContentStore] = None,
+                 track_access: bool = False):
         self.store = store
+        # When a byte bound will prune this store, mem hits must bump the
+        # disk LRU clock too (or the hottest keys evict first); unbounded
+        # caches skip the per-hit utime syscall.
+        self.track_access = track_access
         self._mem: dict[str, tuple[np.ndarray, tuple[int, ...]]] = {}
         self.mem_hits = 0
         self.disk_hits = 0
@@ -116,9 +121,17 @@ class MaskCache:
         """((B, M) uint32 words, (B, M, M) shape) for ``key``, or None."""
         if key in self._mem:
             self.mem_hits += 1
+            if self.store is not None and self.track_access:
+                self.store.touch(key)
             return self._mem[key]
         if self.store is not None and self.store.has(key):
-            entry = _decode_entry(self.store.get(key))
+            try:
+                entry = _decode_entry(self.store.get(key))
+            except OSError:
+                # Concurrently evicted between has() and get() (another
+                # process's prune): a plain miss, re-solve instead of crash.
+                self.misses += 1
+                return None
             self._mem[key] = entry
             self.disk_hits += 1
             return entry
@@ -151,6 +164,15 @@ class MaskCache:
     def put(self, key: str, mask_blocks: np.ndarray) -> None:
         mask = np.asarray(mask_blocks, dtype=bool)
         self.put_packed(key, bitpack.pack_rows_np(mask), mask.shape)
+
+    def prune(self, max_bytes: int) -> list[str]:
+        """Bound the *disk* store to ``max_bytes`` via LRU eviction
+        (:meth:`repro.checkpoint.ContentStore.prune`); returns evicted keys.
+        The in-memory front stays intact — its entries are still-valid
+        content and re-persist naturally if solved again after a restart."""
+        if self.store is None:
+            return []
+        return self.store.prune(max_bytes)
 
     @property
     def hits(self) -> int:

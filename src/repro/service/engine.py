@@ -103,6 +103,7 @@ class ServiceStats:
     submitted: int = 0
     cache_hits: int = 0
     journal_skips: int = 0  # resolved via a prior run's journal + store
+    cache_evictions: int = 0  # disk entries GC'd by the cache_max_bytes bound
     stream: StreamStats = dataclasses.field(default_factory=StreamStats)
 
     @property
@@ -117,9 +118,13 @@ class ServiceStats:
         """One-line service report: submit/cache counters + the dispatch
         aggregate delegated to :meth:`StreamStats.summary` (the single
         padding-waste formatter — emitted once per run, not per stream)."""
+        evict = (
+            f" cache_evictions={self.cache_evictions}"
+            if self.cache_evictions else ""
+        )
         return (
-            f"submitted={self.submitted} cache_hits={self.cache_hits} "
-            f"{self.stream.summary()}"
+            f"submitted={self.submitted} cache_hits={self.cache_hits}"
+            f"{evict} {self.stream.summary()}"
         )
 
 
@@ -133,6 +138,7 @@ class MaskService:
         cache: Optional[MaskCache] = None,
         journal: Optional[Journal] = None,
         directory: Optional[str] = None,
+        cache_max_bytes: Optional[int] = None,
     ):
         """``directory`` is the one-argument persistent setup: it wires a
         disk-backed cache (``<dir>/store``) and a completion journal
@@ -142,6 +148,12 @@ class MaskService:
         pattern at flush time (:meth:`BucketPolicy.for_device`), informed by
         the padding waste this service has already observed; pass an explicit
         :class:`BucketPolicy` to pin one.
+
+        ``cache_max_bytes`` bounds the disk cache: after every flush the
+        store evicts least-recently-accessed entries past the bound
+        (model-scale stores otherwise grow monotonically — every distinct
+        tensor content is a new immutable entry).  ``None`` keeps the
+        historical unbounded behavior.
         """
         self.config = config
         self.policy = policy
@@ -152,6 +164,9 @@ class MaskService:
                 journal = Journal(os.path.join(directory, "journal.jsonl"))
         self.cache = cache if cache is not None else MaskCache()
         self.journal = journal
+        self.cache_max_bytes = cache_max_bytes
+        if cache_max_bytes is not None:
+            self.cache.track_access = True  # mem hits count for the LRU
         self.stats = ServiceStats()
         self._pending: list[tuple[MaskHandle, np.ndarray]] = []
 
@@ -244,6 +259,7 @@ class MaskService:
         quiescent), so no caller ever returns from ``flush`` with work it
         enqueued still unsolved.
         """
+        wrote = False
         while self._pending:
             pending, self._pending = self._pending, []
             # One stream per pattern: block shape and the solver's static
@@ -269,6 +285,14 @@ class MaskService:
                         handle.key, words, (blocks.shape[0], spec.m, spec.m)
                     )
                     self._record(handle)
+                    wrote = True
+        # Only GC when this flush actually grew the store: all-hit flushes
+        # (and the per-sweep flushes of plan-routed solvers) skip the
+        # O(entries) stat scan entirely.
+        if wrote and self.cache_max_bytes is not None:
+            self.stats.cache_evictions += len(
+                self.cache.prune(self.cache_max_bytes)
+            )
 
     def solve(self, w, pattern=None, *legacy, name: Optional[str] = None,
               n=None, m=None) -> jnp.ndarray:

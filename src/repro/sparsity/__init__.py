@@ -13,6 +13,12 @@ _EXPORTS = {
     "apply_mask": "repro.sparsity.masks",
     "mask_sparsity": "repro.sparsity.masks",
     "sparsify_pytree": "repro.sparsity.masks",
+    "NMCompressed": "repro.sparsity.params",
+    "compress_params": "repro.sparsity.params",
+    "decompress_params": "repro.sparsity.params",
+    "is_sparse_params": "repro.sparsity.params",
+    "masks_from_params": "repro.sparsity.params",
+    "sparse_param_bytes": "repro.sparsity.params",
 }
 
 __all__ = list(_EXPORTS)

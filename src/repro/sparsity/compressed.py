@@ -6,7 +6,9 @@ column keeps at most N of every M consecutive rows) is stored as
     values  : (K/M, N, F)  weight dtype (bf16/f32)
     indices : (K/M, N, F)  int8 — position of each kept value inside its
                             M-group (0..M-1); slots beyond the group's
-                            nonzero count hold index 0 with value 0.
+                            nonzero count hold index -1 with value 0, so
+                            dead slots are never scattered on decompress
+                            and never gather gradient on the backward pass.
 
 HBM traffic ratio vs dense: (N*bytes_w + N) / (M*bytes_w) — e.g. 0.375x for
 8:32 bf16, 0.75x for 16:32 bf16.  With a *transposable* mask the same buffer
@@ -39,7 +41,7 @@ def compress_nm(
     slot = jnp.arange(n)[None, :, None]
     live = slot < counts
     vals = jnp.where(live, vals, 0).astype(w.dtype)
-    idx = jnp.where(live, idx, 0).astype(jnp.int8)
+    idx = jnp.where(live, idx, -1).astype(jnp.int8)
     return vals, idx
 
 

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from repro.core.solver import SolverConfig, nm_mask
 from repro.patterns import pattern_from_args
 from repro.service.engine import MaskService
+from repro.treepath import path_str
 
 
 def apply_mask(params, masks):
@@ -48,13 +49,6 @@ def default_prunable(path: tuple, p: jnp.ndarray, m: int) -> bool:
     if p.ndim == 3:  # scan-stacked layers: (L, in, out)
         return p.shape[1] % m == 0 and p.shape[2] % m == 0
     return False
-
-
-def _path_name(path: tuple) -> str:
-    return "/".join(
-        str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
-        for p in path
-    )
 
 
 def sparsify_pytree(
@@ -106,7 +100,7 @@ def sparsify_pytree(
         if not prunable(path, p, spec.m):
             handles.append(None)
             continue
-        handles.append(svc.submit(_path_name(path), p, spec))
+        handles.append(svc.submit(path_str(path), p, spec))
     svc.flush()  # everything dispatches as shape-bucketed mega-batches
     masks = [None if h is None else h.result() for h in handles]
     return jax.tree_util.tree_unflatten(flat[1], masks)

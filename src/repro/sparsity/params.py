@@ -1,0 +1,256 @@
+"""SparseParams: compressed transposable-N:M parameters as first-class pytrees.
+
+:class:`NMCompressed` wraps one pruned projection in the ``(values, indices)``
+layout of :mod:`repro.sparsity.compressed` and registers it as a JAX pytree
+node, so a parameter tree whose pruned leaves are ``NMCompressed`` — a
+*SparseParams* tree — flows through ``jit``/``grad``/``lax.scan``/checkpoint
+flattening exactly like a dense tree:
+
+* ``values``/``indices`` are the pytree children; the group size ``m`` is
+  static aux data, so per-layer slicing (``tree.map(lambda a: a[l], blocks)``)
+  and ``lax.scan`` over scan-stacked ``(L, G, N, F)`` buffers both work.
+* ``jax.grad(..., allow_int=True)`` produces cotangents for ``values`` only
+  (``indices`` come back as size-0 ``float0`` placeholders), which is what
+  makes optimizer state land on the compressed shapes — N/M of the dense
+  moment memory.
+* model layers dispatch per-leaf (:func:`repro.models.layers.proj`): a dense
+  leaf hits the MXU as a plain matmul, an ``NMCompressed`` leaf goes through
+  :func:`repro.kernels.nm_spmm.ops.nm_linear_nd` — ONE compressed buffer
+  serving both ``X·W`` and the transposed backward ``dY·Wᵀ`` (the
+  transposable-mask training claim, DESIGN.md §2).
+
+``compress_params`` converts ``(params, masks)`` into a SparseParams tree;
+``decompress_params`` is the exact inverse (bit-identical dense weights — the
+oracle the train/serve bit-identity tests rely on).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.tree_util import GetAttrKey, register_pytree_with_keys_class
+
+from repro.patterns import PatternSpec
+from repro.sparsity.compressed import compress_nm, decompress_nm
+from repro.treepath import path_entry_str, path_str
+
+
+@register_pytree_with_keys_class
+class NMCompressed:
+    """One compressed N:M projection: ``values``/``indices`` of shape
+    ``(G, N, F)`` (or scan-stacked ``(L, G, N, F)``), group size ``m``.
+
+    The dense equivalent is ``(..., G*m, F)``; ``decompress()`` materializes
+    it (tests/checkpoint templates only — execution stays compressed).
+    """
+
+    __slots__ = ("values", "indices", "m")
+
+    def __init__(self, values, indices, m: int):
+        self.values = values
+        self.indices = indices
+        self.m = int(m)
+
+    # -- pytree protocol ----------------------------------------------------
+
+    def tree_flatten_with_keys(self):
+        return (
+            (GetAttrKey("values"), self.values),
+            (GetAttrKey("indices"), self.indices),
+        ), self.m
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux)
+
+    # -- convenience --------------------------------------------------------
+
+    @property
+    def n(self) -> int:
+        return self.values.shape[-2]
+
+    @property
+    def dense_shape(self) -> tuple:
+        lead = self.values.shape[:-3]
+        g, _n, f = self.values.shape[-3:]
+        return (*lead, g * self.m, f)
+
+    @property
+    def dtype(self):
+        return self.values.dtype
+
+    def decompress(self) -> jnp.ndarray:
+        """Dense ``(..., K, F)`` weights (zeros off-support), bit-exact."""
+        if self.values.ndim == 4:  # scan-stacked (L, G, N, F)
+            return jax.vmap(lambda v, i: decompress_nm(v, i, self.m))(
+                self.values, self.indices
+            )
+        return decompress_nm(self.values, self.indices, self.m)
+
+    def nbytes(self) -> int:
+        return int(self.values.nbytes) + int(self.indices.nbytes)
+
+    def __repr__(self) -> str:  # shapes may be abstract under tracing
+        try:
+            shape = tuple(self.dense_shape)
+        except Exception:
+            shape = "?"
+        return (
+            f"NMCompressed({self.n}:{self.m}, dense_shape={shape}, "
+            f"dtype={getattr(self.values, 'dtype', '?')})"
+        )
+
+
+def _is_compressed_leaf(x) -> bool:
+    return isinstance(x, NMCompressed)
+
+
+def is_sparse_params(tree) -> bool:
+    """True if any leaf of ``tree`` is an :class:`NMCompressed` buffer."""
+    return any(
+        _is_compressed_leaf(leaf)
+        for leaf in jax.tree.leaves(tree, is_leaf=_is_compressed_leaf)
+    )
+
+
+def compress_leaf(w: jnp.ndarray, mask: jnp.ndarray, pattern) -> NMCompressed:
+    """Compress one 2-D ``(K, F)`` or scan-stacked 3-D ``(L, K, F)`` weight."""
+    spec = PatternSpec.coerce(pattern)
+    k = w.shape[-2]
+    if k % spec.m != 0:
+        raise ValueError(
+            f"cannot compress shape {tuple(w.shape)} with M={spec.m}: the "
+            f"reduction dim ({k}) must be a multiple of M — the (values, "
+            "indices) layout has no partial groups (the mask solve pads, "
+            "compressed storage cannot)"
+        )
+    if w.ndim == 3:
+        vals, idx = jax.vmap(
+            lambda wi, mi: compress_nm(wi, mi, spec.n, spec.m)
+        )(w, mask.astype(bool))
+    else:
+        vals, idx = compress_nm(w, mask.astype(bool), spec.n, spec.m)
+    return NMCompressed(vals, idx, spec.m)
+
+
+# Projection leaves the model layers actually dispatch through
+# :func:`repro.models.layers.proj` — only these may be compressed.  The
+# embedding table (consumed by ``jnp.take``) and the unembedding/logit
+# matmul stay dense even when a mask exists for them.
+PROJ_KEYS = frozenset({"wq", "wk", "wv", "wo", "gate", "up", "down"})
+
+
+def default_compressible(path, p) -> bool:
+    """True for leaves executed through the compressed-matmul dispatch."""
+    return bool(path) and path_entry_str(path[-1]) in PROJ_KEYS
+
+
+def projection_prunable(path, p, m: int) -> bool:
+    """A ``sparsify_pytree(prunable=...)`` predicate matching the compressed
+    execution surface: projection leaves only (no embed/unembed), with both
+    matmul dims divisible by M."""
+    from repro.sparsity.masks import default_prunable
+
+    return default_compressible(path, p) and default_prunable(path, p, m)
+
+
+def compress_params(params, masks, pattern, compressible=None,
+                    strict: bool = True) -> dict:
+    """``(params, masks) -> SparseParams``: every *compressible* leaf with a
+    mask becomes an :class:`NMCompressed` buffer; the rest stay dense.
+
+    ``compressible(path, leaf)`` defaults to :func:`default_compressible`
+    (the projection matmuls the model dispatches through ``proj``).  Requires
+    a *transposable* pattern — the compressed buffer serves both the forward
+    and the transposed backward matmul, which only holds when the transposed
+    mask is N:M too.
+
+    ``strict`` (default) raises if a mask exists for a leaf the predicate
+    rejects: such a mask would be silently *dropped*, and under
+    ``mask_mode="compressed"`` (no mask application, no re-projection) that
+    leaf's support would drift after the first optimizer step.  Solve masks
+    with ``prunable=projection_prunable`` so the mask tree matches the
+    compressed execution surface, or pass ``strict=False`` to knowingly
+    keep those leaves dense *and unmasked*.
+    """
+    spec = PatternSpec.coerce(pattern)
+    if not spec.transposable:
+        raise ValueError(
+            "compress_params needs a transposable pattern: the same buffer "
+            f"must serve W and W^T (got {spec})"
+        )
+    comp = compressible if compressible is not None else default_compressible
+    dropped: list[str] = []
+
+    def f(path, p, mk):
+        if mk is None:
+            return p
+        if not comp(path, p):
+            dropped.append(path_str(path))
+            return p
+        return compress_leaf(p, mk, spec)
+
+    out = jax.tree_util.tree_map_with_path(
+        f, params, masks, is_leaf=lambda x: x is None
+    )
+    if dropped and strict:
+        raise ValueError(
+            "compress_params: masks exist for leaves the compressible "
+            f"predicate rejects ({', '.join(sorted(dropped))}); their "
+            "sparsity would be silently lost under mask_mode='compressed'. "
+            "Solve masks with prunable=projection_prunable, pass a custom "
+            "compressible=, or strict=False to keep them dense+unmasked."
+        )
+    return out
+
+
+def decompress_params(params):
+    """SparseParams -> dense params (exact inverse of ``compress_params``)."""
+    return jax.tree.map(
+        lambda x: x.decompress() if _is_compressed_leaf(x) else x,
+        params,
+        is_leaf=_is_compressed_leaf,
+    )
+
+
+def sparse_param_bytes(params) -> dict:
+    """HBM footprint of a (possibly mixed) parameter tree.
+
+    Returns ``{"dense": ..., "compressed": ..., "total": ..., "ratio": ...}``
+    where ``dense`` is what the compressed leaves would occupy decompressed,
+    ``compressed`` what they actually occupy, ``total`` the whole tree as
+    stored, and ``ratio`` compressed/dense over the compressed leaves only
+    (the number the ``compressed_bytes`` analytic model predicts).
+    """
+    dense_equiv = compressed = other = 0
+    for leaf in jax.tree.leaves(params, is_leaf=_is_compressed_leaf):
+        if _is_compressed_leaf(leaf):
+            k = 1
+            for d in leaf.dense_shape:
+                k *= int(d)
+            dense_equiv += k * leaf.values.dtype.itemsize
+            compressed += leaf.nbytes()
+        else:
+            other += int(leaf.nbytes)
+    return {
+        "dense": dense_equiv,
+        "compressed": compressed,
+        "other": other,
+        "total": compressed + other,
+        "ratio": compressed / dense_equiv if dense_equiv else 1.0,
+    }
+
+
+def masks_from_params(params):
+    """Recover the boolean mask tree encoded by a SparseParams tree's
+    indices (``None`` at dense leaves) — useful for switching a compressed
+    run back to ``mask_mode="fwd"``/``"post"`` without re-solving."""
+
+    def f(x) -> Optional[jnp.ndarray]:
+        if not _is_compressed_leaf(x):
+            return None
+        ones = NMCompressed(jnp.ones_like(x.values), x.indices, x.m)
+        return ones.decompress().astype(bool)
+
+    return jax.tree.map(f, params, is_leaf=_is_compressed_leaf)

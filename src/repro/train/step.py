@@ -7,6 +7,12 @@ The step is built once per (arch, mesh) and covers:
     (sparse fine-tuning — gradients are masked by the chain rule, and the
     masked weights are re-projected after the optimizer update so the support
     never drifts);
+  * compressed execution (``mask_mode="compressed"``): params whose pruned
+    leaves are :class:`~repro.sparsity.params.NMCompressed` train straight
+    from the compressed buffers — the model dispatches those matmuls through
+    the nm_spmm kernel, gradients flow to ``values`` only (the custom VJP
+    restricts dW to the support), and optimizer moments live on the
+    compressed shapes (N/M of the dense optimizer HBM);
   * optional int8+error-feedback gradient compression across the "pod" axis:
     the step is shard_mapped with *manual* pod axis (data/model stay GSPMD-
     auto) so the cross-pod all-reduce is ours to quantize;
@@ -27,6 +33,8 @@ from repro.models import lm
 from repro.models.config import ModelConfig
 from repro.optim.adamw import AdamW, AdamWState
 
+MASK_MODES = ("fwd", "post", "compressed")
+
 
 class TrainState(NamedTuple):
     params: Any
@@ -35,13 +43,43 @@ class TrainState(NamedTuple):
     ef: Any = None          # error-feedback residuals (compression only)
 
 
-def make_train_state(cfg: ModelConfig, opt: AdamW, key, compression: bool = False):
-    params = lm.init_params(cfg, key)
+def _diff_zeros_like(p):
+    """f32 accumulator for a differentiable leaf; size-0 placeholder for
+    non-differentiable ones (e.g. compressed N:M indices)."""
+    if jnp.issubdtype(p.dtype, jnp.inexact):
+        return jnp.zeros(p.shape, jnp.float32)
+    return jnp.zeros((0,), jnp.float32)
+
+
+def _strip_float0(grads):
+    """Replace ``float0`` cotangents (integer leaves under ``allow_int``)
+    with size-0 f32 placeholders that survive scan carries and tree math."""
+    return jax.tree.map(
+        lambda g: jnp.zeros((0,), jnp.float32)
+        if g.dtype == jax.dtypes.float0 else g,
+        grads,
+    )
+
+
+def _ef_zeros_like(p):
+    """Error-feedback residual buffer: param-shaped for differentiable
+    leaves, size-0 placeholder for integer ones (compressed indices)."""
+    if jnp.issubdtype(p.dtype, jnp.inexact):
+        return jnp.zeros_like(p)
+    return jnp.zeros((0,), jnp.float32)
+
+
+def make_train_state(cfg: ModelConfig, opt: AdamW, key, compression: bool = False,
+                     params: Any = None):
+    """Fresh TrainState; pass ``params=`` to adopt existing (possibly
+    compressed SparseParams) weights instead of initializing dense ones."""
+    if params is None:
+        params = lm.init_params(cfg, key)
     state = TrainState(
         params=params,
         opt_state=opt.init(params),
         step=jnp.zeros((), jnp.int32),
-        ef=jax.tree.map(jnp.zeros_like, params) if compression else None,
+        ef=jax.tree.map(_ef_zeros_like, params) if compression else None,
     )
     return state
 
@@ -51,12 +89,23 @@ class StepConfig:
     accum: int = 1                       # gradient accumulation microbatches
     compression: bool = False            # int8 cross-pod grad compression
     pod_axis: str = "pod"
-    # "fwd": paper-faithful — masks multiply weights inside the forward pass
-    #        (masks are read fwd+bwd every microbatch).
+    # "fwd":  paper-faithful — masks multiply weights inside the forward pass
+    #         (masks are read fwd+bwd every microbatch).
     # "post": optimized — params are kept masked as an invariant and only
-    #        re-projected after the optimizer update; forward touches no
-    #        masks.  Identical masked weights after every step (the update
-    #        to dead entries is erased either way), ~2x less mask traffic.
+    #         re-projected after the optimizer update; forward touches no
+    #         masks.  Identical masked weights after every step (the update
+    #         to dead entries is erased either way), ~2x less mask traffic.
+    # "compressed": params are SparseParams (NMCompressed leaves); no masks
+    #         exist at all — the support is encoded in the indices, updates
+    #         touch values only, and the forward/backward matmuls stream the
+    #         compressed buffers.  Bit-identical masked weights to "fwd"/
+    #         "post" after decompression (property-tested) whenever (a)
+    #         global grad-norm clipping never rescales (clip_norm=0, or
+    #         gnorm stays below it — "post" gradients carry nonzero
+    #         dead-position components, so an engaged clip scales the modes
+    #         differently) and (b) projection dims fit one nm_spmm K-tile
+    #         (256; larger dims accumulate per tile, tracking dense to f32
+    #         roundoff instead of bitwise).
     mask_mode: str = "fwd"
 
 
@@ -82,6 +131,15 @@ def build_train_step(
     """Returns jitted ``step(state, batch) -> (state, metrics)``, or with
     ``masks_as_input=True`` ``step(state, batch, masks) -> ...`` (the dry-run
     lowers masks as abstract inputs so nothing is ever allocated)."""
+    if step_cfg.mask_mode not in MASK_MODES:
+        raise ValueError(
+            f"mask_mode must be one of {MASK_MODES}, got {step_cfg.mask_mode!r}"
+        )
+    if step_cfg.mask_mode == "compressed" and (masks is not None or masks_as_input):
+        raise ValueError(
+            "mask_mode='compressed' encodes the support in the params "
+            "(NMCompressed indices); do not pass masks"
+        )
 
     def apply_masks(params, mask_tree):
         if mask_tree is None:
@@ -94,24 +152,28 @@ def build_train_step(
         )
 
     def loss_of(params, microbatch, mask_tree):
-        if step_cfg.mask_mode == "post":
-            mask_tree = None  # params already masked (invariant)
+        if step_cfg.mask_mode in ("post", "compressed"):
+            mask_tree = None  # support already enforced by the params
         return lm.loss_fn(apply_masks(params, mask_tree), cfg, microbatch)
 
     def grads_of(params, batch, mask_tree):
+        # allow_int: compressed params carry int8 index leaves; their
+        # float0 cotangents are stripped to size-0 placeholders right away.
+        vag = jax.value_and_grad(loss_of, allow_int=True)
         if step_cfg.accum == 1:
-            return jax.value_and_grad(loss_of)(params, batch, mask_tree)
+            loss, g = vag(params, batch, mask_tree)
+            return loss, _strip_float0(g)
         micro = _split_microbatches(batch, step_cfg.accum)
 
         def body(carry, mb):
             loss_acc, grad_acc = carry
-            loss, g = jax.value_and_grad(loss_of)(params, mb, mask_tree)
+            loss, g = vag(params, mb, mask_tree)
             return (
                 loss_acc + loss,
-                jax.tree.map(jnp.add, grad_acc, g),
+                jax.tree.map(jnp.add, grad_acc, _strip_float0(g)),
             ), None
 
-        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        zeros = jax.tree.map(_diff_zeros_like, params)
         (loss_sum, grad_sum), _ = jax.lax.scan(body, (0.0, zeros), micro)
         k = float(step_cfg.accum)
         return loss_sum / k, jax.tree.map(lambda g: g / k, grad_sum)
@@ -119,13 +181,27 @@ def build_train_step(
     def core_step(state: TrainState, batch: dict, mask_tree=None):
         if not masks_as_input:
             mask_tree = masks
+        if step_cfg.mask_mode == "compressed":
+            # Trace-time guard: dense params here would train with no
+            # masking AND no re-projection — silent support drift.
+            from repro.sparsity.params import is_sparse_params
+
+            if not is_sparse_params(state.params):
+                raise ValueError(
+                    "mask_mode='compressed' needs SparseParams (NMCompressed "
+                    "leaves) — prune with emit='compressed' or call "
+                    "compress_params; got an all-dense tree"
+                )
         loss, grads = grads_of(state.params, batch, mask_tree)
         ef = state.ef
         if step_cfg.compression:
             grads, ef = compressed_psum(grads, ef, step_cfg.pod_axis)
             loss = jax.lax.pmean(loss, step_cfg.pod_axis)
         new_params, new_opt, metrics = opt.update(grads, state.opt_state, state.params)
-        new_params = apply_masks(new_params, mask_tree)
+        if step_cfg.mask_mode != "compressed":
+            # Compressed updates cannot leave the support (values-only);
+            # dense modes re-project so dead entries stay exactly zero.
+            new_params = apply_masks(new_params, mask_tree)
         metrics = dict(metrics, loss=loss)
         return TrainState(new_params, new_opt, state.step + 1, ef), metrics
 

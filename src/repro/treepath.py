@@ -1,0 +1,23 @@
+"""Pytree key-path stringification, shared by every subsystem.
+
+One precedence (``key`` → ``idx`` → ``name``) for turning a
+``jax.tree_util`` path entry (``DictKey``/``SequenceKey``/``GetAttrKey``/
+legacy objects) into a string, so mask names (``sparsity.masks``),
+checkpoint leaf files (``checkpoint.manager``) and compressed-leaf
+identification (``sparsity.params``) all agree on how a leaf is addressed.
+Dependency-free (no jax import) on purpose.
+"""
+from __future__ import annotations
+
+
+def path_entry_str(entry) -> str:
+    """String form of one key-path entry."""
+    for attr in ("key", "idx", "name"):
+        if hasattr(entry, attr):
+            return str(getattr(entry, attr))
+    return str(entry)
+
+
+def path_str(path, sep: str = "/") -> str:
+    """Join a whole key path (tuple of entries) with ``sep``."""
+    return sep.join(path_entry_str(p) for p in path)

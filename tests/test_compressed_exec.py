@@ -1,0 +1,435 @@
+"""Compressed execution end-to-end: SparseParams through models/train/serve.
+
+The contract under test is *bit-identity*: executing from ``NMCompressed``
+buffers (values + int8 indices through the nm_spmm kernel) must produce — at
+``tol=0``, after decompression — exactly the numbers the dense masked path
+produces: forward logits, multi-step training trajectories across all three
+``mask_mode``s, serving tokens, and checkpoint round-trips.
+"""
+import os
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.api import PatternSpec, SolverConfig
+from repro.checkpoint import CheckpointManager
+from repro.core import solve_mask
+from repro.data import SyntheticLM
+from repro.kernels.nm_spmm.ops import nm_linear, nm_linear_nd
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.optim import AdamW
+from repro.pruning import prune_transformer
+from repro.serve import ServeEngine
+from repro.sparsity.compressed import compress_nm, decompress_nm
+from repro.sparsity.masks import apply_mask, sparsify_pytree
+from repro.sparsity.params import (
+    NMCompressed,
+    compress_params,
+    decompress_params,
+    is_sparse_params,
+    masks_from_params,
+    projection_prunable,
+    sparse_param_bytes,
+)
+from repro.train import build_train_step, make_train_state
+from repro.train.step import StepConfig
+
+RNG = np.random.default_rng(7)
+
+CFG = ModelConfig("cx", "dense", num_layers=2, d_model=64, num_heads=4,
+                  num_kv_heads=2, d_ff=128, vocab_size=64, remat="none",
+                  dtype="float32")
+
+
+def tree_equal(a, b) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb)
+    )
+
+
+def small_sparse_model(seed=0, solver_iters=40):
+    params = lm.init_params(CFG, jax.random.PRNGKey(seed))
+    masks = sparsify_pytree(params, PatternSpec(2, 4),
+                            config=SolverConfig(iters=solver_iters),
+                            prunable=projection_prunable)
+    pruned = apply_mask(params, masks)
+    sp = compress_params(pruned, masks, PatternSpec(2, 4))
+    return pruned, masks, sp
+
+
+# ---------------------------------------------------------------------------
+# nm_linear gradient checks vs the dense jnp oracle (dx via the transpose
+# path, dvals via support gather) — patterns incl. M>16, non-square shapes.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,K,F,n,m", [
+    (8, 64, 96, 2, 4),       # non-square, wide
+    (8, 96, 32, 4, 8),       # non-square, narrow
+    (4, 64, 128, 8, 16),
+    (4, 64, 128, 16, 32),    # M > 16
+    (4, 128, 64, 8, 32),     # M > 16, 1:4 density, non-square
+])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_nm_linear_gradcheck_vs_dense_oracle(B, K, F, n, m, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(K, F)).astype(np.float32)
+    mask = np.array(solve_mask(jnp.asarray(w), PatternSpec(n, m),
+                               SolverConfig(iters=60)))
+    vals, idx = compress_nm(jnp.asarray(w), jnp.asarray(mask), n, m)
+    wd = jnp.asarray(w * mask)
+    x = jnp.asarray(rng.normal(size=(B, K)).astype(np.float32))
+    dy = jnp.asarray(rng.normal(size=(B, F)).astype(np.float32))
+
+    y, vjp = jax.vjp(lambda x, v: nm_linear(x, v, idx, m), x, vals)
+    dx, dvals = vjp(dy)
+    y_d, vjp_d = jax.vjp(lambda x, w: x @ w, x, wd)
+    dx_d, dw_d = vjp_d(dy)
+
+    np.testing.assert_array_equal(np.array(y), np.array(y_d))
+    np.testing.assert_array_equal(np.array(dx), np.array(dx_d))
+    # dvals == dense dW gathered at the support, exactly (0 at dead slots).
+    dwg = np.array(dw_d).reshape(K // m, m, F)
+    idxn = np.array(idx, np.int32)
+    expect = np.take_along_axis(dwg, np.maximum(idxn, 0), axis=1)
+    expect = np.where(idxn >= 0, expect, 0.0)
+    np.testing.assert_array_equal(np.array(dvals), expect.astype(np.float32))
+
+
+def test_nm_linear_dead_slots_get_zero_gradient():
+    """Groups with fewer than N nonzeros mark dead slots idx=-1: they must
+    neither scatter on decompress nor gather gradient on backward."""
+    K, F, n, m = 8, 8, 2, 4
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(K, F)).astype(np.float32)
+    mask = np.zeros((K, F), bool)
+    mask[0, :] = True          # group 0: one nonzero per column (< n)
+    mask[4:6, :] = True        # group 1: exactly n nonzeros per column
+    vals, idx = compress_nm(jnp.asarray(w), jnp.asarray(mask), n, m)
+    idxn = np.array(idx, np.int32)
+    assert (idxn[0, 1, :] == -1).all()  # dead slot marked
+    np.testing.assert_array_equal(
+        np.array(decompress_nm(vals, idx, m)), w * mask
+    )
+    x = jnp.asarray(rng.normal(size=(4, K)).astype(np.float32))
+    dy = jnp.asarray(rng.normal(size=(4, F)).astype(np.float32))
+    _, vjp = jax.vjp(lambda v: nm_linear(x, v, idx, m), vals)
+    (dvals,) = vjp(dy)
+    assert (np.array(dvals)[0, 1, :] == 0.0).all()  # dead slot: zero grad
+    # Live slots carry the dense gradient at their positions.
+    dw = np.array(x.T @ dy)
+    np.testing.assert_array_equal(np.array(dvals)[0, 0, :], dw[0, :])
+
+
+def test_nm_linear_nd_matches_2d_flatten():
+    K, F, n, m = 64, 96, 4, 8
+    w = RNG.normal(size=(K, F)).astype(np.float32)
+    mask = np.array(solve_mask(jnp.asarray(w), PatternSpec(n, m),
+                               SolverConfig(iters=40)))
+    vals, idx = compress_nm(jnp.asarray(w), jnp.asarray(mask), n, m)
+    x = jnp.asarray(RNG.normal(size=(2, 3, K)).astype(np.float32))
+    y = nm_linear_nd(x, vals, idx, m)
+    assert y.shape == (2, 3, F)
+    y2 = nm_linear(x.reshape(-1, K), vals, idx, m).reshape(2, 3, F)
+    np.testing.assert_array_equal(np.array(y), np.array(y2))
+
+
+# ---------------------------------------------------------------------------
+# SparseParams representation.
+# ---------------------------------------------------------------------------
+
+
+def test_compress_params_roundtrip_and_surface():
+    pruned, masks, sp = small_sparse_model()
+    assert is_sparse_params(sp) and not is_sparse_params(pruned)
+    # Projections compressed; embed/unembed/norms stay dense.
+    assert isinstance(sp["blocks"]["attn"]["wq"], NMCompressed)
+    assert isinstance(sp["blocks"]["mlp"]["down"], NMCompressed)
+    assert not isinstance(sp["embed"], NMCompressed)
+    assert not isinstance(sp["unembed"], NMCompressed)
+    # Exact inverse.
+    assert tree_equal(decompress_params(sp), pruned)
+    # Mask recovery from indices alone.
+    rec = masks_from_params(sp)
+    got = np.array(rec["blocks"]["attn"]["wq"])
+    want = np.array(masks["blocks"]["attn"]["wq"]).astype(bool)
+    np.testing.assert_array_equal(got, want)
+    # Footprint: 2:4 f32 + int8 indices -> (2*4 + 2*1)/(4*4) = 0.625.
+    acc = sparse_param_bytes(sp)
+    assert acc["ratio"] == pytest.approx(0.625)
+
+
+def test_compressed_leaf_slicing_matches_layers():
+    _pruned, _masks, sp = small_sparse_model()
+    wq = sp["blocks"]["attn"]["wq"]
+    lp = jax.tree.map(lambda a: a[1], sp["blocks"])  # layer 1 slice
+    assert isinstance(lp["attn"]["wq"], NMCompressed)
+    np.testing.assert_array_equal(
+        np.array(lp["attn"]["wq"].decompress()), np.array(wq.decompress()[1])
+    )
+
+
+def test_compress_params_rejects_standard_patterns():
+    pruned, masks, _ = small_sparse_model()
+    with pytest.raises(ValueError, match="transposable"):
+        compress_params(pruned, masks, PatternSpec(2, 4, transposable=False))
+
+
+def test_compress_params_strict_rejects_uncompressible_masks():
+    """A mask on a leaf proj() never dispatches (e.g. the embedding table)
+    would be silently dropped — its support would drift under
+    mask_mode='compressed' — so strict mode refuses it."""
+    params = lm.init_params(CFG, jax.random.PRNGKey(0))
+    masks = sparsify_pytree(params, PatternSpec(2, 4),
+                            config=SolverConfig(iters=20))  # masks embed too
+    with pytest.raises(ValueError, match="embed"):
+        compress_params(params, masks, PatternSpec(2, 4))
+    relaxed = compress_params(params, masks, PatternSpec(2, 4), strict=False)
+    assert not isinstance(relaxed["embed"], NMCompressed)
+    assert isinstance(relaxed["blocks"]["attn"]["wq"], NMCompressed)
+
+
+# ---------------------------------------------------------------------------
+# Model forward / train-step bit-identity across mask modes.
+# ---------------------------------------------------------------------------
+
+
+def test_forward_bit_identical_compressed_vs_dense():
+    pruned, _masks, sp = small_sparse_model()
+    data = SyntheticLM(vocab_size=64, seq_len=16, global_batch=4, seed=1)
+    toks = jnp.asarray(data.batch(0)["tokens"])
+    np.testing.assert_array_equal(
+        np.array(lm.forward(pruned, CFG, tokens=toks)),
+        np.array(lm.forward(sp, CFG, tokens=toks)),
+    )
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_multi_step_bit_identity_fwd_post_compressed(seed):
+    """3 optimizer steps in each mask mode: losses and (decompressed) masked
+    weights stay bitwise identical — the compressed path IS the dense path."""
+    pruned, masks, sp = small_sparse_model(seed=seed)
+    data = SyntheticLM(vocab_size=64, seq_len=16, global_batch=4, seed=seed)
+    opt = AdamW(learning_rate=1e-3, clip_norm=0.0)
+
+    st = {
+        "fwd": make_train_state(CFG, opt, jax.random.PRNGKey(1),
+                                params=jax.tree.map(jnp.copy, pruned)),
+        "post": make_train_state(CFG, opt, jax.random.PRNGKey(1),
+                                 params=jax.tree.map(jnp.copy, pruned)),
+        "compressed": make_train_state(CFG, opt, jax.random.PRNGKey(1),
+                                       params=sp),
+    }
+    steps = {
+        mode: build_train_step(
+            CFG, opt, masks=None if mode == "compressed" else masks,
+            step_cfg=StepConfig(mask_mode=mode), donate=False)
+        for mode in st
+    }
+    for i in range(3):
+        batch = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+        losses = {}
+        for mode in st:
+            st[mode], metrics = steps[mode](st[mode], batch)
+            losses[mode] = float(metrics["loss"])
+        assert losses["fwd"] == losses["post"] == losses["compressed"], (i, losses)
+    assert tree_equal(st["fwd"].params, st["post"].params)
+    assert tree_equal(st["fwd"].params, decompress_params(st["compressed"].params))
+
+
+def test_compressed_step_with_grad_accumulation():
+    _pruned, _masks, sp = small_sparse_model()
+    data = SyntheticLM(vocab_size=64, seq_len=16, global_batch=4, seed=2)
+    opt = AdamW(learning_rate=1e-3)
+    state = make_train_state(CFG, opt, jax.random.PRNGKey(0), params=sp)
+    step = build_train_step(CFG, opt,
+                            step_cfg=StepConfig(accum=2, mask_mode="compressed"),
+                            donate=False)
+    state, metrics = step(state, {k: jnp.asarray(v)
+                                  for k, v in data.batch(0).items()})
+    assert np.isfinite(float(metrics["loss"]))
+    assert is_sparse_params(state.params)
+
+
+def test_optimizer_state_lands_on_compressed_shapes():
+    _pruned, _masks, sp = small_sparse_model()
+    opt = AdamW(learning_rate=1e-3)
+    mu = opt.init(sp).mu
+    wq = sp["blocks"]["attn"]["wq"]
+    assert mu["blocks"]["attn"]["wq"].values.shape == wq.values.shape
+    assert mu["blocks"]["attn"]["wq"].indices.shape == (0,)  # no moments
+    dense_moment = int(np.prod(wq.dense_shape)) * 4
+    comp_moment = int(np.prod(wq.values.shape)) * 4
+    assert comp_moment * 2 == dense_moment  # N/M = 1/2 of dense HBM
+
+
+def test_compressed_mode_rejects_masks():
+    opt = AdamW()
+    with pytest.raises(ValueError, match="compressed"):
+        build_train_step(CFG, opt, masks={"x": jnp.ones(())},
+                         step_cfg=StepConfig(mask_mode="compressed"))
+    with pytest.raises(ValueError, match="mask_mode"):
+        build_train_step(CFG, opt, step_cfg=StepConfig(mask_mode="bogus"))
+
+
+def test_compressed_mode_rejects_dense_params():
+    """Dense params under mask_mode='compressed' would train unmasked with
+    no re-projection (silent support drift) — the step must refuse."""
+    pruned, _masks, _sp = small_sparse_model()
+    opt = AdamW(learning_rate=1e-3)
+    state = make_train_state(CFG, opt, jax.random.PRNGKey(0),
+                             params=jax.tree.map(jnp.copy, pruned))
+    step = build_train_step(CFG, opt,
+                            step_cfg=StepConfig(mask_mode="compressed"),
+                            donate=False)
+    data = SyntheticLM(vocab_size=64, seq_len=16, global_batch=4, seed=0)
+    with pytest.raises(ValueError, match="SparseParams"):
+        step(state, {k: jnp.asarray(v) for k, v in data.batch(0).items()})
+
+
+# ---------------------------------------------------------------------------
+# Pruning runner emit="compressed" and serving.
+# ---------------------------------------------------------------------------
+
+
+def test_prune_transformer_emit_compressed_matches_dense():
+    params = lm.init_params(CFG, jax.random.PRNGKey(0))
+    data = SyntheticLM(vocab_size=64, seq_len=16, global_batch=4, seed=1)
+    calib = jnp.asarray(data.batch(0)["tokens"])
+    kw = dict(tokens=calib, method="magnitude", pattern=PatternSpec(2, 4),
+              solver=SolverConfig(iters=40))
+    dense_p, dense_masks = prune_transformer(params, CFG, **kw)
+    comp_p, comp_masks = prune_transformer(params, CFG, emit="compressed", **kw)
+    assert is_sparse_params(comp_p)
+    assert tree_equal(dense_masks, comp_masks)
+    assert tree_equal(decompress_params(comp_p), dense_p)
+
+
+def test_prune_transformer_emit_validation():
+    params = lm.init_params(CFG, jax.random.PRNGKey(0))
+    toks = jnp.zeros((1, 8), jnp.int32)
+    with pytest.raises(ValueError, match="emit"):
+        prune_transformer(params, CFG, tokens=toks, emit="packed")
+    with pytest.raises(ValueError, match="transposable"):
+        prune_transformer(params, CFG, tokens=toks, emit="compressed",
+                          pattern=PatternSpec(2, 4, transposable=False))
+    # Non-multiple reduction dims must fail up front, not after the prune:
+    # d_model=64 is not a multiple of M=24.
+    with pytest.raises(ValueError, match="not a multiple"):
+        prune_transformer(params, CFG, tokens=toks, emit="compressed",
+                          pattern=PatternSpec(12, 24))
+
+
+def test_compress_leaf_rejects_partial_groups():
+    from repro.sparsity.params import compress_leaf
+
+    w = jnp.ones((48, 64), jnp.float32)
+    with pytest.raises(ValueError, match="multiple of M"):
+        compress_leaf(w, jnp.ones((48, 64), bool), PatternSpec(16, 32))
+
+
+def test_serve_from_sparse_params_matches_dense():
+    pruned, _masks, sp = small_sparse_model()
+    prompts = jax.random.randint(jax.random.PRNGKey(3), (2, 8), 0, 64)
+    out_c = ServeEngine(CFG, sp, max_len=16).generate(prompts, 4)
+    out_d = ServeEngine(CFG, pruned, max_len=16).generate(prompts, 4)
+    np.testing.assert_array_equal(np.array(out_c), np.array(out_d))
+
+
+def test_serve_generate_zero_tokens_returns_empty():
+    """Regression: max_new_tokens=0 used to sample and return one token."""
+    params = lm.init_params(CFG, jax.random.PRNGKey(0))
+    eng = ServeEngine(CFG, params, max_len=16)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (3, 8), 0, 64)
+    out = eng.generate(prompts, 0)
+    assert out.shape == (3, 0)
+    assert out.dtype == jnp.int32
+    out_one = eng.generate(prompts, 1)
+    assert out_one.shape == (3, 1)
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing SparseParams.
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrips_compressed_train_state():
+    _pruned, _masks, sp = small_sparse_model()
+    opt = AdamW(learning_rate=1e-3)
+    state = make_train_state(CFG, opt, jax.random.PRNGKey(0), params=sp)
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, async_save=False)
+        mgr.save(5, state)
+        restored = mgr.restore(5, state)
+    wq = restored.params["blocks"]["attn"]["wq"]
+    assert isinstance(wq, NMCompressed)
+    assert wq.m == 4 and wq.indices.dtype == jnp.int8
+    assert tree_equal(state.params, restored.params)
+    assert tree_equal(state.opt_state.mu, restored.opt_state.mu)
+
+
+def test_checkpointed_compressed_finetune_resumes_bit_identical():
+    """Save mid-finetune, restore, continue: same trajectory as uninterrupted."""
+    _pruned, _masks, sp = small_sparse_model()
+    data = SyntheticLM(vocab_size=64, seq_len=16, global_batch=4, seed=4)
+    opt = AdamW(learning_rate=1e-3)
+    step = build_train_step(CFG, opt, step_cfg=StepConfig(mask_mode="compressed"),
+                            donate=False)
+    state = make_train_state(CFG, opt, jax.random.PRNGKey(0), params=sp)
+    batches = [{k: jnp.asarray(v) for k, v in data.batch(i).items()}
+               for i in range(2)]
+    state, _ = step(state, batches[0])
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, async_save=False)
+        mgr.save(1, state)
+        resumed = mgr.restore(1, state)
+    a, _ = step(state, batches[1])
+    b, _ = step(resumed, batches[1])
+    assert tree_equal(a.params, b.params)
+
+
+def test_content_store_prune_lru():
+    from repro.checkpoint import ContentStore
+
+    with tempfile.TemporaryDirectory() as d:
+        store = ContentStore(d)
+        for i, key in enumerate(["aa", "bb", "cc"]):
+            store.put(key, data=np.zeros(256, np.uint8))
+            os.utime(store.path(key), (1000.0 + i, 1000.0 + i))
+        store.get("aa")  # bump: "aa" becomes most recently used
+        entry = os.path.getsize(store.path("bb"))
+        # An orphaned tmp file from a killed writer is GC'd once stale.
+        orphan = store.path("dead") + ".tmp.12345"
+        with open(orphan, "wb") as f:
+            f.write(b"x" * 64)
+        os.utime(orphan, (10.0, 10.0))
+        evicted = store.prune(max_bytes=2 * entry)
+        assert evicted == ["bb"]  # oldest access goes first
+        assert store.has("aa") and store.has("cc") and not store.has("bb")
+        assert store.size_bytes() <= 2 * entry
+        assert not os.path.exists(orphan)
+        assert set(store.prune(max_bytes=0)) == {"aa", "cc"}  # full drain
+        assert store.keys() == []
+
+
+def test_mask_cache_mem_hits_bump_disk_lru():
+    """In-memory hits must count as recency for the disk LRU, or the
+    hottest keys get evicted first after a restart."""
+    from repro.checkpoint import ContentStore
+    from repro.service.cache import MaskCache
+
+    with tempfile.TemporaryDirectory() as d:
+        cache = MaskCache(ContentStore(d), track_access=True)
+        cache.put("hot", np.ones((2, 4, 4), bool))
+        cache.put("cold", np.ones((2, 4, 4), bool))
+        for key in ("hot", "cold"):
+            os.utime(cache.store.path(key), (1000.0, 1000.0))
+        assert cache.get_packed("hot") is not None  # mem hit
+        assert cache.mem_hits == 1
+        evicted = cache.prune(max_bytes=os.path.getsize(cache.store.path("hot")))
+        assert evicted == ["cold"]  # "hot" survived because the mem hit touched it

@@ -118,6 +118,38 @@ def test_cache_key_sensitivity():
     assert content_key(w, PatternSpec(4, 8), SolverConfig(iters=60, block_batch=7)) == base
 
 
+def test_cache_max_bytes_bounds_disk_store(tmp_path):
+    """The optional cache bound GC's the disk store after each flush: total
+    size stays under the bound, most-recently-accessed entries survive."""
+    rng = np.random.default_rng(11)
+    svc = MaskService(FAST, policy=TINY, directory=str(tmp_path),
+                      cache_max_bytes=1)  # evict everything but the newest
+    svc.solve(rng.normal(size=(16, 16)).astype(np.float32),
+              PatternSpec(4, 8), name="a")
+    svc.solve(rng.normal(size=(16, 16)).astype(np.float32),
+              PatternSpec(4, 8), name="b")
+    store = svc.cache.store
+    assert svc.stats.cache_evictions >= 1
+    assert "cache_evictions=" in svc.stats.summary()
+    assert store.size_bytes() <= 1  # bound enforced (here: store drained)
+
+    # Unbounded service on the same directory keeps everything.
+    svc2 = MaskService(FAST, policy=TINY, directory=str(tmp_path))
+    svc2.solve(rng.normal(size=(16, 16)).astype(np.float32),
+               PatternSpec(4, 8), name="c")
+    n_before = len(svc2.cache.store.keys())
+    svc2.solve(rng.normal(size=(16, 16)).astype(np.float32),
+               PatternSpec(4, 8), name="d")
+    assert len(svc2.cache.store.keys()) == n_before + 1
+    assert svc2.stats.cache_evictions == 0
+
+
+def test_mask_cache_prune_without_store_is_noop():
+    from repro.service import MaskCache
+
+    assert MaskCache().prune(0) == []
+
+
 def test_disk_persistence_across_services(tmp_path):
     w = np.random.default_rng(4).normal(size=(24, 16)).astype(np.float32)
     svc1 = MaskService(FAST, policy=TINY, directory=str(tmp_path))
