@@ -5,6 +5,7 @@ masks, with fault-tolerant checkpointing throughout.
     PYTHONPATH=src python examples/sparse_finetune.py --preset tiny # CI-sized
     PYTHONPATH=src python examples/sparse_finetune.py --preset 100m # full driver
     PYTHONPATH=src python examples/sparse_finetune.py --compressed  # SparseParams
+    PYTHONPATH=src python examples/sparse_finetune.py --dst         # decaying N:M
 
 This is the paper's motivating workload: after TSENOR pruning, BOTH the
 forward matmuls (W·x) and the backward input-gradient matmuls (Wᵀ·g) of the
@@ -19,6 +20,15 @@ default run also masks the embed/unembed tables.  Over the *same* mask set
 the compressed step is bit-identical to masked-dense training — that
 property is asserted in ``tests/test_compressed_exec.py``.  Interrupt it
 (Ctrl-C) and re-run: it resumes from the latest checkpoint.
+
+``--dst`` (implies ``--compressed``) runs the fine-tune as *dynamic* sparse
+training: it starts from a looser transposable pattern and decays N down to
+the target on a :func:`repro.dst.schedule.decaying_nm` schedule, re-solving
+masks through the MaskService on a background flush while the trainer keeps
+stepping, and swapping the live compressed support at each stage boundary
+(surviving weights and optimizer moments carry over).  Per-refresh flip
+rates are printed at the end.  A DST run's controller state rides the
+checkpoints, so interrupting mid-schedule resumes mid-schedule.
 """
 import argparse
 import os
@@ -30,6 +40,7 @@ import numpy as np
 from repro.checkpoint import CheckpointManager
 from repro.api import PatternSpec, SolverConfig
 from repro.data import SyntheticLM
+from repro.dst import MaskRefreshController, decaying_nm
 from repro.models import lm
 from repro.models.config import ModelConfig
 from repro.optim import AdamW, warmup_cosine
@@ -69,7 +80,13 @@ def main():
     ap.add_argument("--compressed", action="store_true",
                     help="fine-tune from SparseParams (NMCompressed buffers) "
                          "instead of masked dense weights")
+    ap.add_argument("--dst", action="store_true",
+                    help="dynamic sparse training: decay N down to --n over "
+                         "the fine-tune on an async mask-refresh schedule "
+                         "(implies --compressed)")
     args = ap.parse_args()
+    if args.dst:
+        args.compressed = True
 
     cfg = PRESETS[args.preset]
     print(f"== {cfg.name}: ~{cfg.param_count() / 1e6:.1f}M params ==")
@@ -87,11 +104,22 @@ def main():
     state, hist = loop.run(state)
     print(f"dense final loss {hist[-1]['loss']:.4f}" if hist else "(resumed done)")
 
-    # Phase 2: TSENOR transposable masks for every projection.
-    print(f"== solving transposable {args.n}:{args.m} masks (TSENOR) ==")
+    # Phase 2: TSENOR transposable masks for every projection.  A DST run
+    # prunes to its schedule's *initial* (looser) pattern; the decay down to
+    # the target happens live, during the fine-tune.
+    solver_cfg = SolverConfig(iters=200, block_batch=1 << 15)
+    initial = PatternSpec(args.n, args.m)
+    schedule = None
+    if args.dst:
+        n_start = min(args.m - 1, (args.n + args.m) // 2)
+        schedule = decaying_nm(args.m, n_start, args.n,
+                               total_steps=args.finetune_steps // 2)
+        initial = schedule.initial
+        stages = " -> ".join(p.canonical for _, p in schedule.stages)
+        print(f"== DST schedule: {stages} over the fine-tune ==")
+    print(f"== solving transposable {initial.n}:{initial.m} masks (TSENOR) ==")
     prunable_kw = dict(prunable=projection_prunable) if args.compressed else {}
-    masks = sparsify_pytree(state.params, PatternSpec(args.n, args.m),
-                            config=SolverConfig(iters=200, block_batch=1 << 15),
+    masks = sparsify_pytree(state.params, initial, config=solver_cfg,
                             **prunable_kw)
     print(f"mask sparsity {mask_sparsity(masks):.3f}")
     pruned = apply_mask(state.params, masks)
@@ -99,20 +127,26 @@ def main():
     # Phase 3: sparse fine-tune — both passes N:M-accelerable.  With
     # --compressed the step consumes SparseParams: no masks, no dense W.
     opt_ft = AdamW(learning_rate=warmup_cosine(1e-3, 10, args.finetune_steps))
-    subdir = "compressed" if args.compressed else "sparse"
+    subdir = "dst" if args.dst else "compressed" if args.compressed else "sparse"
     ckpt_ft = CheckpointManager(os.path.join(args.ckpt_dir, cfg.name, subdir),
                                 keep_n=2)
     if args.compressed:
-        sp = compress_params(pruned, masks, PatternSpec(args.n, args.m))
+        sp = compress_params(pruned, masks, initial)
         acc = sparse_param_bytes(sp)
         print(f"== compressed projections: {acc['compressed'] / 1e6:.2f} MB "
               f"({acc['ratio']:.3f}x of {acc['dense'] / 1e6:.2f} MB dense) ==")
+        refresh = None
+        if args.dst:
+            refresh = MaskRefreshController(schedule, solver=solver_cfg,
+                                            lookahead=10, mode="async",
+                                            log=print)
         # Copy before the donating loop: dense leaves (embed/norms) share
         # buffers with the evaluation params.
         st = make_train_state(cfg, opt_ft, jax.random.PRNGKey(1),
                               params=jax.tree.map(jnp.copy, sp))
         step_ft = build_train_step(cfg, opt_ft,
-                                   step_cfg=StepConfig(mask_mode="compressed"))
+                                   step_cfg=StepConfig(mask_mode="compressed",
+                                                       refresh=refresh))
     else:
         st = make_train_state(cfg, opt_ft, jax.random.PRNGKey(1),
                               params=jax.tree.map(jnp.copy, pruned))
@@ -121,6 +155,12 @@ def main():
                         TrainLoopConfig(total_steps=args.finetune_steps,
                                         ckpt_every=50, log_every=20))
     st, hist_ft = loop_ft.run(st)
+    if args.dst:
+        ctrl = loop_ft.refresh
+        print(f"== DST refreshes: {len(ctrl.events)} "
+              f"(stalled {ctrl.stall_seconds() * 1e3:.1f}ms total) ==")
+        for e in ctrl.events:
+            print(f"  {e.summary()}")
 
     def eval_loss(params):
         return float(np.mean([

@@ -212,15 +212,44 @@ class CheckpointManager:
         with open(os.path.join(self.dir, f"step_{step:010d}", "meta.json")) as f:
             return json.load(f)
 
+    def user_metadata(self, step: int) -> dict:
+        """The caller-supplied metadata dict passed to :meth:`save`.
+
+        This is where host-side training state that is not an array pytree
+        rides along — e.g. the DST refresh-controller ``state_dict()``
+        (schedule spec, in-flight refresh, per-refresh telemetry) that
+        ``TrainLoop`` stores so a dynamic-sparse run resumes mid-schedule.
+        """
+        return self.metadata(step).get("user", {})
+
     def restore(self, step: int, template: Any, sharding_tree: Any = None) -> Any:
         """Load into the structure of ``template``; reshard if tree given.
 
         ``sharding_tree``: pytree of jax.sharding.Sharding (or None leaves)
         matching ``template`` — pass shardings built from a *new* mesh to
         perform an elastic reshard-on-load.
+
+        Leaf *shapes* come from the checkpoint, not the template: only the
+        tree structure (and per-leaf dtype) must match.  That is what lets
+        a dynamic-sparse-training run resume from a mid-schedule
+        checkpoint whose ``NMCompressed`` buffers have a decayed N — the
+        template built from the fresh (stage-0) state has different shapes
+        but the identical tree.  A template whose *structure* diverges
+        from the manifest fails fast with the differing paths.
         """
         base = os.path.join(self.dir, f"step_{step:010d}")
         flat = jax.tree_util.tree_flatten_with_path(template)
+        manifest = set(self.metadata(step).get("leaves", {}))
+        want = {path_str(p, _SEP) for p, _ in flat[0]}
+        if manifest and manifest != want:
+            missing = sorted(want - manifest)[:5]
+            extra = sorted(manifest - want)[:5]
+            raise ValueError(
+                f"checkpoint step {step} tree structure does not match the "
+                f"restore template (template-only: {missing}; "
+                f"checkpoint-only: {extra}). A support swap may change "
+                "compressed leaf shapes but never the tree itself."
+            )
         shard_leaves = (
             jax.tree.leaves(
                 sharding_tree, is_leaf=lambda x: x is None or hasattr(x, "device_set")

@@ -1,0 +1,39 @@
+"""Dynamic sparse training: transposable N:M masks that evolve under the
+trainer without stalling it.
+
+Every other flow in the repo is prune-once-then-train; this package
+re-solves masks *during* training — on a :class:`SparsitySchedule`
+(static cadence, stepwise stages, or the Kao-style decaying N:M of
+:func:`decaying_nm`) — and swaps the support of a live compressed
+TrainState via :func:`repro.sparsity.params.recompress` +
+:func:`repro.optim.adamw.remap_moments`.  The solve itself rides
+``MaskService.flush_async`` on a background thread, so the step loop never
+blocks on a mask solve (``mode="async"``); ``mode="sync"`` is the
+bit-identical-to-manual oracle.
+
+See ``docs/architecture.md`` ("Dynamic sparse training") for the refresh
+lifecycle and decision tables, and ``benchmarks/dst_loop.py`` for the
+overhead/stall/quality gates.
+"""
+from repro.dst.controller import MaskRefreshController, wrap_step_with_refresh
+from repro.dst.schedule import (
+    SparsitySchedule,
+    StaticSchedule,
+    StepwiseSchedule,
+    decaying_nm,
+    schedule_from_spec,
+)
+from repro.dst.telemetry import RefreshEvent, aggregate_flips, mask_flip_stats
+
+__all__ = [
+    "MaskRefreshController",
+    "RefreshEvent",
+    "SparsitySchedule",
+    "StaticSchedule",
+    "StepwiseSchedule",
+    "aggregate_flips",
+    "decaying_nm",
+    "mask_flip_stats",
+    "schedule_from_spec",
+    "wrap_step_with_refresh",
+]

@@ -1,0 +1,287 @@
+"""MaskRefreshController: re-solve masks under a live trainer, stall-free.
+
+The refresh lifecycle (one "refresh" = one support swap):
+
+::
+
+    step t                 steps t..t+k-1           step t+k  (= swap step)
+    ------                 ----------------         ------------------------
+    snapshot |W_t|     →   trainer keeps stepping;  wait() the flush ticket
+    submit_many to the     MaskService solves the   (normally already done),
+    MaskService, start     new masks on its back-   recompress SparseParams
+    a background flush     ground flush thread      + remap AdamW moments
+
+The controller is pure host-side bookkeeping between jitted steps: it never
+touches the step function's trace.  Swapping a pattern with a different N
+changes the compressed leaf shapes, so ``jax.jit`` re-traces the step once
+per schedule stage — expected and paid once per stage, not per step.
+
+Two modes:
+
+* ``mode="async"`` (default) — the lifecycle above: masks for step
+  ``t+lookahead`` are solved from step-``t`` weights while training
+  continues (Hubara et al.'s transposable-mask training regime; the
+  ``lookahead`` staleness is the price of never stalling the step loop).
+* ``mode="sync"`` — snapshot, solve and swap all at the swap step.  Slower
+  (the trainer blocks on the solve) but *bit-identical* to calling
+  ``sparsify_pytree`` + ``recompress`` + ``remap_moments`` by hand at that
+  step (property-tested in ``tests/test_dst.py``), which makes it the
+  correctness oracle for the async path.
+
+Checkpoint integration: ``state_dict()`` rides checkpoint metadata (see
+``TrainLoop``); on resume, a refresh that was in flight is re-armed — the
+solve re-submits from the restored weights, and the MaskService content
+cache (same weights → same key) turns the re-solve into a hit whenever the
+restored state matches the snapshotted one.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.core.solver import SolverConfig
+from repro.dst.schedule import SparsitySchedule, schedule_from_spec
+from repro.dst.telemetry import RefreshEvent
+from repro.patterns import PatternSpec
+from repro.service.engine import FlushTicket, MaskService
+from repro.sparsity.params import (
+    NMCompressed,
+    recompress,
+    remap_tree,
+)
+from repro.treepath import path_str
+
+MODES = ("async", "sync")
+
+
+class _Ticket:
+    """One in-flight refresh: submitted handles + where/when they land."""
+
+    def __init__(self, submit_step: int, swap_step: int, pattern: PatternSpec,
+                 handles: list, treedef, flush: Optional[FlushTicket]):
+        self.submit_step = submit_step
+        self.swap_step = swap_step
+        self.pattern = pattern
+        self.handles = handles      # aligned with treedef; None at dense leaves
+        self.treedef = treedef
+        self.flush = flush          # None in sync mode (solved inline)
+
+
+class MaskRefreshController:
+    """Evolves the transposable N:M support of a compressed TrainState.
+
+    Drive it through ``StepConfig(refresh=controller)`` (the step builder
+    wraps the jitted step with :meth:`on_step`) or call :meth:`on_step`
+    yourself with the pre-step host step counter and TrainState.
+
+    Args:
+      schedule: a :class:`~repro.dst.schedule.SparsitySchedule`.
+      service: MaskService the re-solves route through (its SolverConfig
+        shapes the masks); a fresh in-memory one per controller by default.
+      lookahead: async mode's snapshot-to-swap distance k — masks landing
+        at step ``s`` are solved from step ``s - k`` weights.
+      mode: ``"async"`` or ``"sync"`` (see module docstring).
+      log: line sink for per-refresh summaries.
+    """
+
+    def __init__(
+        self,
+        schedule: SparsitySchedule,
+        service: Optional[MaskService] = None,
+        solver: Optional[SolverConfig] = None,
+        lookahead: int = 10,
+        mode: str = "async",
+        log: Callable[[str], None] = lambda s: None,
+    ):
+        if mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+        if lookahead < 0:
+            raise ValueError(f"lookahead must be >= 0, got {lookahead}")
+        self.schedule = schedule
+        self.service = service if service is not None else \
+            MaskService(solver if solver is not None else SolverConfig())
+        self.lookahead = lookahead if mode == "async" else 0
+        self.mode = mode
+        self.log = log
+        self.events: list[RefreshEvent] = []
+        self._ticket: Optional[_Ticket] = None
+        self._next_scan = 1  # swap step 0 is the initial compression
+        self._rearm: Optional[dict] = None  # resume: re-submit descriptor
+
+    # -- the per-step hook ---------------------------------------------------
+
+    def on_step(self, step: int, state):
+        """Pre-step hook: apply a due swap, then arm a due refresh.
+
+        ``step`` is the step about to run; a swap whose ``swap_step <= step``
+        takes effect now, so that step already trains under the new support.
+        Returns the (possibly swapped) TrainState.
+        """
+        state = self._maybe_swap(step, state)
+        self._maybe_submit(step, state)
+        # Sync mode (and a resumed/late async ticket): the refresh armed for
+        # this very step completes before the step runs.
+        state = self._maybe_swap(step, state)
+        return state
+
+    # -- submit side ---------------------------------------------------------
+
+    def _maybe_submit(self, step: int, state) -> None:
+        if self._rearm is not None and self._ticket is None:
+            d, self._rearm = self._rearm, None
+            self._submit(step, max(d["swap_step"], step),
+                         PatternSpec.parse(d["pattern"]), state)
+        limit = step + self.lookahead
+        s = self._next_scan
+        while s <= limit:
+            target = self.schedule.swap_at(s)
+            if target is not None:
+                if self._ticket is not None:
+                    break  # one refresh in flight at a time; retry next step
+                self._submit(step, s, target, state)
+                s += 1
+                break
+            s += 1
+        self._next_scan = s
+
+    def _submit(self, step: int, swap_step: int, pattern: PatternSpec,
+                state) -> None:
+        params = state.params
+        flat, treedef = jax.tree_util.tree_flatten_with_path(
+            params, is_leaf=lambda x: isinstance(x, NMCompressed)
+        )
+        handles = []
+        for path, leaf in flat:
+            if not isinstance(leaf, NMCompressed):
+                handles.append(None)
+                continue
+            # Magnitude scores from the live compressed weights: positions
+            # outside the current support decompress to 0, so a refresh can
+            # tighten or re-arrange the support but never resurrect a slot
+            # the trainer has no value for.
+            w = leaf.decompress()
+            handles.append(self.service.submit(
+                f"{path_str(path)}@{swap_step}", w, pattern, journal=False
+            ))
+        flush = None
+        if self.mode == "async":
+            flush = self.service.flush_async()
+        self._ticket = _Ticket(step, swap_step, pattern, handles, treedef,
+                               flush)
+
+    # -- swap side -----------------------------------------------------------
+
+    def _maybe_swap(self, step: int, state):
+        tk = self._ticket
+        if tk is None or step < tk.swap_step:
+            return state
+        t0 = time.perf_counter()
+        if tk.flush is not None:
+            tk.flush.wait()
+        else:
+            self.service.flush()
+        wait = time.perf_counter() - t0
+        masks_flat = [None if h is None else h.result() for h in tk.handles]
+        masks = jax.tree_util.tree_unflatten(tk.treedef, masks_flat)
+        new_params, flips = recompress(state.params, masks, tk.pattern)
+        from repro.optim.adamw import remap_moments
+
+        new_opt = remap_moments(state.opt_state, state.params, new_params)
+        new_ef = state.ef
+        if new_ef is not None:
+            new_ef = remap_tree(new_ef, state.params, new_params)
+        event = RefreshEvent(
+            submit_step=tk.submit_step,
+            swap_step=tk.swap_step,
+            pattern=tk.pattern.canonical,
+            wait_seconds=wait,
+            solve_seconds=tk.flush.seconds if tk.flush is not None else wait,
+            synchronous=tk.flush is None,
+            flips=flips,
+        ).finalize()
+        self.events.append(event)
+        self.log(f"[dst] {event.summary()}")
+        self._ticket = None
+        return state._replace(params=new_params, opt_state=new_opt,
+                              ef=new_ef)
+
+    # -- checkpoint integration ---------------------------------------------
+
+    def state_dict(self) -> dict:
+        """Json-serializable refresh state for checkpoint metadata."""
+        tk = self._ticket
+        return {
+            "version": 1,
+            "schedule": self.schedule.spec(),
+            "mode": self.mode,
+            "lookahead": self.lookahead,
+            "next_scan": self._next_scan,
+            "inflight": None if tk is None else {
+                "submit_step": tk.submit_step,
+                "swap_step": tk.swap_step,
+                "pattern": tk.pattern.canonical,
+            },
+            "events": [e.to_json() for e in self.events],
+        }
+
+    def load_state_dict(self, d: dict) -> None:
+        """Resume from :meth:`state_dict` metadata.
+
+        The schedule must match the checkpointed one (a DST run's masks are
+        meaningless under a different schedule).  An in-flight refresh is
+        re-armed: the next :meth:`on_step` re-snapshots the restored weights
+        and re-submits for the same swap step — the service's content cache
+        dedupes when the weights are the ones originally snapshotted.
+        """
+        saved = schedule_from_spec(d["schedule"])
+        if saved.spec() != self.schedule.spec():
+            raise ValueError(
+                "resuming a DST run under a different schedule: checkpoint "
+                f"has {saved.spec()}, controller has {self.schedule.spec()}"
+            )
+        self._next_scan = int(d["next_scan"])
+        self._rearm = d.get("inflight")
+        self._ticket = None
+        self.events = [RefreshEvent.from_json(e) for e in d.get("events", [])]
+
+    # -- telemetry -----------------------------------------------------------
+
+    def stall_seconds(self) -> float:
+        """Trainer time spent blocked on async flushes (the number the
+        ``benchmarks/dst_loop.py`` gate holds near zero)."""
+        return float(sum(
+            e.wait_seconds for e in self.events if not e.synchronous
+        ))
+
+    def telemetry(self) -> dict:
+        """Json-ready rollup (written into ``BENCH_dst.json``)."""
+        return {
+            "mode": self.mode,
+            "lookahead": self.lookahead,
+            "refreshes": len(self.events),
+            "stall_seconds": self.stall_seconds(),
+            "events": [e.to_json() for e in self.events],
+            "service": {
+                "submitted": self.service.stats.submitted,
+                "cache_hits": self.service.stats.cache_hits,
+                "dedup_hits": self.service.stats.dedup_hits,
+            },
+        }
+
+
+def wrap_step_with_refresh(step_fn: Callable, controller: Any) -> Callable:
+    """Wrap a jitted ``step(state, batch)`` so each call first routes the
+    pre-step state through ``controller.on_step``.  The controller is
+    exposed as ``.refresh`` on the wrapper (``TrainLoop`` discovers it there
+    for checkpoint metadata)."""
+
+    def step_with_refresh(state, batch):
+        t = int(np.asarray(jax.tree.leaves(state.step)[0]))
+        state = controller.on_step(t, state)
+        return step_fn(state, batch)
+
+    step_with_refresh.refresh = controller
+    return step_with_refresh

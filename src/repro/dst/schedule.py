@@ -1,0 +1,208 @@
+"""Sparsity schedules: which transposable N:M pattern governs which step.
+
+A :class:`SparsitySchedule` answers two questions the refresh controller
+asks every step:
+
+* ``pattern_at(step)`` — the pattern training *should* be running under at
+  ``step`` (drives the initial compression and resume checks);
+* ``swap_at(step)`` — the pattern whose freshly-solved mask takes effect at
+  ``step``, or ``None`` if no refresh lands there.
+
+Three shapes cover the literature:
+
+* :class:`StaticSchedule` — one pattern forever, re-solved every ``every``
+  steps (plain DST: same sparsity, moving support);
+* :class:`StepwiseSchedule` — explicit ``(start_step, pattern)`` stages;
+  a refresh lands exactly at each stage boundary;
+* :func:`decaying_nm` — the Kao et al. decaying-mask recipe ("Training
+  Recipe for N:M Structured Sparsity with Decaying Pruning Mask",
+  PAPERS.md) as a :class:`StepwiseSchedule` constructor: N decays linearly
+  from ``n_start`` to ``n_end`` over evenly spaced boundaries (e.g.
+  24:32 → 20:32 → 16:32), relaxing toward the target sparsity instead of
+  jumping there one-shot.
+
+Schedules serialize to plain dicts (``spec()`` / :func:`schedule_from_spec`)
+so a resumed run can verify it is continuing the schedule it checkpointed.
+M is fixed across every stage — decaying N changes the OT marginals of each
+block solve (``docs/solver_math.md``), but the block geometry (and therefore
+the compressed layout's group size) must not move under a live tree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from repro.patterns import PatternSpec
+
+
+class SparsitySchedule:
+    """Protocol base; subclasses implement ``pattern_at`` and ``swap_at``."""
+
+    def pattern_at(self, step: int) -> PatternSpec:
+        raise NotImplementedError
+
+    def swap_at(self, step: int) -> Optional[PatternSpec]:
+        raise NotImplementedError
+
+    def spec(self) -> dict:
+        raise NotImplementedError
+
+    @property
+    def initial(self) -> PatternSpec:
+        """The pattern the run starts under (prune/compress with this)."""
+        return self.pattern_at(0)
+
+    @property
+    def final(self) -> PatternSpec:
+        """The pattern the run converges to (the serve-time artifact)."""
+        raise NotImplementedError
+
+
+def _coerce_transposable(pattern) -> PatternSpec:
+    spec = PatternSpec.coerce(pattern)
+    if not spec.transposable:
+        raise ValueError(
+            f"DST schedules need transposable patterns (got {spec}): the "
+            "refresh re-solves through MaskService and swaps a compressed "
+            "buffer that serves both W and W^T"
+        )
+    return spec
+
+
+@dataclasses.dataclass(frozen=True)
+class StaticSchedule(SparsitySchedule):
+    """One pattern, periodically re-solved: refreshes land every ``every``
+    steps starting at ``start`` (default ``every``) until ``stop``."""
+
+    pattern: PatternSpec
+    every: int
+    start: Optional[int] = None
+    stop: Optional[int] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "pattern", _coerce_transposable(self.pattern))
+        if self.every < 1:
+            raise ValueError(f"StaticSchedule needs every >= 1, got {self.every}")
+
+    def pattern_at(self, step: int) -> PatternSpec:
+        return self.pattern
+
+    def swap_at(self, step: int) -> Optional[PatternSpec]:
+        first = self.every if self.start is None else self.start
+        if step < first or (self.stop is not None and step > self.stop):
+            return None
+        return self.pattern if (step - first) % self.every == 0 else None
+
+    @property
+    def final(self) -> PatternSpec:
+        return self.pattern
+
+    def spec(self) -> dict:
+        return {"kind": "static", "pattern": self.pattern.canonical,
+                "every": self.every, "start": self.start, "stop": self.stop}
+
+
+@dataclasses.dataclass(frozen=True)
+class StepwiseSchedule(SparsitySchedule):
+    """Explicit stages: ``[(start_step, pattern), ...]`` with strictly
+    increasing start steps, the first at 0 (the initial compression)."""
+
+    stages: tuple  # ((start_step, PatternSpec), ...)
+
+    def __post_init__(self):
+        stages = tuple(
+            (int(s), _coerce_transposable(p)) for s, p in self.stages
+        )
+        if not stages:
+            raise ValueError("StepwiseSchedule needs at least one stage")
+        if stages[0][0] != 0:
+            raise ValueError(
+                f"first stage must start at step 0 (the initial pattern), "
+                f"got {stages[0][0]}"
+            )
+        starts = [s for s, _ in stages]
+        if sorted(set(starts)) != starts:
+            raise ValueError(f"stage starts must strictly increase: {starts}")
+        ms = {p.m for _, p in stages}
+        if len(ms) != 1:
+            raise ValueError(
+                f"all stages must share one M (the compressed group size is "
+                f"static under a live tree), got M in {sorted(ms)}"
+            )
+        object.__setattr__(self, "stages", stages)
+
+    def pattern_at(self, step: int) -> PatternSpec:
+        current = self.stages[0][1]
+        for start, pat in self.stages:
+            if step >= start:
+                current = pat
+        return current
+
+    def swap_at(self, step: int) -> Optional[PatternSpec]:
+        for start, pat in self.stages[1:]:  # stage 0 is the initial prune
+            if start == step:
+                return pat
+        return None
+
+    @property
+    def final(self) -> PatternSpec:
+        return self.stages[-1][1]
+
+    def spec(self) -> dict:
+        return {"kind": "stepwise",
+                "stages": [[s, p.canonical] for s, p in self.stages]}
+
+
+def decaying_nm(m: int, n_start: int, n_end: int, total_steps: int,
+                stages: Optional[int] = None) -> StepwiseSchedule:
+    """Kao-style decaying N:M schedule as a :class:`StepwiseSchedule`.
+
+    N steps down linearly from ``n_start`` to ``n_end`` across ``stages``
+    patterns (default: one stage per distinct N on the line, e.g.
+    ``decaying_nm(32, 24, 16, 300)`` → 24:32 at step 0, 20:32 at 100,
+    16:32 at 200) with evenly spaced boundaries over ``total_steps``; the
+    final stage gets the same slice of the budget as every other, so the
+    target pattern trains for the last ``total_steps / stages`` steps.
+    """
+    if n_end > n_start:
+        raise ValueError(
+            f"decaying_nm decays: n_start ({n_start}) must be >= n_end "
+            f"({n_end})"
+        )
+    if stages is None:
+        stages = min(n_start - n_end + 1, 3) if n_start > n_end else 1
+    if stages < 1:
+        raise ValueError(f"decaying_nm needs stages >= 1, got {stages}")
+    if stages > 1 and total_steps < stages:
+        raise ValueError(
+            f"total_steps ({total_steps}) too small for {stages} stages"
+        )
+    ns: Sequence[int]
+    if stages == 1:
+        ns = [n_end]
+    else:
+        span = n_start - n_end
+        ns = [round(n_start - span * i / (stages - 1)) for i in range(stages)]
+    out = []
+    for i, n in enumerate(ns):
+        start = (total_steps * i) // stages
+        out.append((start, PatternSpec(int(n), m, True)))
+    # Collapse duplicate consecutive Ns from rounding (no-op boundaries).
+    dedup = [out[0]]
+    for start, pat in out[1:]:
+        if pat != dedup[-1][1]:
+            dedup.append((start, pat))
+    return StepwiseSchedule(tuple(dedup))
+
+
+def schedule_from_spec(d: dict) -> SparsitySchedule:
+    """Inverse of ``SparsitySchedule.spec()`` (checkpoint resume path)."""
+    kind = d.get("kind")
+    if kind == "static":
+        return StaticSchedule(PatternSpec.parse(d["pattern"]), d["every"],
+                              d.get("start"), d.get("stop"))
+    if kind == "stepwise":
+        return StepwiseSchedule(
+            tuple((s, PatternSpec.parse(p)) for s, p in d["stages"])
+        )
+    raise ValueError(f"unknown schedule spec kind: {kind!r}")

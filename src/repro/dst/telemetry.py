@@ -1,0 +1,98 @@
+"""Churn telemetry for dynamic sparse training.
+
+A mask refresh is only worth its solve cost if it actually *moves* support
+— and only safe if it doesn't move too much of it (Kao et al.: late-stage
+churn destroys recovered accuracy).  This module measures that movement:
+
+* :func:`mask_flip_stats` — one old/new mask pair's churn (kept / added /
+  dropped positions, flip rate over the dense positions);
+* :class:`RefreshEvent` — everything one refresh did: when it snapshotted,
+  when it swapped, what pattern it solved, how long the trainer waited on
+  the async flush (the "stall" the bench gates on), and the per-layer flip
+  stats from :func:`repro.sparsity.params.recompress`;
+* :func:`aggregate_flips` — tree-level rollup the loop logs per refresh.
+
+Everything here is plain numpy/python: records are json-serializable so
+they ride checkpoints (``BENCH_dst.json``, the ckpt ``dst`` metadata) as-is.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+def mask_flip_stats(old_mask, new_mask) -> dict:
+    """Churn between two boolean masks of the same dense shape.
+
+    Returns ``{"kept", "added", "dropped", "nnz_old", "nnz_new", "size",
+    "flip_rate"}`` — ``flip_rate`` is the fraction of dense positions whose
+    membership changed (the symmetric difference over the full size), the
+    number Kao-style decaying schedules watch per refresh.
+    """
+    old = np.asarray(old_mask, bool)
+    new = np.asarray(new_mask, bool)
+    assert old.shape == new.shape, (old.shape, new.shape)
+    kept = int(np.sum(old & new))
+    added = int(np.sum(~old & new))
+    dropped = int(np.sum(old & ~new))
+    return {
+        "kept": kept,
+        "added": added,
+        "dropped": dropped,
+        "nnz_old": int(np.sum(old)),
+        "nnz_new": int(np.sum(new)),
+        "size": int(old.size),
+        "flip_rate": (added + dropped) / max(int(old.size), 1),
+    }
+
+
+def aggregate_flips(per_layer: dict) -> dict:
+    """Roll per-layer :func:`mask_flip_stats` dicts up to one tree-level
+    record (counts sum; ``flip_rate`` is recomputed over the total size)."""
+    total = {"kept": 0, "added": 0, "dropped": 0, "nnz_old": 0,
+             "nnz_new": 0, "size": 0}
+    for st in per_layer.values():
+        for k in total:
+            total[k] += st[k]
+    total["flip_rate"] = (
+        (total["added"] + total["dropped"]) / max(total["size"], 1)
+    )
+    return total
+
+
+@dataclasses.dataclass
+class RefreshEvent:
+    """One completed mask refresh, as recorded by the controller."""
+
+    submit_step: int            # step whose weights were snapshotted
+    swap_step: int              # first step trained under the new support
+    pattern: str                # canonical PatternSpec string solved
+    wait_seconds: float = 0.0   # trainer time spent blocked on the flush
+    solve_seconds: float = 0.0  # background wall-clock of the flush itself
+    synchronous: bool = False   # sync mode: solved inline at swap_step
+    flips: dict = dataclasses.field(default_factory=dict)  # path -> stats
+    total: Optional[dict] = None  # aggregate_flips(flips)
+
+    def finalize(self) -> "RefreshEvent":
+        self.total = aggregate_flips(self.flips)
+        return self
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "RefreshEvent":
+        return cls(**d)
+
+    def summary(self) -> str:
+        tot = self.total or aggregate_flips(self.flips)
+        return (
+            f"refresh@{self.swap_step} {self.pattern} "
+            f"(snapshot@{self.submit_step}, "
+            f"{'sync' if self.synchronous else 'async'}) "
+            f"flip_rate={tot['flip_rate']:.4f} "
+            f"nnz {tot['nnz_old']} -> {tot['nnz_new']} "
+            f"wait={self.wait_seconds * 1e3:.1f}ms"
+        )

@@ -1,5 +1,5 @@
 """Optimizer substrate (no optax in the container: built from scratch)."""
-from repro.optim.adamw import AdamW, AdamWState
+from repro.optim.adamw import AdamW, AdamWState, remap_moments
 from repro.optim.schedule import warmup_cosine
 
-__all__ = ["AdamW", "AdamWState", "warmup_cosine"]
+__all__ = ["AdamW", "AdamWState", "remap_moments", "warmup_cosine"]

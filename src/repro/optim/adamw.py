@@ -10,6 +10,13 @@ the *stored* leaf shapes, so an :class:`~repro.sparsity.params.NMCompressed`
 projection's moments live on its ``(G, N, F)`` values — N/M of the dense
 optimizer memory — and its integer ``indices`` leaf gets a size-0
 placeholder and passes through every update untouched.
+
+Dynamic sparse training swaps the support under a live optimizer:
+:func:`remap_moments` relays ``mu``/``nu`` across a
+:func:`~repro.sparsity.params.recompress` — a slot that keeps its dense
+position keeps its first/second moments, a position entering the support
+starts with zero moments (the Adam cold-start for a weight that just
+(re)appeared), and the bias-correction step count carries over.
 """
 from __future__ import annotations
 
@@ -24,6 +31,27 @@ class AdamWState(NamedTuple):
     step: jnp.ndarray
     mu: dict
     nu: dict
+
+
+def remap_moments(state: AdamWState, old_params, new_params) -> AdamWState:
+    """Carry AdamW state across a SparseParams support swap.
+
+    For every :class:`~repro.sparsity.params.NMCompressed` leaf whose
+    indices changed between ``old_params`` and ``new_params`` (a
+    :func:`~repro.sparsity.params.recompress`), ``mu``/``nu`` slots follow
+    their dense positions: surviving positions keep their moments, entering
+    positions start at zero, leaving positions are dropped.  The shared
+    ``step`` (bias-correction) counter is preserved — the optimizer has
+    genuinely taken that many steps.  Dense leaves pass through untouched.
+    The slot bookkeeping is :func:`repro.sparsity.params.remap_tree`.
+    """
+    from repro.sparsity.params import remap_tree
+
+    return AdamWState(
+        step=state.step,
+        mu=remap_tree(state.mu, old_params, new_params),
+        nu=remap_tree(state.nu, old_params, new_params),
+    )
 
 
 @dataclasses.dataclass(frozen=True)

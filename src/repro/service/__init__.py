@@ -9,12 +9,18 @@ is the canonical solve path.  Mega-batches shard over all local devices via
 ``examples/mask_service.py`` for a runnable tour.
 """
 from repro.service.cache import MaskCache, content_key, solver_fingerprint
-from repro.service.engine import MaskHandle, MaskService, ServiceStats
+from repro.service.engine import (
+    FlushTicket,
+    MaskHandle,
+    MaskService,
+    ServiceStats,
+)
 from repro.service.journal import Journal
 from repro.service.scheduler import BucketPolicy, StreamStats, solve_stream
 
 __all__ = [
     "BucketPolicy",
+    "FlushTicket",
     "Journal",
     "MaskCache",
     "MaskHandle",

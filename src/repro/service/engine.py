@@ -31,6 +31,8 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import threading
+import time
 import warnings
 from typing import Optional
 
@@ -69,6 +71,9 @@ class MaskHandle:
         self.journal = journal
         self._geom = geom
         self._words: Optional[np.ndarray] = None
+        # Identical in-flight submissions attach here instead of enqueueing
+        # their blocks a second time; the primary's solve resolves them all.
+        self._dups: list["MaskHandle"] = []
 
     @property
     def n(self) -> int:
@@ -98,10 +103,32 @@ class MaskHandle:
         return jnp.asarray(blocks_to_mask(self.mask_blocks(), self._geom))
 
 
+class FlushTicket:
+    """Completion future for one :meth:`MaskService.flush_async` drain."""
+
+    def __init__(self):
+        self._event = threading.Event()
+        self._error: Optional[BaseException] = None
+        self.seconds: float = 0.0  # background wall-clock of the drain
+
+    @property
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """Block until the background flush finishes (re-raising anything it
+        raised); returns False only on timeout."""
+        ok = self._event.wait(timeout)
+        if ok and self._error is not None:
+            raise self._error
+        return ok
+
+
 @dataclasses.dataclass
 class ServiceStats:
     submitted: int = 0
     cache_hits: int = 0
+    dedup_hits: int = 0  # identical submission already in flight (no re-solve)
     journal_skips: int = 0  # resolved via a prior run's journal + store
     cache_evictions: int = 0  # disk entries GC'd by the cache_max_bytes bound
     stream: StreamStats = dataclasses.field(default_factory=StreamStats)
@@ -122,9 +149,10 @@ class ServiceStats:
             f" cache_evictions={self.cache_evictions}"
             if self.cache_evictions else ""
         )
+        dedup = f" dedup_hits={self.dedup_hits}" if self.dedup_hits else ""
         return (
             f"submitted={self.submitted} cache_hits={self.cache_hits}"
-            f"{evict} {self.stream.summary()}"
+            f"{dedup}{evict} {self.stream.summary()}"
         )
 
 
@@ -169,6 +197,10 @@ class MaskService:
             self.cache.track_access = True  # mem hits count for the LRU
         self.stats = ServiceStats()
         self._pending: list[tuple[MaskHandle, np.ndarray]] = []
+        # Queue/dedup state shared with the background-flush thread.
+        self._lock = threading.RLock()
+        self._inflight: dict[str, MaskHandle] = {}  # content key -> primary
+        self._bg_thread: Optional[threading.Thread] = None
 
     # -- submit/future API --------------------------------------------------
 
@@ -211,7 +243,26 @@ class MaskService:
             self._record(handle)
             return handle
 
-        self._pending.append((handle, blocks))
+        with self._lock:
+            # In-flight dedup: a second submit of the same content key
+            # before (or during) a flush rides the first one's solve —
+            # without this, both copies solve and race to populate the
+            # cache.  DST refresh makes this path hot: a re-submitted
+            # snapshot after resume, or two layers sharing identical
+            # weights, must cost one solve.
+            primary = self._inflight.get(key)
+            if primary is not None and not primary.done:
+                primary._dups.append(handle)
+                self.stats.dedup_hits += 1
+                return handle
+            cached = self.cache.get_packed(key)  # resolved since the check?
+            if cached is not None:
+                self.stats.cache_hits += 1
+                handle._resolve(cached[0])
+                self._record(handle)
+                return handle
+            self._inflight[key] = handle
+            self._pending.append((handle, blocks))
         return handle
 
     def submit_many(self, items, pattern=None, *, n=None,
@@ -259,9 +310,15 @@ class MaskService:
         quiescent), so no caller ever returns from ``flush`` with work it
         enqueued still unsolved.
         """
+        bg = self._bg_thread
+        if bg is not None and bg is not threading.current_thread():
+            bg.join()  # fold into (never race) an active background drain
         wrote = False
-        while self._pending:
-            pending, self._pending = self._pending, []
+        while True:
+            with self._lock:
+                if not self._pending:
+                    break
+                pending, self._pending = self._pending, []
             # One stream per pattern: block shape and the solver's static
             # args both depend on it.  Submission order is preserved within
             # a group.
@@ -280,11 +337,23 @@ class MaskService:
                     packed=True,
                 )
                 for (handle, blocks), words in zip(entries, solved):
-                    handle._resolve(words)
-                    self.cache.put_packed(
-                        handle.key, words, (blocks.shape[0], spec.m, spec.m)
-                    )
-                    self._record(handle)
+                    # Atomic wrt submit(): resolve + cache + drain the
+                    # dedup followers before dropping the in-flight entry,
+                    # so a racing identical submit either attaches to the
+                    # primary or hits the cache — never re-solves.
+                    with self._lock:
+                        handle._resolve(words)
+                        self.cache.put_packed(
+                            handle.key, words,
+                            (blocks.shape[0], spec.m, spec.m),
+                        )
+                        self._record(handle)
+                        for dup in handle._dups:
+                            dup._resolve(words)
+                            self._record(dup)
+                        handle._dups.clear()
+                        if self._inflight.get(handle.key) is handle:
+                            del self._inflight[handle.key]
                     wrote = True
         # Only GC when this flush actually grew the store: all-hit flushes
         # (and the per-sweep flushes of plan-routed solvers) skip the
@@ -293,6 +362,44 @@ class MaskService:
             self.stats.cache_evictions += len(
                 self.cache.prune(self.cache_max_bytes)
             )
+
+    def flush_async(self) -> FlushTicket:
+        """Drain the queue on a background thread; returns a
+        :class:`FlushTicket` whose ``wait()`` joins the drain.
+
+        This is the DST hot path (``repro.dst``): the trainer submits a
+        mask refresh, keeps stepping while the solve runs here, and only
+        ``wait()``s at the swap step — by which time the ticket is
+        normally already done, so the trainer never stalls on ``flush``.
+        Queue handoff is locked, so submissions racing the drain are
+        either folded into it or left pending for the next flush; a
+        synchronous :meth:`flush` (including the implicit one in
+        ``result()``) first joins any background drain, so laziness stays
+        a throughput optimization, never a correctness concern.  One
+        background drain runs at a time; a second ``flush_async`` chains
+        behind the first.
+        """
+        ticket = FlushTicket()
+        prev = self._bg_thread
+
+        def drain():
+            t0 = time.monotonic()
+            try:
+                if prev is not None:
+                    prev.join()
+                self.flush()
+            except BaseException as e:  # surfaced on ticket.wait()
+                ticket._error = e
+            finally:
+                ticket.seconds = time.monotonic() - t0
+                ticket._event.set()
+
+        thread = threading.Thread(
+            target=drain, name="mask-service-flush", daemon=True
+        )
+        self._bg_thread = thread
+        thread.start()
+        return ticket
 
     def solve(self, w, pattern=None, *legacy, name: Optional[str] = None,
               n=None, m=None) -> jnp.ndarray:

@@ -18,6 +18,9 @@ _EXPORTS = {
     "decompress_params": "repro.sparsity.params",
     "is_sparse_params": "repro.sparsity.params",
     "masks_from_params": "repro.sparsity.params",
+    "recompress": "repro.sparsity.params",
+    "remap_slots": "repro.sparsity.params",
+    "remap_tree": "repro.sparsity.params",
     "sparse_param_bytes": "repro.sparsity.params",
 }
 

@@ -214,6 +214,142 @@ def decompress_params(params):
     )
 
 
+def remap_slots(slots: jnp.ndarray, old_idx: jnp.ndarray,
+                new_idx: jnp.ndarray, m: int) -> jnp.ndarray:
+    """Carry per-slot data across a support swap.
+
+    ``slots`` is any array living on the compressed slot layout — trained
+    values, AdamW moments, error-feedback residuals — shaped ``(G, N, F)``
+    (or scan-stacked ``(L, G, N, F)``), aligned with ``old_idx``.  Returns
+    the same data re-laid-out on ``new_idx``'s layout (possibly a different
+    N): a new slot holding a dense position that was live under the old
+    support inherits that position's value; a position that just *entered*
+    the support gets 0; dead slots (``new_idx == -1``) stay 0.
+    """
+    if slots.ndim == 4:
+        return jax.vmap(lambda s, o, ni: remap_slots(s, o, ni, m))(
+            slots, old_idx, new_idx
+        )
+    dense = decompress_nm(slots, old_idx, m)           # (G*m, F), zeros off-support
+    g, _n, f = slots.shape
+    dense = dense.reshape(g, m, f)
+    safe = jnp.clip(new_idx.astype(jnp.int32), 0, m - 1)
+    out = jnp.take_along_axis(dense, safe, axis=1)
+    return jnp.where(new_idx >= 0, out, 0).astype(slots.dtype)
+
+
+def remap_tree(tree, old_params, new_params):
+    """Relay a params-shaped auxiliary tree across a support swap.
+
+    ``tree`` mirrors a SparseParams tree's structure with per-slot data in
+    place of the values — AdamW moments, error-feedback residuals — so each
+    compressed position's data arrives wrapped in an :class:`NMCompressed`
+    node (whose ``indices`` child is whatever placeholder the owner
+    allocated; it is preserved).  Slots follow their dense positions from
+    ``old_params``'s indices to ``new_params``'s: survivors carry their
+    data, entering positions get 0, leaving positions drop.  Dense leaves
+    pass through untouched.
+    """
+
+    def f(old, new, aux):
+        if not _is_compressed_leaf(old):
+            return aux
+        if not _is_compressed_leaf(new):
+            raise ValueError(
+                "remap_tree: a compressed leaf became dense — support swaps "
+                "must keep the compressed surface fixed"
+            )
+        if old.m != new.m:
+            raise ValueError(
+                f"remap_tree: group size changed ({old.m} -> {new.m}); a "
+                "sparsity schedule may decay N but never M"
+            )
+        return NMCompressed(
+            remap_slots(aux.values, old.indices, new.indices, old.m),
+            aux.indices, aux.m,
+        )
+
+    return jax.tree.map(f, old_params, new_params, tree,
+                        is_leaf=_is_compressed_leaf)
+
+
+def recompress(params, masks, pattern, strict: bool = True, dense_ref=None):
+    """Support-swap a live SparseParams tree onto a new mask tree.
+
+    The DST primitive (see ``docs/architecture.md`` "Dynamic sparse
+    training"): every :class:`NMCompressed` leaf with a mask in ``masks`` is
+    re-compressed under that mask — surviving dense positions carry their
+    trained values, positions entering the support start at 0 (or at
+    ``dense_ref``'s value when a dense reference tree is passed), positions
+    leaving the support are dropped.  Dense leaves and compressed leaves
+    whose mask is ``None`` pass through untouched.
+
+    Bit-identity contract (property-tested in ``tests/test_dst.py``):
+    ``recompress(sp, masks, pat)`` equals
+    ``compress_params(decompress_params(sp), masks, pat)`` exactly — a
+    support swap is indistinguishable from a fresh compression of the
+    decompressed weights under the same mask.
+
+    ``strict`` (default) raises if a mask exists for a leaf that is *not*
+    compressed (same support-drift guard as :func:`compress_params`: under
+    ``mask_mode="compressed"`` that mask would be silently dropped).
+
+    Returns ``(new_params, stats)`` where ``stats`` maps each swapped leaf's
+    path to its churn telemetry (see
+    :func:`repro.dst.telemetry.mask_flip_stats`).
+    """
+    spec = PatternSpec.coerce(pattern)
+    if not spec.transposable:
+        raise ValueError(
+            "recompress needs a transposable pattern: the compressed buffer "
+            f"must keep serving W and W^T (got {spec})"
+        )
+    from repro.dst.telemetry import mask_flip_stats
+
+    dropped: list[str] = []
+    stats: dict[str, dict] = {}
+    ref_flat = None
+    if dense_ref is not None:
+        ref_flat = {
+            path_str(p): leaf
+            for p, leaf in jax.tree_util.tree_flatten_with_path(
+                dense_ref, is_leaf=_is_compressed_leaf
+            )[0]
+        }
+
+    def f(path, p, mk):
+        if mk is None:
+            return p
+        if not _is_compressed_leaf(p):
+            dropped.append(path_str(path))
+            return p
+        old_mask = NMCompressed(
+            jnp.ones_like(p.values), p.indices, p.m
+        ).decompress().astype(bool)
+        base = p.decompress()
+        if ref_flat is not None:
+            ref = ref_flat.get(path_str(path))
+            if ref is not None and not _is_compressed_leaf(ref):
+                # New slots adopt the reference's dense value instead of 0.
+                base = jnp.where(old_mask, base, ref.astype(base.dtype))
+        new = compress_leaf(base, mk, spec)
+        stats[path_str(path)] = mask_flip_stats(old_mask, mk)
+        return new
+
+    out = jax.tree_util.tree_map_with_path(
+        f, params, masks, is_leaf=lambda x: x is None or _is_compressed_leaf(x)
+    )
+    if dropped and strict:
+        raise ValueError(
+            "recompress: masks exist for non-compressed leaves "
+            f"({', '.join(sorted(dropped))}); their sparsity would be "
+            "silently lost under mask_mode='compressed'.  Solve masks over "
+            "the compressed leaves only, or pass strict=False to knowingly "
+            "leave those leaves dense+unmasked."
+        )
+    return out, stats
+
+
 def sparse_param_bytes(params) -> dict:
     """HBM footprint of a (possibly mixed) parameter tree.
 

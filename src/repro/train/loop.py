@@ -11,6 +11,12 @@ Responsibilities beyond calling the step function:
     supervisor restarting the job lands exactly where it left off;
   * a ``failure_injector(step)`` hook that tests use to prove the
     crash/restart path actually works;
+  * dynamic-sparse-training persistence: when the step function carries a
+    refresh controller (``build_train_step`` with ``StepConfig(refresh=...)``
+    exposes it as ``step_fn.refresh``; an explicit ``refresh=`` wins), its
+    ``state_dict()`` rides every checkpoint's metadata and is restored on
+    resume — a killed DST run comes back mid-schedule, re-arming any
+    refresh that was in flight;
   * straggler mitigation knob: ``max_step_seconds`` — when a step exceeds it
     (slow host / bad chip), the loop flags it in metrics so an external
     orchestrator can re-slice; with synchronous SPMD there is no per-step
@@ -46,6 +52,7 @@ class TrainLoop:
         config: TrainLoopConfig,
         failure_injector: Optional[Callable[[int], None]] = None,
         log_fn: Callable[[str], None] = print,
+        refresh=None,
     ):
         self.step_fn = step_fn
         self.data = data
@@ -53,7 +60,16 @@ class TrainLoop:
         self.config = config
         self.failure_injector = failure_injector
         self.log = log_fn
+        # DST controller (duck-typed: state_dict/load_state_dict/events):
+        # explicit argument, else the one the step builder attached.
+        self.refresh = refresh if refresh is not None \
+            else getattr(step_fn, "refresh", None)
         self._interrupted = False
+
+    def _ckpt_metadata(self, extra: dict) -> dict:
+        if self.refresh is not None:
+            return dict(extra, dst=self.refresh.state_dict())
+        return extra
 
     def _install_signal_handler(self):
         def handler(signum, frame):
@@ -78,6 +94,14 @@ class TrainLoop:
                     state = self.ckpt.restore(latest, state)
                     step = latest
                     self.log(f"[loop] resumed from checkpoint step {step}")
+                    if self.refresh is not None:
+                        dst_meta = self.ckpt.user_metadata(latest).get("dst")
+                        if dst_meta is not None:
+                            self.refresh.load_state_dict(dst_meta)
+                            self.log(
+                                f"[loop] dst controller resumed "
+                                f"({len(self.refresh.events)} refreshes done)"
+                            )
         history = []
         try:
             while step < cfg.total_steps:
@@ -99,16 +123,18 @@ class TrainLoop:
                 if step % cfg.log_every == 0:
                     self.log(f"[loop] step {step} loss {loss:.4f} ({dt:.2f}s)")
                 if self.ckpt is not None and step % cfg.ckpt_every == 0:
-                    self.ckpt.save(step, state, {"loss": loss})
+                    self.ckpt.save(step, state,
+                                   self._ckpt_metadata({"loss": loss}))
                 if self._interrupted:
                     raise KeyboardInterrupt("preemption signal")
         except BaseException as e:
             if self.ckpt is not None:
                 self.log(f"[loop] emergency checkpoint at step {step} ({e!r})")
                 self.ckpt.async_save = False
-                self.ckpt.save(step, state, {"emergency": True})
+                self.ckpt.save(step, state,
+                               self._ckpt_metadata({"emergency": True}))
             raise
         if self.ckpt is not None:
             self.ckpt.async_save = False
-            self.ckpt.save(step, state, {"final": True})
+            self.ckpt.save(step, state, self._ckpt_metadata({"final": True}))
         return state, history

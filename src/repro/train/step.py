@@ -107,6 +107,12 @@ class StepConfig:
     #         (256; larger dims accumulate per tile, tracking dense to f32
     #         roundoff instead of bitwise).
     mask_mode: str = "fwd"
+    # Dynamic sparse training: a repro.dst.MaskRefreshController (or any
+    # object with ``on_step(step, state) -> state``).  The built step is
+    # wrapped so every call routes the pre-step state through the hook,
+    # which may swap the SparseParams support (see repro/dst/controller.py).
+    # Compressed mode only: the other modes' masks are baked into the trace.
+    refresh: Optional[Any] = None
 
 
 def _split_microbatches(batch: dict, accum: int) -> dict:
@@ -139,6 +145,12 @@ def build_train_step(
         raise ValueError(
             "mask_mode='compressed' encodes the support in the params "
             "(NMCompressed indices); do not pass masks"
+        )
+    if step_cfg.refresh is not None and step_cfg.mask_mode != "compressed":
+        raise ValueError(
+            "StepConfig.refresh (dynamic sparse training) requires "
+            "mask_mode='compressed': the refresh swaps NMCompressed support; "
+            f"got mask_mode={step_cfg.mask_mode!r}"
         )
 
     def apply_masks(params, mask_tree):
@@ -226,4 +238,13 @@ def build_train_step(
     else:
         fn = core_step
 
-    return jax.jit(fn, donate_argnums=(0,) if donate else (), in_shardings=in_shardings)
+    jitted = jax.jit(fn, donate_argnums=(0,) if donate else (),
+                     in_shardings=in_shardings)
+    if step_cfg.refresh is None:
+        return jitted
+    # DST: the refresh hook runs host-side BETWEEN jitted steps.  A swap to
+    # a different N changes the compressed leaf shapes, which jit handles by
+    # re-tracing — once per schedule stage, not per step.
+    from repro.dst.controller import wrap_step_with_refresh
+
+    return wrap_step_with_refresh(jitted, step_cfg.refresh)

@@ -1,0 +1,544 @@
+"""Dynamic sparse training: schedules, support swaps, async refresh.
+
+The load-bearing contracts:
+
+  * ``recompress(sp, masks, pat)`` is *bit-identical* to compressing the
+    decompressed tree from scratch — surviving slots carry their trained
+    values, new slots start at zero;
+  * ``remap_moments`` relays AdamW mu/nu across a support swap with the
+    same surviving/zeroed semantics;
+  * a ``mode="sync"`` :class:`MaskRefreshController` produces, at tol=0,
+    exactly the TrainState you get from the manual
+    ``sparsify_pytree`` + ``recompress`` + ``remap_moments`` path;
+  * ``MaskService`` dedupes identical in-flight submissions and its
+    ``flush_async`` resolves the same handles a blocking flush would;
+  * a killed DST run resumes mid-schedule from checkpoint metadata,
+    re-arming an in-flight refresh.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.api import PatternSpec, SolverConfig
+from repro.checkpoint import CheckpointManager
+from repro.data import SyntheticLM
+from repro.dst import (
+    MaskRefreshController,
+    RefreshEvent,
+    StaticSchedule,
+    StepwiseSchedule,
+    aggregate_flips,
+    decaying_nm,
+    mask_flip_stats,
+    schedule_from_spec,
+)
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.optim import AdamW, remap_moments
+from repro.service import MaskService
+from repro.sparsity.masks import apply_mask, sparsify_pytree
+from repro.sparsity.params import (
+    NMCompressed,
+    compress_params,
+    decompress_params,
+    projection_prunable,
+    recompress,
+    remap_slots,
+    remap_tree,
+)
+from repro.train import build_train_step, make_train_state
+from repro.train.step import StepConfig
+
+CFG = ModelConfig("dst", "dense", num_layers=2, d_model=64, num_heads=4,
+                  num_kv_heads=2, d_ff=128, vocab_size=64, remat="none",
+                  dtype="float32")
+SOLVER = SolverConfig(iters=30)
+
+
+def tree_equal(a, b) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb)
+    )
+
+
+def small_sparse_model(seed=0, pattern=PatternSpec(24, 32)):
+    params = lm.init_params(CFG, jax.random.PRNGKey(seed))
+    masks = sparsify_pytree(params, pattern, config=SOLVER,
+                            prunable=projection_prunable)
+    pruned = apply_mask(params, masks)
+    return pruned, masks, compress_params(pruned, masks, pattern)
+
+
+def solve_tighter(sp, pattern):
+    """Masks for ``pattern`` solved from the decompressed weights — the
+    same scores a refresh uses."""
+    return sparsify_pytree(decompress_params(sp), pattern, config=SOLVER,
+                           prunable=projection_prunable)
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+
+def test_static_schedule_cadence():
+    s = StaticSchedule("t2:4", every=50)
+    assert s.initial.canonical == "t2:4"
+    assert s.swap_at(0) is None and s.swap_at(49) is None
+    assert s.swap_at(50).canonical == "t2:4"
+    assert s.swap_at(75) is None and s.swap_at(100) is not None
+    assert s.pattern_at(10_000).canonical == "t2:4"
+
+
+def test_static_schedule_window():
+    s = StaticSchedule("t2:4", every=10, start=30, stop=60)
+    swaps = [t for t in range(100) if s.swap_at(t) is not None]
+    assert swaps == [30, 40, 50, 60]
+
+
+def test_stepwise_schedule():
+    s = StepwiseSchedule(((0, "t24:32"), (100, "t20:32"), (200, "t16:32")))
+    assert s.initial.canonical == "t24:32"
+    assert s.final.canonical == "t16:32"
+    assert s.pattern_at(99).canonical == "t24:32"
+    assert s.pattern_at(100).canonical == "t20:32"
+    assert s.pattern_at(10_000).canonical == "t16:32"
+    assert s.swap_at(0) is None            # stage 0 is the initial prune
+    assert s.swap_at(100).canonical == "t20:32"
+    assert s.swap_at(150) is None
+    assert s.swap_at(200).canonical == "t16:32"
+
+
+def test_stepwise_schedule_validation():
+    with pytest.raises(ValueError, match="start at step 0"):
+        StepwiseSchedule(((10, "t2:4"),))
+    with pytest.raises(ValueError, match="increase"):
+        StepwiseSchedule(((0, "t24:32"), (100, "t20:32"), (100, "t16:32")))
+    with pytest.raises(ValueError, match="share one M"):
+        StepwiseSchedule(((0, "t24:32"), (100, "t8:16")))
+    with pytest.raises(ValueError, match="transposable"):
+        StepwiseSchedule(((0, "2:4"),))
+
+
+def test_decaying_nm():
+    s = decaying_nm(32, 24, 16, total_steps=300, stages=3)
+    starts = [st for st, _ in s.stages]
+    pats = [p.canonical for _, p in s.stages]
+    assert starts == [0, 100, 200]
+    assert pats == ["t24:32", "t20:32", "t16:32"]
+    # Degenerate decay: constant N collapses to a single stage.
+    flat = decaying_nm(4, 2, 2, total_steps=100)
+    assert len(flat.stages) == 1
+
+
+def test_schedule_spec_round_trip():
+    for s in (StaticSchedule("t2:4", every=7, start=14, stop=70),
+              decaying_nm(32, 24, 16, total_steps=120, stages=4)):
+        back = schedule_from_spec(s.spec())
+        assert back.spec() == s.spec()
+
+
+# ---------------------------------------------------------------------------
+# Telemetry primitives
+# ---------------------------------------------------------------------------
+
+
+def test_mask_flip_stats():
+    old = np.zeros((4, 4), bool)
+    old[:2] = True
+    new = np.zeros((4, 4), bool)
+    new[1:3] = True
+    st = mask_flip_stats(old, new)
+    assert st["kept"] == 4 and st["added"] == 4 and st["dropped"] == 4
+    assert st["nnz_old"] == 8 and st["nnz_new"] == 8
+    assert st["flip_rate"] == pytest.approx(0.5)
+    agg = aggregate_flips({"a": st, "b": st})
+    assert agg["flip_rate"] == pytest.approx(0.5)
+    assert agg["size"] == 32
+
+
+def test_refresh_event_json_round_trip():
+    e = RefreshEvent(submit_step=5, swap_step=15, pattern="t16:32",
+                     wait_seconds=0.01, solve_seconds=0.5, synchronous=False,
+                     flips={"w": mask_flip_stats(np.ones((2, 2), bool),
+                                                 np.ones((2, 2), bool))})
+    e = e.finalize()
+    back = RefreshEvent.from_json(e.to_json())
+    assert back.to_json() == e.to_json()
+    assert "t16:32" in e.summary()
+
+
+# ---------------------------------------------------------------------------
+# recompress / remap: the support-swap primitives
+# ---------------------------------------------------------------------------
+
+
+def test_recompress_bit_identical_to_fresh_compress():
+    _, _, sp = small_sparse_model()
+    pat = PatternSpec(16, 32)
+    masks = solve_tighter(sp, pat)
+    out, stats = recompress(sp, masks, pat)
+    dense = decompress_params(sp)
+    ref = compress_params(apply_mask(dense, masks), masks, pat, strict=False)
+    assert tree_equal(out, ref)
+    assert all(s["added"] >= 0 for s in stats.values())
+
+
+def test_recompress_surviving_slots_keep_values():
+    _, _, sp = small_sparse_model()
+    pat = PatternSpec(16, 32)
+    masks = solve_tighter(sp, pat)
+    out, _ = recompress(sp, masks, pat)
+    for name in ("wq", "wo"):
+        old = sp["blocks"]["attn"][name]
+        new = out["blocks"]["attn"][name]
+        od, nd = np.asarray(old.decompress()), np.asarray(new.decompress())
+        mk = np.asarray(masks["blocks"]["attn"][name])
+        # On the new support, values are exactly the trained ones.
+        np.testing.assert_array_equal(nd[mk], od[mk])
+        np.testing.assert_array_equal(nd[~mk], 0)
+
+
+def test_recompress_dense_ref_fills_new_slots():
+    """With ``dense_ref``, slots *outside* the old support come back from
+    the reference tree instead of zero (regrowth from a dense shadow)."""
+    _, _, sp = small_sparse_model()
+    dense_ref = jax.tree.map(
+        lambda l: jnp.full(l.dense_shape, 7.0, l.values.dtype)
+        if isinstance(l, NMCompressed) else l,
+        sp, is_leaf=lambda x: isinstance(x, NMCompressed))
+    # A shifted support: drop to 16:32 so some slots are new vs old.
+    pat = PatternSpec(16, 32)
+    masks = solve_tighter(sp, pat)
+    out, _ = recompress(sp, masks, pat, dense_ref=dense_ref)
+    old = sp["blocks"]["attn"]["wq"]
+    new = out["blocks"]["attn"]["wq"]
+    old_mask = np.asarray(old.decompress()) != 0
+    nd = np.asarray(new.decompress())
+    mk = np.asarray(masks["blocks"]["attn"]["wq"])
+    fresh = mk & ~old_mask
+    if fresh.any():
+        np.testing.assert_array_equal(nd[fresh], 7.0)
+    np.testing.assert_array_equal(
+        nd[mk & old_mask], np.asarray(old.decompress())[mk & old_mask])
+
+
+def test_recompress_strict_guards():
+    _, _, sp = small_sparse_model()
+    masks = solve_tighter(sp, PatternSpec(16, 32))
+    with pytest.raises(ValueError, match="transposable"):
+        recompress(sp, masks, PatternSpec(16, 32, transposable=False))
+    # A mask over a leaf that is not compressed: strict raises.
+    bad = jax.tree.map(lambda x: x, masks, is_leaf=lambda x: x is None)
+    bad["embed"] = np.ones(np.asarray(sp["embed"]).shape, bool)
+    with pytest.raises(ValueError, match="non-compressed"):
+        recompress(sp, bad, PatternSpec(16, 32))
+    out, _ = recompress(sp, bad, PatternSpec(16, 32), strict=False)
+    assert isinstance(out["blocks"]["attn"]["wq"], NMCompressed)
+
+
+def test_remap_slots_2d_and_stacked():
+    rng = np.random.default_rng(3)
+    m, g, f = 8, 4, 16
+    w = rng.normal(size=(g * m, f)).astype(np.float32)
+    masks = []
+    for _ in range(2):
+        mk = np.zeros((g * m, f), bool)
+        for gi in range(g):
+            for fi in range(f):
+                rows = rng.choice(m, size=4, replace=False)
+                mk[gi * m + rows, fi] = True
+        masks.append(mk)
+    from repro.sparsity.compressed import compress_nm
+
+    v0, i0 = compress_nm(jnp.asarray(w), jnp.asarray(masks[0]), 4, m)
+    _, i1 = compress_nm(jnp.asarray(w), jnp.asarray(masks[1]), 4, m)
+    out = remap_slots(v0, i0, i1, m)
+    from repro.sparsity.compressed import decompress_nm
+
+    expect = np.asarray(decompress_nm(v0, i0, m)) * masks[1]
+    np.testing.assert_array_equal(
+        np.asarray(decompress_nm(out, i1, m)), expect)
+    # Scan-stacked (L, G, N, F) leaves take the vmapped path.
+    vs = jnp.stack([v0, v0])
+    out2 = remap_slots(vs, jnp.stack([i0, i0]), jnp.stack([i1, i1]), m)
+    np.testing.assert_array_equal(np.asarray(out2[0]), np.asarray(out))
+
+
+def test_remap_tree_guards():
+    _, _, sp = small_sparse_model()
+    pat = PatternSpec(16, 32)
+    new_sp, _ = recompress(sp, solve_tighter(sp, pat), pat)
+    aux = jax.tree.map(lambda x: x, sp, is_leaf=lambda x: x is None)
+    moved = remap_tree(aux, sp, new_sp)
+    assert moved["blocks"]["attn"]["wq"].n == 16
+    # Old compressed leaf paired with a dense new leaf: structural error.
+    dense_new = decompress_params(new_sp)
+    with pytest.raises(ValueError, match="compressed"):
+        remap_tree(aux, sp, dense_new)
+
+
+def test_remap_moments_preserves_surviving_and_zeroes_new():
+    _, _, sp = small_sparse_model()
+    opt = AdamW(learning_rate=1e-3, clip_norm=0.0)
+    st = opt.init(sp)
+    # Give the moments recognizable values.
+    st = st._replace(
+        mu=jax.tree.map(lambda x: jnp.full_like(x, 3.0) if x.size else x,
+                        st.mu),
+        nu=jax.tree.map(lambda x: jnp.full_like(x, 5.0) if x.size else x,
+                        st.nu))
+    pat = PatternSpec(16, 32)
+    masks = solve_tighter(sp, pat)
+    new_sp, _ = recompress(sp, masks, pat)
+    new_st = remap_moments(st, sp, new_sp)
+    mu = new_st.mu["blocks"]["attn"]["wq"]
+    assert isinstance(mu, NMCompressed) and mu.n == 16
+    # Moment wrappers carry a placeholder indices child; their slots are
+    # aligned with the *params'* indices, so decompress through those.
+    idx = new_sp["blocks"]["attn"]["wq"].indices
+    old_mask = np.asarray(sp["blocks"]["attn"]["wq"].decompress()) != 0
+    mk = np.asarray(masks["blocks"]["attn"]["wq"])
+    md = np.asarray(NMCompressed(mu.values, idx, mu.m).decompress())
+    np.testing.assert_array_equal(md[mk & old_mask], 3.0)
+    np.testing.assert_array_equal(md[mk & ~old_mask], 0.0)
+    nu = new_st.nu["blocks"]["attn"]["wq"]
+    nd = np.asarray(NMCompressed(nu.values, idx, nu.m).decompress())
+    np.testing.assert_array_equal(nd[mk & old_mask], 5.0)
+    # Dense leaves (embeddings, norms) pass through untouched.
+    np.testing.assert_array_equal(np.asarray(new_st.mu["embed"]), 3.0)
+
+
+# ---------------------------------------------------------------------------
+# MaskService: in-flight dedupe + async flush
+# ---------------------------------------------------------------------------
+
+
+def test_service_dedupes_identical_inflight_submissions():
+    svc = MaskService(SOLVER)
+    w = np.random.default_rng(0).normal(size=(64, 64)).astype(np.float32)
+    h1 = svc.submit("a", w, PatternSpec(2, 4))
+    h2 = svc.submit("b", w, PatternSpec(2, 4))       # same content: dedup
+    h3 = svc.submit("c", w, PatternSpec(1, 4))       # different pattern
+    assert svc.stats.dedup_hits == 1
+    svc.flush()
+    np.testing.assert_array_equal(h1.result(), h2.result())
+    assert h3.result().sum() < h1.result().sum()
+    assert "dedup_hits=1" in svc.stats.summary()
+    # Post-flush resubmit is a cache hit, not a dedup hit.
+    h4 = svc.submit("d", w, PatternSpec(2, 4))
+    assert h4.done and svc.stats.dedup_hits == 1
+
+
+def test_service_flush_async_resolves_handles():
+    svc = MaskService(SOLVER)
+    rng = np.random.default_rng(1)
+    hs = [svc.submit(f"w{i}", rng.normal(size=(64, 64)).astype(np.float32),
+                     PatternSpec(2, 4)) for i in range(3)]
+    ticket = svc.flush_async()
+    ticket.wait(timeout=120.0)
+    assert ticket.done and ticket.seconds >= 0.0
+    for h in hs:
+        assert h.done
+        assert h.result().shape == (64, 64)
+    # A second async flush with an empty queue is a no-op that still lands.
+    svc.flush_async().wait(timeout=10.0)
+
+
+def test_service_sync_flush_joins_background_drain():
+    svc = MaskService(SOLVER)
+    w = np.random.default_rng(2).normal(size=(64, 64)).astype(np.float32)
+    h = svc.submit("x", w, PatternSpec(2, 4))
+    svc.flush_async()
+    svc.flush()   # must join the background drain, not race it
+    assert h.done
+
+
+# ---------------------------------------------------------------------------
+# Controller end-to-end
+# ---------------------------------------------------------------------------
+
+
+def _train_state(sp, compression=False):
+    opt = AdamW(learning_rate=1e-3, clip_norm=0.0)
+    return opt, make_train_state(CFG, opt, jax.random.PRNGKey(1), params=sp,
+                                 compression=compression)
+
+
+def _batches(n, batch=4, seq=16):
+    data = SyntheticLM(vocab_size=CFG.vocab_size, seq_len=seq, global_batch=batch)
+    return [{k: jnp.asarray(v) for k, v in data.batch(t).items()}
+            for t in range(n)]
+
+
+def test_sync_refresh_bit_identical_to_manual_path():
+    """The acceptance oracle: mode="sync" == hand-rolled
+    sparsify_pytree + recompress + remap_moments at the swap step, tol=0."""
+    _, _, sp = small_sparse_model()
+    sched = StepwiseSchedule(((0, "t24:32"), (3, "t16:32")))
+    batches = _batches(6)
+
+    # Controller-driven run.
+    ctrl = MaskRefreshController(sched, solver=SOLVER, mode="sync")
+    opt, state_a = _train_state(sp)
+    step_a = build_train_step(
+        CFG, opt, step_cfg=StepConfig(mask_mode="compressed", refresh=ctrl),
+        donate=False)
+    for b in batches:
+        state_a, _ = step_a(state_a, b)
+
+    # Manual run: identical steps, swap performed by hand before step 3.
+    opt, state_b = _train_state(sp)
+    step_b = build_train_step(
+        CFG, opt, step_cfg=StepConfig(mask_mode="compressed"), donate=False)
+    for t, b in enumerate(batches):
+        if t == 3:
+            pat = PatternSpec(16, 32)
+            masks = solve_tighter(state_b.params, pat)
+            new_params, _ = recompress(state_b.params, masks, pat)
+            new_opt = remap_moments(state_b.opt_state, state_b.params,
+                                    new_params)
+            state_b = state_b._replace(params=new_params, opt_state=new_opt)
+        state_b, _ = step_b(state_b, b)
+
+    assert tree_equal(state_a.params, state_b.params)
+    assert tree_equal(state_a.opt_state.mu, state_b.opt_state.mu)
+    assert tree_equal(state_a.opt_state.nu, state_b.opt_state.nu)
+    assert len(ctrl.events) == 1 and ctrl.events[0].synchronous
+    assert ctrl.events[0].pattern == "t16:32"
+
+
+def test_async_refresh_swaps_on_schedule():
+    _, _, sp = small_sparse_model()
+    sched = decaying_nm(32, 24, 16, total_steps=8, stages=3)
+    ctrl = MaskRefreshController(sched, solver=SOLVER, mode="async",
+                                 lookahead=2)
+    opt, state = _train_state(sp)
+    step = build_train_step(
+        CFG, opt, step_cfg=StepConfig(mask_mode="compressed", refresh=ctrl),
+        donate=False)
+    losses = []
+    for b in _batches(10):
+        state, m = step(state, b)
+        losses.append(float(m["loss"]))
+    assert len(ctrl.events) == 2
+    assert [e.pattern for e in ctrl.events] == ["t20:32", "t16:32"]
+    assert all(not e.synchronous for e in ctrl.events)
+    # Async refreshes snapshot *before* the swap step (lookahead staleness).
+    for e in ctrl.events:
+        assert e.submit_step < e.swap_step
+    assert state.params["blocks"]["attn"]["wq"].n == 16
+    assert np.isfinite(losses).all()
+    tel = ctrl.telemetry()
+    assert tel["refreshes"] == 2 and tel["stall_seconds"] >= 0.0
+
+
+def test_refresh_requires_compressed_mode():
+    ctrl = MaskRefreshController(StaticSchedule("t2:4", every=5), solver=SOLVER)
+    opt = AdamW(learning_rate=1e-3)
+    with pytest.raises(ValueError, match="compressed"):
+        build_train_step(CFG, opt,
+                         step_cfg=StepConfig(mask_mode="post", refresh=ctrl))
+    with pytest.raises(ValueError, match="mode must be"):
+        MaskRefreshController(StaticSchedule("t2:4", every=5), mode="later")
+
+
+def test_controller_refresh_with_error_feedback_tree():
+    """Compression's ef residuals ride the swap via remap_tree."""
+    _, _, sp = small_sparse_model()
+    sched = StepwiseSchedule(((0, "t24:32"), (2, "t16:32")))
+    ctrl = MaskRefreshController(sched, solver=SOLVER, mode="sync")
+    opt, state = _train_state(sp, compression=True)
+    state = ctrl.on_step(2, state._replace(step=jnp.asarray(2, jnp.int32)))
+    assert state.ef["blocks"]["attn"]["wq"].n == 16
+
+
+def test_controller_state_dict_round_trip_and_rearm():
+    _, _, sp = small_sparse_model()
+    sched = decaying_nm(32, 24, 16, total_steps=8, stages=3)
+    ctrl = MaskRefreshController(sched, solver=SOLVER, mode="async",
+                                 lookahead=3)
+    opt, state = _train_state(sp)
+    # Stage boundaries land at steps 2 and 5.  Arm the step-2 refresh from
+    # step 1 (within lookahead) but don't swap yet.
+    ctrl._maybe_submit(1, state)
+    assert ctrl._ticket is not None
+    d = ctrl.state_dict()
+    assert d["inflight"]["swap_step"] == 2
+    assert d["inflight"]["pattern"] == "t20:32"
+
+    # Fresh controller (post-restart) resumes and re-arms the refresh.
+    svc = MaskService(SOLVER)
+    ctrl2 = MaskRefreshController(sched, service=svc, mode="async",
+                                  lookahead=3)
+    ctrl2.load_state_dict(d)
+    state2 = ctrl2.on_step(1, state._replace(step=jnp.asarray(1, jnp.int32)))
+    assert ctrl2._ticket is not None and ctrl2._ticket.swap_step == 2
+    assert len(ctrl2.events) == 0
+    state2 = ctrl2.on_step(2, state2._replace(step=jnp.asarray(2, jnp.int32)))
+    assert state2.params["blocks"]["attn"]["wq"].n == 20
+    assert len(ctrl2.events) == 1
+
+    # Schedule mismatch fails fast.
+    other = MaskRefreshController(StaticSchedule("t2:4", every=5),
+                                  solver=SOLVER)
+    with pytest.raises(ValueError, match="different schedule"):
+        other.load_state_dict(d)
+
+
+def test_trainloop_checkpoints_and_resumes_dst(tmp_path):
+    from repro.train.loop import TrainLoop, TrainLoopConfig
+
+    _, _, sp = small_sparse_model()
+    sched = StepwiseSchedule(((0, "t24:32"), (4, "t16:32")))
+    data = SyntheticLM(vocab_size=CFG.vocab_size, seq_len=16, global_batch=4)
+
+    def make(ctrl):
+        opt = AdamW(learning_rate=1e-3, clip_norm=0.0)
+        state = make_train_state(CFG, opt, jax.random.PRNGKey(1), params=sp)
+        step = build_train_step(
+            CFG, opt,
+            step_cfg=StepConfig(mask_mode="compressed", refresh=ctrl),
+            donate=False)
+        return state, step
+
+    boom = {"armed": True}
+
+    def injector(step):
+        if step == 6 and boom["armed"]:
+            boom["armed"] = False
+            raise RuntimeError("preempted")
+
+    ctrl = MaskRefreshController(sched, solver=SOLVER, mode="sync")
+    state, step = make(ctrl)
+    ckpt = CheckpointManager(str(tmp_path), keep_n=3, async_save=False)
+    loop = TrainLoop(step, data, ckpt,
+                     TrainLoopConfig(total_steps=8, ckpt_every=2, log_every=100),
+                     failure_injector=injector, log_fn=lambda s: None)
+    with pytest.raises(RuntimeError):
+        loop.run(state)
+    meta = ckpt.user_metadata(ckpt.latest_step())
+    assert len(meta["dst"]["events"]) == 1  # swap at 4 already happened
+
+    # Restart: fresh controller + stage-0 template still restores the
+    # decayed-N checkpoint (shapes come from the files, not the template).
+    ctrl2 = MaskRefreshController(sched, solver=SOLVER, mode="sync")
+    state2, step2 = make(ctrl2)
+    loop2 = TrainLoop(step2, data, ckpt,
+                      TrainLoopConfig(total_steps=8, ckpt_every=2,
+                                      log_every=100),
+                      log_fn=lambda s: None)
+    final, _ = loop2.run(state2)
+    assert int(np.asarray(final.step)) == 8
+    assert final.params["blocks"]["attn"]["wq"].n == 16
+    assert len(ctrl2.events) == 1  # restored, not re-run
+
+
+def test_checkpoint_restore_rejects_mismatched_tree(tmp_path):
+    _, _, sp = small_sparse_model()
+    ckpt = CheckpointManager(str(tmp_path), async_save=False)
+    ckpt.save(1, {"a": np.ones(3), "b": np.zeros(2)})
+    with pytest.raises(ValueError, match="checkpoint-only"):
+        ckpt.restore(1, {"a": np.ones(3)})
