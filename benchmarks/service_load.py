@@ -1,0 +1,294 @@
+"""Mask-server load test: multi-tenant latency, fairness, shared cache.
+
+Boots a :class:`repro.service.net.MaskServer` (in-process threads by
+default; ``--spawn`` execs the real ``repro.launch.serve_masks`` CLI as a
+subprocess and talks to it over TCP, which is what the CI service job runs)
+and drives it with concurrent :class:`MaskClient` tenants:
+
+* **sanity** — one tensor solved over the wire must be bit-identical to an
+  in-process ``MaskService.solve`` under the same config (tol = 0).
+* **adversarial skew** — a flooding "heavy" tenant (many mixed-shape,
+  mixed-pattern submits, eager fan-out from several threads) races an
+  "interactive" tenant submitting a trickle.  Per-tenant p50/p99 *server*
+  latency (enqueue -> solve, from the wait replies) and blocks/sec come
+  out per tenant; the starvation gate holds the interactive tenant's p99
+  well under the makespan — under a starving scheduler (plain FIFO over
+  one queue) every interactive request would resolve only after the whole
+  flood, pushing its p99 to ~1.0 of makespan.
+* **shared cache tier** — a third tenant replays the heavy tenant's
+  tensors byte-identical; every one must be a server-side cache hit
+  (hit rate > 0 is the issue's acceptance gate; we assert 100%).
+* **fairness** — ``max/min`` across tenants of quota-normalized
+  blocks/sec, over the window where both are backlogged.
+
+Writes ``BENCH_service.json``; ``--smoke`` shrinks the workload and turns
+the gates into hard asserts for CI.
+
+Run:    PYTHONPATH=src:. python benchmarks/service_load.py
+Smoke:  PYTHONPATH=src:. python benchmarks/service_load.py --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import re
+import subprocess
+import sys
+import threading
+import time
+from contextlib import contextmanager
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.api import MaskService, PatternSpec, SolverConfig
+from repro.service.net import MaskClient, MaskServer, TenantConfig
+
+PATTERNS = [PatternSpec(4, 8), PatternSpec(2, 4)]
+
+
+def workload(n_tensors: int, seed: int, max_side: int = 48):
+    """Mixed shapes and patterns; returns (name, w, pattern) triples."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n_tensors):
+        spec = PATTERNS[i % len(PATTERNS)]
+        r = int(rng.integers(1, max_side // spec.m + 1)) * spec.m
+        c = int(rng.integers(1, max_side // spec.m + 1)) * spec.m
+        out.append((f"w{seed}-{i}", rng.normal(size=(r, c)).astype(np.float32),
+                    spec))
+    return out
+
+
+@contextmanager
+def serve(args, solver: SolverConfig):
+    """Yield a server address: in-process threads, or the real CLI."""
+    if not args.spawn:
+        server = MaskServer(
+            MaskService(solver),
+            tenants={
+                "heavy": TenantConfig(quota=1.0),
+                "interactive": TenantConfig(quota=1.0),
+            },
+            round_blocks=args.round_blocks,
+            batch_window_s=0.002,
+        )
+        with server:
+            yield server.address
+        return
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.serve_masks", "--port", "0",
+         "--iters", str(solver.iters),
+         "--round-blocks", str(args.round_blocks),
+         "--tenant", "heavy:quota=1", "--tenant", "interactive:quota=1"],
+        stdout=subprocess.PIPE, text=True,
+    )
+    try:
+        line = proc.stdout.readline()
+        m = re.search(r"listening on (\S+:\d+)", line)
+        assert m, f"serve-masks did not report an address: {line!r}"
+        yield m.group(1)
+    finally:
+        try:
+            with MaskClient(m.group(1), tenant="ops") as c:
+                c.shutdown_server()
+        except Exception:  # noqa: BLE001 — already dead is fine
+            proc.kill()
+        proc.wait(timeout=30)
+
+
+def _percentiles(xs):
+    xs = [x for x in xs if x is not None]
+    if not xs:
+        return {"p50": None, "p99": None, "mean": None, "n": 0}
+    return {
+        "p50": float(np.percentile(xs, 50)),
+        "p99": float(np.percentile(xs, 99)),
+        "mean": float(np.mean(xs)),
+        "n": len(xs),
+    }
+
+
+def run(args) -> dict:
+    solver = SolverConfig(iters=40 if args.smoke else 100)
+    heavy_n = 48 if args.smoke else 600
+    light_n = 8 if args.smoke else 60
+    heavy_threads = 4 if args.smoke else 8
+
+    with serve(args, solver) as address:
+        # -- warm the solver's jit cache so latency measures scheduling,
+        # not once-per-process compilation.
+        with MaskClient(address, tenant="warm") as c:
+            for name, w, spec in workload(2 * len(PATTERNS), seed=99):
+                c.submit(name, w, spec, journal=False)
+            c.flush()
+
+        # -- sanity: wire solve == local solve, bit for bit ---------------
+        rng = np.random.default_rng(0)
+        w0 = rng.normal(size=(32, 16)).astype(np.float32)
+        with MaskClient(address, tenant="warm") as c:
+            remote = np.asarray(c.solve(w0, "t4:8"))
+        local = np.asarray(MaskService(solver).solve(w0, "t4:8"))
+        bit_identical = bool(np.array_equal(remote, local))
+        assert bit_identical, "remote mask diverged from in-process solve"
+
+        # -- adversarial skew: flood vs trickle, concurrently -------------
+        heavy_items = workload(heavy_n, seed=1)
+        light_items = workload(light_n, seed=2, max_side=24)
+        heavy_blocks = sum(
+            (w.shape[0] // s.m) * (w.shape[1] // s.m)
+            for _, w, s in heavy_items
+        )
+        light_blocks = sum(
+            (w.shape[0] // s.m) * (w.shape[1] // s.m)
+            for _, w, s in light_items
+        )
+        lat = {"heavy": [], "interactive": []}
+        wall = {"heavy": [], "interactive": []}
+        done_at = {}
+        errors = []
+        t_start = time.monotonic()
+
+        def heavy_tenant(tid, items):
+            try:
+                with MaskClient(address, tenant="heavy") as c:
+                    handles = [c.submit(f"{tid}/{n}", w, s, journal=False)
+                               for n, w, s in items]
+                    c.flush()
+                    lat["heavy"].extend(
+                        h.server_latency_s for h in handles)
+                    wall["heavy"].append(time.monotonic() - t_start)
+                    done_at["heavy"] = time.monotonic()
+            except BaseException as e:  # noqa: BLE001
+                errors.append(e)
+
+        def interactive_tenant():
+            try:
+                with MaskClient(address, tenant="interactive") as c:
+                    for n, w, s in light_items:
+                        t0 = time.monotonic()
+                        h = c.submit(n, w, s, journal=False)
+                        c.flush()
+                        assert h.done
+                        wall["interactive"].append(time.monotonic() - t0)
+                        lat["interactive"].append(h.server_latency_s)
+                    done_at["interactive"] = time.monotonic()
+            except BaseException as e:  # noqa: BLE001
+                errors.append(e)
+
+        chunks = np.array_split(np.arange(len(heavy_items)), heavy_threads)
+        threads = [
+            threading.Thread(target=heavy_tenant,
+                             args=(t, [heavy_items[i] for i in idx]))
+            for t, idx in enumerate(chunks)
+        ] + [threading.Thread(target=interactive_tenant)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors, errors
+        makespan = time.monotonic() - t_start
+
+        # -- shared cache tier: replay the heavy tenant's tensors ---------
+        with MaskClient(address, tenant="replay") as c:
+            replayed = [c.submit(f"replay/{n}", w, s, journal=False)
+                        for n, w, s in heavy_items]
+            c.flush()
+            assert all(h.done for h in replayed)
+            stats = c.server_stats()
+
+        rows = stats["tenants"]
+        replay_hits = rows["replay"]["cache_hits"]
+        replay_rate = replay_hits / max(1, rows["replay"]["submitted"])
+        tput = {}
+        for name, blocks in (("heavy", heavy_blocks),
+                             ("interactive", light_blocks)):
+            window = done_at[name] - t_start
+            tput[name] = blocks / window / rows[name]["quota"]
+        fairness = max(tput.values()) / max(min(tput.values()), 1e-9)
+
+        heavy_p = _percentiles(lat["heavy"])
+        light_p = _percentiles(lat["interactive"])
+        starvation_frac = (light_p["p99"] or makespan) / makespan
+
+    emit("service_load_makespan", makespan,
+         f"heavy={heavy_blocks}b interactive={light_blocks}b "
+         f"p99(heavy)={heavy_p['p99']:.3f}s p99(light)={light_p['p99']:.3f}s")
+    emit("service_load_shared_cache", replay_rate,
+         f"{replay_hits}/{rows['replay']['submitted']} replayed submits hit")
+
+    doc = {
+        "meta": {
+            "benchmark": "service_load",
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+            "smoke": args.smoke,
+            "spawned_cli": args.spawn,
+            "solver_iters": solver.iters,
+            "round_blocks": args.round_blocks,
+            "heavy_submits": heavy_n,
+            "heavy_threads": heavy_threads,
+            "interactive_submits": light_n,
+        },
+        "headline": {
+            "bit_identical": bit_identical,
+            "makespan_seconds": makespan,
+            "blocks_per_sec_total": (
+                stats["service"]["blocks_solved"]
+                / max(stats["service"]["solve_seconds"], 1e-9)
+            ),
+            "interactive_p99_over_makespan": starvation_frac,
+            "fairness_max_over_min": fairness,
+            "replay_cache_hit_rate": replay_rate,
+            "service_cache_hits": stats["service"]["cache_hits"],
+            "service_dedup_hits": stats["service"]["dedup_hits"],
+            "scheduler_rounds": stats["rounds"],
+        },
+        "tenants": {
+            name: {
+                **rows[name],
+                "server_latency": (_percentiles(lat[name])
+                                   if name in lat else None),
+                "client_wall": (_percentiles(wall[name])
+                                if name in wall else None),
+                "quota_norm_blocks_per_sec": tput.get(name),
+            }
+            for name in sorted(rows)
+        },
+    }
+
+    if args.smoke:
+        # The issue's acceptance gates, as hard asserts for CI.
+        assert replay_rate > 0, "second tenant saw no shared-cache hits"
+        assert replay_hits == len(heavy_items), (
+            f"replay should be all cache hits, got {replay_hits}")
+        for name in ("heavy", "interactive", "replay"):
+            assert rows[name]["resolved"] == rows[name]["submitted"], (
+                f"tenant {name} lost requests: {rows[name]}")
+        assert starvation_frac < 0.9, (
+            f"interactive tenant starved: p99 at {starvation_frac:.2f} "
+            "of makespan")
+        print("SMOKE OK: shared cache + no starvation under skew")
+    return doc
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="small workload + hard CI gates")
+    ap.add_argument("--spawn", action="store_true",
+                    help="boot the real serve-masks CLI as a subprocess")
+    ap.add_argument("--round-blocks", type=int, default=256)
+    ap.add_argument("--out", default="BENCH_service.json")
+    args = ap.parse_args()
+    doc = run(args)
+    doc["meta"]["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%SZ",
+                                             time.gmtime())
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

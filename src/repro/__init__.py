@@ -28,10 +28,13 @@ _API_NAMES = (
     "relative_error",
     "BucketPolicy",
     "MaskCache",
+    "MaskClient",
     "MaskHandle",
+    "MaskServer",
     "MaskService",
     "ServiceStats",
     "StreamStats",
+    "TenantConfig",
     "AlpsConfig",
     "PruneContext",
     "PruneMethod",

@@ -61,10 +61,13 @@ from repro.core.solver import (
 from repro.service import (
     BucketPolicy,
     MaskCache,
+    MaskClient,
     MaskHandle,
+    MaskServer,
     MaskService,
     ServiceStats,
     StreamStats,
+    TenantConfig,
 )
 from repro.pruning.alps import AlpsConfig
 from repro.pruning.methods import (
@@ -104,13 +107,16 @@ __all__ = [
     "is_transposable_nm",
     "objective",
     "relative_error",
-    # service
+    # service (in-process engine + network front-end)
     "BucketPolicy",
     "MaskCache",
+    "MaskClient",
     "MaskHandle",
+    "MaskServer",
     "MaskService",
     "ServiceStats",
     "StreamStats",
+    "TenantConfig",
     # pruning
     "AlpsConfig",
     "PruneContext",

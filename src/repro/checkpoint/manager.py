@@ -56,6 +56,14 @@ class ContentStore:
     least-recently-*accessed* entries until the store fits.  Each ``get``/
     ``put`` bumps the entry's mtime, which is the LRU clock — cheap, crash
     safe, and survives process restarts.
+
+    Multiple *processes* may share one directory (the mask server's shared
+    cache tier; two prune jobs on one cache volume): writes are per-pid
+    tmp files committed with atomic ``os.replace`` (concurrent puts of the
+    same key converge — same content), and every maintenance path
+    (``touch``/``size_bytes``/``prune``) tolerates entries deleted under
+    it.  Readers racing an eviction use :meth:`get_or_none`, which turns
+    the race into a miss instead of a ``FileNotFoundError``.
     """
 
     def __init__(self, directory: str):
@@ -91,6 +99,24 @@ class ContentStore:
             out = {k: z[k] for k in z.files}
         self.touch(key)
         return out
+
+    def get_or_none(self, key: str) -> Optional[dict[str, np.ndarray]]:
+        """Like :meth:`get` but None for missing *or concurrently evicted*
+        entries.
+
+        This is the read contract for stores shared between processes (the
+        mask server's shared cache tier, two prune jobs over one cache
+        volume): another process's ``prune()`` may delete an entry at any
+        moment, including between a ``has()`` and a ``get()`` — callers
+        using this accessor see a plain miss instead of a
+        ``FileNotFoundError`` escaping mid-read.  Entries themselves can
+        never be *torn* (writes are tmp + atomic ``os.replace``), so the
+        only failure mode a reader can observe is absence.
+        """
+        try:
+            return self.get(key)
+        except OSError:
+            return None
 
     def keys(self) -> list[str]:
         return sorted(

@@ -81,6 +81,9 @@ class MaskRefreshController:
       schedule: a :class:`~repro.dst.schedule.SparsitySchedule`.
       service: MaskService the re-solves route through (its SolverConfig
         shapes the masks); a fresh in-memory one per controller by default.
+        A :class:`repro.service.net.MaskClient` works here unchanged — the
+        trainer keeps stepping while a remote solver box does the refresh
+        (``flush_async`` drains over the wire on a background thread).
       lookahead: async mode's snapshot-to-swap distance k — masks landing
         at step ``s`` are solved from step ``s - k`` weights.
       mode: ``"async"`` or ``"sync"`` (see module docstring).

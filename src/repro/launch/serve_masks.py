@@ -1,0 +1,115 @@
+"""Stand the mask service up as a network server.
+
+    PYTHONPATH=src python -m repro.launch.serve_masks \
+        --port 7463 --dir /var/cache/tsenor --iters 150 \
+        --tenant team-a:quota=3 --tenant team-b:quota=1,rate=2e5
+
+One process, one inner :class:`MaskService`: every tenant's submissions
+drain through the same shape-bucketed mega-batch scheduler and share the
+same content-addressed cache tier (``--dir`` makes it durable; point two
+servers at one volume and they share entries through the filesystem —
+``ContentStore`` writes are multi-process safe).  Deployment recipes
+(systemd unit, k8s manifest, cache-volume sharing): ``docs/deploy.md``.
+
+Tenant grammar: ``NAME[:k=v,...]`` with keys ``quota`` (relative share of
+each scheduling round), ``rate`` (blocks/sec token-bucket limit) and
+``burst`` (bucket depth in blocks).  Unlisted tenants are admitted with
+``--default-quota`` unless ``--strict-tenants`` is set.
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Optional
+
+from repro.core.solver import SolverConfig
+from repro.service import MaskService, MaskServer, TenantConfig
+
+
+def parse_tenant(text: str) -> tuple[str, TenantConfig]:
+    """``"team-a:quota=3,rate=2e5"`` -> ``("team-a", TenantConfig(...))``."""
+    name, _, opts = text.partition(":")
+    if not name:
+        raise ValueError(f"tenant spec {text!r} has an empty name")
+    kwargs: dict[str, Optional[float]] = {}
+    for part in filter(None, opts.split(",")):
+        k, eq, v = part.partition("=")
+        if not eq or k not in ("quota", "rate", "burst"):
+            raise ValueError(
+                f"bad tenant option {part!r} in {text!r} "
+                "(want quota=/rate=/burst=)"
+            )
+        kwargs[k] = float(v)
+    return name, TenantConfig(**kwargs)
+
+
+def build_server(argv: Optional[list[str]] = None) -> MaskServer:
+    ap = argparse.ArgumentParser(
+        description="TSENOR mask-solving server (see docs/deploy.md)"
+    )
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="bind address (0.0.0.0 to serve off-box)")
+    ap.add_argument("--port", type=int, default=7463,
+                    help="TCP port; 0 picks an ephemeral one")
+    ap.add_argument("--dir", default=None,
+                    help="persistent root: content store + journal live "
+                         "here; omit for an in-memory cache")
+    ap.add_argument("--iters", type=int, default=150,
+                    help="Dykstra iterations (the solve-quality knob)")
+    ap.add_argument("--backend", default=None,
+                    help="solver backend override (see repro.core.backends)")
+    ap.add_argument("--cache-max-bytes", type=int, default=None,
+                    help="LRU-bound the disk cache to this many bytes")
+    ap.add_argument("--cache-min-blocks", type=int, default=None,
+                    help="disk-admission floor in blocks (default: derived "
+                         "from observed solve vs read rates; 0 admits all)")
+    ap.add_argument("--tenant", action="append", default=[],
+                    metavar="NAME[:quota=Q,rate=R,burst=B]",
+                    help="pre-register a tenant (repeatable)")
+    ap.add_argument("--default-quota", type=float, default=1.0)
+    ap.add_argument("--default-rate", type=float, default=None,
+                    help="blocks/sec limit for auto-registered tenants")
+    ap.add_argument("--strict-tenants", action="store_true",
+                    help="reject hellos from unregistered tenants")
+    ap.add_argument("--round-blocks", type=int, default=4096,
+                    help="block budget one scheduling round splits "
+                         "quota-weighted across backlogged tenants")
+    ap.add_argument("--batch-window-ms", type=float, default=2.0,
+                    help="linger before draining so concurrent submitters "
+                         "share one mega-batch")
+    ap.add_argument("--no-remote-shutdown", action="store_true",
+                    help="ignore the shutdown op (production setting)")
+    args = ap.parse_args(argv)
+
+    solver_kwargs = {"iters": args.iters}
+    if args.backend is not None:
+        solver_kwargs["backend"] = args.backend
+    service = MaskService(
+        SolverConfig(**solver_kwargs),
+        directory=args.dir,
+        cache_max_bytes=args.cache_max_bytes,
+        cache_min_blocks=args.cache_min_blocks,
+    )
+    return MaskServer(
+        service,
+        host=args.host,
+        port=args.port,
+        tenants=dict(parse_tenant(t) for t in args.tenant),
+        default_quota=args.default_quota,
+        default_rate=args.default_rate,
+        strict_tenants=args.strict_tenants,
+        round_blocks=args.round_blocks,
+        batch_window_s=args.batch_window_ms / 1e3,
+        allow_remote_shutdown=not args.no_remote_shutdown,
+    )
+
+
+def main(argv: Optional[list[str]] = None) -> None:
+    server = build_server(argv)
+    server.start()
+    print(f"[serve-masks] listening on {server.address} "
+          f"(config: {server.service.config})", flush=True)
+    server.serve_forever()
+
+
+if __name__ == "__main__":
+    main()

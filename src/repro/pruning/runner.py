@@ -116,7 +116,10 @@ def prune_transformer(
     ``pattern``: :class:`PatternSpec` or canonical string like ``"t2:4"``;
     the deprecated ``n=``/``m=``/``transposable=`` keywords still work.
     ``service``: MaskService for transposable mask solves (a per-call
-    in-memory one is created by default).
+    in-memory one is created by default).  A
+    :class:`repro.service.net.MaskClient` connected to a ``serve-masks``
+    server is a drop-in here — masks then solve remotely, bit-identical,
+    and two jobs pruning the same checkpoint share the server's cache.
     ``journal_dir``: persist every pruned (W, mask) pair content-addressed
     under this directory and journal completions; re-running with the same
     inputs resumes after an interruption without re-solving finished tensors.
@@ -186,9 +189,12 @@ def prune_transformer(
         if journal is None or key is None:
             return None
         rec = journal.lookup(tname)
-        if rec and rec.get("key") == key and store.has(key):
-            data = store.get(key)
-            return jnp.asarray(data["w"]), jnp.asarray(data["mask"])
+        if rec and rec.get("key") == key:
+            # get_or_none: a concurrent process (shared cache volume) may
+            # evict the entry mid-read; that is a re-prune, not a crash.
+            data = store.get_or_none(key)
+            if data is not None:
+                return jnp.asarray(data["w"]), jnp.asarray(data["mask"])
         return None
 
     def persist(tname, key, wp, mask):

@@ -18,15 +18,27 @@ from repro.service.engine import (
 from repro.service.journal import Journal
 from repro.service.scheduler import BucketPolicy, StreamStats, solve_stream
 
+# The network front-end imports the engine above — keep it last.
+from repro.service.net import (  # noqa: E402
+    MaskClient,
+    MaskServer,
+    RemoteError,
+    TenantConfig,
+)
+
 __all__ = [
     "BucketPolicy",
     "FlushTicket",
     "Journal",
     "MaskCache",
+    "MaskClient",
     "MaskHandle",
+    "MaskServer",
     "MaskService",
+    "RemoteError",
     "ServiceStats",
     "StreamStats",
+    "TenantConfig",
     "content_key",
     "solver_fingerprint",
     "solve_stream",

@@ -31,6 +31,7 @@ On-disk payload format (versioned via the ``cache_format`` field):
 from __future__ import annotations
 
 import hashlib
+import time
 import warnings
 from typing import Optional
 
@@ -114,6 +115,11 @@ class MaskCache:
         self.mem_hits = 0
         self.disk_hits = 0
         self.misses = 0
+        # Observed disk-read cost, the denominator of the size-aware
+        # admission policy (MaskService.cache_admission_min_blocks): entries
+        # whose re-solve is faster than one mean store read skip the disk.
+        self.read_seconds = 0.0
+        self.disk_reads = 0
 
     def get_packed(
         self, key: str
@@ -124,19 +130,35 @@ class MaskCache:
             if self.store is not None and self.track_access:
                 self.store.touch(key)
             return self._mem[key]
-        if self.store is not None and self.store.has(key):
-            try:
-                entry = _decode_entry(self.store.get(key))
-            except OSError:
-                # Concurrently evicted between has() and get() (another
-                # process's prune): a plain miss, re-solve instead of crash.
-                self.misses += 1
-                return None
-            self._mem[key] = entry
-            self.disk_hits += 1
-            return entry
+        if self.store is not None:
+            t0 = time.monotonic()
+            # get_or_none, not has()+get(): another process's prune() may
+            # delete the entry between the two calls — the store tolerates
+            # the race and this cache sees a plain miss, never an OSError.
+            data = self.store.get_or_none(key)
+            if data is not None:
+                try:
+                    entry = _decode_entry(data)
+                except (KeyError, ValueError):
+                    # Foreign/corrupt payload under our key: treat as miss.
+                    self.misses += 1
+                    return None
+                self.read_seconds += time.monotonic() - t0
+                self.disk_reads += 1
+                self._mem[key] = entry
+                self.disk_hits += 1
+                return entry
         self.misses += 1
         return None
+
+    def mean_read_seconds(self) -> Optional[float]:
+        """Mean observed wall time of one disk read (open + decompress +
+        decode), or None with no disk store / no reads yet.  Per-entry, not
+        per-byte: for the word-packed payloads this store holds, the open
+        and zip overheads dominate far past the admission-relevant sizes."""
+        if self.store is None or not self.disk_reads:
+            return None
+        return self.read_seconds / self.disk_reads
 
     def get(self, key: str) -> Optional[np.ndarray]:
         """Solved (B, M, M) bool mask blocks for ``key``, or None."""
@@ -147,13 +169,18 @@ class MaskCache:
         return bitpack.unpack_rows_np(words, shape[-1]).reshape(shape)
 
     def put_packed(
-        self, key: str, words: np.ndarray, shape: tuple[int, ...]
+        self, key: str, words: np.ndarray, shape: tuple[int, ...],
+        disk: bool = True,
     ) -> None:
-        """Store bit-packed mask rows verbatim (no repacking round-trip)."""
+        """Store bit-packed mask rows verbatim (no repacking round-trip).
+
+        ``disk=False`` keeps the entry in the in-memory front only — the
+        size-aware admission path for entries cheaper to re-solve than to
+        read back (``MaskService.cache_admission_min_blocks``)."""
         words = np.asarray(words, np.uint32)
         shape = tuple(int(v) for v in shape)
         self._mem[key] = (words, shape)
-        if self.store is not None:
+        if self.store is not None and disk:
             self.store.put(
                 key,
                 mask_words=words,

@@ -95,6 +95,14 @@ class MaskHandle:
         assert self.done, f"{self.name!r} is not resolved"
         return bitpack.unpack_rows_np(self._words, self.pattern.m)
 
+    def words(self) -> np.ndarray:
+        """The solved mask as (B, M[, W]) uint32 bit-packed row words — the
+        native solver/cache/wire format (``repro.sparsity.bitpack``).  The
+        network front-end ships these verbatim: 32x less traffic than the
+        bool mask ``result()`` materializes."""
+        assert self.done, f"{self.name!r} is not resolved"
+        return self._words
+
     def result(self) -> jnp.ndarray:
         """The solved bool mask, shaped like the submitted tensor."""
         if not self.done:
@@ -131,6 +139,8 @@ class ServiceStats:
     dedup_hits: int = 0  # identical submission already in flight (no re-solve)
     journal_skips: int = 0  # resolved via a prior run's journal + store
     cache_evictions: int = 0  # disk entries GC'd by the cache_max_bytes bound
+    cache_skips: int = 0  # entries not written to disk (cheaper to re-solve)
+    solve_seconds: float = 0.0  # wall time inside solve_stream dispatches
     stream: StreamStats = dataclasses.field(default_factory=StreamStats)
 
     @property
@@ -150,10 +160,18 @@ class ServiceStats:
             if self.cache_evictions else ""
         )
         dedup = f" dedup_hits={self.dedup_hits}" if self.dedup_hits else ""
+        skips = f" cache_skips={self.cache_skips}" if self.cache_skips else ""
         return (
             f"submitted={self.submitted} cache_hits={self.cache_hits}"
-            f"{dedup}{evict} {self.stream.summary()}"
+            f"{dedup}{skips}{evict} {self.stream.summary()}"
         )
+
+    def solve_blocks_per_sec(self) -> Optional[float]:
+        """Observed solve throughput, or None before any dispatch — one of
+        the two rates the auto cache-admission threshold compares."""
+        if self.solve_seconds <= 0 or not self.stream.blocks_solved:
+            return None
+        return self.stream.blocks_solved / self.solve_seconds
 
 
 class MaskService:
@@ -167,6 +185,7 @@ class MaskService:
         journal: Optional[Journal] = None,
         directory: Optional[str] = None,
         cache_max_bytes: Optional[int] = None,
+        cache_min_blocks: Optional[int] = None,
     ):
         """``directory`` is the one-argument persistent setup: it wires a
         disk-backed cache (``<dir>/store``) and a completion journal
@@ -182,6 +201,15 @@ class MaskService:
         (model-scale stores otherwise grow monotonically — every distinct
         tensor content is a new immutable entry).  ``None`` keeps the
         historical unbounded behavior.
+
+        ``cache_min_blocks`` is the size-aware disk-admission floor: solved
+        entries with fewer blocks than this are *not* written to the disk
+        store (they stay in the in-memory front), because re-solving them
+        costs less than reading them back.  ``None`` (default) derives the
+        floor from observed rates — solve blocks/sec vs the store's measured
+        per-entry read time (see :meth:`cache_admission_min_blocks`); ``0``
+        admits everything (the historical behavior); any positive int pins
+        the floor.  Skips are counted in ``ServiceStats.cache_skips``.
         """
         self.config = config
         self.policy = policy
@@ -193,12 +221,18 @@ class MaskService:
         self.cache = cache if cache is not None else MaskCache()
         self.journal = journal
         self.cache_max_bytes = cache_max_bytes
+        self.cache_min_blocks = cache_min_blocks
         if cache_max_bytes is not None:
             self.cache.track_access = True  # mem hits count for the LRU
         self.stats = ServiceStats()
         self._pending: list[tuple[MaskHandle, np.ndarray]] = []
         # Queue/dedup state shared with the background-flush thread.
         self._lock = threading.RLock()
+        # Serializes whole drains: a flush that finds another thread mid-
+        # drain must WAIT for it (that drain resolves this thread's handles
+        # too), not return early with its submissions still pending.
+        # Reentrant so io_callback-style solves that flush mid-drain fold in.
+        self._drain_lock = threading.RLock()
         self._inflight: dict[str, MaskHandle] = {}  # content key -> primary
         self._bg_thread: Optional[threading.Thread] = None
 
@@ -229,21 +263,25 @@ class MaskService:
         if name is None:
             name = f"mask:{key[:12]}"
         handle = MaskHandle(self, name, spec, key, geom, journal=journal)
-        self.stats.submitted += 1
-
-        disk_hits_before = self.cache.disk_hits
-        cached = self.cache.get_packed(key)
-        if cached is not None:
-            if self.cache.disk_hits > disk_hits_before \
-                    and journal and self.journal is not None \
-                    and self.journal.lookup(name) is not None:
-                self.stats.journal_skips += 1
-            self.stats.cache_hits += 1
-            handle._resolve(cached[0])
-            self._record(handle)
-            return handle
-
+        # The whole probe-or-enqueue decision is one critical section: the
+        # stats counters, the cache's in-memory front, the in-flight dedup
+        # table and the pending queue must move together or concurrent
+        # submitters lose increments / solve the same content twice.  (The
+        # expensive work — abs/blocking/sha256 — already happened above,
+        # outside the lock.)
         with self._lock:
+            self.stats.submitted += 1
+            disk_hits_before = self.cache.disk_hits
+            cached = self.cache.get_packed(key)
+            if cached is not None:
+                if self.cache.disk_hits > disk_hits_before \
+                        and journal and self.journal is not None \
+                        and self.journal.lookup(name) is not None:
+                    self.stats.journal_skips += 1
+                self.stats.cache_hits += 1
+                handle._resolve(cached[0])
+                self._record(handle)
+                return handle
             # In-flight dedup: a second submit of the same content key
             # before (or during) a flush rides the first one's solve —
             # without this, both copies solve and race to populate the
@@ -254,12 +292,6 @@ class MaskService:
             if primary is not None and not primary.done:
                 primary._dups.append(handle)
                 self.stats.dedup_hits += 1
-                return handle
-            cached = self.cache.get_packed(key)  # resolved since the check?
-            if cached is not None:
-                self.stats.cache_hits += 1
-                handle._resolve(cached[0])
-                self._record(handle)
                 return handle
             self._inflight[key] = handle
             self._pending.append((handle, blocks))
@@ -309,10 +341,20 @@ class MaskService:
         into this same ``flush`` call (the drain loops until the queue is
         quiescent), so no caller ever returns from ``flush`` with work it
         enqueued still unsolved.
+
+        Concurrent ``flush`` calls from *other* threads serialize on the
+        drain lock: the later caller blocks until the active drain finishes
+        (which resolves the later caller's handles too, since the drain
+        loops until quiescent), then drains whatever arrived after — so no
+        thread ever returns from ``flush`` with its own work still pending.
         """
         bg = self._bg_thread
         if bg is not None and bg is not threading.current_thread():
             bg.join()  # fold into (never race) an active background drain
+        with self._drain_lock:
+            self._drain()
+
+    def _drain(self) -> None:
         wrote = False
         while True:
             with self._lock:
@@ -328,6 +370,7 @@ class MaskService:
             for spec, entries in groups.items():
                 policy = self.policy if self.policy is not None else \
                     BucketPolicy.for_device(spec.m, stats=self.stats.stream)
+                t0 = time.monotonic()
                 solved = solve_stream(
                     [blocks for _, blocks in entries],
                     spec,
@@ -336,17 +379,23 @@ class MaskService:
                     self.stats.stream,
                     packed=True,
                 )
+                self.stats.solve_seconds += time.monotonic() - t0
                 for (handle, blocks), words in zip(entries, solved):
                     # Atomic wrt submit(): resolve + cache + drain the
                     # dedup followers before dropping the in-flight entry,
                     # so a racing identical submit either attaches to the
                     # primary or hits the cache — never re-solves.
+                    nblocks = blocks.shape[0]
+                    admit = nblocks >= self.cache_admission_min_blocks()
                     with self._lock:
                         handle._resolve(words)
                         self.cache.put_packed(
                             handle.key, words,
-                            (blocks.shape[0], spec.m, spec.m),
+                            (nblocks, spec.m, spec.m),
+                            disk=admit,
                         )
+                        if not admit:
+                            self.stats.cache_skips += 1
                         self._record(handle)
                         for dup in handle._dups:
                             dup._resolve(words)
@@ -362,6 +411,25 @@ class MaskService:
             self.stats.cache_evictions += len(
                 self.cache.prune(self.cache_max_bytes)
             )
+
+    def cache_admission_min_blocks(self) -> int:
+        """Current disk-admission floor in blocks (entries below it skip the
+        disk tier; the in-memory front always caches).
+
+        With ``cache_min_blocks=None`` the floor is *derived*: an entry is
+        worth persisting only if reading it back is faster than re-solving
+        it, so the floor is ``solve_rate * read_seconds`` — the number of
+        blocks whose solve time equals one observed store read.  Until both
+        rates have been observed (no dispatch yet, or no disk read yet) the
+        floor is 0 and everything is admitted.
+        """
+        if self.cache_min_blocks is not None:
+            return self.cache_min_blocks
+        read_s = self.cache.mean_read_seconds()
+        rate = self.stats.solve_blocks_per_sec()
+        if read_s is None or rate is None:
+            return 0
+        return int(rate * read_s)
 
     def flush_async(self) -> FlushTicket:
         """Drain the queue on a background thread; returns a
@@ -397,8 +465,11 @@ class MaskService:
         thread = threading.Thread(
             target=drain, name="mask-service-flush", daemon=True
         )
-        self._bg_thread = thread
+        # Start BEFORE publishing: a concurrent flush() that reads
+        # _bg_thread must never join a not-yet-started thread.  If it reads
+        # the previous value instead, the drain lock still serializes.
         thread.start()
+        self._bg_thread = thread
         return ticket
 
     def solve(self, w, pattern=None, *legacy, name: Optional[str] = None,

@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import json
 import os
+import threading
 from typing import Optional
 
 
@@ -28,6 +29,10 @@ class Journal:
             os.makedirs(parent, exist_ok=True)
         self._completed: Optional[dict[str, dict]] = None
         self._tail_checked = False
+        # Appends come from whichever thread resolves a handle (foreground
+        # flush, background drain, server scheduler); serialize them so two
+        # records never interleave within one file write.
+        self._lock = threading.Lock()
 
     def _needs_newline(self) -> bool:
         """True when the file ends mid-line (torn tail from a crash) — the
@@ -68,9 +73,10 @@ class Journal:
         rec = {"name": name, "key": key}
         if extra:
             rec.update(extra)
-        lead = "\n" if self._needs_newline() else ""
-        with open(self.path, "a") as f:
-            f.write(lead + json.dumps(rec) + "\n")
-            f.flush()
-            os.fsync(f.fileno())
-        self.completed()[name] = rec
+        with self._lock:
+            lead = "\n" if self._needs_newline() else ""
+            with open(self.path, "a") as f:
+                f.write(lead + json.dumps(rec) + "\n")
+                f.flush()
+                os.fsync(f.fileno())
+            self.completed()[name] = rec

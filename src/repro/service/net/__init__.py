@@ -1,0 +1,20 @@
+"""Network front-end for the mask service: MaskServer + MaskClient.
+
+See ``docs/architecture.md`` ("Mask service over the network") for the wire
+format and tenant lifecycle, and ``docs/deploy.md`` for running a server.
+"""
+from repro.service.net.client import MaskClient, RemoteError, RemoteHandle
+from repro.service.net.server import MaskServer, TenantConfig, TokenBucket
+from repro.service.net.wire import MAX_FRAME, PROTO_VERSION, WireError
+
+__all__ = [
+    "MaskClient",
+    "MaskServer",
+    "RemoteError",
+    "RemoteHandle",
+    "TenantConfig",
+    "TokenBucket",
+    "WireError",
+    "PROTO_VERSION",
+    "MAX_FRAME",
+]

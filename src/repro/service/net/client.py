@@ -1,0 +1,430 @@
+"""MaskClient: wire-compatible drop-in for :class:`MaskService`.
+
+The client implements the same submit / submit_many / flush / flush_async /
+results / solve surface as the in-process engine, so every consumer of the
+service seam — ``prune_transformer(service=...)``, the ``solve_plan``
+lockstep driver, the DST :class:`~repro.dst.controller.MaskRefreshController`
+— runs unchanged against a remote solver:
+
+    with MaskClient("solver-box:7463", tenant="team-a") as svc:
+        report = prune_transformer(params, cfg, "t2:4", service=svc)
+
+Division of labor (and why results are bit-identical to local solves): the
+client runs the *cheap, deterministic* front half of ``MaskService.submit``
+locally — ``tensor_to_blocks`` + content key over the float32 ``|W|`` block
+stream, using the :class:`SolverConfig` the server advertises in its hello
+reply — and ships the block stream itself.  The server feeds those exact
+bytes to its inner engine, which re-derives the *same* content key (abs is
+idempotent and re-blocking a (B, M, M) stream is the identity), so remote
+and in-process submits of the same tensor share one cache entry, and the
+mask that comes back (bit-packed uint32 row words, 32x smaller than bool)
+is the same array of bits a local ``MaskService.solve`` would produce.
+
+Client-side economics mirror the engine: a local content-keyed memory cache
+resolves repeat submits without touching the network, and in-flight dedup
+collapses identical concurrent submissions to one wire request.  Submits go
+out eagerly on a pooled connection (the server starts batching/solving
+while the caller keeps submitting); ``flush()`` is the wait barrier.
+Thread-safety contract matches the engine: submits may race freely,
+flushes serialize on a drain lock, ``flush_async`` chains on one
+background thread.
+"""
+from __future__ import annotations
+
+import itertools
+import os
+import socket
+import threading
+from typing import Optional, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.solver import SolverConfig
+from repro.patterns import PatternSpec, pattern_from_args
+from repro.service.cache import content_key
+from repro.service.engine import FlushTicket, MaskHandle, ServiceStats
+from repro.service.net import wire
+from repro.service.scheduler import tensor_to_blocks
+
+
+class RemoteError(RuntimeError):
+    """The server replied ``ok: false`` (validation, solve, or tenant
+    error).  Framing-level failures raise :class:`wire.WireError` instead."""
+
+
+class RemoteHandle(MaskHandle):
+    """Future for one tensor submitted over the wire.
+
+    Same surface as :class:`MaskHandle` (``result``/``mask_blocks``/
+    ``words``/``done``); ``result()`` on an unresolved handle flushes the
+    owning client.  Extra observability: ``server_latency_s`` (enqueue ->
+    solve wall time inside the server) and ``server_cached`` (resolved from
+    the server's shared cache tier), both None until resolved over the wire
+    and for locally-resolved (client cache / dedup) handles.
+    """
+
+    def __init__(self, client: "MaskClient", name: str, pattern: PatternSpec,
+                 key: str, geom: dict, rid: str, journal: bool = True):
+        super().__init__(client, name, pattern, key, geom, journal=journal)
+        self.id = rid
+        self.server_latency_s: Optional[float] = None
+        self.server_cached: Optional[bool] = None
+        self._error: Optional[BaseException] = None
+
+    def _fail(self, exc: BaseException) -> None:
+        self._error = exc
+        for dup in self._dups:
+            dup._error = exc
+        self._dups.clear()
+
+    def result(self) -> jnp.ndarray:
+        if self._error is not None:
+            raise self._error
+        return super().result()
+
+
+class MaskClient:
+    """TCP client for a :class:`~repro.service.net.server.MaskServer`.
+
+    Args:
+      address: ``"host:port"`` (or a ``(host, port)`` tuple).
+      tenant: tenant name sent in the hello; scheduling quota and rate
+        limits are per-tenant (see :class:`TenantConfig`).
+      timeout: per-operation socket timeout in seconds.  None (default)
+        blocks indefinitely — correct for ``flush`` barriers over large
+        solves; set it for fail-fast health checks.
+      local_cache: keep a client-side content-keyed memory cache of solved
+        words so repeat submits of identical tensors skip the network
+        entirely (counted in ``stats.cache_hits``, exactly like the
+        engine's memory front).
+
+    ``stats`` is a real :class:`ServiceStats` tracking the *client-side*
+    counters (submitted / cache_hits / dedup_hits); solver-side aggregates
+    live on the server — fetch them with :meth:`server_stats`.
+    """
+
+    def __init__(
+        self,
+        address: Union[str, tuple[str, int]],
+        tenant: str = "default",
+        *,
+        timeout: Optional[float] = None,
+        connect_timeout: float = 10.0,
+        local_cache: bool = True,
+    ):
+        if isinstance(address, str):
+            host, _, port = address.rpartition(":")
+            if not host:
+                raise ValueError(
+                    f"address must be 'host:port', got {address!r}"
+                )
+            self.host, self.port = host, int(port)
+        else:
+            self.host, self.port = address[0], int(address[1])
+        self.tenant = tenant
+        self.timeout = timeout
+        self.connect_timeout = connect_timeout
+        self.local_cache = local_cache
+        self.stats = ServiceStats()
+        self._lock = threading.RLock()  # outstanding/dedup/cache/stats
+        self._drain_lock = threading.RLock()  # serializes whole flushes
+        self._pool: list[socket.socket] = []
+        self._pool_lock = threading.Lock()
+        self._bg_thread: Optional[threading.Thread] = None
+        self._outstanding: dict[str, RemoteHandle] = {}  # id -> primary
+        self._inflight: dict[str, RemoteHandle] = {}  # content key -> primary
+        self._mem: dict[str, np.ndarray] = {}  # content key -> words
+        self._ids = itertools.count()
+        self._cid = f"{os.getpid():x}-{id(self) & 0xFFFFFF:x}"
+        self._closed = False
+        self.config: Optional[SolverConfig] = None
+        self.server_name: Optional[str] = None
+        self.quota: Optional[float] = None
+        # Dial eagerly: submit() needs the server's SolverConfig for content
+        # keys, and failing here beats failing mid-prune.
+        self._checkin(self._dial())
+
+    # -- connection pool ----------------------------------------------------
+
+    def _dial(self) -> socket.socket:
+        sock = socket.create_connection(
+            (self.host, self.port), timeout=self.connect_timeout
+        )
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        sock.settimeout(self.timeout)
+        try:
+            reply, _ = wire.request(sock, {
+                "op": "hello",
+                "proto": wire.PROTO_VERSION,
+                "tenant": self.tenant,
+            })
+        except BaseException:
+            sock.close()
+            raise
+        if not reply.get("ok"):
+            sock.close()
+            raise RemoteError(f"hello rejected: {reply.get('error')}")
+        if self.config is None:
+            self.config = SolverConfig(**reply["config"])
+            self.server_name = reply.get("server")
+            self.quota = reply.get("quota")
+        return sock
+
+    def _checkout(self) -> socket.socket:
+        if self._closed:
+            raise RuntimeError("MaskClient is closed")
+        with self._pool_lock:
+            if self._pool:
+                return self._pool.pop()
+        return self._dial()
+
+    def _checkin(self, sock: socket.socket) -> None:
+        with self._pool_lock:
+            if not self._closed:
+                self._pool.append(sock)
+                return
+        sock.close()
+
+    def _request(self, header: dict, blobs=()) -> tuple[dict, list]:
+        """One pooled request/response; not-ok replies raise
+        :class:`RemoteError` (the connection stays usable — the reply frame
+        arrived intact), transport failures discard the connection."""
+        sock = self._checkout()
+        try:
+            reply, rblobs = wire.request(sock, header, blobs)
+        except BaseException:
+            sock.close()
+            raise
+        self._checkin(sock)
+        if not reply.get("ok"):
+            raise RemoteError(
+                f"{reply.get('kind', 'error')}: {reply.get('error')}"
+            )
+        return reply, rblobs
+
+    # -- MaskService surface ------------------------------------------------
+
+    def submit(self, name: Optional[str], w, pattern=None, m=None, *,
+               n=None, journal: bool = True) -> RemoteHandle:
+        """Enqueue one tensor on the remote solver; returns a future.
+
+        Same contract as :meth:`MaskService.submit` — transposable patterns
+        only, ``name=None`` derives a content-addressed name, ``journal``
+        controls the server-side journal record (written under
+        ``"<tenant>:<name>"``).  The block stream goes out on the wire
+        immediately unless the client's memory cache or in-flight dedup
+        resolves it locally.
+        """
+        spec = pattern_from_args(pattern, m, None, n=n,
+                                 caller="MaskClient.submit")
+        handle, payload = self._prepare(name, w, spec, journal)
+        if payload is not None:
+            self._wire_submit([handle], [payload])
+        return handle
+
+    def submit_many(self, items, pattern=None, *, n=None,
+                    m=None) -> list[RemoteHandle]:
+        """Enqueue ``(name, w)`` pairs under one pattern — a single wire
+        frame for everything the local cache/dedup does not absorb, so a
+        per-sweep solve-plan batch costs one round trip."""
+        spec = pattern_from_args(pattern, m, None, n=n,
+                                 caller="MaskClient.submit_many")
+        handles, send_handles, send_blobs = [], [], []
+        for name, w in items:
+            handle, payload = self._prepare(name, w, spec, True)
+            handles.append(handle)
+            if payload is not None:
+                send_handles.append(handle)
+                send_blobs.append(payload)
+        if send_handles:
+            self._wire_submit(send_handles, send_blobs)
+        return handles
+
+    def _prepare(self, name, w, spec: PatternSpec, journal: bool):
+        """Local half of a submit: block, key, probe cache/dedup.  Returns
+        ``(handle, blocks-or-None)``; None means resolved locally."""
+        if not spec.transposable:
+            raise ValueError(
+                "MaskService solves transposable patterns; standard N:M "
+                "masks are a cheap top-N (repro.core.solver.nm_mask)"
+            )
+        assert self.config is not None
+        blocks, geom = tensor_to_blocks(w, spec.m)
+        key = content_key(blocks, spec, self.config)
+        if name is None:
+            name = f"mask:{key[:12]}"
+        rid = f"{self._cid}-{next(self._ids)}"
+        handle = RemoteHandle(self, name, spec, key, geom, rid,
+                              journal=journal)
+        with self._lock:
+            self.stats.submitted += 1
+            words = self._mem.get(key)
+            if words is not None:
+                self.stats.cache_hits += 1
+                handle._resolve(words)
+                return handle, None
+            primary = self._inflight.get(key)
+            if primary is not None and not primary.done:
+                primary._dups.append(handle)
+                self.stats.dedup_hits += 1
+                return handle, None
+            self._inflight[key] = handle
+            self._outstanding[rid] = handle
+        return handle, blocks
+
+    def _wire_submit(self, handles: list[RemoteHandle], blobs) -> None:
+        header = {
+            "op": "submit",
+            "reqs": [
+                {"id": h.id, "name": h.name, "pattern": h.pattern.canonical,
+                 "journal": h.journal}
+                for h in handles
+            ],
+        }
+        try:
+            self._request(header, blobs)
+        except BaseException as e:
+            # The server never saw (or rejected) these: fail the handles and
+            # their dedup followers so result() reports the cause instead of
+            # a flush hanging on ids the server does not know.
+            with self._lock:
+                for h in handles:
+                    self._outstanding.pop(h.id, None)
+                    if self._inflight.get(h.key) is h:
+                        del self._inflight[h.key]
+                    h._fail(e)
+            raise
+
+    def flush(self) -> None:
+        """Barrier: block until every outstanding submission is solved and
+        resolved into its handle.
+
+        Folds in any active :meth:`flush_async` drain first, then waits on
+        the server (which is free to batch this tenant's queue with other
+        tenants' into shared mega-batches).  Concurrent flushes serialize;
+        submissions racing the flush are drained by the next one, same as
+        the engine.
+        """
+        bg = self._bg_thread
+        if bg is not None and bg is not threading.current_thread():
+            bg.join()
+        with self._drain_lock:
+            while True:
+                with self._lock:
+                    ids = [rid for rid, h in self._outstanding.items()
+                           if not h.done]
+                if not ids:
+                    return
+                reply, blobs = self._request({"op": "wait", "ids": ids})
+                lat = reply.get("lat") or [None] * len(ids)
+                cached = reply.get("cached") or [None] * len(ids)
+                with self._lock:
+                    for rid, words, t, hit in zip(
+                        reply["ids"], blobs, lat, cached
+                    ):
+                        handle = self._outstanding.pop(rid, None)
+                        if handle is None:
+                            continue
+                        handle.server_latency_s = t
+                        handle.server_cached = hit
+                        handle._resolve(words)
+                        for dup in handle._dups:
+                            dup._resolve(words)
+                        handle._dups.clear()
+                        if self._inflight.get(handle.key) is handle:
+                            del self._inflight[handle.key]
+                        if self.local_cache:
+                            self._mem[handle.key] = words
+
+    def flush_async(self) -> FlushTicket:
+        """Background flush; returns the engine's :class:`FlushTicket`.
+        The DST refresh controller calls this verbatim — the solve runs on
+        the server while the trainer keeps stepping locally."""
+        ticket = FlushTicket()
+        prev = self._bg_thread
+
+        def drain():
+            import time as _time
+            t0 = _time.monotonic()
+            try:
+                if prev is not None:
+                    prev.join()
+                self.flush()
+            except BaseException as e:  # surfaced on ticket.wait()
+                ticket._error = e
+            finally:
+                ticket.seconds = _time.monotonic() - t0
+                ticket._event.set()
+
+        thread = threading.Thread(
+            target=drain, name="mask-client-flush", daemon=True
+        )
+        # Start BEFORE publishing (same reasoning as MaskService.flush_async:
+        # a concurrent flush() must never join a not-yet-started thread).
+        thread.start()
+        self._bg_thread = thread
+        return ticket
+
+    def results(self, handles) -> list[jnp.ndarray]:
+        """Resolve a batch of handles with at most one flush (same contract
+        as :meth:`MaskService.results`)."""
+        handles = list(handles)
+        for h in handles:
+            if h.service is not self:
+                raise ValueError(
+                    f"handle {h.name!r} belongs to a different MaskService"
+                )
+        if any(not h.done for h in handles):
+            self.flush()
+        return [h.result() for h in handles]
+
+    def solve(self, w, pattern=None, *, name: Optional[str] = None,
+              n=None, m=None) -> jnp.ndarray:
+        """Synchronous remote solve: submit + flush + result.  Bit-identical
+        to ``MaskService.solve`` on the server's config (property-tested in
+        ``tests/test_net.py``)."""
+        spec = pattern_from_args(pattern, m, None, n=n,
+                                 caller="MaskClient.solve")
+        handle = self.submit(name, w, spec)
+        self.flush()
+        return handle.result()
+
+    # -- server ops ---------------------------------------------------------
+
+    def ping(self) -> bool:
+        reply, _ = self._request({"op": "ping"})
+        return bool(reply.get("ok"))
+
+    def server_stats(self) -> dict:
+        """The server's live snapshot: inner-service counters plus the
+        per-tenant scheduling/cache rows (see ``MaskServer.stats``)."""
+        reply, _ = self._request({"op": "stats"})
+        return {k: v for k, v in reply.items() if k != "ok"}
+
+    def shutdown_server(self) -> None:
+        """Ask the server to stop (works only with
+        ``allow_remote_shutdown``); the connection is not reusable after."""
+        sock = self._checkout()
+        try:
+            reply, _ = wire.request(sock, {"op": "shutdown"})
+        finally:
+            sock.close()
+        if not reply.get("ok"):
+            raise RemoteError(f"shutdown rejected: {reply.get('error')}")
+
+    def close(self) -> None:
+        with self._pool_lock:
+            self._closed = True
+            pool, self._pool = self._pool, []
+        for sock in pool:
+            try:
+                sock.close()
+            except OSError:
+                pass
+
+    def __enter__(self) -> "MaskClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

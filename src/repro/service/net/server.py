@@ -1,0 +1,645 @@
+"""MaskServer: multi-tenant network front-end for one :class:`MaskService`.
+
+This is the process ROADMAP item 1 asks for: the submit/flush future API was
+always the seam for an RPC layer — here something finally listens on it.  A
+``MaskServer`` owns ONE inner :class:`repro.service.MaskService` (and with
+it the content-addressed cache, journal, bucket ladders and fused backend)
+and exposes it over TCP to any number of tenants:
+
+::
+
+    client conns          per-tenant queues         one solver thread
+    ------------          -----------------         -----------------
+    hello/submit/wait --> token bucket -> deque --> deficit-weighted round
+    (thread per conn)     (rate limit,   (FIFO      robin drains a "round"
+                           backpressure)  within     of requests, submits
+                                          tenant)    them ALL to the inner
+                                                     service, ONE flush
+                                                     (cross-tenant bucketed
+                                                     mega-batch), resolves
+
+Scheduling: each drain round hands every backlogged tenant a block quantum
+proportional to its configured ``quota`` (deficit round-robin).  A tenant's
+unspent quantum carries over while it stays backlogged, so a tenant whose
+head request is huge eventually accumulates the credit to run it — and if
+no head fits any tenant's credit, the most-credited tenant is force-served.
+Both properties together make the drain starvation-free: no tenant waits
+forever behind another's flood, and a tenant's long-run block share tracks
+``quota_i / sum(quota)`` whenever it has backlog.  Within a round, requests
+from *all* tenants solve as one shape-bucketed mega-batch via the inner
+service — multi-tenancy costs no batching efficiency.
+
+The shared tier: because the inner service's cache is content-addressed,
+two tenants pruning the same open-weights checkpoint hit each other's
+entries — tenant B's submits of tensors tenant A already solved resolve
+from cache inside the drain round, never re-dispatching.  Per-tenant
+``cache_hits``/``dedup_hits`` counters make the sharing observable
+(``benchmarks/service_load.py`` gates on it).
+
+Transport is the stdlib-only framed protocol of :mod:`.wire`; masks return
+as bit-packed uint32 words (32x smaller than bool).  Deployment recipe:
+``docs/deploy.md``; CLI: ``python -m repro.launch.serve_masks``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import socket
+import threading
+import time
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+from repro.core.solver import SolverConfig
+from repro.patterns import PatternSpec
+from repro.service.engine import MaskService
+from repro.service.net import wire
+
+logger = logging.getLogger(__name__)
+
+SERVER_NAME = "tsenor-maskserver/1"
+
+
+def solver_config_to_wire(config: SolverConfig) -> dict:
+    """The SolverConfig fields a client needs to compute content keys that
+    match the server's (see ``cache.solver_fingerprint``)."""
+    return {
+        "iters": config.iters,
+        "ls_steps": config.ls_steps,
+        "tau_scale": config.tau_scale,
+        "tol": config.tol,
+        "backend": config.backend,
+        "block_batch": config.block_batch,
+    }
+
+
+def solver_config_from_wire(d: dict) -> SolverConfig:
+    return SolverConfig(**d)
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantConfig:
+    """Per-tenant scheduling knobs.
+
+    ``quota``: weighted share of each drain round's block budget (relative
+    to the other backlogged tenants' quotas).
+    ``rate``: token-bucket refill in blocks/sec; submits past it block the
+    submitting connection (backpressure, never drops).  None = unlimited.
+    ``burst``: bucket capacity in blocks (default: one round's budget).
+    """
+
+    quota: float = 1.0
+    rate: Optional[float] = None
+    burst: Optional[float] = None
+
+    def __post_init__(self):
+        if self.quota <= 0:
+            raise ValueError(f"quota must be > 0, got {self.quota}")
+        if self.rate is not None and self.rate <= 0:
+            raise ValueError(f"rate must be > 0 blocks/sec, got {self.rate}")
+
+
+class TokenBucket:
+    """Blocks/sec rate limiter; ``acquire`` sleeps (bounded) until funded.
+
+    Requests larger than ``burst`` are admitted once the bucket is full and
+    drive the balance negative — a later refill pays the debt — so one huge
+    tensor is delayed, not deadlocked.
+    """
+
+    def __init__(self, rate: float, burst: float):
+        self.rate = float(rate)
+        self.burst = float(burst)
+        self._tokens = float(burst)
+        self._t = time.monotonic()
+        self._lock = threading.Lock()
+
+    def acquire(self, cost: float, should_abort=lambda: False,
+                timeout: Optional[float] = None) -> bool:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        need = min(cost, self.burst)
+        while True:
+            with self._lock:
+                now = time.monotonic()
+                self._tokens = min(
+                    self.burst, self._tokens + (now - self._t) * self.rate
+                )
+                self._t = now
+                if self._tokens >= need:
+                    self._tokens -= cost
+                    return True
+                wait = (need - self._tokens) / self.rate
+            if should_abort():
+                return False
+            if deadline is not None and time.monotonic() >= deadline:
+                return False
+            time.sleep(min(wait, 0.05))
+
+
+class _Request:
+    """One submitted tensor travelling queue -> drain round -> wait reply."""
+
+    __slots__ = ("id", "name", "pattern", "journal", "blocks", "nblocks",
+                 "tenant", "event", "words", "error", "enqueued_at",
+                 "solved_at", "cached")
+
+    def __init__(self, rid: str, name: str, pattern: str, journal: bool,
+                 blocks: np.ndarray, tenant: "_Tenant"):
+        self.id = rid
+        self.name = name
+        self.pattern = pattern
+        self.journal = journal
+        self.blocks = blocks
+        self.nblocks = int(blocks.shape[0])
+        self.tenant = tenant
+        self.event = threading.Event()
+        self.words: Optional[np.ndarray] = None
+        self.error: Optional[str] = None
+        self.enqueued_at = time.monotonic()
+        self.solved_at: Optional[float] = None
+        self.cached = False
+
+    def fail(self, msg: str) -> None:
+        self.error = msg
+        self.event.set()
+
+
+class _Tenant:
+    """Server-side tenant state: queue, credit, rate bucket, counters."""
+
+    def __init__(self, name: str, cfg: TenantConfig, round_blocks: int):
+        self.name = name
+        self.cfg = cfg
+        self.queue: deque[_Request] = deque()
+        self.deficit = 0.0  # unspent round credit, in blocks
+        self.bucket: Optional[TokenBucket] = None
+        if cfg.rate is not None:
+            burst = cfg.burst if cfg.burst is not None else float(round_blocks)
+            self.bucket = TokenBucket(cfg.rate, burst)
+        # Counters (mutated by handler threads under the server lock, and by
+        # the single scheduler thread for the solve-side ones).
+        self.submitted = 0
+        self.blocks_in = 0
+        self.resolved = 0
+        self.cache_hits = 0
+        self.dedup_hits = 0
+        self.queue_seconds = 0.0  # sum of enqueue->resolve latencies
+        self.results: dict[str, _Request] = {}  # popped by wait
+
+    def stats(self) -> dict:
+        return {
+            "quota": self.cfg.quota,
+            "rate": self.cfg.rate,
+            "submitted": self.submitted,
+            "blocks": self.blocks_in,
+            "resolved": self.resolved,
+            "cache_hits": self.cache_hits,
+            "dedup_hits": self.dedup_hits,
+            "queued": len(self.queue),
+            "waiting_results": len(self.results),
+            "queue_seconds": self.queue_seconds,
+        }
+
+
+class MaskServer:
+    """Threaded TCP server wrapping one :class:`MaskService` for N tenants.
+
+    Args:
+      service: the inner solver engine (owns config/cache/journal).  Default
+        is a fresh in-memory ``MaskService(SolverConfig())``.
+      host/port: bind address; ``port=0`` picks an ephemeral port (read it
+        back from ``.port`` — the test/benchmark idiom).
+      tenants: name -> :class:`TenantConfig` pre-registrations.  Unknown
+        tenants that ``hello`` in are auto-registered with
+        ``TenantConfig(default_quota, default_rate)`` unless
+        ``strict_tenants`` is set.
+      round_blocks: block budget one drain round distributes across
+        backlogged tenants (quota-weighted).
+      batch_window_s: how long the drain thread lingers after a wake-up so
+        concurrent submitters land in the same round (bigger mega-batches
+        at the cost of that much added latency).
+      allow_remote_shutdown: accept the ``shutdown`` op (handy for tests
+        and CI; disable for real deployments via ``serve-masks
+        --no-remote-shutdown``).
+    """
+
+    def __init__(
+        self,
+        service: Optional[MaskService] = None,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        *,
+        tenants: Optional[dict[str, TenantConfig]] = None,
+        default_quota: float = 1.0,
+        default_rate: Optional[float] = None,
+        strict_tenants: bool = False,
+        round_blocks: int = 4096,
+        batch_window_s: float = 0.002,
+        allow_remote_shutdown: bool = True,
+        rate_timeout_s: float = 120.0,
+    ):
+        self.service = service if service is not None else MaskService()
+        self.host = host
+        self._requested_port = port
+        self.default_quota = default_quota
+        self.default_rate = default_rate
+        self.strict_tenants = strict_tenants
+        self.round_blocks = int(round_blocks)
+        self.batch_window_s = batch_window_s
+        self.allow_remote_shutdown = allow_remote_shutdown
+        self.rate_timeout_s = rate_timeout_s
+        self._tenants: dict[str, _Tenant] = {}
+        for name, cfg in (tenants or {}).items():
+            self._tenants[name] = _Tenant(name, cfg, self.round_blocks)
+        self._cv = threading.Condition()
+        self._running = False
+        self._sock: Optional[socket.socket] = None
+        self._threads: list[threading.Thread] = []
+        self._conns: set[socket.socket] = set()
+        self._started_at: Optional[float] = None
+        self.port: Optional[int] = None
+        self.rounds = 0
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def start(self) -> "MaskServer":
+        assert not self._running, "server already started"
+        sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        sock.bind((self.host, self._requested_port))
+        sock.listen(64)
+        self._sock = sock
+        self.port = sock.getsockname()[1]
+        self._running = True
+        self._started_at = time.monotonic()
+        for target, name in ((self._accept_loop, "mask-server-accept"),
+                             (self._drain_loop, "mask-server-drain")):
+            t = threading.Thread(target=target, name=name, daemon=True)
+            t.start()
+            self._threads.append(t)
+        logger.info("mask server listening on %s:%d", self.host, self.port)
+        return self
+
+    @property
+    def address(self) -> str:
+        assert self.port is not None, "server not started"
+        return f"{self.host}:{self.port}"
+
+    def stop(self) -> None:
+        with self._cv:
+            if not self._running:
+                return
+            self._running = False
+            self._cv.notify_all()
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+        for conn in list(self._conns):
+            try:
+                conn.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                conn.close()
+            except OSError:
+                pass
+        for t in self._threads:
+            if t is not threading.current_thread():
+                t.join(timeout=10)
+        # Fail anything still queued so blocked waiters wake with an error
+        # instead of hanging on a dead server.
+        with self._cv:
+            for tenant in self._tenants.values():
+                while tenant.queue:
+                    tenant.queue.popleft().fail("server shut down")
+        logger.info("mask server stopped (%d rounds)", self.rounds)
+
+    def __enter__(self) -> "MaskServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    def serve_forever(self) -> None:
+        """Block until :meth:`stop` (CLI entry point's main thread parks
+        here; the accept/drain threads do the work)."""
+        if not self._running:
+            self.start()
+        try:
+            while self._running:
+                time.sleep(0.2)
+        except KeyboardInterrupt:
+            pass
+        finally:
+            self.stop()
+
+    # -- connection side ----------------------------------------------------
+
+    def _accept_loop(self) -> None:
+        assert self._sock is not None
+        while self._running:
+            try:
+                conn, addr = self._sock.accept()
+            except OSError:
+                break  # listener closed by stop()
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            self._conns.add(conn)
+            t = threading.Thread(
+                target=self._handle_conn, args=(conn, addr),
+                name=f"mask-server-conn-{addr[1]}", daemon=True,
+            )
+            t.start()
+
+    def _handle_conn(self, conn: socket.socket, addr) -> None:
+        tenant: Optional[_Tenant] = None
+        try:
+            while self._running:
+                try:
+                    frame = wire.recv_frame(conn)
+                except (wire.WireError, OSError) as e:
+                    if self._running:
+                        logger.debug("conn %s dropped: %s", addr, e)
+                    break
+                if frame is None:
+                    break
+                header, blobs = frame
+                op = str(header.get("op"))
+                try:
+                    reply, rblobs, tenant = self._dispatch(
+                        op, header, blobs, tenant
+                    )
+                except Exception as e:  # noqa: BLE001 — reply, don't die
+                    reply, rblobs = {
+                        "ok": False,
+                        "error": str(e),
+                        "kind": type(e).__name__,
+                    }, []
+                try:
+                    wire.send_frame(conn, reply, rblobs)
+                except OSError:
+                    break
+                if op == "shutdown" and reply.get("ok"):
+                    threading.Thread(target=self.stop, daemon=True).start()
+                    break
+        finally:
+            self._conns.discard(conn)
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+    def _require_tenant(self, tenant: Optional[_Tenant]) -> _Tenant:
+        if tenant is None:
+            raise wire.WireError("op requires a prior hello")
+        return tenant
+
+    def _dispatch(self, op, header, blobs, tenant):
+        if op == "hello":
+            tenant = self._hello(header)
+            return {
+                "ok": True,
+                "proto": wire.PROTO_VERSION,
+                "server": SERVER_NAME,
+                "tenant": tenant.name,
+                "quota": tenant.cfg.quota,
+                "config": solver_config_to_wire(self.service.config),
+            }, [], tenant
+        if op == "ping":
+            return {"ok": True}, [], tenant
+        if op == "submit":
+            return self._submit(self._require_tenant(tenant),
+                                header, blobs) + (tenant,)
+        if op == "wait":
+            return self._wait(self._require_tenant(tenant),
+                              header) + (tenant,)
+        if op == "stats":
+            return {"ok": True, **self.stats()}, [], tenant
+        if op == "shutdown":
+            if not self.allow_remote_shutdown:
+                raise PermissionError("remote shutdown disabled")
+            return {"ok": True}, [], tenant
+        raise wire.WireError(f"unknown op {op!r}")
+
+    def _hello(self, header) -> _Tenant:
+        proto = header.get("proto")
+        if proto != wire.PROTO_VERSION:
+            raise wire.WireError(
+                f"protocol mismatch: client {proto}, "
+                f"server {wire.PROTO_VERSION}"
+            )
+        name = str(header.get("tenant") or "default")
+        with self._cv:
+            tenant = self._tenants.get(name)
+            if tenant is None:
+                if self.strict_tenants:
+                    raise PermissionError(f"unknown tenant {name!r}")
+                tenant = _Tenant(
+                    name,
+                    TenantConfig(quota=self.default_quota,
+                                 rate=self.default_rate),
+                    self.round_blocks,
+                )
+                self._tenants[name] = tenant
+        return tenant
+
+    def _submit(self, tenant: _Tenant, header, blobs):
+        reqs = header.get("reqs") or []
+        if len(reqs) != len(blobs):
+            raise wire.WireError(
+                f"submit declares {len(reqs)} requests but {len(blobs)} blobs"
+            )
+        parsed: list[_Request] = []
+        for meta, blocks in zip(reqs, blobs):
+            spec = PatternSpec.parse(str(meta["pattern"]))
+            if not spec.transposable:
+                raise ValueError(
+                    "MaskService solves transposable patterns; standard N:M "
+                    "masks are a cheap top-N (repro.core.solver.nm_mask)"
+                )
+            if blocks.ndim != 3 or blocks.shape[-2:] != (spec.m, spec.m):
+                raise ValueError(
+                    f"submit blob must be a (B, {spec.m}, {spec.m}) block "
+                    f"stream, got shape {tuple(blocks.shape)}"
+                )
+            parsed.append(_Request(
+                str(meta["id"]), str(meta.get("name") or meta["id"]),
+                spec.canonical, bool(meta.get("journal", True)),
+                np.ascontiguousarray(blocks, np.float32), tenant,
+            ))
+        # Rate limit BEFORE enqueueing: an over-rate tenant's connection
+        # blocks right here (backpressure), so its flood never reaches the
+        # queue and other tenants' drain rounds.
+        if tenant.bucket is not None:
+            cost = sum(r.nblocks for r in parsed)
+            ok = tenant.bucket.acquire(
+                cost, should_abort=lambda: not self._running,
+                timeout=self.rate_timeout_s,
+            )
+            if not ok:
+                raise RuntimeError(
+                    f"tenant {tenant.name!r} rate limit: {cost} blocks not "
+                    f"funded within {self.rate_timeout_s}s"
+                )
+        with self._cv:
+            for r in parsed:
+                if r.id in tenant.results:
+                    raise wire.WireError(f"duplicate request id {r.id!r}")
+                tenant.results[r.id] = r
+                tenant.queue.append(r)
+                tenant.submitted += 1
+                tenant.blocks_in += r.nblocks
+            self._cv.notify_all()
+        return {"ok": True, "queued": len(parsed)}, []
+
+    def _wait(self, tenant: _Tenant, header):
+        ids = [str(i) for i in header.get("ids") or []]
+        timeout = header.get("timeout")
+        with self._cv:
+            missing = [i for i in ids if i not in tenant.results]
+        if missing:
+            raise wire.WireError(
+                f"unknown request ids {missing[:3]!r} (already waited, or "
+                "never submitted by this tenant)"
+            )
+        deadline = None if timeout is None else time.monotonic() + timeout
+        reqs = [tenant.results[i] for i in ids]
+        for r in reqs:
+            left = None if deadline is None else deadline - time.monotonic()
+            if not r.event.wait(left):
+                raise TimeoutError(f"request {r.id!r} not solved in time")
+        errors = {r.id: r.error for r in reqs if r.error}
+        if errors:
+            raise RuntimeError(f"solve failed: {errors}")
+        with self._cv:
+            for r in reqs:
+                tenant.results.pop(r.id, None)
+        lat = [r.solved_at - r.enqueued_at for r in reqs]
+        cached = [bool(r.cached) for r in reqs]
+        return (
+            {"ok": True, "ids": ids, "lat": lat, "cached": cached},
+            [r.words for r in reqs],
+        )
+
+    # -- scheduler side -----------------------------------------------------
+
+    def _drain_loop(self) -> None:
+        while True:
+            with self._cv:
+                while self._running and not any(
+                    t.queue for t in self._tenants.values()
+                ):
+                    self._cv.wait(0.5)
+                if not self._running:
+                    return
+            if self.batch_window_s:
+                time.sleep(self.batch_window_s)  # let co-submitters land
+            with self._cv:
+                round_reqs = self._take_round()
+            if round_reqs:
+                self._solve_round(round_reqs)
+
+    def _take_round(self) -> list[_Request]:
+        """Deficit round-robin over backlogged tenants (under the lock).
+
+        Every backlogged tenant's credit grows by ``round_blocks * quota /
+        total_quota``; requests pop FIFO while they fit the credit.  Credit
+        resets when a tenant's backlog empties (no banking while idle).  If
+        nothing fits anywhere, the most-credited tenant (normalized by
+        quota) is force-served one request — a huge head request is delayed
+        proportionally to its size, never starved.
+        """
+        active = [t for t in self._tenants.values() if t.queue]
+        if not active:
+            return []
+        total_quota = sum(t.cfg.quota for t in active)
+        taken: list[_Request] = []
+        for t in active:
+            t.deficit += self.round_blocks * t.cfg.quota / total_quota
+            while t.queue and t.queue[0].nblocks <= t.deficit:
+                req = t.queue.popleft()
+                t.deficit -= req.nblocks
+                taken.append(req)
+            if not t.queue:
+                t.deficit = 0.0
+        if not taken:
+            t = max(active, key=lambda t: t.deficit / t.cfg.quota)
+            taken.append(t.queue.popleft())
+            t.deficit = 0.0
+        self.rounds += 1
+        return taken
+
+    def _solve_round(self, round_reqs: list[_Request]) -> None:
+        """Submit one round to the inner service, flush once, resolve.
+
+        Runs on the single drain thread — the only caller of the inner
+        service — so cross-round ordering is deterministic and per-request
+        cache/dedup attribution (stat deltas around each submit) is exact.
+        """
+        inner = self.service
+        submitted: list[tuple[_Request, object]] = []
+        for req in round_reqs:
+            hits0 = inner.stats.cache_hits
+            dups0 = inner.stats.dedup_hits
+            try:
+                handle = inner.submit(
+                    f"{req.tenant.name}:{req.name}", req.blocks,
+                    PatternSpec.parse(req.pattern), journal=req.journal,
+                )
+            except Exception as e:  # noqa: BLE001 — fail one, not the round
+                req.fail(f"{type(e).__name__}: {e}")
+                continue
+            finally:
+                req.blocks = None  # the queue holds no payloads past here
+            if inner.stats.cache_hits > hits0:
+                req.cached = True
+                req.tenant.cache_hits += 1
+            elif inner.stats.dedup_hits > dups0:
+                req.tenant.dedup_hits += 1
+            submitted.append((req, handle))
+        if not submitted:
+            return
+        try:
+            inner.flush()
+        except Exception as e:  # noqa: BLE001 — surface on every waiter
+            for req, _ in submitted:
+                req.fail(f"{type(e).__name__}: {e}")
+            return
+        now = time.monotonic()
+        with self._cv:
+            for req, handle in submitted:
+                req.words = handle.words()
+                req.solved_at = now
+                req.tenant.resolved += 1
+                req.tenant.queue_seconds += now - req.enqueued_at
+                req.event.set()
+
+    # -- observability ------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Json-ready snapshot: inner service counters + per-tenant rows."""
+        s = self.service.stats
+        return {
+            "server": SERVER_NAME,
+            "uptime_seconds": (
+                time.monotonic() - self._started_at if self._started_at
+                else 0.0
+            ),
+            "rounds": self.rounds,
+            "service": {
+                "submitted": s.submitted,
+                "cache_hits": s.cache_hits,
+                "dedup_hits": s.dedup_hits,
+                "cache_skips": s.cache_skips,
+                "cache_evictions": s.cache_evictions,
+                "blocks_solved": s.blocks_solved,
+                "batches": s.batches,
+                "solve_seconds": s.solve_seconds,
+            },
+            "tenants": {
+                name: t.stats() for name, t in sorted(self._tenants.items())
+            },
+        }

@@ -1,0 +1,123 @@
+"""Length-prefixed frame codec for the mask-service wire protocol.
+
+Stdlib only (the deployment constraint: a mask server must not drag the
+training stack's dependency set onto an ops box).  A frame is::
+
+    uint32 BE  frame_len                  # bytes that follow, <= MAX_FRAME
+    uint32 BE  header_len
+    bytes      header                     # UTF-8 JSON object
+    bytes      blob_0 | blob_1 | ...      # raw ndarray payloads, contiguous
+
+The header describes the operation plus every blob's dtype and shape under
+the reserved ``"blobs"`` key (``[[dtype_str, [dims...]], ...]``), so the
+receiver can reassemble the arrays with zero copies beyond the socket read.
+Masks travel as the service's native bit-packed uint32 row words (32x
+smaller than bool block masks); score/weight tensors travel as the float32
+``|W|`` block streams the solver consumes — the exact bytes the content
+cache hashes, which is what makes a remote submit share cache entries with
+an in-process one.
+
+The codec is symmetric (client and server use the same two functions) and
+framing errors fail loudly: a length prefix beyond :data:`MAX_FRAME` or a
+short read mid-frame raises :class:`WireError` rather than desynchronizing
+the stream.
+"""
+from __future__ import annotations
+
+import json
+import socket
+import struct
+from typing import Optional, Sequence
+
+import numpy as np
+
+PROTO_VERSION = 1
+MAX_FRAME = 1 << 30  # 1 GiB: no single tensor the repo handles comes close
+_U32 = struct.Struct(">I")
+
+
+class WireError(RuntimeError):
+    """Framing/protocol violation — the connection is unusable afterwards."""
+
+
+def _recv_exact(sock: socket.socket, n: int) -> Optional[bytes]:
+    """Read exactly ``n`` bytes; None on clean EOF at a frame boundary."""
+    if n == 0:
+        return b""
+    chunks, got = [], 0
+    while got < n:
+        chunk = sock.recv(min(n - got, 1 << 20))
+        if not chunk:
+            if got == 0:
+                return None  # peer closed between frames: normal shutdown
+            raise WireError(f"connection closed mid-frame ({got}/{n} bytes)")
+        chunks.append(chunk)
+        got += len(chunk)
+    return b"".join(chunks)
+
+
+def send_frame(sock: socket.socket, header: dict,
+               blobs: Sequence[np.ndarray] = ()) -> None:
+    """Serialize ``header`` + ``blobs`` as one frame and send it."""
+    arrays = [np.ascontiguousarray(b) for b in blobs]
+    header = dict(header)
+    header["blobs"] = [[a.dtype.str, list(a.shape)] for a in arrays]
+    hbytes = json.dumps(header, separators=(",", ":")).encode()
+    payload_len = _U32.size + len(hbytes) + sum(a.nbytes for a in arrays)
+    if payload_len > MAX_FRAME:
+        raise WireError(f"frame of {payload_len} bytes exceeds MAX_FRAME")
+    parts = [_U32.pack(payload_len), _U32.pack(len(hbytes)), hbytes]
+    parts.extend(a.tobytes() for a in arrays)
+    sock.sendall(b"".join(parts))
+
+
+def recv_frame(
+    sock: socket.socket,
+) -> Optional[tuple[dict, list[np.ndarray]]]:
+    """Receive one frame; returns ``(header, blobs)`` or None on clean EOF."""
+    prefix = _recv_exact(sock, _U32.size)
+    if prefix is None:
+        return None
+    (payload_len,) = _U32.unpack(prefix)
+    if payload_len > MAX_FRAME or payload_len < _U32.size:
+        raise WireError(f"bad frame length {payload_len}")
+    payload = _recv_exact(sock, payload_len)
+    if payload is None:
+        raise WireError("connection closed before frame payload")
+    (header_len,) = _U32.unpack(payload[: _U32.size])
+    body_start = _U32.size + header_len
+    if body_start > len(payload):
+        raise WireError(f"header length {header_len} overruns frame")
+    try:
+        header = json.loads(payload[_U32.size : body_start].decode())
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise WireError(f"undecodable frame header: {e}") from e
+    if not isinstance(header, dict):
+        raise WireError("frame header is not a JSON object")
+    blobs: list[np.ndarray] = []
+    off = body_start
+    for dtype_str, shape in header.pop("blobs", []):
+        dt = np.dtype(dtype_str)
+        count = int(np.prod(shape, dtype=np.int64)) if shape else 1
+        nbytes = dt.itemsize * count
+        if off + nbytes > len(payload):
+            raise WireError("blob overruns frame payload")
+        blobs.append(
+            np.frombuffer(payload, dtype=dt, count=count, offset=off)
+            .reshape(shape)
+            .copy()  # detach from the frame buffer
+        )
+        off += nbytes
+    if off != len(payload):
+        raise WireError(f"{len(payload) - off} trailing bytes in frame")
+    return header, blobs
+
+
+def request(sock: socket.socket, header: dict,
+            blobs: Sequence[np.ndarray] = ()) -> tuple[dict, list[np.ndarray]]:
+    """One strict request/response exchange (the client's only pattern)."""
+    send_frame(sock, header, blobs)
+    reply = recv_frame(sock)
+    if reply is None:
+        raise WireError("server closed the connection mid-request")
+    return reply

@@ -1,0 +1,514 @@
+"""repro.service.net: wire codec, MaskServer scheduling, MaskClient drop-in.
+
+The PR contract: a ``MaskClient`` pointed at a live ``MaskServer`` is a
+drop-in for ``MaskService`` everywhere the repo consumes the service seam —
+``prune_transformer(service=...)``, the solve-plan lockstep driver, the DST
+refresh controller — and the masks that come back are *bit-identical* to an
+in-process solve under the same SolverConfig.  Multi-tenant behavior
+(weighted scheduling, shared cache tier, rate limits) is covered white-box
+here and under load in ``benchmarks/service_load.py``.
+"""
+import socket
+import threading
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.solver import SolverConfig
+from repro.patterns import PatternSpec
+from repro.service import BucketPolicy, MaskService
+from repro.service.net import (
+    MaskClient,
+    MaskServer,
+    RemoteError,
+    TenantConfig,
+    TokenBucket,
+    WireError,
+    wire,
+)
+from repro.service.net.server import _Request, _Tenant
+
+FAST = SolverConfig(iters=60)
+TINY = BucketPolicy(base=8, growth=2, max_bucket=32)
+
+
+# ---------------------------------------------------------------------------
+# Wire codec.
+# ---------------------------------------------------------------------------
+
+
+def _sock_pair():
+    a, b = socket.socketpair()
+    return a, b
+
+
+def test_frame_round_trip_header_and_blobs():
+    a, b = _sock_pair()
+    blobs = [
+        np.arange(12, dtype=np.float32).reshape(3, 4),
+        np.array([[7, 9]], dtype=np.uint32),
+        np.zeros((0, 8), np.float32),  # empty blob survives
+    ]
+    wire.send_frame(a, {"op": "submit", "reqs": [{"id": "x"}]}, blobs)
+    header, got = wire.recv_frame(b)
+    assert header == {"op": "submit", "reqs": [{"id": "x"}]}  # blobs key eaten
+    assert len(got) == 3
+    for want, have in zip(blobs, got):
+        assert have.dtype == want.dtype and have.shape == want.shape
+        np.testing.assert_array_equal(have, want)
+    a.close()
+    assert wire.recv_frame(b) is None  # clean EOF at frame boundary
+    b.close()
+
+
+def test_frame_errors_fail_loudly():
+    a, b = _sock_pair()
+    a.sendall(b"\xff\xff\xff\xff")  # length prefix past MAX_FRAME
+    with pytest.raises(WireError):
+        wire.recv_frame(b)
+    a.close()
+    b.close()
+
+    a, b = _sock_pair()
+    wire.send_frame(a, {"op": "ping"})
+    payload = b.recv(1 << 16)
+    a.close()
+    b.close()
+    a, b = _sock_pair()
+    a.sendall(payload[: len(payload) - 2])  # truncated mid-frame
+    a.close()
+    with pytest.raises(WireError):
+        wire.recv_frame(b)
+    b.close()
+
+
+def test_frame_rejects_non_object_header():
+    a, b = _sock_pair()
+    import json
+    import struct
+
+    hbytes = json.dumps([1, 2]).encode()
+    payload = struct.pack(">I", len(hbytes)) + hbytes
+    a.sendall(struct.pack(">I", len(payload)) + payload)
+    with pytest.raises(WireError):
+        wire.recv_frame(b)
+    a.close()
+    b.close()
+
+
+# ---------------------------------------------------------------------------
+# Server + client round trips (one live server per module).
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def server():
+    srv = MaskServer(
+        MaskService(FAST, policy=TINY),
+        batch_window_s=0.001,
+        tenants={"limited": TenantConfig(quota=1.0, rate=200.0, burst=8.0)},
+    )
+    with srv:
+        yield srv
+
+
+@pytest.fixture()
+def client(server):
+    with MaskClient(server.address, tenant="tests") as c:
+        yield c
+
+
+def test_hello_advertises_solver_config(client):
+    assert client.config == FAST
+    assert client.server_name and client.quota == 1.0
+    assert client.ping()
+
+
+def test_remote_solve_bit_identical_mixed_shapes(client):
+    """The acceptance gate: remote masks == in-process masks at tol=0,
+    across shapes that pad, stack, and span buckets."""
+    local = MaskService(FAST, policy=TINY)
+    rng = np.random.default_rng(0)
+    tensors = {
+        "big": rng.normal(size=(64, 48)).astype(np.float32),
+        "pad_both": rng.normal(size=(20, 12)).astype(np.float32),
+        "stacked": rng.normal(size=(3, 16, 16)).astype(np.float32),
+        "tiny": rng.normal(size=(4, 4)).astype(np.float32),
+    }
+    for spec in (PatternSpec(4, 8), PatternSpec(2, 4)):
+        handles = {k: client.submit(f"{spec.n}:{k}", v, spec)
+                   for k, v in tensors.items()}
+        client.flush()
+        for k, v in tensors.items():
+            want = np.array(local.solve(v, spec))
+            got = np.array(handles[k].result())
+            assert got.shape == v.shape
+            np.testing.assert_array_equal(got, want), (spec, k)
+            assert handles[k].server_latency_s is not None
+
+
+def test_client_local_cache_and_dedup(server):
+    rng = np.random.default_rng(1)
+    w = rng.normal(size=(16, 16)).astype(np.float32)
+    with MaskClient(server.address, tenant="tests-dedup") as c:
+        h1 = c.submit("a", w, PatternSpec(4, 8))
+        h2 = c.submit("b", w, PatternSpec(4, 8))  # identical, in flight
+        assert c.stats.dedup_hits == 1
+        c.flush()
+        np.testing.assert_array_equal(np.array(h1.result()),
+                                      np.array(h2.result()))
+        h3 = c.submit("c", w, PatternSpec(4, 8))  # identical, post-flush
+        assert h3.done and c.stats.cache_hits == 1  # never hit the wire
+        assert c.stats.submitted == 3
+
+
+def test_submit_many_and_results(client):
+    rng = np.random.default_rng(2)
+    items = [(f"t{i}", rng.normal(size=(8, 8)).astype(np.float32))
+             for i in range(4)]
+    handles = client.submit_many(items, PatternSpec(4, 8))
+    masks = client.results(handles)
+    local = MaskService(FAST, policy=TINY)
+    for (name, w), mask in zip(items, masks):
+        np.testing.assert_array_equal(np.array(mask),
+                                      np.array(local.solve(w, "t4:8")))
+
+
+def test_flush_async_ticket(client):
+    rng = np.random.default_rng(3)
+    h = client.submit("async", rng.normal(size=(16, 8)).astype(np.float32),
+                      PatternSpec(4, 8))
+    ticket = client.flush_async()
+    assert ticket.wait(timeout=120)
+    assert h.done
+
+
+def test_results_rejects_foreign_handles(server, client):
+    local = MaskService(FAST, policy=TINY)
+    h = local.submit("w", np.ones((8, 8), np.float32), PatternSpec(4, 8))
+    with pytest.raises(ValueError, match="different MaskService"):
+        client.results([h])
+
+
+def test_non_transposable_pattern_rejected_client_side(client):
+    with pytest.raises(ValueError, match="transposable"):
+        client.submit("w", np.ones((8, 8), np.float32), PatternSpec(4, 8, False))
+
+
+def test_two_tenants_share_the_cache_tier(server):
+    """Tenant B's first submit of content tenant A already solved is a
+    server-side cache hit — the shared-tier guarantee of the issue."""
+    rng = np.random.default_rng(4)
+    w = rng.normal(size=(24, 16)).astype(np.float32)
+    with MaskClient(server.address, tenant="share-a") as ca:
+        ma = np.array(ca.solve(w, "t4:8"))
+    with MaskClient(server.address, tenant="share-b") as cb:
+        h = cb.submit("same-content", w, PatternSpec(4, 8))
+        cb.flush()
+        np.testing.assert_array_equal(np.array(h.result()), ma)
+        assert h.server_cached is True
+        rows = cb.server_stats()["tenants"]
+        assert rows["share-b"]["cache_hits"] == 1
+        assert rows["share-a"]["cache_hits"] == 0
+
+
+def test_server_stats_snapshot(client):
+    client.solve(np.random.default_rng(5).normal(size=(8, 8))
+                 .astype(np.float32), "t4:8")
+    stats = client.server_stats()
+    assert stats["service"]["blocks_solved"] >= 1
+    assert stats["rounds"] >= 1
+    assert "tests" in stats["tenants"]
+
+
+def test_rate_limited_tenant_backpressures(server):
+    """A tenant over its blocks/sec budget blocks in submit (token bucket)
+    rather than flooding the queue."""
+    rng = np.random.default_rng(6)
+    with MaskClient(server.address, tenant="limited") as c:
+        # burst=8 funds the first submits; rate=200 blocks/s meters refills.
+        t0 = time.monotonic()
+        for i in range(3):
+            w = rng.normal(size=(16, 32)).astype(np.float32)  # 8 blocks @ M=8
+            c.submit(f"r{i}", w, PatternSpec(4, 8))
+        elapsed = time.monotonic() - t0
+        c.flush()
+    # 24 blocks at 200 blocks/s with an 8-block burst: >= ~0.04s of
+    # enforced waiting (generous floor to stay timing-robust).
+    assert elapsed > 0.03
+
+
+def test_token_bucket_unit():
+    tb = TokenBucket(rate=1000.0, burst=10.0)
+    assert tb.acquire(10.0)  # burst funds it instantly
+    t0 = time.monotonic()
+    assert tb.acquire(5.0)  # must wait ~5ms for refill
+    assert time.monotonic() - t0 < 1.0
+    assert not tb.acquire(5.0, timeout=0.0)  # empty bucket + no wait
+    big = TokenBucket(rate=1e6, burst=4.0)
+    assert big.acquire(100.0)  # > burst: admitted via debt, not deadlock
+    assert big._tokens < 0
+
+
+def test_tenant_config_validation():
+    with pytest.raises(ValueError, match="quota"):
+        TenantConfig(quota=0)
+    with pytest.raises(ValueError, match="rate"):
+        TenantConfig(rate=-1)
+
+
+def test_strict_tenants_reject_unknown():
+    with MaskServer(MaskService(FAST, policy=TINY),
+                    tenants={"known": TenantConfig()},
+                    strict_tenants=True) as srv:
+        with pytest.raises(RemoteError, match="unknown tenant"):
+            MaskClient(srv.address, tenant="stranger")
+        c = MaskClient(srv.address, tenant="known")
+        assert c.ping()
+        c.close()
+
+
+def test_raw_protocol_errors(server):
+    """Ops before hello, unknown ops, and bad submits get error replies —
+    the connection survives (strict request/response framing)."""
+    sock = socket.create_connection((server.host, server.port), timeout=10)
+    try:
+        reply, _ = wire.request(sock, {"op": "submit", "reqs": []})
+        assert not reply["ok"] and "hello" in reply["error"]
+        reply, _ = wire.request(sock, {"op": "nope"})
+        assert not reply["ok"]
+        reply, _ = wire.request(
+            sock, {"op": "hello", "proto": wire.PROTO_VERSION, "tenant": "raw"}
+        )
+        assert reply["ok"]
+        # wrong blob shape for the declared pattern
+        reply, _ = wire.request(
+            sock,
+            {"op": "submit",
+             "reqs": [{"id": "1", "name": "w", "pattern": "t4:8"}]},
+            [np.zeros((2, 4, 4), np.float32)],
+        )
+        assert not reply["ok"] and "block" in reply["error"]
+        # waiting on an id that was never submitted
+        reply, _ = wire.request(sock, {"op": "wait", "ids": ["ghost"]})
+        assert not reply["ok"] and "unknown request ids" in reply["error"]
+        # protocol version mismatch is rejected at hello
+        reply, _ = wire.request(sock, {"op": "hello", "proto": 999,
+                                       "tenant": "raw"})
+        assert not reply["ok"] and "protocol mismatch" in reply["error"]
+    finally:
+        sock.close()
+
+
+def test_shutdown_op_and_pending_failure():
+    srv = MaskServer(MaskService(FAST, policy=TINY)).start()
+    c = MaskClient(srv.address, tenant="t")
+    assert c.ping()
+    c.shutdown_server()
+    deadline = time.monotonic() + 10
+    while srv._running and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert not srv._running
+    c.close()
+
+
+# ---------------------------------------------------------------------------
+# Deficit round-robin scheduling (white-box).
+# ---------------------------------------------------------------------------
+
+
+def _mk_tenant(name, quota, nblocks_list, round_blocks=32):
+    t = _Tenant(name, TenantConfig(quota=quota), round_blocks)
+    for i, nb in enumerate(nblocks_list):
+        t.queue.append(_Request(
+            f"{name}-{i}", f"{name}-{i}", "t4:8", False,
+            np.zeros((nb, 8, 8), np.float32), t,
+        ))
+    return t
+
+
+def test_take_round_splits_by_quota():
+    srv = MaskServer(MaskService(FAST), round_blocks=32)
+    a = _mk_tenant("a", 3.0, [8] * 12)
+    b = _mk_tenant("b", 1.0, [8] * 12)
+    srv._tenants = {"a": a, "b": b}
+    taken = srv._take_round()
+    by = {"a": 0, "b": 0}
+    for r in taken:
+        by[r.tenant.name] += r.nblocks
+    assert by["a"] == 24 and by["b"] == 8  # 3:1 quota split of 32 blocks
+
+
+def test_take_round_forces_progress_on_oversized_head():
+    """A request bigger than round_blocks still gets served (credit
+    accrues across rounds; force-pop breaks the deadlock)."""
+    srv = MaskServer(MaskService(FAST), round_blocks=8)
+    a = _mk_tenant("a", 1.0, [100], round_blocks=8)
+    srv._tenants = {"a": a}
+    taken = srv._take_round()
+    assert len(taken) == 1 and taken[0].nblocks == 100
+    assert a.deficit == 0.0
+
+
+def test_take_round_no_starvation_under_skew():
+    """A heavy tenant flooding the queue cannot starve a light one: the
+    light tenant appears in every round."""
+    srv = MaskServer(MaskService(FAST), round_blocks=16)
+    heavy = _mk_tenant("heavy", 1.0, [4] * 64, round_blocks=16)
+    light = _mk_tenant("light", 1.0, [4] * 8, round_blocks=16)
+    srv._tenants = {"heavy": heavy, "light": light}
+    rounds_with_light = 0
+    while light.queue:
+        taken = srv._take_round()
+        assert taken
+        if any(r.tenant.name == "light" for r in taken):
+            rounds_with_light += 1
+    assert rounds_with_light >= 4  # served steadily, not in one late burst
+
+
+def test_idle_tenant_does_not_bank_credit():
+    srv = MaskServer(MaskService(FAST), round_blocks=32)
+    a = _mk_tenant("a", 1.0, [8])
+    srv._tenants = {"a": a}
+    srv._take_round()
+    assert a.deficit == 0.0  # drained queue resets credit
+
+
+# ---------------------------------------------------------------------------
+# Drop-in: the three service consumers against a live server.
+# ---------------------------------------------------------------------------
+
+
+def _tiny_lm():
+    from repro.models.config import ModelConfig
+    from repro.models import lm
+
+    cfg = ModelConfig("net-test", "dense", num_layers=2, d_model=32,
+                      num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=64,
+                      remat="none", dtype="float32")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jnp.asarray(
+        np.random.default_rng(7).integers(0, 64, size=(2, 16)))
+    return cfg, params, tokens
+
+
+def test_prune_transformer_against_live_server(server):
+    """End-to-end acceptance: a full layer-wise prune through the wire,
+    bit-identical to the same prune on a local service."""
+    from repro.pruning.runner import prune_transformer
+
+    cfg, params, tokens = _tiny_lm()
+    kw = dict(tokens=tokens, method="wanda", pattern=PatternSpec(2, 4),
+              solver=FAST)
+    with MaskClient(server.address, tenant="prune-job") as c:
+        pruned_r, masks_r = prune_transformer(params, cfg, service=c, **kw)
+        assert c.stats.submitted > 0
+    pruned_l, masks_l = prune_transformer(
+        params, cfg, service=MaskService(FAST, policy=TINY), **kw)
+    for a, b in zip(jax.tree.leaves(masks_r), jax.tree.leaves(masks_l)):
+        np.testing.assert_array_equal(np.array(a), np.array(b))
+    for a, b in zip(jax.tree.leaves(pruned_r), jax.tree.leaves(pruned_l)):
+        np.testing.assert_array_equal(np.array(a), np.array(b))
+
+
+def test_solve_plan_driver_against_live_server(server):
+    """SparseGPT's lockstep solve-plan driver duck-types the service; a
+    MaskClient satisfies it and reproduces the inline masks exactly."""
+    from repro.pruning.calib import gram_matrix
+    from repro.pruning.sparsegpt import sparsegpt_prune
+
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.normal(size=(128, 32)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(32, 48)).astype(np.float32))
+    h = gram_matrix(x)
+    spec = PatternSpec(4, 8)
+    wi, mi = sparsegpt_prune(w, h, spec, config=FAST, solve_via="inline")
+    with MaskClient(server.address, tenant="plan-job") as c:
+        ws, ms = sparsegpt_prune(w, h, spec, config=FAST,
+                                 solve_via="service", service=c)
+        assert c.stats.submitted == w.shape[0] // spec.m
+    np.testing.assert_array_equal(np.array(mi), np.array(ms))
+    np.testing.assert_array_equal(np.array(wi), np.array(ws))
+
+
+def test_dst_refresh_controller_against_live_server(server):
+    """The async DST refresh path — submit at s-k, train on, swap at s —
+    runs against a remote solver with identical swap telemetry."""
+    from repro.data import SyntheticLM
+    from repro.dst import MaskRefreshController, decaying_nm
+    from repro.optim import AdamW
+    from repro.sparsity.masks import sparsify_pytree, apply_mask
+    from repro.sparsity.params import compress_params, projection_prunable
+    from repro.train import build_train_step, make_train_state
+    from repro.train.step import StepConfig
+    from repro.models.config import ModelConfig
+    from repro.models import lm
+
+    cfg = ModelConfig("dst-net", "dense", num_layers=2, d_model=64,
+                      num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=64,
+                      remat="none", dtype="float32")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    pattern = PatternSpec(24, 32)
+    masks = sparsify_pytree(params, pattern, config=FAST,
+                            prunable=projection_prunable)
+    sp = compress_params(apply_mask(params, masks), masks, pattern)
+    sched = decaying_nm(32, 24, 16, total_steps=8, stages=3)
+    with MaskClient(server.address, tenant="dst-job") as c:
+        ctrl = MaskRefreshController(sched, service=c, mode="async",
+                                     lookahead=2)
+        opt = AdamW(learning_rate=1e-3, clip_norm=0.0)
+        state = make_train_state(cfg, opt, jax.random.PRNGKey(1), params=sp)
+        step = build_train_step(
+            cfg, opt,
+            step_cfg=StepConfig(mask_mode="compressed", refresh=ctrl),
+            donate=False)
+        data = SyntheticLM(cfg.vocab_size, 16, 2)
+        losses = []
+        for i in range(10):
+            state, m = step(state, {
+                k: jnp.asarray(v) for k, v in data.batch(i).items()})
+            losses.append(float(m["loss"]))
+        assert len(ctrl.events) == 2
+        assert [e.pattern for e in ctrl.events] == ["t20:32", "t16:32"]
+        assert state.params["blocks"]["attn"]["wq"].n == 16
+        assert np.isfinite(losses).all()
+        tel = ctrl.telemetry()
+        assert tel["refreshes"] == 2
+        assert tel["service"]["submitted"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Concurrency: many threads, one client.
+# ---------------------------------------------------------------------------
+
+
+def test_concurrent_client_submits_one_flush(server):
+    rng = np.random.default_rng(9)
+    tensors = [rng.normal(size=(16, 16)).astype(np.float32)
+               for _ in range(12)]
+    local = MaskService(FAST, policy=TINY)
+    want = [np.array(local.solve(w, "t4:8")) for w in tensors]
+    with MaskClient(server.address, tenant="threads") as c:
+        handles = [None] * len(tensors)
+        errors = []
+
+        def submit(i):
+            try:
+                handles[i] = c.submit(f"w{i}", tensors[i], PatternSpec(4, 8))
+            except Exception as e:  # noqa: BLE001
+                errors.append(e)
+
+        threads = [threading.Thread(target=submit, args=(i,))
+                   for i in range(len(tensors))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors
+        c.flush()
+        for h, m in zip(handles, want):
+            np.testing.assert_array_equal(np.array(h.result()), m)
+        assert c.stats.submitted == len(tensors)

@@ -316,3 +316,208 @@ def test_nm_mask_tie_break_partial_duplicates():
     mask = np.array(nm_mask(jnp.asarray(w), 2, 4, axis=0))
     assert (mask.sum(0) == 2).all()
     assert mask[0, 0] and mask[0, 2]  # strict max always kept
+
+
+# ---------------------------------------------------------------------------
+# Size-aware cache admission (disk tier skips entries cheaper to re-solve).
+# ---------------------------------------------------------------------------
+
+
+def test_cache_admission_pinned_floor_skips_small_entries(tmp_path):
+    svc = MaskService(FAST, policy=TINY, directory=str(tmp_path),
+                      cache_min_blocks=3)
+    rng = np.random.default_rng(20)
+    small = rng.normal(size=(8, 16)).astype(np.float32)   # 2 blocks @ M=8
+    big = rng.normal(size=(32, 32)).astype(np.float32)    # 16 blocks
+    m_small = np.array(svc.solve(small, "t4:8", name="small"))
+    m_big = np.array(svc.solve(big, "t4:8", name="big"))
+    assert svc.stats.cache_skips == 1
+    assert "cache_skips=1" in svc.stats.summary()
+    assert len(svc.cache.store.keys()) == 1  # only the big entry persisted
+
+    # The memory front still caches the skipped entry within this process.
+    solved = svc.stats.blocks_solved
+    np.testing.assert_array_equal(
+        np.array(svc.solve(small, "t4:8", name="small2")), m_small)
+    assert svc.stats.blocks_solved == solved and svc.stats.cache_hits == 1
+
+    # A fresh service on the same dir re-solves small, reads big from disk.
+    svc2 = MaskService(FAST, policy=TINY, directory=str(tmp_path),
+                       cache_min_blocks=3)
+    np.testing.assert_array_equal(
+        np.array(svc2.solve(big, "t4:8", name="big")), m_big)
+    assert svc2.cache.disk_hits == 1 and svc2.stats.blocks_solved == 0
+    np.testing.assert_array_equal(
+        np.array(svc2.solve(small, "t4:8", name="small")), m_small)
+    assert svc2.stats.blocks_solved == 2  # re-solved, as designed
+
+
+def test_cache_admission_zero_floor_admits_everything(tmp_path):
+    svc = MaskService(FAST, policy=TINY, directory=str(tmp_path),
+                      cache_min_blocks=0)
+    svc.solve(np.random.default_rng(21).normal(size=(8, 8))
+              .astype(np.float32), "t4:8", name="w")
+    assert svc.stats.cache_skips == 0
+    assert len(svc.cache.store.keys()) == 1
+
+
+def test_cache_admission_auto_floor_derives_from_observed_rates(tmp_path):
+    svc = MaskService(FAST, policy=TINY, directory=str(tmp_path))
+    # No observations yet -> floor 0 (admit everything).
+    assert svc.cache_admission_min_blocks() == 0
+    # Fabricate observed rates: 1000 blocks/s solve, 50 ms per store read
+    # -> entries under 50 blocks are cheaper to re-solve than to read back.
+    svc.stats.solve_seconds = 2.0
+    svc.stats.stream.blocks_solved = 2000
+    svc.cache.read_seconds = 0.1
+    svc.cache.disk_reads = 2
+    assert svc.cache_admission_min_blocks() == 50
+    # Explicit floor overrides the derivation.
+    svc.cache_min_blocks = 7
+    assert svc.cache_admission_min_blocks() == 7
+
+
+# ---------------------------------------------------------------------------
+# ContentStore under concurrent processes sharing a cache directory.
+# ---------------------------------------------------------------------------
+
+
+def test_store_get_or_none_tolerates_eviction_mid_read(tmp_path):
+    import os
+
+    from repro.checkpoint import ContentStore
+
+    store = ContentStore(str(tmp_path))
+    store.put("k", w=np.ones(4, np.float32))
+    assert store.get_or_none("missing") is None
+    # Evict between has() and the read — the exact race prune() creates.
+    assert store.has("k")
+    os.remove(store.path("k"))
+    assert store.get_or_none("k") is None
+
+
+def test_store_readers_race_pruner_without_errors(tmp_path):
+    """One thread reads/writes while another prunes to zero bytes: every
+    get_or_none returns a valid payload or None, never raises."""
+    import threading
+
+    from repro.checkpoint import ContentStore
+
+    store = ContentStore(str(tmp_path))
+    stop = threading.Event()
+    errors = []
+
+    def reader():
+        i = 0
+        try:
+            while not stop.is_set():
+                key = f"k{i % 8}"
+                store.put(key, w=np.full(64, i, np.float32))
+                data = store.get_or_none(key)
+                assert data is None or data["w"].shape == (64,)
+                i += 1
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+
+    def pruner():
+        try:
+            while not stop.is_set():
+                store.prune(0)
+                store.size_bytes()
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=reader),
+               threading.Thread(target=pruner)]
+    for t in threads:
+        t.start()
+    import time
+
+    time.sleep(1.0)
+    stop.set()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+
+
+def test_cache_get_packed_miss_on_foreign_payload(tmp_path):
+    """A store entry under our key with someone else's schema is a miss,
+    not a crash (shared volumes can hold other producers' entries)."""
+    from repro.checkpoint import ContentStore
+    from repro.service import MaskCache
+
+    store = ContentStore(str(tmp_path))
+    store.put("weird", not_mask_data=np.ones(3))
+    cache = MaskCache(store)
+    assert cache.get_packed("weird") is None
+    assert cache.misses == 1
+
+
+# ---------------------------------------------------------------------------
+# Thread-safety: concurrent submit / flush_async / results (satellite).
+# ---------------------------------------------------------------------------
+
+
+def test_concurrent_submit_and_flush_stress():
+    """Hammer one service from many threads mixing submit, flush,
+    flush_async and results: every handle resolves to the right mask, no
+    submission is lost, nothing is solved twice.
+
+    The counter invariant is the tight one: submitted - cache_hits -
+    dedup_hits == number of DISTINCT tensors, and blocks_solved equals the
+    distinct tensors' block count exactly (a double-solve would overshoot).
+    """
+    import threading
+
+    svc = MaskService(FAST, policy=TINY)
+    rng = np.random.default_rng(22)
+    distinct = [rng.normal(size=(16, 16)).astype(np.float32)
+                for _ in range(6)]
+    want = {
+        i: np.array(direct_mask(w, 4, 8)) for i, w in enumerate(distinct)
+    }
+    n_threads, per_thread = 8, 6
+    results, errors = {}, []
+    barrier = threading.Barrier(n_threads)
+
+    def worker(tid):
+        try:
+            barrier.wait()
+            handles = []
+            for j in range(per_thread):
+                i = (tid + j) % len(distinct)
+                handles.append(
+                    (i, svc.submit(f"t{tid}-{j}", distinct[i],
+                                   PatternSpec(4, 8))))
+                if j == 2:
+                    if tid % 3 == 0:
+                        svc.flush()
+                    elif tid % 3 == 1:
+                        svc.flush_async()
+            if tid % 2:
+                svc.flush()
+                out = [(i, np.array(h.result())) for i, h in handles]
+            else:
+                masks = svc.results([h for _, h in handles])
+                out = [(i, np.array(mk))
+                       for (i, _), mk in zip(handles, masks)]
+            results[tid] = out
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(tid,))
+               for tid in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    assert len(results) == n_threads
+    for tid, out in results.items():
+        assert len(out) == per_thread
+        for i, got in out:
+            np.testing.assert_array_equal(got, want[i]), (tid, i)
+    s = svc.stats
+    assert s.submitted == n_threads * per_thread
+    assert s.submitted - s.cache_hits - s.dedup_hits == len(distinct)
+    assert s.blocks_solved == len(distinct) * 4  # (16/8)^2 blocks each
