@@ -33,6 +33,15 @@ Checkpoint integration: ``state_dict()`` rides checkpoint metadata (see
 solve re-submits from the restored weights, and the MaskService content
 cache (same weights → same key) turns the re-solve into a hit whenever the
 restored state matches the snapshotted one.
+
+Failure tolerance: a refresh is an *optimization*, never a liveness
+dependency of the train loop.  When the solve fails or times out (a remote
+:class:`~repro.service.net.MaskClient` whose retry budget ran dry, a
+``refresh_timeout_s`` overrun), the swap is skipped — training continues
+under the old support, a ``failed`` :class:`RefreshEvent` records the root
+cause, and the refresh re-arms at the next cadence (the same descriptor
+mechanism checkpoint resume uses), up to ``max_refresh_retries`` before the
+stage's refresh is abandoned.  Nothing raises into the step loop.
 """
 from __future__ import annotations
 
@@ -61,13 +70,15 @@ class _Ticket:
     """One in-flight refresh: submitted handles + where/when they land."""
 
     def __init__(self, submit_step: int, swap_step: int, pattern: PatternSpec,
-                 handles: list, treedef, flush: Optional[FlushTicket]):
+                 handles: list, treedef, flush: Optional[FlushTicket],
+                 retries: int = 0):
         self.submit_step = submit_step
         self.swap_step = swap_step
         self.pattern = pattern
         self.handles = handles      # aligned with treedef; None at dense leaves
         self.treedef = treedef
         self.flush = flush          # None in sync mode (solved inline)
+        self.retries = retries      # failed attempts behind this refresh
 
 
 class MaskRefreshController:
@@ -88,6 +99,13 @@ class MaskRefreshController:
         at step ``s`` are solved from step ``s - k`` weights.
       mode: ``"async"`` or ``"sync"`` (see module docstring).
       log: line sink for per-refresh summaries.
+      refresh_timeout_s: cap on how long a due swap may block on its flush
+        ticket before the refresh counts as failed (old mask kept, retry
+        re-armed).  None (default) waits as long as the service does — the
+        right setting for an in-process service; set it when the service is
+        a remote client whose outage should cost bounded trainer time.
+      max_refresh_retries: failed attempts per refresh before the swap is
+        abandoned for good (the schedule moves on to its next stage).
     """
 
     def __init__(
@@ -98,6 +116,8 @@ class MaskRefreshController:
         lookahead: int = 10,
         mode: str = "async",
         log: Callable[[str], None] = lambda s: None,
+        refresh_timeout_s: Optional[float] = None,
+        max_refresh_retries: int = 3,
     ):
         if mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
@@ -106,9 +126,15 @@ class MaskRefreshController:
         self.schedule = schedule
         self.service = service if service is not None else \
             MaskService(solver if solver is not None else SolverConfig())
+        if refresh_timeout_s is not None and refresh_timeout_s <= 0:
+            raise ValueError(
+                f"refresh_timeout_s must be > 0, got {refresh_timeout_s}"
+            )
         self.lookahead = lookahead if mode == "async" else 0
         self.mode = mode
         self.log = log
+        self.refresh_timeout_s = refresh_timeout_s
+        self.max_refresh_retries = max_refresh_retries
         self.events: list[RefreshEvent] = []
         self._ticket: Optional[_Ticket] = None
         self._next_scan = 1  # swap step 0 is the initial compression
@@ -135,8 +161,9 @@ class MaskRefreshController:
     def _maybe_submit(self, step: int, state) -> None:
         if self._rearm is not None and self._ticket is None:
             d, self._rearm = self._rearm, None
-            self._submit(step, max(d["swap_step"], step),
-                         PatternSpec.parse(d["pattern"]), state)
+            self._try_submit(step, max(d["swap_step"], step),
+                             PatternSpec.parse(d["pattern"]), state,
+                             retries=int(d.get("retries", 0)))
         limit = step + self.lookahead
         s = self._next_scan
         while s <= limit:
@@ -144,14 +171,27 @@ class MaskRefreshController:
             if target is not None:
                 if self._ticket is not None:
                     break  # one refresh in flight at a time; retry next step
-                self._submit(step, s, target, state)
+                self._try_submit(step, s, target, state)
                 s += 1
                 break
             s += 1
         self._next_scan = s
 
+    def _try_submit(self, step: int, swap_step: int, pattern: PatternSpec,
+                    state, retries: int = 0) -> None:
+        """Arm a refresh; a submission that fails outright (e.g. a remote
+        client whose retry budget ran dry with no fallback) is recorded and
+        re-armed instead of raising into the train loop."""
+        try:
+            self._submit(step, swap_step, pattern, state, retries=retries)
+        except (OSError, RuntimeError) as e:
+            self._ticket = None
+            self._record_failure(step, swap_step, pattern, e, 0.0,
+                                 synchronous=self.mode == "sync",
+                                 submit_step=step, retries=retries)
+
     def _submit(self, step: int, swap_step: int, pattern: PatternSpec,
-                state) -> None:
+                state, retries: int = 0) -> None:
         params = state.params
         flat, treedef = jax.tree_util.tree_flatten_with_path(
             params, is_leaf=lambda x: isinstance(x, NMCompressed)
@@ -173,7 +213,7 @@ class MaskRefreshController:
         if self.mode == "async":
             flush = self.service.flush_async()
         self._ticket = _Ticket(step, swap_step, pattern, handles, treedef,
-                               flush)
+                               flush, retries=retries)
 
     # -- swap side -----------------------------------------------------------
 
@@ -182,12 +222,30 @@ class MaskRefreshController:
         if tk is None or step < tk.swap_step:
             return state
         t0 = time.perf_counter()
-        if tk.flush is not None:
-            tk.flush.wait()
-        else:
-            self.service.flush()
+        try:
+            if tk.flush is not None:
+                if not tk.flush.wait(timeout=self.refresh_timeout_s):
+                    raise TimeoutError(
+                        f"refresh flush still running after "
+                        f"refresh_timeout_s={self.refresh_timeout_s}"
+                    )
+            else:
+                self.service.flush()
+            masks_flat = [
+                None if h is None else h.result() for h in tk.handles
+            ]
+        except (OSError, RuntimeError) as e:
+            # The solve never landed (dead service past its retry budget,
+            # timeout, failed flush).  Keep training under the old support;
+            # the refresh re-arms at the next cadence.
+            self._ticket = None
+            self._record_failure(
+                step, tk.swap_step, tk.pattern, e,
+                time.perf_counter() - t0, synchronous=tk.flush is None,
+                submit_step=tk.submit_step, retries=tk.retries,
+            )
+            return state
         wait = time.perf_counter() - t0
-        masks_flat = [None if h is None else h.result() for h in tk.handles]
         masks = jax.tree_util.tree_unflatten(tk.treedef, masks_flat)
         new_params, flips = recompress(state.params, masks, tk.pattern)
         from repro.optim.adamw import remap_moments
@@ -211,6 +269,42 @@ class MaskRefreshController:
         return state._replace(params=new_params, opt_state=new_opt,
                               ef=new_ef)
 
+    def _record_failure(self, step: int, swap_step: int,
+                        pattern: PatternSpec, error: BaseException,
+                        wait: float, *, synchronous: bool, submit_step: int,
+                        retries: int) -> None:
+        """Record a failed refresh and re-arm it one cadence out (or abandon
+        past ``max_refresh_retries``).  The re-arm rides the same descriptor
+        checkpoint resume uses, so a run killed mid-outage resumes with its
+        pending retry intact."""
+        event = RefreshEvent(
+            submit_step=submit_step,
+            swap_step=swap_step,
+            pattern=pattern.canonical,
+            wait_seconds=wait,
+            synchronous=synchronous,
+            failed=True,
+            error=f"{type(error).__name__}: {error}",
+        ).finalize()
+        self.events.append(event)
+        self.log(f"[dst] {event.summary()}")
+        if retries < self.max_refresh_retries:
+            # Next cadence, never this step: swapping at <= step would make
+            # the second _maybe_swap of this very on_step block the trainer
+            # synchronously on a service that just failed.
+            self._rearm = {
+                "submit_step": submit_step,
+                "swap_step": step + max(1, self.lookahead),
+                "pattern": pattern.canonical,
+                "retries": retries + 1,
+            }
+        else:
+            self.log(
+                f"[dst] refresh {pattern.canonical} abandoned after "
+                f"{retries + 1} failed attempts; training continues under "
+                f"the old mask"
+            )
+
     # -- checkpoint integration ---------------------------------------------
 
     def state_dict(self) -> dict:
@@ -222,10 +316,11 @@ class MaskRefreshController:
             "mode": self.mode,
             "lookahead": self.lookahead,
             "next_scan": self._next_scan,
-            "inflight": None if tk is None else {
+            "inflight": self._rearm if tk is None else {
                 "submit_step": tk.submit_step,
                 "swap_step": tk.swap_step,
                 "pattern": tk.pattern.canonical,
+                "retries": tk.retries,
             },
             "events": [e.to_json() for e in self.events],
         }
@@ -265,6 +360,7 @@ class MaskRefreshController:
             "mode": self.mode,
             "lookahead": self.lookahead,
             "refreshes": len(self.events),
+            "failed_refreshes": sum(1 for e in self.events if e.failed),
             "stall_seconds": self.stall_seconds(),
             "events": [e.to_json() for e in self.events],
             "service": {

@@ -72,6 +72,8 @@ class RefreshEvent:
     wait_seconds: float = 0.0   # trainer time spent blocked on the flush
     solve_seconds: float = 0.0  # background wall-clock of the flush itself
     synchronous: bool = False   # sync mode: solved inline at swap_step
+    failed: bool = False        # refresh abandoned: trained on under old mask
+    error: Optional[str] = None  # root cause when failed
     flips: dict = dataclasses.field(default_factory=dict)  # path -> stats
     total: Optional[dict] = None  # aggregate_flips(flips)
 
@@ -87,6 +89,12 @@ class RefreshEvent:
         return cls(**d)
 
     def summary(self) -> str:
+        if self.failed:
+            return (
+                f"refresh@{self.swap_step} {self.pattern} FAILED "
+                f"(snapshot@{self.submit_step}): {self.error} "
+                f"— kept the old mask"
+            )
         tot = self.total or aggregate_flips(self.flips)
         return (
             f"refresh@{self.swap_step} {self.pattern} "

@@ -78,6 +78,18 @@ def build_server(argv: Optional[list[str]] = None) -> MaskServer:
                          "share one mega-batch")
     ap.add_argument("--no-remote-shutdown", action="store_true",
                     help="ignore the shutdown op (production setting)")
+    ap.add_argument("--max-queue-blocks", type=int, default=None,
+                    help="load-shed ceiling: reject submits once the queued "
+                         "backlog exceeds this many blocks (clients back "
+                         "off per the reply's retry_after hint)")
+    ap.add_argument("--request-deadline", type=float, default=None,
+                    metavar="SECONDS",
+                    help="fail queued requests older than this instead of "
+                         "solving them late (clients re-submit)")
+    ap.add_argument("--drain-grace", type=float, default=30.0,
+                    metavar="SECONDS",
+                    help="SIGTERM/SIGINT drain budget: finish in-flight "
+                         "work for up to this long before exiting")
     args = ap.parse_args(argv)
 
     solver_kwargs = {"iters": args.iters}
@@ -100,15 +112,23 @@ def build_server(argv: Optional[list[str]] = None) -> MaskServer:
         round_blocks=args.round_blocks,
         batch_window_s=args.batch_window_ms / 1e3,
         allow_remote_shutdown=not args.no_remote_shutdown,
+        max_queue_blocks=args.max_queue_blocks,
+        request_deadline_s=args.request_deadline,
+        drain_grace_s=args.drain_grace,
     )
 
 
 def main(argv: Optional[list[str]] = None) -> None:
     server = build_server(argv)
     server.start()
+    # SIGTERM/SIGINT drain gracefully: stop accepting, finish in-flight
+    # solves (bounded by --drain-grace), sync the journal, exit 0 — the
+    # contract a rolling restart relies on (docs/deploy.md).
+    server.install_signal_handlers()
     print(f"[serve-masks] listening on {server.address} "
           f"(config: {server.service.config})", flush=True)
     server.serve_forever()
+    print("[serve-masks] drained, exiting", flush=True)
 
 
 if __name__ == "__main__":

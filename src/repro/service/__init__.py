@@ -23,6 +23,7 @@ from repro.service.net import (  # noqa: E402
     MaskClient,
     MaskServer,
     RemoteError,
+    RetryPolicy,
     TenantConfig,
 )
 
@@ -36,6 +37,7 @@ __all__ = [
     "MaskServer",
     "MaskService",
     "RemoteError",
+    "RetryPolicy",
     "ServiceStats",
     "StreamStats",
     "TenantConfig",

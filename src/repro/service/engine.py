@@ -141,6 +141,12 @@ class ServiceStats:
     cache_evictions: int = 0  # disk entries GC'd by the cache_max_bytes bound
     cache_skips: int = 0  # entries not written to disk (cheaper to re-solve)
     solve_seconds: float = 0.0  # wall time inside solve_stream dispatches
+    # Client-side resilience counters (repro.service.net): zero and inert
+    # for an in-process service.
+    retries: int = 0  # wire requests retried after a transport failure
+    failovers: int = 0  # endpoint switches after a dead/rejecting endpoint
+    resubmitted: int = 0  # in-flight requests re-sent after a reconnect
+    degraded: bool = False  # fell back to a local in-process solver
     stream: StreamStats = dataclasses.field(default_factory=StreamStats)
 
     @property
@@ -161,9 +167,15 @@ class ServiceStats:
         )
         dedup = f" dedup_hits={self.dedup_hits}" if self.dedup_hits else ""
         skips = f" cache_skips={self.cache_skips}" if self.cache_skips else ""
+        resil = ""
+        if self.retries or self.failovers or self.degraded:
+            resil = (
+                f" retries={self.retries} failovers={self.failovers}"
+                f"{' DEGRADED' if self.degraded else ''}"
+            )
         return (
             f"submitted={self.submitted} cache_hits={self.cache_hits}"
-            f"{dedup}{skips}{evict} {self.stream.summary()}"
+            f"{dedup}{skips}{evict}{resil} {self.stream.summary()}"
         )
 
     def solve_blocks_per_sec(self) -> Optional[float]:

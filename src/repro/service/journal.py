@@ -15,9 +15,12 @@ atomic commits.
 from __future__ import annotations
 
 import json
+import logging
 import os
 import threading
 from typing import Optional
+
+logger = logging.getLogger(__name__)
 
 
 class Journal:
@@ -48,26 +51,64 @@ class Journal:
             return False
 
     def completed(self) -> dict[str, dict]:
-        """name -> record for every durably recorded tensor (last wins)."""
+        """name -> record for every durably recorded tensor (last wins).
+
+        Replay is crash-tolerant: a truncated *final* line (the partial
+        write of a kill mid-append/fsync) is skipped with a warning so
+        resume actually resumes — at most that one in-flight record is
+        re-solved.  A malformed line anywhere *else* means real corruption
+        (bit rot, concurrent writers without the lock); those are skipped
+        too, but warned per-line with their position so the loss is
+        visible instead of silently shrinking the resume set.
+        """
         if self._completed is None:
             out: dict[str, dict] = {}
             if os.path.exists(self.path):
                 with open(self.path) as f:
-                    for line in f:
-                        line = line.strip()
-                        if not line:
-                            continue
-                        try:
-                            rec = json.loads(line)
-                        except json.JSONDecodeError:
-                            continue  # torn tail from a mid-append crash
-                        if isinstance(rec, dict) and "name" in rec:
-                            out[rec["name"]] = rec
+                    lines = f.readlines()
+                for lineno, raw in enumerate(lines, start=1):
+                    line = raw.strip()
+                    if not line:
+                        continue
+                    try:
+                        rec = json.loads(line)
+                    except json.JSONDecodeError:
+                        if lineno == len(lines):
+                            logger.warning(
+                                "journal %s: skipping torn final record "
+                                "(crash mid-append); the in-flight tensor "
+                                "will re-solve", self.path,
+                            )
+                        else:
+                            logger.warning(
+                                "journal %s: skipping corrupt record at "
+                                "line %d (not valid JSON)", self.path, lineno,
+                            )
+                        continue
+                    if isinstance(rec, dict) and "name" in rec:
+                        out[rec["name"]] = rec
             self._completed = out
         return self._completed
 
     def lookup(self, name: str) -> Optional[dict]:
         return self.completed().get(name)
+
+    def sync(self) -> None:
+        """Force the journal durable (drain/shutdown belt-and-braces).
+
+        Every :meth:`record` already fsyncs, so this is normally a no-op —
+        it exists for the server's graceful-drain sequence, which must not
+        exit between a write and its fsync under any future buffering.
+        """
+        with self._lock:
+            try:
+                fd = os.open(self.path, os.O_RDONLY)
+            except OSError:
+                return  # nothing recorded yet
+            try:
+                os.fsync(fd)
+            finally:
+                os.close(fd)
 
     def record(self, name: str, key: str, **extra) -> None:
         rec = {"name": name, "key": key}

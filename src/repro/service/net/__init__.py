@@ -4,14 +4,30 @@ See ``docs/architecture.md`` ("Mask service over the network") for the wire
 format and tenant lifecycle, and ``docs/deploy.md`` for running a server.
 """
 from repro.service.net.client import MaskClient, RemoteError, RemoteHandle
-from repro.service.net.server import MaskServer, TenantConfig, TokenBucket
+from repro.service.net.faults import ChaosProxy
+from repro.service.net.resilience import (
+    NO_RETRY,
+    RetryBudgetExceeded,
+    RetryPolicy,
+)
+from repro.service.net.server import (
+    MaskServer,
+    RequestFailed,
+    TenantConfig,
+    TokenBucket,
+)
 from repro.service.net.wire import MAX_FRAME, PROTO_VERSION, WireError
 
 __all__ = [
+    "ChaosProxy",
     "MaskClient",
     "MaskServer",
+    "NO_RETRY",
     "RemoteError",
     "RemoteHandle",
+    "RequestFailed",
+    "RetryBudgetExceeded",
+    "RetryPolicy",
     "TenantConfig",
     "TokenBucket",
     "WireError",

@@ -1,4 +1,4 @@
-"""MaskClient: wire-compatible drop-in for :class:`MaskService`.
+"""MaskClient: wire-compatible, fault-tolerant drop-in for :class:`MaskService`.
 
 The client implements the same submit / submit_many / flush / flush_async /
 results / solve surface as the in-process engine, so every consumer of the
@@ -20,6 +20,29 @@ and in-process submits of the same tensor share one cache entry, and the
 mask that comes back (bit-packed uint32 row words, 32x smaller than bool)
 is the same array of bits a local ``MaskService.solve`` would produce.
 
+Fault tolerance rides on that determinism.  Every request is idempotent
+(content-addressed solves; duplicate request ids are absorbed server-side),
+so the client may retry *anything* that failed at the transport level:
+
+* **retry** — transport failures (:class:`OSError`, :class:`WireError`) and
+  transient server rejections (``overloaded``/``draining``/``deadline``,
+  which carry a ``retry_after`` hint) re-run under a
+  :class:`~.resilience.RetryPolicy` (exponential backoff, decorrelated
+  jitter, attempt + deadline budget);
+* **failover** — ``MaskClient(["a:7463", "b:7463"])`` rotates through
+  endpoints when one stops answering; endpoints must share a
+  ``SolverConfig`` (checked at hello — a mismatched box is skipped, since
+  its masks would not be bit-identical);
+* **re-submission** — submitted block streams are retained until their
+  handles resolve, so after a reconnect (or a server restart that lost its
+  queue) the client re-ships every in-flight request; the server dedupes
+  ids it still knows and re-solves content it lost, bit-identically;
+* **degraded local fallback** — when every endpoint stays down past the
+  retry budget, the client builds an in-process ``MaskService`` from the
+  advertised ``SolverConfig`` and completes outstanding work locally
+  (bit-identical by construction), flagging ``stats.degraded`` so the run
+  is observable as degraded rather than silently slow.
+
 Client-side economics mirror the engine: a local content-keyed memory cache
 resolves repeat submits without touching the network, and in-flight dedup
 collapses identical concurrent submissions to one wire request.  Submits go
@@ -32,10 +55,11 @@ background thread.
 from __future__ import annotations
 
 import itertools
+import logging
 import os
 import socket
 import threading
-from typing import Optional, Union
+from typing import Optional, Sequence, Union
 
 import jax.numpy as jnp
 import numpy as np
@@ -43,14 +67,44 @@ import numpy as np
 from repro.core.solver import SolverConfig
 from repro.patterns import PatternSpec, pattern_from_args
 from repro.service.cache import content_key
-from repro.service.engine import FlushTicket, MaskHandle, ServiceStats
+from repro.service.engine import (
+    FlushTicket,
+    MaskHandle,
+    MaskService,
+    ServiceStats,
+)
 from repro.service.net import wire
+from repro.service.net.resilience import (
+    TRANSIENT_KINDS,
+    RetryBudgetExceeded,
+    RetryPolicy,
+)
 from repro.service.scheduler import tensor_to_blocks
+
+logger = logging.getLogger(__name__)
 
 
 class RemoteError(RuntimeError):
     """The server replied ``ok: false`` (validation, solve, or tenant
-    error).  Framing-level failures raise :class:`wire.WireError` instead."""
+    error).  Framing-level failures raise :class:`wire.WireError` instead.
+
+    ``kind`` is the server's structured error class (exception type name,
+    or a resilience kind like ``overloaded``/``draining``/``deadline``/
+    ``unknown-ids``); ``retry_after`` is its backoff hint in seconds, when
+    one was sent.
+    """
+
+    def __init__(self, msg: str, kind: str = "error",
+                 retry_after: Optional[float] = None):
+        super().__init__(msg)
+        self.kind = kind
+        self.retry_after = retry_after
+
+    @property
+    def transient(self) -> bool:
+        """Worth retrying: the server rejected because of *its* state, not
+        the request's content."""
+        return self.kind in TRANSIENT_KINDS or self.kind == "unknown-ids"
 
 
 class RemoteHandle(MaskHandle):
@@ -61,7 +115,10 @@ class RemoteHandle(MaskHandle):
     owning client.  Extra observability: ``server_latency_s`` (enqueue ->
     solve wall time inside the server) and ``server_cached`` (resolved from
     the server's shared cache tier), both None until resolved over the wire
-    and for locally-resolved (client cache / dedup) handles.
+    and for locally-resolved (client cache / dedup / degraded) handles.
+    The submitted block stream is retained on the handle until resolution
+    so a reconnect can re-ship it (idempotent re-submission) and the
+    degraded fallback can solve it locally.
     """
 
     def __init__(self, client: "MaskClient", name: str, pattern: PatternSpec,
@@ -71,12 +128,18 @@ class RemoteHandle(MaskHandle):
         self.server_latency_s: Optional[float] = None
         self.server_cached: Optional[bool] = None
         self._error: Optional[BaseException] = None
+        self._blocks: Optional[np.ndarray] = None  # retained until resolved
 
     def _fail(self, exc: BaseException) -> None:
         self._error = exc
+        self._blocks = None
         for dup in self._dups:
             dup._error = exc
         self._dups.clear()
+
+    def _resolve(self, words: np.ndarray) -> None:
+        super()._resolve(words)
+        self._blocks = None  # payload no longer needed for re-submission
 
     def result(self) -> jnp.ndarray:
         if self._error is not None:
@@ -84,11 +147,24 @@ class RemoteHandle(MaskHandle):
         return super().result()
 
 
+def _parse_endpoint(address) -> tuple[str, int]:
+    if isinstance(address, str):
+        host, _, port = address.rpartition(":")
+        if not host:
+            raise ValueError(f"address must be 'host:port', got {address!r}")
+        return host, int(port)
+    return str(address[0]), int(address[1])
+
+
 class MaskClient:
-    """TCP client for a :class:`~repro.service.net.server.MaskServer`.
+    """TCP client for one or more :class:`~repro.service.net.server.MaskServer`.
 
     Args:
-      address: ``"host:port"`` (or a ``(host, port)`` tuple).
+      address: ``"host:port"`` (or a ``(host, port)`` tuple), or a *list*
+        of them — a failover set of solver boxes sharing one
+        ``SolverConfig`` (and ideally one cache volume; see
+        ``docs/deploy.md``).  The first healthy endpoint serves; the rest
+        are tried in order when it stops answering.
       tenant: tenant name sent in the hello; scheduling quota and rate
         limits are per-tenant (see :class:`TenantConfig`).
       timeout: per-operation socket timeout in seconds.  None (default)
@@ -98,37 +174,54 @@ class MaskClient:
         words so repeat submits of identical tensors skip the network
         entirely (counted in ``stats.cache_hits``, exactly like the
         engine's memory front).
+      retry: the :class:`~.resilience.RetryPolicy` governing every
+        recovery episode (reconnects, transient rejections, failover
+        sweeps).  ``RetryPolicy(max_attempts=1)`` restores fail-fast.
+      fallback: ``"local"`` (default) arms the degraded in-process
+        fallback once the retry budget is spent; ``"none"`` surfaces the
+        failure instead (the pre-resilience behavior).
+      fallback_config: lets a client *constructed while every endpoint is
+        down* still degrade: without one successful hello the client has
+        no server-advertised ``SolverConfig`` to build the local fallback
+        from, so construction raises unless this pins it.
 
     ``stats`` is a real :class:`ServiceStats` tracking the *client-side*
-    counters (submitted / cache_hits / dedup_hits); solver-side aggregates
-    live on the server — fetch them with :meth:`server_stats`.
+    counters (submitted / cache_hits / dedup_hits / retries / failovers /
+    degraded); solver-side aggregates live on the server — fetch them with
+    :meth:`server_stats`.
     """
 
     def __init__(
         self,
-        address: Union[str, tuple[str, int]],
+        address: Union[str, tuple[str, int], Sequence],
         tenant: str = "default",
         *,
         timeout: Optional[float] = None,
         connect_timeout: float = 10.0,
         local_cache: bool = True,
+        retry: Optional[RetryPolicy] = None,
+        fallback: str = "local",
+        fallback_config: Optional[SolverConfig] = None,
     ):
-        if isinstance(address, str):
-            host, _, port = address.rpartition(":")
-            if not host:
-                raise ValueError(
-                    f"address must be 'host:port', got {address!r}"
-                )
-            self.host, self.port = host, int(port)
+        if isinstance(address, (str, tuple)):
+            addresses = [address]
         else:
-            self.host, self.port = address[0], int(address[1])
+            addresses = list(address)
+        if not addresses:
+            raise ValueError("need at least one server address")
+        self.endpoints = [_parse_endpoint(a) for a in addresses]
+        if fallback not in ("local", "none"):
+            raise ValueError(f"fallback must be 'local'|'none', got {fallback!r}")
         self.tenant = tenant
         self.timeout = timeout
         self.connect_timeout = connect_timeout
         self.local_cache = local_cache
+        self.retry = retry if retry is not None else RetryPolicy()
+        self.fallback = fallback
         self.stats = ServiceStats()
         self._lock = threading.RLock()  # outstanding/dedup/cache/stats
         self._drain_lock = threading.RLock()  # serializes whole flushes
+        self._ep_idx = 0  # current endpoint (rotated by failover)
         self._pool: list[socket.socket] = []
         self._pool_lock = threading.Lock()
         self._bg_thread: Optional[threading.Thread] = None
@@ -138,18 +231,41 @@ class MaskClient:
         self._ids = itertools.count()
         self._cid = f"{os.getpid():x}-{id(self) & 0xFFFFFF:x}"
         self._closed = False
+        self._fallback_service: Optional[MaskService] = None
         self.config: Optional[SolverConfig] = None
         self.server_name: Optional[str] = None
         self.quota: Optional[float] = None
         # Dial eagerly: submit() needs the server's SolverConfig for content
-        # keys, and failing here beats failing mid-prune.
-        self._checkin(self._dial())
+        # keys, and failing here beats failing mid-prune.  A down fleet at
+        # construction degrades immediately iff a fallback_config pins the
+        # solver (no hello ever advertised one).
+        try:
+            self._checkin(self._dial())
+        except (OSError, wire.WireError) as e:
+            if fallback == "local" and fallback_config is not None:
+                self.config = fallback_config
+                self._enter_degraded(e)
+            else:
+                raise
 
-    # -- connection pool ----------------------------------------------------
+    # -- connection pool / endpoints ----------------------------------------
 
-    def _dial(self) -> socket.socket:
+    @property
+    def host(self) -> str:
+        return self.endpoints[self._ep_idx][0]
+
+    @property
+    def port(self) -> int:
+        return self.endpoints[self._ep_idx][1]
+
+    @property
+    def degraded(self) -> bool:
+        """True once the client fell back to the local in-process solver."""
+        return self.stats.degraded
+
+    def _dial_endpoint(self, host: str, port: int) -> socket.socket:
         sock = socket.create_connection(
-            (self.host, self.port), timeout=self.connect_timeout
+            (host, port), timeout=self.connect_timeout
         )
         sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
         sock.settimeout(self.timeout)
@@ -164,12 +280,60 @@ class MaskClient:
             raise
         if not reply.get("ok"):
             sock.close()
-            raise RemoteError(f"hello rejected: {reply.get('error')}")
+            raise RemoteError(f"hello rejected: {reply.get('error')}",
+                              kind=str(reply.get("kind", "error")))
+        config = SolverConfig(**reply["config"])
         if self.config is None:
-            self.config = SolverConfig(**reply["config"])
+            self.config = config
             self.server_name = reply.get("server")
             self.quota = reply.get("quota")
+        elif config != self.config:
+            # A failover box solving under a different config would break
+            # bit-identity AND content keys — treat it as unhealthy.
+            sock.close()
+            raise RemoteError(
+                f"endpoint {host}:{port} advertises {config}, client keyed "
+                f"on {self.config}", kind="config-mismatch",
+            )
         return sock
+
+    def _dial(self) -> socket.socket:
+        """Connect to the first healthy endpoint, starting at the current
+        one.  Rotating to a different endpoint counts as a failover and
+        invalidates the pool (its sockets point at the old box)."""
+        last: Optional[BaseException] = None
+        n = len(self.endpoints)
+        for k in range(n):
+            i = (self._ep_idx + k) % n
+            host, port = self.endpoints[i]
+            try:
+                sock = self._dial_endpoint(host, port)
+            except (OSError, wire.WireError) as e:
+                last = e
+                continue
+            except RemoteError as e:
+                if e.kind == "config-mismatch":
+                    last = e
+                    continue
+                raise  # rejected hello (tenant/proto): same on every box
+            if i != self._ep_idx:
+                logger.warning("mask client failing over %s -> %s:%d",
+                               f"{self.host}:{self.port}", host, port)
+                with self._pool_lock:
+                    stale, self._pool = self._pool, []
+                for s in stale:
+                    try:
+                        s.close()
+                    except OSError:
+                        pass
+                self._ep_idx = i
+                with self._lock:
+                    self.stats.failovers += 1
+            return sock
+        assert last is not None
+        if isinstance(last, RemoteError):
+            raise last
+        raise last
 
     def _checkout(self) -> socket.socket:
         if self._closed:
@@ -186,7 +350,7 @@ class MaskClient:
                 return
         sock.close()
 
-    def _request(self, header: dict, blobs=()) -> tuple[dict, list]:
+    def _request_once(self, header: dict, blobs=()) -> tuple[dict, list]:
         """One pooled request/response; not-ok replies raise
         :class:`RemoteError` (the connection stays usable — the reply frame
         arrived intact), transport failures discard the connection."""
@@ -199,9 +363,32 @@ class MaskClient:
         self._checkin(sock)
         if not reply.get("ok"):
             raise RemoteError(
-                f"{reply.get('kind', 'error')}: {reply.get('error')}"
+                f"{reply.get('kind', 'error')}: {reply.get('error')}",
+                kind=str(reply.get("kind", "error")),
+                retry_after=reply.get("retry_after"),
             )
         return reply, rblobs
+
+    def _request(self, header: dict, blobs=()) -> tuple[dict, list]:
+        """A request under the retry policy: transport failures and
+        transient rejections back off (honoring ``retry_after``), dialing
+        through the failover set each time; non-transient server errors
+        raise immediately.  Exhausting the budget raises the final cause."""
+        episode = None
+        while True:
+            try:
+                return self._request_once(header, blobs)
+            except (OSError, wire.WireError, RemoteError) as e:
+                if isinstance(e, RemoteError) and not e.transient:
+                    raise
+                episode = episode if episode is not None else \
+                    self.retry.backoff()
+                with self._lock:
+                    self.stats.retries += 1
+                try:
+                    episode.step(e, getattr(e, "retry_after", None))
+                except RetryBudgetExceeded:
+                    raise e from None
 
     # -- MaskService surface ------------------------------------------------
 
@@ -220,7 +407,7 @@ class MaskClient:
                                  caller="MaskClient.submit")
         handle, payload = self._prepare(name, w, spec, journal)
         if payload is not None:
-            self._wire_submit([handle], [payload])
+            self._wire_submit([handle])
         return handle
 
     def submit_many(self, items, pattern=None, *, n=None,
@@ -230,15 +417,14 @@ class MaskClient:
         per-sweep solve-plan batch costs one round trip."""
         spec = pattern_from_args(pattern, m, None, n=n,
                                  caller="MaskClient.submit_many")
-        handles, send_handles, send_blobs = [], [], []
+        handles, send_handles = [], []
         for name, w in items:
             handle, payload = self._prepare(name, w, spec, True)
             handles.append(handle)
             if payload is not None:
                 send_handles.append(handle)
-                send_blobs.append(payload)
         if send_handles:
-            self._wire_submit(send_handles, send_blobs)
+            self._wire_submit(send_handles)
         return handles
 
     def _prepare(self, name, w, spec: PatternSpec, journal: bool):
@@ -269,11 +455,15 @@ class MaskClient:
                 primary._dups.append(handle)
                 self.stats.dedup_hits += 1
                 return handle, None
+            handle._blocks = blocks
             self._inflight[key] = handle
             self._outstanding[rid] = handle
         return handle, blocks
 
-    def _wire_submit(self, handles: list[RemoteHandle], blobs) -> None:
+    def _wire_submit(self, handles: list[RemoteHandle]) -> None:
+        if self.stats.degraded:
+            self._local_submit(handles)
+            return
         header = {
             "op": "submit",
             "reqs": [
@@ -282,12 +472,19 @@ class MaskClient:
                 for h in handles
             ],
         }
+        blobs = [h._blocks for h in handles]
         try:
             self._request(header, blobs)
-        except BaseException as e:
-            # The server never saw (or rejected) these: fail the handles and
-            # their dedup followers so result() reports the cause instead of
-            # a flush hanging on ids the server does not know.
+        except (OSError, wire.WireError, RemoteError) as e:
+            # Retry budget spent (or a non-transient rejection).  The
+            # payloads are still on the handles: degrade to the local
+            # solver if armed, otherwise fail the handles and their dedup
+            # followers so result() reports the cause instead of a flush
+            # hanging on ids the server does not know.
+            if self._can_degrade(e):
+                self._enter_degraded(e)
+                self._local_submit(handles)
+                return
             with self._lock:
                 for h in handles:
                     self._outstanding.pop(h.id, None)
@@ -295,6 +492,94 @@ class MaskClient:
                         del self._inflight[h.key]
                     h._fail(e)
             raise
+
+    def _resubmit_outstanding(self) -> int:
+        """Re-ship every unresolved in-flight request (after a reconnect or
+        a server restart).  Idempotent: the server absorbs ids it already
+        holds and re-enqueues content it lost.  Returns how many went out."""
+        with self._lock:
+            handles = [h for h in self._outstanding.values()
+                       if not h.done and h._blocks is not None]
+        if not handles:
+            return 0
+        header = {
+            "op": "submit",
+            "reqs": [
+                {"id": h.id, "name": h.name, "pattern": h.pattern.canonical,
+                 "journal": h.journal}
+                for h in handles
+            ],
+        }
+        self._request_once(header, [h._blocks for h in handles])
+        with self._lock:
+            self.stats.resubmitted += len(handles)
+        logger.info("mask client re-submitted %d in-flight requests",
+                    len(handles))
+        return len(handles)
+
+    # -- degraded local fallback --------------------------------------------
+
+    def _can_degrade(self, error: BaseException) -> bool:
+        if self.fallback != "local" or self.config is None:
+            return False
+        if isinstance(error, RemoteError) and not error.transient:
+            return False  # a validation error would fail locally too
+        return True
+
+    def _enter_degraded(self, cause: BaseException) -> None:
+        """Arm the in-process fallback: a fresh ``MaskService`` under the
+        server-advertised ``SolverConfig``, so every mask it produces is
+        bit-identical to what the (dead) fleet would have returned."""
+        with self._lock:
+            if self.stats.degraded:
+                return
+            assert self.config is not None
+            self._fallback_service = MaskService(self.config)
+            self.stats.degraded = True
+        logger.warning(
+            "mask client DEGRADED: all %d endpoint(s) down (%s); solving "
+            "locally under the advertised %s",
+            len(self.endpoints), cause, self.config,
+        )
+
+    def _local_submit(self, handles: list[RemoteHandle]) -> None:
+        assert self._fallback_service is not None
+        for h in handles:
+            assert h._blocks is not None, f"{h.name!r} lost its payload"
+            self._fallback_service.submit(
+                h.name, h._blocks, h.pattern, journal=False,
+            )
+
+    def _flush_degraded(self) -> None:
+        """Drain via the local fallback: solve outstanding payloads in the
+        in-process engine and resolve the remote handles from its cache
+        (content keys match by construction — same blocks, same config)."""
+        svc = self._fallback_service
+        assert svc is not None
+        with self._lock:
+            pending = [h for h in self._outstanding.values() if not h.done]
+            for h in pending:
+                if h._blocks is not None:
+                    svc.submit(h.name, h._blocks, h.pattern, journal=False)
+        svc.flush()
+        with self._lock:
+            for h in pending:
+                cached = svc.cache.get_packed(h.key)
+                assert cached is not None, (
+                    f"degraded solve missing {h.name!r} ({h.key[:12]})"
+                )
+                words = cached[0]
+                self._outstanding.pop(h.id, None)
+                h._resolve(words)
+                for dup in h._dups:
+                    dup._resolve(words)
+                h._dups.clear()
+                if self._inflight.get(h.key) is h:
+                    del self._inflight[h.key]
+                if self.local_cache:
+                    self._mem[h.key] = words
+
+    # -- flush / drain ------------------------------------------------------
 
     def flush(self) -> None:
         """Barrier: block until every outstanding submission is solved and
@@ -305,37 +590,83 @@ class MaskClient:
         tenants' into shared mega-batches).  Concurrent flushes serialize;
         submissions racing the flush are drained by the next one, same as
         the engine.
+
+        This is where recovery lives: a transport failure or transient
+        rejection mid-wait re-dials (failing over if needed), re-submits
+        every unresolved in-flight request, and waits again — under the
+        client's :class:`~.resilience.RetryPolicy`.  Once the budget is
+        spent, the flush completes through the degraded local fallback
+        (``fallback="local"``) or fails every outstanding handle with the
+        root cause (``fallback="none"``).
         """
         bg = self._bg_thread
         if bg is not None and bg is not threading.current_thread():
             bg.join()
         with self._drain_lock:
+            if self.stats.degraded:
+                self._flush_degraded()
+                return
+            episode = None
             while True:
                 with self._lock:
                     ids = [rid for rid, h in self._outstanding.items()
                            if not h.done]
                 if not ids:
                     return
-                reply, blobs = self._request({"op": "wait", "ids": ids})
-                lat = reply.get("lat") or [None] * len(ids)
-                cached = reply.get("cached") or [None] * len(ids)
-                with self._lock:
-                    for rid, words, t, hit in zip(
-                        reply["ids"], blobs, lat, cached
-                    ):
-                        handle = self._outstanding.pop(rid, None)
-                        if handle is None:
-                            continue
-                        handle.server_latency_s = t
-                        handle.server_cached = hit
-                        handle._resolve(words)
-                        for dup in handle._dups:
-                            dup._resolve(words)
-                        handle._dups.clear()
-                        if self._inflight.get(handle.key) is handle:
-                            del self._inflight[handle.key]
-                        if self.local_cache:
-                            self._mem[handle.key] = words
+                try:
+                    reply, blobs = self._request_once(
+                        {"op": "wait", "ids": ids})
+                except (OSError, wire.WireError, RemoteError) as e:
+                    if isinstance(e, RemoteError) and not e.transient:
+                        self._fail_outstanding(e)
+                        raise
+                    episode = episode if episode is not None else \
+                        self.retry.backoff()
+                    with self._lock:
+                        self.stats.retries += 1
+                    try:
+                        episode.step(e, getattr(e, "retry_after", None))
+                        self._resubmit_outstanding()
+                    except RetryBudgetExceeded:
+                        if self._can_degrade(e):
+                            self._enter_degraded(e)
+                            self._flush_degraded()
+                            return
+                        self._fail_outstanding(e)
+                        raise e from None
+                    except (OSError, wire.WireError, RemoteError):
+                        pass  # re-submission failed too: next loop retries
+                    continue
+                self._absorb_wait_reply(reply, blobs)
+
+    def _absorb_wait_reply(self, reply: dict, blobs: list) -> None:
+        ids = reply["ids"]
+        lat = reply.get("lat") or [None] * len(ids)
+        cached = reply.get("cached") or [None] * len(ids)
+        with self._lock:
+            for rid, words, t, hit in zip(ids, blobs, lat, cached):
+                handle = self._outstanding.pop(rid, None)
+                if handle is None:
+                    continue
+                handle.server_latency_s = t
+                handle.server_cached = hit
+                handle._resolve(words)
+                for dup in handle._dups:
+                    dup._resolve(words)
+                handle._dups.clear()
+                if self._inflight.get(handle.key) is handle:
+                    del self._inflight[handle.key]
+                if self.local_cache:
+                    self._mem[handle.key] = words
+
+    def _fail_outstanding(self, error: BaseException) -> None:
+        with self._lock:
+            for rid in list(self._outstanding):
+                h = self._outstanding.pop(rid)
+                if self._inflight.get(h.key) is h:
+                    del self._inflight[h.key]
+                if not h.done:
+                    h._fail(error)
 
     def flush_async(self) -> FlushTicket:
         """Background flush; returns the engine's :class:`FlushTicket`.
@@ -393,8 +724,15 @@ class MaskClient:
     # -- server ops ---------------------------------------------------------
 
     def ping(self) -> bool:
-        reply, _ = self._request({"op": "ping"})
+        reply, _ = self._request_once({"op": "ping"})
         return bool(reply.get("ok"))
+
+    def health(self) -> dict:
+        """The current endpoint's liveness snapshot (``draining``,
+        ``accepting``, queue depth) — one probe, no retries, so the answer
+        reflects *now*.  Raises on a dead endpoint."""
+        reply, _ = self._request_once({"op": "health"})
+        return {k: v for k, v in reply.items() if k != "ok"}
 
     def server_stats(self) -> dict:
         """The server's live snapshot: inner-service counters plus the
@@ -414,6 +752,12 @@ class MaskClient:
             raise RemoteError(f"shutdown rejected: {reply.get('error')}")
 
     def close(self) -> None:
+        # Join any active background drain BEFORE yanking its sockets:
+        # closing mid-flush_async would surface a spurious OSError on the
+        # ticket instead of the drain's real result.
+        bg = self._bg_thread
+        if bg is not None and bg is not threading.current_thread():
+            bg.join()
         with self._pool_lock:
             self._closed = True
             pool, self._pool = self._pool, []

@@ -1,0 +1,259 @@
+"""ChaosProxy: a fault-injecting TCP proxy for exercising mask-service
+resilience.
+
+Sits between a :class:`~.client.MaskClient` and a
+:class:`~.server.MaskServer` and misbehaves on purpose::
+
+    with ChaosProxy((server.host, server.port), seed=0,
+                    kill_rate=0.05, torn_rate=0.02,
+                    latency_s=0.002) as proxy:
+        client = MaskClient(proxy.address, retry=RetryPolicy(seed=0))
+        ...
+
+Faults injected per forwarded chunk (all probabilities independent, drawn
+from one seeded RNG so a chaos schedule replays deterministically):
+
+* ``latency_s`` (+ uniform ``latency_jitter_s``) — delay before forwarding,
+  modelling a slow or congested link;
+* ``kill_rate`` — abruptly close both sides mid-stream (the client sees a
+  reset / EOF mid-frame, i.e. :class:`~.wire.WireError` or
+  :class:`OSError`);
+* ``torn_rate`` — forward only a prefix of the chunk, then kill: a *torn
+  frame*, the nastiest transport failure the length-prefixed codec must
+  survive.
+
+Control-plane methods drive scripted scenarios: :meth:`kill_connections`
+(sever every live flow now), :meth:`blackhole` (swallow traffic without
+closing, for timeout paths), and :meth:`retarget` (point future connections
+at a different backend — how the chaos bench models a server that was
+killed and restarted on a new port).  Counters (``connections``, ``killed``,
+``torn``, ``forwarded_bytes``) feed the bench report.
+
+Plain stdlib threads + sockets, one pump thread per direction per
+connection: the proxy is a test/ops harness, not a data-plane component,
+and at mask-service message rates the thread-per-flow model is nowhere near
+its limits.
+"""
+from __future__ import annotations
+
+import random
+import socket
+import threading
+import time
+from typing import Union
+
+_CHUNK = 1 << 16
+
+
+class ChaosProxy:
+    """Fault-injecting TCP relay; see module docstring.
+
+    Args:
+      target: backend ``(host, port)`` or ``"host:port"``.
+      host: interface to listen on (loopback by default).
+      seed: seeds the fault RNG — same seed, same fault schedule.
+      latency_s / latency_jitter_s: per-chunk forwarding delay (base +
+        ``uniform(0, jitter)``).
+      kill_rate: per-chunk probability of severing the connection whole.
+      torn_rate: per-chunk probability of forwarding a partial chunk and
+        then severing — a torn frame on the receiving side.
+    """
+
+    def __init__(
+        self,
+        target: Union[str, tuple],
+        *,
+        host: str = "127.0.0.1",
+        seed: int = 0,
+        latency_s: float = 0.0,
+        latency_jitter_s: float = 0.0,
+        kill_rate: float = 0.0,
+        torn_rate: float = 0.0,
+    ):
+        if isinstance(target, str):
+            t_host, _, t_port = target.rpartition(":")
+            target = (t_host, int(t_port))
+        self.target = (str(target[0]), int(target[1]))
+        self.latency_s = float(latency_s)
+        self.latency_jitter_s = float(latency_jitter_s)
+        self.kill_rate = float(kill_rate)
+        self.torn_rate = float(torn_rate)
+        self._rng = random.Random(seed)
+        self._rng_lock = threading.Lock()
+        self._lock = threading.Lock()  # pairs / counters / flags
+        self._pairs: set[tuple[socket.socket, socket.socket]] = set()
+        self._threads: list[threading.Thread] = []
+        self._stopping = False
+        self._blackhole = False
+        # Counters (read them after stop() for a settled view).
+        self.connections = 0
+        self.killed = 0
+        self.torn = 0
+        self.swallowed_bytes = 0
+        self.forwarded_bytes = 0
+        self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._listener.bind((host, 0))
+        self._listener.listen(64)
+        self.host, self.port = self._listener.getsockname()[:2]
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name="chaos-accept", daemon=True
+        )
+        self._accept_thread.start()
+
+    @property
+    def address(self) -> str:
+        """``host:port`` to hand a :class:`~.client.MaskClient`."""
+        return f"{self.host}:{self.port}"
+
+    # -- control plane ------------------------------------------------------
+
+    def retarget(self, target: Union[str, tuple]) -> None:
+        """Point *future* connections at a different backend (live flows are
+        untouched — pair with :meth:`kill_connections` to force a re-dial).
+        Models a backend restarted on a new port behind a stable address."""
+        if isinstance(target, str):
+            t_host, _, t_port = target.rpartition(":")
+            target = (t_host, int(t_port))
+        with self._lock:
+            self.target = (str(target[0]), int(target[1]))
+
+    def kill_connections(self) -> int:
+        """Sever every live flow right now; returns how many died."""
+        with self._lock:
+            pairs = list(self._pairs)
+        for pair in pairs:
+            self._sever(pair)
+        return len(pairs)
+
+    def blackhole(self, on: bool = True) -> None:
+        """Swallow traffic instead of forwarding (connections stay open —
+        the receiver just never hears anything: the timeout failure mode,
+        as opposed to the reset one)."""
+        with self._lock:
+            self._blackhole = on
+
+    def stop(self) -> None:
+        with self._lock:
+            if self._stopping:
+                return
+            self._stopping = True
+        self._slam(self._listener)  # close() alone cannot wake accept()
+        self.kill_connections()
+        self._accept_thread.join(timeout=5)
+        for t in self._threads:
+            t.join(timeout=5)
+
+    def __enter__(self) -> "ChaosProxy":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- data plane ----------------------------------------------------------
+
+    def _accept_loop(self) -> None:
+        while True:
+            try:
+                downstream, _ = self._listener.accept()
+            except OSError:
+                return  # listener closed: stopping
+            with self._lock:
+                target = self.target
+                self.connections += 1
+            try:
+                upstream = socket.create_connection(target, timeout=10)
+            except OSError:
+                downstream.close()
+                continue
+            for s in (downstream, upstream):
+                s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            pair = (downstream, upstream)
+            with self._lock:
+                self._pairs.add(pair)
+            for src, dst in ((downstream, upstream), (upstream, downstream)):
+                t = threading.Thread(
+                    target=self._pump, args=(src, dst, pair),
+                    name="chaos-pump", daemon=True,
+                )
+                t.start()
+                with self._lock:
+                    self._threads.append(t)
+
+    @staticmethod
+    def _slam(sock: socket.socket) -> None:
+        """Tear a socket down NOW: ``shutdown`` (not just ``close``) sends
+        the FIN/RST immediately and wakes any thread blocked in ``recv`` on
+        it — a bare ``close`` under a concurrent ``recv`` defers the actual
+        teardown until the syscall returns, which can strand the peer."""
+        try:
+            sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            sock.close()
+        except OSError:
+            pass
+
+    def _sever(self, pair) -> None:
+        with self._lock:
+            if pair not in self._pairs:
+                return
+            self._pairs.discard(pair)
+            self.killed += 1
+        for s in pair:
+            self._slam(s)
+
+    def _pump(self, src: socket.socket, dst: socket.socket, pair) -> None:
+        while True:
+            try:
+                chunk = src.recv(_CHUNK)
+            except OSError:
+                break
+            if not chunk:
+                break
+            with self._rng_lock:
+                kill = self._rng.random() < self.kill_rate
+                tear = (not kill) and self._rng.random() < self.torn_rate
+                jitter = (
+                    self._rng.uniform(0, self.latency_jitter_s)
+                    if self.latency_jitter_s > 0 else 0.0
+                )
+            if self.latency_s > 0 or jitter > 0:
+                time.sleep(self.latency_s + jitter)
+            with self._lock:
+                swallow = self._blackhole
+            if swallow:
+                with self._lock:
+                    self.swallowed_bytes += len(chunk)
+                continue
+            if kill:
+                self._sever(pair)
+                break
+            if tear:
+                cut = max(1, len(chunk) // 2)
+                try:
+                    dst.sendall(chunk[:cut])
+                except OSError:
+                    pass
+                with self._lock:
+                    self.torn += 1
+                    self.forwarded_bytes += cut
+                self._sever(pair)
+                break
+            try:
+                dst.sendall(chunk)
+            except OSError:
+                break
+            with self._lock:
+                self.forwarded_bytes += len(chunk)
+        # One side done (EOF or fault): drop the whole flow.  Half-open
+        # relays are not worth modelling for a strict request/response
+        # protocol.
+        with self._lock:
+            live = pair in self._pairs
+            if live:
+                self._pairs.discard(pair)
+        if live:
+            for s in pair:
+                self._slam(s)

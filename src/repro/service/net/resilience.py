@@ -1,0 +1,165 @@
+"""Retry policy for the mask-service client: backoff, budgets, failover.
+
+Mask solves are deterministic and content-addressed, so every wire request
+is safely idempotent: re-submitting a block stream after a reconnect either
+dedupes against the request the server still holds, or re-enqueues content
+whose solve is bit-identical to the lost one.  That property is what makes
+a *policy-driven* retry layer correct here — nothing in the protocol needs
+two-phase bookkeeping; the client just needs to know how long to keep
+trying and how to space the attempts.
+
+:class:`RetryPolicy` is the declarative half (attempt/deadline budgets,
+backoff shape); :class:`Backoff` is one *instance* of the policy ticking
+through a recovery episode.  The backoff is exponential with decorrelated
+jitter (the AWS architecture-blog variant): each delay is drawn uniformly
+from ``[base, prev * 3]`` and clamped to ``cap``, which spreads a thundering
+herd of reconnecting clients across the window instead of synchronizing
+them at ``base * 2**k``.  A server-supplied ``retry_after`` (load shedding,
+drain) overrides the drawn delay — the server knows its queue better than
+the client's dice do.
+
+Transport-level failures (:class:`OSError`, :class:`~.wire.WireError`) are
+always retryable: the connection is gone or desynchronized either way, and
+the pool discards it.  Application-level :class:`~.client.RemoteError`
+replies are retryable only for the kinds the server marks transient
+(``overloaded``, ``draining``, ``deadline`` — see
+:data:`TRANSIENT_KINDS`); a validation error will fail identically on
+every endpoint forever and retrying it just burns the budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+import time
+from typing import Optional
+
+#: ``RemoteError.kind`` values that are worth retrying: the server rejected
+#: the request because of *its* current state, not the request's content.
+TRANSIENT_KINDS = frozenset({"overloaded", "draining", "deadline", "shutdown"})
+
+
+class RetryBudgetExceeded(RuntimeError):
+    """Every endpoint stayed down past the policy's attempt/deadline budget.
+
+    Carries ``last_error`` (the final transport failure) so callers — and
+    the degraded-fallback path that usually catches this — can report the
+    root cause instead of a bare budget number.
+    """
+
+    def __init__(self, msg: str, last_error: Optional[BaseException] = None):
+        super().__init__(msg)
+        self.last_error = last_error
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Declarative retry budget for :class:`~.client.MaskClient`.
+
+    Args:
+      max_attempts: total tries per recovery episode (first try included).
+      base_s: floor of every backoff draw; also the first delay's scale.
+      cap_s: ceiling on any single delay (keeps the decorrelated draw from
+        random-walking into minutes).
+      deadline_s: wall-clock budget per recovery episode; ``None`` means
+        attempts alone bound the episode.  When both are set, whichever
+        runs out first ends the episode.
+      seed: seeds the jitter RNG — chaos tests pin it so a replayed fault
+        schedule produces the same delay sequence.
+    """
+
+    max_attempts: int = 6
+    base_s: float = 0.05
+    cap_s: float = 2.0
+    deadline_s: Optional[float] = 30.0
+    seed: Optional[int] = None
+
+    def __post_init__(self):
+        if self.max_attempts < 1:
+            raise ValueError(
+                f"max_attempts must be >= 1, got {self.max_attempts}"
+            )
+        if self.base_s <= 0 or self.cap_s < self.base_s:
+            raise ValueError(
+                f"need 0 < base_s <= cap_s, got base_s={self.base_s} "
+                f"cap_s={self.cap_s}"
+            )
+        if self.deadline_s is not None and self.deadline_s <= 0:
+            raise ValueError(f"deadline_s must be > 0, got {self.deadline_s}")
+
+    def backoff(self) -> "Backoff":
+        """A fresh episode counter (one per recovery, not per client)."""
+        return Backoff(self)
+
+
+#: Zero-patience policy: one attempt, no waiting.  Useful for health probes
+#: and for tests that want failure paths to run instantly.
+NO_RETRY = RetryPolicy(max_attempts=1, deadline_s=None)
+
+
+class Backoff:
+    """One recovery episode ticking through a :class:`RetryPolicy`.
+
+    Usage::
+
+        episode = policy.backoff()
+        while True:
+            try:
+                return attempt()
+            except transient as e:
+                episode.step(e)          # sleeps, or raises RetryBudgetExceeded
+
+    ``step`` accounts the failed attempt, raises
+    :class:`RetryBudgetExceeded` when the policy's budget is spent, and
+    otherwise sleeps the next decorrelated-jitter delay (or the server's
+    ``retry_after`` hint, when one accompanied the failure).
+    """
+
+    def __init__(self, policy: RetryPolicy):
+        self.policy = policy
+        self.attempts = 0  # completed (failed) attempts
+        self.slept_s = 0.0
+        self._prev = policy.base_s
+        self._rng = random.Random(policy.seed)
+        self._t0 = time.monotonic()
+
+    def elapsed_s(self) -> float:
+        return time.monotonic() - self._t0
+
+    def exhausted(self) -> bool:
+        if self.attempts >= self.policy.max_attempts:
+            return True
+        dl = self.policy.deadline_s
+        return dl is not None and self.elapsed_s() >= dl
+
+    def next_delay(self, retry_after: Optional[float] = None) -> float:
+        """The next sleep, without sleeping (decorrelated jitter draw or the
+        server hint, clipped so a sleep never overshoots the deadline)."""
+        if retry_after is not None and retry_after >= 0:
+            delay = min(float(retry_after), self.policy.cap_s)
+        else:
+            delay = min(
+                self.policy.cap_s,
+                self._rng.uniform(self.policy.base_s, self._prev * 3.0),
+            )
+            self._prev = delay
+        dl = self.policy.deadline_s
+        if dl is not None:
+            delay = max(0.0, min(delay, dl - self.elapsed_s()))
+        return delay
+
+    def step(self, error: Optional[BaseException] = None,
+             retry_after: Optional[float] = None) -> float:
+        """Account one failed attempt; sleep toward the next or give up."""
+        self.attempts += 1
+        if self.exhausted():
+            raise RetryBudgetExceeded(
+                f"retry budget exhausted after {self.attempts} attempts / "
+                f"{self.elapsed_s():.2f}s (policy {self.policy}); "
+                f"last error: {error}",
+                last_error=error,
+            )
+        delay = self.next_delay(retry_after)
+        if delay > 0:
+            time.sleep(delay)
+            self.slept_s += delay
+        return delay

@@ -44,6 +44,7 @@ from __future__ import annotations
 
 import dataclasses
 import logging
+import signal
 import socket
 import threading
 import time
@@ -77,6 +78,22 @@ def solver_config_to_wire(config: SolverConfig) -> dict:
 
 def solver_config_from_wire(d: dict) -> SolverConfig:
     return SolverConfig(**d)
+
+
+class RequestFailed(RuntimeError):
+    """A structured server-side rejection.
+
+    ``kind`` travels in the error reply (clients classify retryability on
+    it — see :data:`~.resilience.TRANSIENT_KINDS`); ``retry_after`` is the
+    server's backoff hint in seconds, which the client's
+    :class:`~.resilience.Backoff` honors over its own jitter draw.
+    """
+
+    def __init__(self, msg: str, kind: str = "error",
+                 retry_after: Optional[float] = None):
+        super().__init__(msg)
+        self.kind = kind
+        self.retry_after = retry_after
 
 
 @dataclasses.dataclass(frozen=True)
@@ -142,8 +159,8 @@ class _Request:
     """One submitted tensor travelling queue -> drain round -> wait reply."""
 
     __slots__ = ("id", "name", "pattern", "journal", "blocks", "nblocks",
-                 "tenant", "event", "words", "error", "enqueued_at",
-                 "solved_at", "cached")
+                 "tenant", "event", "words", "error", "error_kind",
+                 "enqueued_at", "solved_at", "cached")
 
     def __init__(self, rid: str, name: str, pattern: str, journal: bool,
                  blocks: np.ndarray, tenant: "_Tenant"):
@@ -157,12 +174,15 @@ class _Request:
         self.event = threading.Event()
         self.words: Optional[np.ndarray] = None
         self.error: Optional[str] = None
+        self.error_kind = "error"
         self.enqueued_at = time.monotonic()
         self.solved_at: Optional[float] = None
         self.cached = False
 
-    def fail(self, msg: str) -> None:
+    def fail(self, msg: str, kind: str = "error") -> None:
         self.error = msg
+        self.error_kind = kind
+        self.tenant.failed += 1
         self.event.set()
 
 
@@ -183,6 +203,8 @@ class _Tenant:
         self.submitted = 0
         self.blocks_in = 0
         self.resolved = 0
+        self.resubmitted = 0  # duplicate ids absorbed (client reconnects)
+        self.failed = 0  # requests failed (deadline, shed, shutdown, solve)
         self.cache_hits = 0
         self.dedup_hits = 0
         self.queue_seconds = 0.0  # sum of enqueue->resolve latencies
@@ -195,6 +217,8 @@ class _Tenant:
             "submitted": self.submitted,
             "blocks": self.blocks_in,
             "resolved": self.resolved,
+            "resubmitted": self.resubmitted,
+            "failed": self.failed,
             "cache_hits": self.cache_hits,
             "dedup_hits": self.dedup_hits,
             "queued": len(self.queue),
@@ -223,6 +247,17 @@ class MaskServer:
       allow_remote_shutdown: accept the ``shutdown`` op (handy for tests
         and CI; disable for real deployments via ``serve-masks
         --no-remote-shutdown``).
+      max_queue_blocks: per-tenant load-shedding bound.  A submit that
+        would push a tenant's queued blocks past it is rejected with a
+        structured ``overloaded`` error carrying a ``retry_after`` hint
+        (derived from the observed solve rate) instead of queueing without
+        bound; the client's backoff honors the hint.  ``None`` disables
+        shedding (backpressure via ``rate`` still applies).
+      request_deadline_s: fail requests still queued after this many
+        seconds with a ``deadline`` error (retryable — the client
+        re-submits within its own budget).  ``None`` disables.
+      drain_grace_s: default grace window for :meth:`drain` — how long a
+        SIGTERM'd server keeps solving its backlog before exiting.
     """
 
     def __init__(
@@ -239,6 +274,9 @@ class MaskServer:
         batch_window_s: float = 0.002,
         allow_remote_shutdown: bool = True,
         rate_timeout_s: float = 120.0,
+        max_queue_blocks: Optional[int] = None,
+        request_deadline_s: Optional[float] = None,
+        drain_grace_s: float = 30.0,
     ):
         self.service = service if service is not None else MaskService()
         self.host = host
@@ -250,11 +288,16 @@ class MaskServer:
         self.batch_window_s = batch_window_s
         self.allow_remote_shutdown = allow_remote_shutdown
         self.rate_timeout_s = rate_timeout_s
+        self.max_queue_blocks = max_queue_blocks
+        self.request_deadline_s = request_deadline_s
+        self.drain_grace_s = drain_grace_s
         self._tenants: dict[str, _Tenant] = {}
         for name, cfg in (tenants or {}).items():
             self._tenants[name] = _Tenant(name, cfg, self.round_blocks)
         self._cv = threading.Condition()
         self._running = False
+        self._draining = False
+        self._drain_requested = False
         self._sock: Optional[socket.socket] = None
         self._threads: list[threading.Thread] = []
         self._conns: set[socket.socket] = set()
@@ -294,6 +337,13 @@ class MaskServer:
             self._running = False
             self._cv.notify_all()
         if self._sock is not None:
+            # shutdown() before close(): a bare close() does not wake a
+            # thread blocked in accept() (the in-progress syscall pins the
+            # open file description), which would stall stop() on the join.
+            try:
+                self._sock.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
             try:
                 self._sock.close()
             except OSError:
@@ -315,7 +365,8 @@ class MaskServer:
         with self._cv:
             for tenant in self._tenants.values():
                 while tenant.queue:
-                    tenant.queue.popleft().fail("server shut down")
+                    tenant.queue.popleft().fail("server shut down",
+                                                kind="shutdown")
         logger.info("mask server stopped (%d rounds)", self.rounds)
 
     def __enter__(self) -> "MaskServer":
@@ -324,16 +375,97 @@ class MaskServer:
     def __exit__(self, *exc) -> None:
         self.stop()
 
+    def drain(self, grace_s: Optional[float] = None) -> None:
+        """Graceful shutdown: stop accepting, finish in-flight, then stop.
+
+        The drain sequence — the SIGTERM story of ``docs/deploy.md``:
+
+        1. close the listener (no new connections) and flip ``_draining``:
+           new ``submit`` ops are rejected with a structured ``draining``
+           error + ``retry_after``, so clients fail over or back off
+           instead of queueing into a dying server;
+        2. let the scheduler finish every already-queued solve (bounded by
+           ``grace_s``), and linger so connected waiters pick their
+           results up over still-open connections;
+        3. fsync the journal (every completion durably recorded — a
+           restarted server warm-starts from cache + journal) and
+           :meth:`stop`.
+
+        Requests still unsolved when the grace expires fail with a
+        ``shutdown`` error; clients re-submit them elsewhere (idempotent).
+        """
+        grace = self.drain_grace_s if grace_s is None else grace_s
+        with self._cv:
+            if not self._running or self._draining:
+                return
+            self._draining = True
+            self._cv.notify_all()
+        logger.info("mask server draining (grace %.1fs)", grace)
+        if self._sock is not None:
+            try:  # shutdown first: close() alone cannot wake accept()
+                self._sock.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                self._sock.close()  # accept loop exits; port is released
+            except OSError:
+                pass
+        deadline = time.monotonic() + grace
+
+        def _backlog() -> bool:
+            with self._cv:
+                return any(
+                    t.queue or any(not r.event.is_set()
+                                   for r in t.results.values())
+                    for t in self._tenants.values()
+                )
+
+        def _unclaimed() -> bool:
+            with self._cv:
+                return any(t.results for t in self._tenants.values())
+
+        while _backlog() and time.monotonic() < deadline:
+            time.sleep(0.02)
+        # Solves done (or grace gone): give connected waiters a moment to
+        # collect results before the connections die with stop().
+        while _unclaimed() and time.monotonic() < deadline:
+            time.sleep(0.02)
+        if self.service.journal is not None:
+            self.service.journal.sync()
+        self.stop()
+
+    def install_signal_handlers(self, grace_s: Optional[float] = None) -> None:
+        """Route SIGTERM/SIGINT to a graceful :meth:`drain`.
+
+        Main-thread only (a signal constraint).  The handler just sets a
+        flag; :meth:`serve_forever` notices it and runs the drain outside
+        signal context, so journal fsyncs and joins never run in a handler.
+        """
+        if grace_s is not None:
+            self.drain_grace_s = grace_s
+
+        def _handler(signum, frame):  # noqa: ARG001 — signal signature
+            logger.info("signal %d received: requesting drain", signum)
+            self._drain_requested = True
+
+        signal.signal(signal.SIGTERM, _handler)
+        signal.signal(signal.SIGINT, _handler)
+
     def serve_forever(self) -> None:
         """Block until :meth:`stop` (CLI entry point's main thread parks
-        here; the accept/drain threads do the work)."""
+        here; the accept/drain threads do the work).  A drain request —
+        SIGTERM/SIGINT via :meth:`install_signal_handlers`, or Ctrl-C —
+        exits through the graceful :meth:`drain` path."""
         if not self._running:
             self.start()
         try:
             while self._running:
+                if self._drain_requested:
+                    self.drain()
+                    break
                 time.sleep(0.2)
         except KeyboardInterrupt:
-            pass
+            self.drain()
         finally:
             self.stop()
 
@@ -376,8 +508,11 @@ class MaskServer:
                     reply, rblobs = {
                         "ok": False,
                         "error": str(e),
-                        "kind": type(e).__name__,
+                        "kind": getattr(e, "kind", type(e).__name__),
                     }, []
+                    retry_after = getattr(e, "retry_after", None)
+                    if retry_after is not None:
+                        reply["retry_after"] = retry_after
                 try:
                     wire.send_frame(conn, reply, rblobs)
                 except OSError:
@@ -410,6 +545,8 @@ class MaskServer:
             }, [], tenant
         if op == "ping":
             return {"ok": True}, [], tenant
+        if op == "health":
+            return {"ok": True, **self.health()}, [], tenant
         if op == "submit":
             return self._submit(self._require_tenant(tenant),
                                 header, blobs) + (tenant,)
@@ -470,11 +607,37 @@ class MaskServer:
                 spec.canonical, bool(meta.get("journal", True)),
                 np.ascontiguousarray(blocks, np.float32), tenant,
             ))
+        # Duplicate ids are *idempotent*, not errors: a client re-submitting
+        # its in-flight keys after a reconnect must land on the original
+        # request (still queued, solving, or already solved and awaiting
+        # pickup) instead of enqueueing the content twice or being bounced.
+        with self._cv:
+            fresh = [r for r in parsed if r.id not in tenant.results]
+            tenant.resubmitted += len(parsed) - len(fresh)
+        if self._draining:
+            raise RequestFailed(
+                "server is draining: submit elsewhere or retry after "
+                "restart", kind="draining", retry_after=1.0,
+            )
+        cost = sum(r.nblocks for r in fresh)
+        if self.max_queue_blocks is not None and fresh:
+            with self._cv:
+                backlog = sum(r.nblocks for r in tenant.queue)
+            # An empty queue always admits: a single submission larger than
+            # the bound must still be solvable, else that content could
+            # never pass — the bound sheds pile-up, not individual size.
+            if backlog and backlog + cost > self.max_queue_blocks:
+                raise RequestFailed(
+                    f"tenant {tenant.name!r} queue at {backlog} blocks; "
+                    f"+{cost} exceeds max_queue_blocks="
+                    f"{self.max_queue_blocks}",
+                    kind="overloaded",
+                    retry_after=self._retry_after_hint(backlog),
+                )
         # Rate limit BEFORE enqueueing: an over-rate tenant's connection
         # blocks right here (backpressure), so its flood never reaches the
         # queue and other tenants' drain rounds.
-        if tenant.bucket is not None:
-            cost = sum(r.nblocks for r in parsed)
+        if tenant.bucket is not None and fresh:
             ok = tenant.bucket.acquire(
                 cost, should_abort=lambda: not self._running,
                 timeout=self.rate_timeout_s,
@@ -485,15 +648,23 @@ class MaskServer:
                     f"funded within {self.rate_timeout_s}s"
                 )
         with self._cv:
-            for r in parsed:
+            for r in fresh:
                 if r.id in tenant.results:
-                    raise wire.WireError(f"duplicate request id {r.id!r}")
+                    continue  # raced a concurrent duplicate: keep the first
                 tenant.results[r.id] = r
                 tenant.queue.append(r)
                 tenant.submitted += 1
                 tenant.blocks_in += r.nblocks
             self._cv.notify_all()
-        return {"ok": True, "queued": len(parsed)}, []
+        return {"ok": True, "queued": len(fresh)}, []
+
+    def _retry_after_hint(self, backlog_blocks: int) -> float:
+        """How long an overloaded tenant should wait: the backlog's expected
+        solve time at the observed rate (bounded to a sane retry window)."""
+        rate = self.service.stats.solve_blocks_per_sec()
+        if not rate:
+            return 0.25
+        return float(min(10.0, max(0.05, backlog_blocks / rate)))
 
     def _wait(self, tenant: _Tenant, header):
         ids = [str(i) for i in header.get("ids") or []]
@@ -501,9 +672,13 @@ class MaskServer:
         with self._cv:
             missing = [i for i in ids if i not in tenant.results]
         if missing:
-            raise wire.WireError(
-                f"unknown request ids {missing[:3]!r} (already waited, or "
-                "never submitted by this tenant)"
+            # Structured + retryable: after a server restart every in-flight
+            # id is "unknown" here, and the client's recovery path re-submits
+            # the content (idempotent) rather than giving up.
+            raise RequestFailed(
+                f"unknown request ids {missing[:3]!r} (already waited, "
+                "never submitted by this tenant, or lost to a restart)",
+                kind="unknown-ids",
             )
         deadline = None if timeout is None else time.monotonic() + timeout
         reqs = [tenant.results[i] for i in ids]
@@ -511,9 +686,19 @@ class MaskServer:
             left = None if deadline is None else deadline - time.monotonic()
             if not r.event.wait(left):
                 raise TimeoutError(f"request {r.id!r} not solved in time")
-        errors = {r.id: r.error for r in reqs if r.error}
-        if errors:
-            raise RuntimeError(f"solve failed: {errors}")
+        failed = [r for r in reqs if r.error]
+        if failed:
+            # Pop the failed ids: a retried wait then reports them unknown,
+            # which funnels every failure mode (deadline, shed, restart)
+            # into the client's single re-submission path.
+            with self._cv:
+                for r in failed:
+                    tenant.results.pop(r.id, None)
+            kinds = {r.error_kind for r in failed}
+            raise RequestFailed(
+                f"solve failed: {({r.id: r.error for r in failed})}",
+                kind=kinds.pop() if len(kinds) == 1 else "error",
+            )
         with self._cv:
             for r in reqs:
                 tenant.results.pop(r.id, None)
@@ -537,10 +722,35 @@ class MaskServer:
                     return
             if self.batch_window_s:
                 time.sleep(self.batch_window_s)  # let co-submitters land
+            self._expire_overdue()
             with self._cv:
                 round_reqs = self._take_round()
             if round_reqs:
                 self._solve_round(round_reqs)
+
+    def _expire_overdue(self) -> None:
+        """Per-request deadline: fail anything queued past the budget with a
+        structured (retryable) ``deadline`` error before it wastes a round.
+        Requests already taken into a round are past admission — they solve."""
+        if self.request_deadline_s is None:
+            return
+        cutoff = time.monotonic() - self.request_deadline_s
+        with self._cv:
+            for t in self._tenants.values():
+                if not t.queue:
+                    continue
+                keep: deque[_Request] = deque()
+                while t.queue:
+                    req = t.queue.popleft()
+                    if req.enqueued_at < cutoff:
+                        req.fail(
+                            f"request {req.id!r} queued past "
+                            f"request_deadline_s={self.request_deadline_s}",
+                            kind="deadline",
+                        )
+                    else:
+                        keep.append(req)
+                t.queue = keep
 
     def _take_round(self) -> list[_Request]:
         """Deficit round-robin over backlogged tenants (under the lock).
@@ -619,6 +829,30 @@ class MaskServer:
 
     # -- observability ------------------------------------------------------
 
+    def health(self) -> dict:
+        """Cheap liveness/readiness snapshot for the ``health`` wire op.
+
+        ``draining: true`` tells a client to fail over *now* — the server
+        still answers waits but will not accept work.  ``queued_blocks``
+        lets a failover client prefer the least-loaded endpoint.
+        """
+        with self._cv:
+            queued = sum(len(t.queue) for t in self._tenants.values())
+            queued_blocks = sum(
+                r.nblocks for t in self._tenants.values() for r in t.queue
+            )
+        return {
+            "server": SERVER_NAME,
+            "draining": self._draining,
+            "accepting": self._running and not self._draining,
+            "queued": queued,
+            "queued_blocks": queued_blocks,
+            "uptime_seconds": (
+                time.monotonic() - self._started_at if self._started_at
+                else 0.0
+            ),
+        }
+
     def stats(self) -> dict:
         """Json-ready snapshot: inner service counters + per-tenant rows."""
         s = self.service.stats
@@ -628,6 +862,7 @@ class MaskServer:
                 time.monotonic() - self._started_at if self._started_at
                 else 0.0
             ),
+            "draining": self._draining,
             "rounds": self.rounds,
             "service": {
                 "submitted": s.submitted,

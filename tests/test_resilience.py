@@ -1,0 +1,667 @@
+"""Fault tolerance across the mask-service stack.
+
+The PR contract: the networked mask path degrades, never corrupts — every
+recovery mode (reconnect + re-submission, endpoint failover, server
+restart, degraded local fallback) produces masks *bit-identical* to an
+uninterrupted in-process solve, the DST controller survives a dead service
+without raising into the train loop, and a SIGTERM'd server drains
+gracefully.  The chaos harness itself (``ChaosProxy``) is exercised here
+and at scale in ``benchmarks/service_chaos.py``.
+"""
+import os
+import signal
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.solver import SolverConfig
+from repro.patterns import PatternSpec
+from repro.service import BucketPolicy, MaskService
+from repro.service.engine import FlushTicket
+from repro.service.journal import Journal
+from repro.service.net import (
+    ChaosProxy,
+    MaskClient,
+    MaskServer,
+    NO_RETRY,
+    RemoteError,
+    RetryBudgetExceeded,
+    RetryPolicy,
+)
+from repro.service.net.server import _Request, _Tenant, TenantConfig
+
+FAST = SolverConfig(iters=60)
+TINY = BucketPolicy(base=8, growth=2, max_bucket=32)
+#: Fast-recovery policy for tests: generous attempts, tiny sleeps.
+QUICK = RetryPolicy(max_attempts=10, base_s=0.01, cap_s=0.05,
+                    deadline_s=20.0, seed=0)
+
+
+def make_server(**kw):
+    kw.setdefault("batch_window_s", 0.001)
+    return MaskServer(MaskService(FAST, policy=TINY), **kw).start()
+
+
+def rng_tensors(seed=0, n=3):
+    rng = np.random.default_rng(seed)
+    return {
+        f"t{i}": rng.standard_normal((8 * (i + 1), 16)).astype(np.float32)
+        for i in range(n)
+    }
+
+
+def reference_masks(tensors, pattern=PatternSpec(2, 4)):
+    local = MaskService(FAST, policy=TINY)
+    return {k: np.array(local.solve(w, pattern)) for k, w in tensors.items()}
+
+
+# ---------------------------------------------------------------------------
+# RetryPolicy / Backoff.
+# ---------------------------------------------------------------------------
+
+
+def test_retry_policy_validation():
+    with pytest.raises(ValueError):
+        RetryPolicy(max_attempts=0)
+    with pytest.raises(ValueError):
+        RetryPolicy(base_s=0.0)
+    with pytest.raises(ValueError):
+        RetryPolicy(base_s=1.0, cap_s=0.5)
+    with pytest.raises(ValueError):
+        RetryPolicy(deadline_s=-1.0)
+
+
+def test_backoff_attempt_budget_and_cause():
+    policy = RetryPolicy(max_attempts=3, base_s=0.001, cap_s=0.002,
+                         deadline_s=None, seed=1)
+    episode = policy.backoff()
+    cause = OSError("boom")
+    episode.step(cause)
+    episode.step(cause)
+    with pytest.raises(RetryBudgetExceeded) as ei:
+        episode.step(cause)
+    assert ei.value.last_error is cause
+    assert episode.attempts == 3
+
+
+def test_backoff_deadline_budget():
+    policy = RetryPolicy(max_attempts=100, base_s=0.001, cap_s=0.005,
+                         deadline_s=0.05, seed=2)
+    episode = policy.backoff()
+    with pytest.raises(RetryBudgetExceeded):
+        for _ in range(1000):
+            episode.step(OSError("down"))
+    assert episode.elapsed_s() >= 0.05
+
+
+def test_backoff_is_deterministic_under_seed_and_honors_hints():
+    draws = []
+    for _ in range(2):
+        ep = RetryPolicy(max_attempts=50, base_s=0.01, cap_s=1.0,
+                         deadline_s=None, seed=7).backoff()
+        draws.append([ep.next_delay() for _ in range(5)])
+    assert draws[0] == draws[1]  # same seed, same jitter schedule
+    assert all(0.01 <= d <= 1.0 for d in draws[0])
+    ep = RetryPolicy(seed=7).backoff()
+    assert ep.next_delay(retry_after=0.4) == 0.4  # server hint wins
+    assert ep.next_delay(retry_after=99.0) == ep.policy.cap_s  # but capped
+    assert NO_RETRY.max_attempts == 1
+
+
+# ---------------------------------------------------------------------------
+# Journal: torn-tail replay (the crash-mid-append regression).
+# ---------------------------------------------------------------------------
+
+
+def test_journal_replay_skips_torn_final_record(tmp_path, caplog):
+    path = str(tmp_path / "journal.jsonl")
+    j = Journal(path)
+    j.record("a", "k1")
+    j.record("b", "k2")
+    # Byte-truncate the file mid-record, exactly what a kill mid-append
+    # leaves behind.
+    raw = open(path, "rb").read()
+    with open(path, "wb") as f:
+        f.write(raw[:-9])
+    with caplog.at_level("WARNING", logger="repro.service.journal"):
+        done = Journal(path).completed()
+    assert done.keys() == {"a"}
+    assert any("torn final record" in r.message for r in caplog.records)
+    # The torn tail does not poison subsequent appends either.
+    j2 = Journal(path)
+    j2.record("c", "k3")
+    assert Journal(path).completed().keys() == {"a", "c"}
+
+
+def test_journal_replay_warns_on_mid_file_corruption(tmp_path, caplog):
+    path = str(tmp_path / "journal.jsonl")
+    with open(path, "w") as f:
+        f.write('{"name": "a", "key": "k1"}\n')
+        f.write("NOT JSON AT ALL\n")
+        f.write('{"name": "b", "key": "k2"}\n')
+    with caplog.at_level("WARNING", logger="repro.service.journal"):
+        done = Journal(path).completed()
+    assert done.keys() == {"a", "b"}
+    assert any("corrupt record at line 2" in r.message
+               for r in caplog.records)
+
+
+def test_journal_sync_is_safe_without_file(tmp_path):
+    Journal(str(tmp_path / "never-written.jsonl")).sync()  # no-op, no raise
+
+
+# ---------------------------------------------------------------------------
+# Client recovery: reconnect, re-submission, failover, degraded fallback.
+# ---------------------------------------------------------------------------
+
+
+def test_flush_recovers_from_severed_connections():
+    """Kill every connection after submit: flush must reconnect, re-submit
+    the in-flight payloads, and produce bit-identical masks."""
+    tensors = rng_tensors(seed=3)
+    want = reference_masks(tensors)
+    srv = make_server()
+    try:
+        with ChaosProxy((srv.host, srv.port), seed=0) as proxy:
+            with MaskClient(proxy.address, tenant="chaos",
+                            retry=QUICK) as c:
+                handles = {k: c.submit(k, w, "t2:4")
+                           for k, w in tensors.items()}
+                time.sleep(0.05)  # let the submits hit the wire
+                proxy.kill_connections()
+                c.flush()
+                for k, h in handles.items():
+                    np.testing.assert_array_equal(np.array(h.result()),
+                                                  want[k])
+                assert c.stats.retries >= 1
+                assert not c.stats.degraded
+    finally:
+        srv.stop()
+
+
+def test_server_restart_loses_queue_client_resubmits_bit_identical():
+    """Hard server kill + restart on a fresh port mid-flight: the retried
+    wait reports unknown ids, the client re-submits, masks match exactly."""
+    tensors = rng_tensors(seed=4)
+    want = reference_masks(tensors)
+    srv1 = make_server(batch_window_s=0.5)  # linger: requests stay queued
+    proxy = ChaosProxy((srv1.host, srv1.port), seed=1)
+    try:
+        with MaskClient(proxy.address, tenant="restart",
+                        retry=QUICK) as c:
+            handles = {k: c.submit(k, w, "t2:4")
+                       for k, w in tensors.items()}
+            # Kill the server with the queue unsolved, then restart "it"
+            # (fresh process, no shared state) behind the same address.
+            srv1.stop()
+            proxy.kill_connections()
+            srv2 = make_server()
+            try:
+                proxy.retarget((srv2.host, srv2.port))
+                c.flush()
+                for k, h in handles.items():
+                    np.testing.assert_array_equal(np.array(h.result()),
+                                                  want[k])
+                assert c.stats.resubmitted >= len(tensors)
+                assert not c.stats.degraded
+                assert "retries=" in c.stats.summary()
+            finally:
+                srv2.stop()
+    finally:
+        proxy.stop()
+
+
+def test_failover_to_second_endpoint():
+    srv1 = make_server()
+    srv2 = make_server()
+    tensors = rng_tensors(seed=5, n=2)
+    want = reference_masks(tensors)
+    try:
+        with MaskClient([srv1.address, srv2.address], tenant="ha",
+                        retry=QUICK) as c:
+            first = next(iter(tensors))
+            np.testing.assert_array_equal(
+                np.array(c.solve(tensors[first], "t2:4")), want[first])
+            srv1.stop()  # primary dies between requests
+            for k, w in tensors.items():
+                np.testing.assert_array_equal(
+                    np.array(c.solve(w, "t2:4")), want[k])
+            assert c.stats.failovers >= 1
+            assert c.port == srv2.port
+            assert not c.stats.degraded
+    finally:
+        srv1.stop()
+        srv2.stop()
+
+
+def test_degraded_fallback_solves_locally_bit_identical():
+    """Every endpooint down past the budget: the client finishes the flush
+    through a local MaskService built from the advertised SolverConfig."""
+    tensors = rng_tensors(seed=6)
+    want = reference_masks(tensors)
+    srv = make_server(batch_window_s=0.5)
+    c = MaskClient(srv.address, tenant="degraded",
+                   retry=RetryPolicy(max_attempts=2, base_s=0.01,
+                                     cap_s=0.02, deadline_s=5.0, seed=0))
+    try:
+        handles = {k: c.submit(k, w, "t2:4") for k, w in tensors.items()}
+        srv.stop()  # and nothing comes back
+        c.flush()
+        assert c.stats.degraded and c.degraded
+        for k, h in handles.items():
+            np.testing.assert_array_equal(np.array(h.result()), want[k])
+        # Once degraded, later work solves locally too (no dead-wire stalls).
+        k0 = next(iter(tensors))
+        np.testing.assert_array_equal(
+            np.array(c.solve(tensors[k0], "t2:4")), want[k0])
+        assert "DEGRADED" in c.stats.summary()
+    finally:
+        c.close()
+        srv.stop()
+
+
+def test_construction_with_all_endpoints_down():
+    # Without a pinned config the client cannot promise bit-identity -> up
+    # to the caller.
+    with pytest.raises(OSError):
+        MaskClient("127.0.0.1:9", retry=NO_RETRY)
+    # With one, construction degrades immediately and solves locally.
+    tensors = rng_tensors(seed=7, n=1)
+    want = reference_masks(tensors)
+    with MaskClient("127.0.0.1:9", retry=NO_RETRY,
+                    fallback_config=FAST) as c:
+        assert c.degraded
+        k0 = next(iter(tensors))
+        np.testing.assert_array_equal(
+            np.array(c.solve(tensors[k0], "t2:4")), want[k0])
+
+
+def test_fallback_none_fails_outstanding_with_cause():
+    srv = make_server(batch_window_s=0.5)
+    c = MaskClient(srv.address, tenant="strict", fallback="none",
+                   retry=RetryPolicy(max_attempts=2, base_s=0.01,
+                                     cap_s=0.02, deadline_s=5.0, seed=0))
+    try:
+        h = c.submit("t", rng_tensors(seed=8, n=1)["t0"], "t2:4")
+        srv.stop()
+        with pytest.raises((OSError, RemoteError)):
+            c.flush()
+        with pytest.raises((OSError, RemoteError)):
+            h.result()  # the root cause, not a hang
+        assert not c.stats.degraded
+    finally:
+        c.close()
+
+
+def test_health_op_and_draining_flag():
+    srv = make_server()
+    try:
+        with MaskClient(srv.address, tenant="probe") as c:
+            h = c.health()
+            assert h["accepting"] and not h["draining"]
+            assert h["queued"] == 0 and h["uptime_seconds"] >= 0.0
+    finally:
+        srv.stop()
+
+
+def test_close_joins_background_flush():
+    """Satellite regression: close() must join an active flush_async drain
+    before yanking the pooled sockets out from under it."""
+    srv = make_server()
+    try:
+        c = MaskClient(srv.address, tenant="bg")
+        h = c.submit("t", rng_tensors(seed=9, n=1)["t0"], "t2:4")
+        ticket = c.flush_async()
+        c.close()  # must not race the drain
+        assert ticket.wait(timeout=30)
+        assert ticket._error is None
+        assert h.done
+    finally:
+        srv.stop()
+
+
+def test_config_mismatch_endpoint_is_skipped():
+    srv_a = make_server()
+    srv_b = MaskServer(MaskService(SolverConfig(iters=61), policy=TINY),
+                       batch_window_s=0.001).start()
+    try:
+        with MaskClient([srv_a.address, srv_b.address],
+                        retry=RetryPolicy(max_attempts=3, base_s=0.01,
+                                          cap_s=0.02, deadline_s=5.0,
+                                          seed=0),
+                        fallback="none") as c:
+            srv_a.stop()
+            # The only live endpoint advertises a different SolverConfig:
+            # failing over to it would silently change every mask, so the
+            # client must refuse rather than fail over.
+            with pytest.raises(RemoteError) as ei:
+                c.solve(rng_tensors(seed=10, n=1)["t0"], "t2:4")
+            assert ei.value.kind == "config-mismatch"
+            assert c.stats.failovers == 0
+            assert c.stats.degraded is False
+    finally:
+        srv_a.stop()
+        srv_b.stop()
+
+
+# ---------------------------------------------------------------------------
+# Server: load shedding, deadlines, graceful drain.
+# ---------------------------------------------------------------------------
+
+
+def test_overload_shedding_structured_reply():
+    srv = make_server(max_queue_blocks=4, batch_window_s=1.0)
+    try:
+        with MaskClient(srv.address, tenant="flood", retry=NO_RETRY,
+                        fallback="none") as c:
+            big = np.random.default_rng(0).standard_normal(
+                (64, 16)).astype(np.float32)
+            c.submit("a", big, "t2:4")  # fills the queue past the bound
+            time.sleep(0.05)
+            with pytest.raises(RemoteError) as ei:
+                c.submit("b", big + 1.0, "t2:4")
+            assert ei.value.kind == "overloaded"
+            assert ei.value.retry_after is not None
+            assert ei.value.transient
+    finally:
+        srv.stop()
+
+
+def test_expire_overdue_fails_with_deadline_kind():
+    # White-box: the sweep itself, without racing the live drain thread.
+    srv = MaskServer(MaskService(FAST, policy=TINY), request_deadline_s=0.01)
+    tenant = _Tenant("t", TenantConfig(), 64)
+    blocks = np.zeros((1, 4, 4), np.float32)
+    old = _Request("r1", "old", "t2:4", False, blocks, tenant)
+    old.enqueued_at -= 1.0
+    new = _Request("r2", "new", "t2:4", False, blocks, tenant)
+    tenant.queue.extend([old, new])
+    tenant.results = {"r1": old, "r2": new}
+    srv._tenants["t"] = tenant
+    srv._expire_overdue()
+    assert old.event.is_set() and old.error_kind == "deadline"
+    assert not new.event.is_set()
+    assert list(tenant.queue) == [new]
+    assert tenant.failed == 1
+
+
+def test_duplicate_submits_are_idempotent():
+    srv = make_server(batch_window_s=0.2)
+    try:
+        with MaskClient(srv.address, tenant="dup", retry=NO_RETRY) as c:
+            h = c.submit("t", rng_tensors(seed=11, n=1)["t0"], "t2:4")
+            assert c._resubmit_outstanding() == 1  # same id, same payload
+            c.flush()
+            assert h.done
+            row = c.server_stats()["tenants"]["dup"]
+            assert row["submitted"] == 1  # the duplicate was absorbed
+            assert row["resubmitted"] == 1
+            assert row["resolved"] == 1
+    finally:
+        srv.stop()
+
+
+def test_graceful_drain_finishes_inflight_work():
+    tensors = rng_tensors(seed=12)
+    want = reference_masks(tensors)
+    srv = make_server(batch_window_s=0.1)
+    with MaskClient(srv.address, tenant="drainee", retry=NO_RETRY) as c:
+        handles = {k: c.submit(k, w, "t2:4") for k, w in tensors.items()}
+        drainer = threading.Thread(target=srv.drain, kwargs={"grace_s": 30})
+        drainer.start()
+        try:
+            c.flush()  # in-flight work still completes and is claimable
+            for k, h in handles.items():
+                np.testing.assert_array_equal(np.array(h.result()), want[k])
+        finally:
+            drainer.join(timeout=60)
+        assert not srv._running
+    # A draining/stopped server rejects new connections entirely.
+    with pytest.raises(OSError):
+        MaskClient(srv.address, retry=NO_RETRY)
+
+
+def test_submit_during_drain_rejected_with_draining_kind():
+    srv = make_server(batch_window_s=0.001)
+    try:
+        with MaskClient(srv.address, tenant="late", retry=NO_RETRY,
+                        fallback="none") as c:
+            c.solve(rng_tensors(seed=13, n=1)["t0"], "t2:4")  # warm conn
+            with srv._cv:
+                srv._draining = True  # drain flag only; keep serving
+            with pytest.raises(RemoteError) as ei:
+                c.submit("x", rng_tensors(seed=14, n=1)["t0"], "t2:4")
+            assert ei.value.kind == "draining"
+            assert ei.value.retry_after is not None
+            assert c.health()["draining"]
+    finally:
+        with srv._cv:
+            srv._draining = False
+        srv.stop()
+
+
+def test_sigterm_drains_and_exits_cleanly(tmp_path):
+    """The CLI's SIGTERM contract: stop accepting, drain, exit 0."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.serve_masks",
+         "--port", "0", "--iters", "8", "--drain-grace", "10",
+         "--dir", str(tmp_path)],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True, env=env,
+    )
+    try:
+        line = proc.stdout.readline()
+        assert "listening on" in line, line
+        proc.send_signal(signal.SIGTERM)
+        out, _ = proc.communicate(timeout=60)
+        assert proc.returncode == 0, out
+        assert "drained, exiting" in out
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+
+
+# ---------------------------------------------------------------------------
+# DST: refresh failure keeps the old mask and re-arms.
+# ---------------------------------------------------------------------------
+
+
+class FlakyService(MaskService):
+    """Fails the first ``fail_times`` background flushes outright."""
+
+    def __init__(self, fail_times: int):
+        super().__init__(FAST, policy=TINY)
+        self.fail_times = fail_times
+
+    def flush_async(self) -> FlushTicket:
+        if self.fail_times > 0:
+            self.fail_times -= 1
+            ticket = FlushTicket()
+            ticket._error = RuntimeError("injected mask-service outage")
+            ticket._event.set()
+            return ticket
+        return super().flush_async()
+
+
+def _compressed_state():
+    from repro.models import lm
+    from repro.models.config import ModelConfig
+    from repro.optim import AdamW
+    from repro.sparsity.masks import apply_mask, sparsify_pytree
+    from repro.sparsity.params import compress_params, projection_prunable
+    from repro.train import make_train_state
+
+    cfg = ModelConfig("resil", "dense", num_layers=1, d_model=32,
+                      num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=64,
+                      remat="none", dtype="float32")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    pattern = PatternSpec(24, 32)
+    masks = sparsify_pytree(params, pattern, config=FAST,
+                            prunable=projection_prunable)
+    sp = compress_params(apply_mask(params, masks), masks, pattern)
+    opt = AdamW(learning_rate=1e-3, clip_norm=0.0)
+    return make_train_state(cfg, opt, jax.random.PRNGKey(1), params=sp,
+                            compression=False)
+
+
+def test_dst_refresh_failure_keeps_old_mask_then_retries():
+    from repro.dst import MaskRefreshController, StepwiseSchedule
+
+    state = _compressed_state()
+    sched = StepwiseSchedule(((0, "t24:32"), (3, "t16:32")))
+    svc = FlakyService(fail_times=1)
+    ctrl = MaskRefreshController(sched, service=svc, mode="async",
+                                 lookahead=2)
+    before = jax.tree.leaves(state.params)
+    for t in range(8):
+        state = ctrl.on_step(t, state._replace(
+            step=jnp.asarray(t, jnp.int32)))
+        if t == 3:
+            # The swap-step flush failed: old support kept, nothing raised.
+            failed = [e for e in ctrl.events if e.failed]
+            assert len(failed) == 1
+            assert "injected mask-service outage" in failed[0].error
+            assert "FAILED" in failed[0].summary()
+            after = jax.tree.leaves(state.params)
+            assert all(np.array_equal(np.asarray(a), np.asarray(b))
+                       for a, b in zip(before, after))
+    # The re-armed retry landed on a later step and swapped for real.
+    done = [e for e in ctrl.events if not e.failed]
+    assert len(done) == 1 and done[0].pattern == "t16:32"
+    assert state.params["blocks"]["attn"]["wq"].n == 16
+    tel = ctrl.telemetry()
+    assert tel["failed_refreshes"] == 1 and tel["refreshes"] == 2
+
+
+def test_dst_refresh_abandoned_past_retry_cap():
+    from repro.dst import MaskRefreshController, StepwiseSchedule
+
+    state = _compressed_state()
+    sched = StepwiseSchedule(((0, "t24:32"), (2, "t16:32")))
+    svc = FlakyService(fail_times=100)  # never recovers
+    ctrl = MaskRefreshController(sched, service=svc, mode="async",
+                                 lookahead=1, max_refresh_retries=2)
+    for t in range(12):
+        state = ctrl.on_step(t, state._replace(
+            step=jnp.asarray(t, jnp.int32)))
+    assert state.params["blocks"]["attn"]["wq"].n == 24  # old mask kept
+    failed = [e for e in ctrl.events if e.failed]
+    assert len(failed) == 1 + 2  # first attempt + max_refresh_retries
+    assert ctrl._rearm is None  # abandoned, not looping forever
+
+
+def test_dst_failed_retry_state_survives_checkpoint_round_trip():
+    from repro.dst import MaskRefreshController, StepwiseSchedule
+
+    sched = StepwiseSchedule(((0, "t24:32"), (3, "t16:32")))
+    state = _compressed_state()
+    svc = FlakyService(fail_times=100)
+    ctrl = MaskRefreshController(sched, service=svc, mode="async",
+                                 lookahead=2)
+    for t in range(4):
+        state = ctrl.on_step(t, state._replace(
+            step=jnp.asarray(t, jnp.int32)))
+    # A failure re-arm is pending; it must ride state_dict like an
+    # in-flight refresh does.
+    snap = ctrl.state_dict()
+    assert snap["inflight"] is not None
+    assert snap["inflight"]["retries"] >= 1
+    ctrl2 = MaskRefreshController(sched, service=FlakyService(0),
+                                  mode="async", lookahead=2)
+    ctrl2.load_state_dict(snap)
+    state2 = _compressed_state()
+    for t in range(4, 8):
+        state2 = ctrl2.on_step(t, state2._replace(
+            step=jnp.asarray(t, jnp.int32)))
+    done = [e for e in ctrl2.events if not e.failed]
+    assert len(done) == 1 and done[0].pattern == "t16:32"
+    assert state2.params["blocks"]["attn"]["wq"].n == 16
+
+
+# ---------------------------------------------------------------------------
+# ChaosProxy sanity.
+# ---------------------------------------------------------------------------
+
+
+def test_chaos_proxy_passthrough_and_counters():
+    srv = make_server()
+    try:
+        with ChaosProxy(srv.address, seed=0, latency_s=0.001) as proxy:
+            tensors = rng_tensors(seed=15, n=1)
+            want = reference_masks(tensors)
+            with MaskClient(proxy.address, retry=NO_RETRY) as c:
+                k0 = next(iter(tensors))
+                np.testing.assert_array_equal(
+                    np.array(c.solve(tensors[k0], "t2:4")), want[k0])
+            assert proxy.connections >= 1
+            assert proxy.forwarded_bytes > 0
+            assert proxy.killed == 0 and proxy.torn == 0
+    finally:
+        srv.stop()
+
+
+def test_chaos_proxy_blackhole_times_out_client():
+    srv = make_server()
+    try:
+        with ChaosProxy(srv.address, seed=0) as proxy:
+            with MaskClient(proxy.address, retry=NO_RETRY,
+                            fallback="none", timeout=0.2) as c:
+                proxy.blackhole(True)
+                with pytest.raises(OSError):  # socket.timeout
+                    c.ping()
+                assert proxy.swallowed_bytes > 0
+    finally:
+        srv.stop()
+
+
+def test_prune_transformer_survives_flaky_network():
+    """End-to-end: a full layer-wise prune through a lossy proxy with
+    mid-run connection kills is bit-identical to a local prune."""
+    from repro.models import lm
+    from repro.models.config import ModelConfig
+    from repro.pruning.runner import prune_transformer
+
+    cfg = ModelConfig("chaos-net", "dense", num_layers=2, d_model=32,
+                      num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=64,
+                      remat="none", dtype="float32")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jnp.asarray(
+        np.random.default_rng(7).integers(0, 64, size=(2, 16)))
+    kw = dict(tokens=tokens, method="wanda", pattern=PatternSpec(2, 4),
+              solver=FAST)
+    pruned_l, masks_l = prune_transformer(
+        params, cfg, service=MaskService(FAST, policy=TINY), **kw)
+
+    srv = make_server()
+    stop_chaos = threading.Event()
+    try:
+        with ChaosProxy(srv.address, seed=3, latency_s=0.0005) as proxy:
+            def sever_periodically():
+                while not stop_chaos.wait(0.15):
+                    proxy.kill_connections()
+
+            chaos = threading.Thread(target=sever_periodically, daemon=True)
+            chaos.start()
+            try:
+                with MaskClient(proxy.address, tenant="chaos-prune",
+                                retry=QUICK) as c:
+                    pruned_r, masks_r = prune_transformer(
+                        params, cfg, service=c, **kw)
+                    assert not c.stats.degraded
+            finally:
+                stop_chaos.set()
+                chaos.join(timeout=5)
+    finally:
+        srv.stop()
+    for a, b in zip(jax.tree.leaves(masks_r), jax.tree.leaves(masks_l)):
+        np.testing.assert_array_equal(np.array(a), np.array(b))
+    for a, b in zip(jax.tree.leaves(pruned_r), jax.tree.leaves(pruned_l)):
+        np.testing.assert_array_equal(np.array(a), np.array(b))
