@@ -1,0 +1,149 @@
+"""Roofline-guided tile autotune for the compressed hot-path kernels.
+
+Drives :mod:`repro.perf.autotune` over the benched shape classes — the
+prefill GEMM and decode GEMV operand shapes of the train/serve benchmarks
+(forward and decompress-transpose nm_spmm products) plus the fused solver's
+block-batch tile — measures the roofline-shortlisted candidates on the live
+device, and writes:
+
+* ``BENCH_kernels.json`` — per shape class: default tiles vs measured best,
+  seconds, speedup, the full candidate timing table.  The fixed default
+  tiles are always in the measured candidate set, so ``speedup_vs_default``
+  is >= 1 by construction on the run that produced it; the decode GEMV must
+  be *strictly* faster (the fixed bt=256 tile wastes 31/32 rows there).
+* (``--table`` / ``--update-default``) the versioned tuning table the
+  kernels consult at trace time (``repro.perf.table``), keyed by device
+  kind, group size and shape class — tiles tuned on this container's CPU
+  interpret mode never apply on a TPU and vice versa.
+
+On CPU the Pallas kernels run in interpret mode, so absolute times measure
+dispatch + per-element interpret cost, not TPU bandwidth — but the *ranking*
+(and the decode-GEMV padding waste) is real on both: fewer padded rows is
+less work everywhere.
+
+Run:    PYTHONPATH=src:. python benchmarks/kernel_autotune.py --update-default
+Smoke:  PYTHONPATH=src:. python benchmarks/kernel_autotune.py --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import platform
+
+import jax
+
+from benchmarks.common import emit
+from repro.kernels import default_interpret
+from repro.perf.autotune import autotune_fused_solve, autotune_nm_spmm
+from repro.perf.table import TuningTable, default_table_path, device_kind_of
+
+# Shape classes mirror BENCH_train.json's bench-30m (t8:16, seq 128, batch 8:
+# prefill rows = 8*128, decode rows = 8, K = d_model, F = d_ff) and the
+# solver bench's block batches.
+FULL_CELLS = {
+    "nm_spmm_fwd_gemm": dict(rows=1024, k=384, f=1536, n=8, m=16),
+    "nm_spmm_tr_gemm": dict(rows=1024, k=384, f=1536, n=8, m=16, transpose=True),
+    "nm_spmm_fwd_gemv": dict(rows=8, k=384, f=1536, n=8, m=16),
+    "fused_solve_m16": dict(op="fused", m=16, n=8, batch=512, iters=40),
+}
+SMOKE_CELLS = {
+    "nm_spmm_fwd_gemm": dict(rows=128, k=64, f=128, n=8, m=16),
+    "nm_spmm_tr_gemm": dict(rows=128, k=64, f=128, n=8, m=16, transpose=True),
+    "nm_spmm_fwd_gemv": dict(rows=8, k=64, f=128, n=8, m=16),
+    "fused_solve_m8": dict(op="fused", m=8, n=4, batch=64, iters=10),
+}
+
+
+def run(cells: dict, shape_set: str, reps: int, out_path: str,
+        table_path: str | None) -> dict:
+    results, headline = {}, {}
+    for name, cell in cells.items():
+        cell = dict(cell)
+        if cell.pop("op", None) == "fused":
+            res = autotune_fused_solve(
+                cell["m"], cell["n"], batch=cell["batch"],
+                iters=cell["iters"], reps=reps,
+            )
+        else:
+            res = autotune_nm_spmm(reps=reps, **cell)
+        results[name] = res
+        headline[name] = {
+            "op": res.op,
+            "shape": list(res.shape),
+            "shape_class": res.shape_class,
+            "default_tiles": list(res.default_tiles),
+            "best_tiles": list(res.best_tiles),
+            "default_seconds": res.default_seconds,
+            "best_seconds": res.best_seconds,
+            "speedup_vs_default": res.speedup_vs_default,
+        }
+        emit(f"autotune_{name}", res.best_seconds,
+             f"best={res.best_tiles} default={res.default_tiles} "
+             f"speedup={res.speedup_vs_default:.2f}x")
+
+    doc = {
+        "meta": {
+            "benchmark": "kernel_autotune",
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+            "jax": jax.__version__,
+            "device": device_kind_of(),
+            "interpret_mode": default_interpret(),
+            "shape_set": shape_set,
+            "reps": reps,
+        },
+        "headline": headline,
+        "results": {name: res.to_json() for name, res in results.items()},
+    }
+    out = pathlib.Path(out_path)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(doc, indent=1) + "\n")
+    print(f"wrote {out}")
+
+    if table_path:
+        path = pathlib.Path(table_path)
+        try:
+            table = TuningTable.load(path)
+        except FileNotFoundError:
+            table = TuningTable()
+        for res in results.values():
+            table.put(res.table_entry())
+        table.save(path)
+        print(f"wrote {path} ({len(table)} entries)")
+    return doc
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes / few reps (CI gate)")
+    ap.add_argument("--out", default="BENCH_kernels.json")
+    ap.add_argument("--reps", type=int, default=None)
+    ap.add_argument("--table", default=None, metavar="PATH",
+                    help="write/merge the tuning table here")
+    ap.add_argument("--update-default", action="store_true",
+                    help="write winners into the packaged default table "
+                         f"({default_table_path()})")
+    args = ap.parse_args()
+    table_path = args.table or (
+        str(default_table_path()) if args.update_default else None
+    )
+    cells = SMOKE_CELLS if args.smoke else FULL_CELLS
+    shape_set = "smoke" if args.smoke else "full"
+    doc = run(cells, shape_set, args.reps or (2 if args.smoke else 3),
+              args.out, table_path)
+
+    # Gates (always-on: the committed BENCH must satisfy them too).
+    head = doc["headline"]
+    worst = min(c["speedup_vs_default"] for c in head.values())
+    assert worst >= 1.0, f"autotuned tiles slower than default: {head}"
+    decode = head["nm_spmm_fwd_gemv"]["speedup_vs_default"]
+    assert decode > 1.0, (
+        f"decode GEMV not strictly faster than the fixed tiles: {decode}"
+    )
+    print(f"gates OK: min speedup {worst:.2f}x, decode GEMV {decode:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

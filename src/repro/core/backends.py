@@ -214,11 +214,16 @@ class FusedPallasBackend:
 
     def solve_packed(self, w_abs_blocks, pattern, config):
         from repro.kernels.fused_solve import ops as fused_ops
+        from repro.perf.table import fused_solve_block_b
 
+        # Trace-time tuning-table consult: a measured block-batch tile for
+        # this device kind / group size overrides the vmem_plan default.
+        # Blocks are independent, so the tile never changes the masks.
         words, _ = fused_ops.fused_solve(
             jnp.asarray(w_abs_blocks, jnp.float32), pattern.n,
             iters=config.iters, ls_steps=config.ls_steps,
             tau_scale=config.tau_scale, tol=config.tol,
+            block_b=fused_solve_block_b(pattern.m),
         )
         return words
 

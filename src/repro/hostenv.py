@@ -1,0 +1,32 @@
+"""Host-process environment workarounds, importable before (and without) jax.
+
+This module must stay dependency-free: ``tests/conftest.py`` and the tools
+(``tools/check_docs.py``, CI helpers) call it *before* the first jax import,
+because XLA reads these environment variables exactly once at client
+creation.
+"""
+from __future__ import annotations
+
+import os
+
+__all__ = ["single_core_xla_workaround"]
+
+
+def single_core_xla_workaround(environ=None) -> bool:
+    """Force a second XLA host device on single-core machines.
+
+    On a single-core host the XLA CPU client has one execution thread, so
+    the ``io_callback`` escape hatch (``solve_via="callback"``) deadlocks:
+    the outer jitted computation holds the only thread while the callback
+    waits on a nested dispatch.  A second host device gives that dispatch
+    somewhere to run.
+
+    Returns True when the flag was applied (single-core host, no existing
+    ``XLA_FLAGS``).  Must run before jax is imported.
+    """
+    env = os.environ if environ is None else environ
+    if (os.cpu_count() or 2) != 1:
+        return False
+    before = env.get("XLA_FLAGS")
+    env.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=2")
+    return before is None

@@ -19,6 +19,17 @@ Tiling: grid (B/bt, F/ft, K/kt) for forward (K innermost = accumulation), and
 (bt, kt, ft) = (256, 256, 256); VMEM live set ≈ x-tile + vals + idx + dense
 tile + out-tile ≈ 1.1 MB at bf16 — comfortably under budget, leaving room for
 double buffering of the streamed operands.
+
+Tile *selection* is measurement-driven: when a tile argument is left None,
+``_resolve_tiles`` consults the versioned tuning table
+(``repro.perf.table`` — winners measured by ``benchmarks/kernel_autotune.py``
+on this device kind at this operand shape class) and otherwise falls back to
+the fixed defaults with the batch tile clamped to the VPU-aligned padded row
+count.  The clamp is the decode-GEMV fix: at B=8 decode rows, bt=256 used to
+pad 8 real rows to 256 — 31 wasted rows of MXU work and X traffic per real
+one.  Per-row results are independent of the row tiling, so clamping is
+bit-identical to the historic tiles (regression-tested).  Explicit tile
+arguments are always honored verbatim.
 """
 from __future__ import annotations
 
@@ -29,6 +40,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels import default_interpret
+from repro.kernels.vmem import VPU_ALIGN
 
 
 def _decompress_tile(vals: jnp.ndarray, idx: jnp.ndarray, m: int) -> jnp.ndarray:
@@ -73,18 +85,48 @@ def _pad_dim(a: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
     return jnp.pad(a, widths)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("m", "transpose", "bt", "kt", "ft", "interpret")
-)
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def _resolve_tiles(
+    b: int, k: int, f: int, m: int, transpose: bool,
+    bt: int | None, kt: int | None, ft: int | None,
+) -> tuple[int, int, int]:
+    """Fill in None tile args: tuning table first, clamped defaults second.
+
+    Table tiles are legality-clamped against the concrete shape (``kt`` a
+    multiple of max(m, sublane), ``ft`` a multiple of the lane width); the
+    batch tile is additionally clamped to the padded row count whenever the
+    caller did not pin it — rows are independent, so the clamp never changes
+    results, only how much padding the grid carries.
+    """
+    row_cap = max(VPU_ALIGN, _round_up(b, VPU_ALIGN))
+    if bt is None or kt is None or ft is None:
+        from repro.perf.table import nm_spmm_tiles
+
+        tuned = nm_spmm_tiles(b, k, f, m, transpose)
+        tbt, tkt, tft = tuned if tuned else (256, 256, 256)
+        if bt is None:
+            bt = min(tbt, row_cap)
+        if kt is None:
+            kt = tkt if tuned else _round_up(256, m)
+            kt = max(min(kt, _round_up(k, max(m, VPU_ALIGN))), m)
+            kt = _round_up(kt, m)
+        if ft is None:
+            ft = min(tft, _round_up(f, 128))
+    return bt, kt, ft
+
+
 def nm_spmm_pallas(
     x: jnp.ndarray,
     vals: jnp.ndarray,
     idx: jnp.ndarray,
     m: int,
     transpose: bool = False,
-    bt: int = 256,
-    kt: int = 256,
-    ft: int = 256,
+    bt: int | None = None,
+    kt: int | None = None,
+    ft: int | None = None,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Compressed N:M matmul.
@@ -93,9 +135,35 @@ def nm_spmm_pallas(
       x: (B, K) activations (forward) or (B, F) cotangents (transpose=True).
       vals/idx: compressed weight, shapes (K/M, N, F).
       transpose: False -> returns X·W (B, F); True -> returns X·Wᵀ (B, K).
+      bt/kt/ft: tile sizes; None (the default) resolves through the tuning
+        table / clamped defaults at trace time (see module docstring).
 
     Returns float32 output (cast at the call site if bf16 is wanted).
     """
+    g, n, f = vals.shape
+    k = g * m
+    bt, kt, ft = _resolve_tiles(
+        int(x.shape[0]), k, f, m, transpose, bt, kt, ft
+    )
+    return _nm_spmm_call(
+        x, vals, idx, m, transpose, bt, kt, ft, interpret
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("m", "transpose", "bt", "kt", "ft", "interpret")
+)
+def _nm_spmm_call(
+    x: jnp.ndarray,
+    vals: jnp.ndarray,
+    idx: jnp.ndarray,
+    m: int,
+    transpose: bool,
+    bt: int,
+    kt: int,
+    ft: int,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
     if interpret is None:
         interpret = default_interpret()
     g, n, f = vals.shape

@@ -1,0 +1,56 @@
+"""repro.perf — roofline autotuning + declarative perf-regression checks.
+
+Two halves (ROADMAP item 3):
+
+* **Autotune** — :mod:`repro.perf.roofline` prices candidate tiles for the
+  compressed hot-path kernels (bytes moved / flops per tile, VMEM-feasible
+  per :func:`repro.kernels.vmem.vmem_plan`); :mod:`repro.perf.autotune`
+  measures the short list on the live device; :mod:`repro.perf.table`
+  persists the winners in a versioned table keyed by device kind, group
+  size and operand shape class, which ``nm_spmm_pallas`` (behind
+  ``models.layers.proj``) and the fused solver backend consult at trace
+  time.  ``benchmarks/kernel_autotune.py`` drives it and writes
+  ``BENCH_kernels.json``.
+
+* **Perf gates** — :mod:`repro.perf.checks` declares reframe-style checks
+  (extraction expressions, sanity conditions, trend references with
+  tolerance bands) over every committed ``BENCH_*.json``;
+  ``tools/perfcheck.py`` evaluates them in CI and fails on regression.
+
+Submodules import lazily (PEP 562) so ``import repro.perf`` never pulls
+jax — ``tools/perfcheck.py`` parses JSON only.
+"""
+from __future__ import annotations
+
+_LAZY = {
+    "roofline": ".roofline",
+    "autotune": ".autotune",
+    "table": ".table",
+    "checks": ".checks",
+    # Promoted names.
+    "TuningTable": ".table",
+    "TableEntry": ".table",
+    "get_tuning_table": ".table",
+    "set_tuning_table": ".table",
+    "shape_class": ".table",
+    "PerfCheck": ".checks",
+    "Trend": ".checks",
+    "Extractor": ".checks",
+    "CHECKS": ".checks",
+    "evaluate_all": ".checks",
+    "autotune_nm_spmm": ".autotune",
+    "autotune_fused_solve": ".autotune",
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name: str):
+    if name not in _LAZY:
+        raise AttributeError(f"module 'repro.perf' has no attribute {name!r}")
+    import importlib
+
+    mod = importlib.import_module(_LAZY[name], __name__)
+    if _LAZY[name].lstrip(".") == name:
+        return mod
+    return getattr(mod, name)

@@ -1,0 +1,209 @@
+"""Measurement-driven tile autotuner for the compressed hot-path kernels.
+
+The roofline model (:mod:`repro.perf.roofline`) enumerates and ranks legal
+tile candidates; this module *measures* the short-listed candidates on the
+live device with real kernel invocations and returns the winner, plus a
+:class:`~repro.perf.table.TableEntry` ready to persist.  The historic
+default tiles are always in the measured set, so the winner's speedup over
+the default is >= 1 by construction on the run that produced it.
+
+``benchmarks/kernel_autotune.py`` drives this over the benched shape
+classes and writes both ``BENCH_kernels.json`` and the tuning table that
+``nm_spmm_pallas`` / the fused solver backend consult at trace time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.perf import roofline
+from repro.perf.table import TableEntry, device_kind_of, shape_class
+
+__all__ = ["CandidateTiming", "AutotuneResult", "autotune_nm_spmm", "autotune_fused_solve"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CandidateTiming:
+    tiles: tuple[int, ...]
+    seconds: float
+    model_seconds: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class AutotuneResult:
+    """Outcome of tuning one (op, shape) cell."""
+
+    op: str
+    m: int
+    shape: tuple[int, ...]
+    shape_class: str
+    device_kind: str
+    default_tiles: tuple[int, ...]
+    best_tiles: tuple[int, ...]
+    default_seconds: float
+    best_seconds: float
+    candidates: tuple[CandidateTiming, ...]
+
+    @property
+    def speedup_vs_default(self) -> float:
+        return self.default_seconds / max(self.best_seconds, 1e-12)
+
+    def table_entry(self) -> TableEntry:
+        return TableEntry(
+            op=self.op,
+            device_kind=self.device_kind,
+            m=self.m,
+            shape_class=self.shape_class,
+            tiles=self.best_tiles,
+            measured_s=self.best_seconds,
+            default_s=self.default_seconds,
+            speedup_vs_default=self.speedup_vs_default,
+            shape=self.shape,
+        )
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["speedup_vs_default"] = self.speedup_vs_default
+        return d
+
+
+def _median_seconds(fn, *, warmup: int = 1, reps: int = 3) -> float:
+    import jax
+
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def _synth_compressed(k: int, f: int, n: int, m: int, seed: int = 0):
+    """Synthetic compressed operands: dense-N:M values + valid indices."""
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(seed)
+    g = k // m
+    vals = rng.normal(size=(g, n, f)).astype(np.float32)
+    # Sorted distinct positions per group/column — a legal N:M support.
+    idx = np.empty((g, n, f), np.int8)
+    base = np.stack([
+        np.sort(rng.choice(m, size=n, replace=False)) for _ in range(g * f)
+    ])
+    idx[...] = base.reshape(g, f, n).transpose(0, 2, 1)
+    return jnp.asarray(vals), jnp.asarray(idx)
+
+
+def autotune_nm_spmm(
+    rows: int,
+    k: int,
+    f: int,
+    n: int,
+    m: int,
+    *,
+    transpose: bool = False,
+    device=None,
+    max_candidates: int = 6,
+    reps: int = 3,
+    seed: int = 0,
+) -> AutotuneResult:
+    """Tune ``nm_spmm`` tiles at one concrete operand shape.
+
+    ``rows`` is the leading dim of the streamed operand (activations forward,
+    cotangents for the transposed product) — the axis that separates decode
+    GEMV from prefill GEMM.
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels.nm_spmm.kernel import nm_spmm_pallas
+
+    if k % m:
+        raise ValueError(f"K must be a multiple of m, got K={k} m={m}")
+    vals, idx = _synth_compressed(k, f, n, m, seed)
+    rng = np.random.default_rng(seed + 1)
+    width = f if transpose else k
+    x = jnp.asarray(rng.normal(size=(rows, width)).astype(np.float32))
+
+    cands = roofline.nm_spmm_candidates(
+        rows, k, f, n, m, device, max_candidates=max_candidates
+    )
+    profile = roofline.profile_for(device)
+    timings: list[CandidateTiming] = []
+    for c in cands:
+        sec = _median_seconds(
+            lambda c=c: nm_spmm_pallas(
+                x, vals, idx, m, transpose=transpose, bt=c.bt, kt=c.kt, ft=c.ft
+            ),
+            reps=reps,
+        )
+        timings.append(CandidateTiming(c.tiles, sec, c.model_seconds(profile)))
+
+    dbt, dkt, dft = roofline.DEFAULT_TILES
+    dkt = dkt if dkt % m == 0 else -(-dkt // m) * m
+    default_tiles = (dbt, dkt, dft)
+    default_sec = next(t.seconds for t in timings if t.tiles == default_tiles)
+    best = min(timings, key=lambda t: t.seconds)
+    return AutotuneResult(
+        op="nm_spmm_tr" if transpose else "nm_spmm_fwd",
+        m=m,
+        shape=(rows, k, f, n),
+        shape_class=shape_class(rows, k, f),
+        device_kind=device_kind_of(device),
+        default_tiles=default_tiles,
+        best_tiles=best.tiles,
+        default_seconds=default_sec,
+        best_seconds=best.seconds,
+        candidates=tuple(timings),
+    )
+
+
+def autotune_fused_solve(
+    m: int,
+    n: int,
+    *,
+    batch: int = 256,
+    iters: int = 40,
+    device=None,
+    reps: int = 3,
+    seed: int = 0,
+    max_candidates: Optional[int] = 4,
+) -> AutotuneResult:
+    """Tune the fused solve kernel's block-batch tile for group size ``m``."""
+    import jax.numpy as jnp
+
+    from repro.kernels.fused_solve.kernel import LIVE_BUFFERS, fused_solve_pallas
+
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(np.abs(rng.normal(size=(batch, m, m))).astype(np.float32))
+
+    cands = roofline.fused_solve_candidates(m, device, live_buffers=LIVE_BUFFERS)
+    # The vmem_plan tile IS the default (what fused_block_b returns today).
+    default_bb = cands[0]
+    if max_candidates:
+        cands = cands[:max_candidates]
+    timings = []
+    for bb in cands:
+        sec = _median_seconds(
+            lambda bb=bb: fused_solve_pallas(w, n, iters=iters, block_b=bb)[0],
+            reps=reps,
+        )
+        timings.append(CandidateTiming((bb,), sec))
+    default_sec = next(t.seconds for t in timings if t.tiles == (default_bb,))
+    best = min(timings, key=lambda t: t.seconds)
+    return AutotuneResult(
+        op="fused_solve",
+        m=m,
+        shape=(batch, m, m),
+        shape_class="solve",
+        device_kind=device_kind_of(device),
+        default_tiles=(default_bb,),
+        best_tiles=best.tiles,
+        default_seconds=default_sec,
+        best_seconds=best.seconds,
+        candidates=tuple(timings),
+    )

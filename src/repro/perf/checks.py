@@ -1,0 +1,463 @@
+"""Declarative perf-regression checks over the committed ``BENCH_*.json``.
+
+The reframe idiom, minus the framework: each :class:`PerfCheck` names a
+benchmark document, *extraction expressions* that pull named values out of
+it, *sanity conditions* (invariants that must hold for the run to be
+meaningful at all — e.g. the measured traffic ratio matching the analytic
+model, or the bit-identity flag), and *trend references* — values compared
+against the committed baseline document within a tolerance band, gating or
+warning on regression.
+
+``tools/perfcheck.py`` is the CLI driver: it evaluates every check in
+:data:`CHECKS` against a "current" directory of bench JSONs and a
+"baseline" directory (the repo's committed files), and fails CI on any
+sanity failure or gated trend regression.
+
+Extraction expressions are dotted paths into the JSON document with two
+extras::
+
+    headline.tokens_per_sec.compressed     # plain nested lookup
+    headline.*.speedup_vs_pallas           # fan out over dict values / lists
+    results[mode=compressed].tokens_per_sec  # select from a list of dicts
+
+A ``*`` segment turns the result into a list (later segments map over it),
+which the sanity/trend expressions consume with ``min``/``max``/``all``.
+
+Trend comparisons only run when the two documents are *comparable*: every
+``compare_keys`` expression (typically ``meta.model``, ``meta.pattern``,
+shape fields) must extract equal values from both.  A CI smoke run is
+therefore sanity-checked against its own gates but never trend-diffed
+against the committed full-size baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import re
+from typing import Any, Mapping, Optional
+
+__all__ = [
+    "Extractor",
+    "Trend",
+    "PerfCheck",
+    "CheckResult",
+    "CHECKS",
+    "extract",
+    "evaluate_check",
+    "evaluate_all",
+]
+
+_SELECT_RE = re.compile(r"^(?P<name>[^\[\]]*)\[(?P<key>[^=\]]+)=(?P<val>[^\]]+)\]$")
+
+
+class ExtractionError(KeyError):
+    """An extraction expression did not resolve against the document."""
+
+
+def _descend(node: Any, seg: str):
+    if seg == "*":
+        if isinstance(node, Mapping):
+            return list(node.values()), True
+        if isinstance(node, list):
+            return list(node), True
+        raise ExtractionError(f"'*' needs a dict or list, got {type(node).__name__}")
+    sel = _SELECT_RE.match(seg)
+    if sel:
+        name, key, val = sel.group("name"), sel.group("key"), sel.group("val")
+        items = node[name] if name else node
+        if not isinstance(items, list):
+            raise ExtractionError(f"selector [{key}={val}] needs a list")
+        for item in items:
+            if str(item.get(key)) == val:
+                return item, False
+        raise ExtractionError(f"no item with {key}={val} under {name or '<root>'}")
+    if isinstance(node, Mapping):
+        if seg not in node:
+            raise ExtractionError(seg)
+        return node[seg], False
+    raise ExtractionError(f"cannot index {type(node).__name__} with {seg!r}")
+
+
+def extract(doc: Any, expr: str):
+    """Evaluate an extraction expression against a parsed JSON document."""
+    nodes, fanned = [doc], False
+    for seg in expr.split("."):
+        out = []
+        for node in nodes:
+            val, fan = _descend(node, seg)
+            if fan:
+                fanned = True
+                out.extend(val)
+            else:
+                out.append(val)
+        nodes = out
+    return nodes if fanned else nodes[0]
+
+
+# Helper namespace available to sanity expressions (no builtins beyond these).
+_SAFE_FUNCS = {
+    "abs": abs, "min": min, "max": max, "all": all, "any": any,
+    "len": len, "sum": sum, "sorted": sorted, "round": round,
+    "approx": lambda a, b, rel=0.1: abs(a - b) <= rel * abs(b),
+}
+
+
+def _eval_condition(cond: str, variables: Mapping[str, Any]) -> bool:
+    ns = dict(_SAFE_FUNCS)
+    ns.update(variables)
+    return bool(eval(cond, {"__builtins__": {}}, ns))  # noqa: S307 - declarative DSL
+
+
+@dataclasses.dataclass(frozen=True)
+class Extractor:
+    """Named extraction: ``var`` becomes available to sanity/trend exprs."""
+
+    var: str
+    expr: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Trend:
+    """Trend reference: current vs baseline value of ``var`` within a band.
+
+    ``direction`` is the *good* direction ("higher" for throughput, "lower"
+    for latency/loss); a move beyond ``tolerance`` (fractional) in the bad
+    direction is a regression.  ``mode="gate"`` fails the run, ``"warn"``
+    only reports.
+    """
+
+    var: str
+    direction: str = "higher"
+    tolerance: float = 0.10
+    mode: str = "gate"
+
+    def verdict(self, current: float, baseline: float) -> str:
+        if baseline == 0:
+            return "ok"
+        delta = (current - baseline) / abs(baseline)
+        bad = -delta if self.direction == "higher" else delta
+        if bad > self.tolerance:
+            return "regressed"
+        if bad < -self.tolerance:
+            return "improved"
+        return "ok"
+
+    def worst_delta(self, current, baseline) -> Optional[float]:
+        """Signed fractional delta, worst element first for list-valued vars
+        (a fanned-out extraction, e.g. per-M throughputs); None if the
+        shapes do not line up."""
+        if isinstance(current, (int, float)) and isinstance(baseline, (int, float)):
+            pairs = [(float(current), float(baseline))]
+        elif (
+            isinstance(current, list) and isinstance(baseline, list)
+            and len(current) == len(baseline) and current
+            and all(isinstance(v, (int, float)) for v in current + baseline)
+        ):
+            pairs = [(float(c), float(b)) for c, b in zip(current, baseline)]
+        else:
+            return None
+        deltas = [(c - b) / abs(b) for c, b in pairs if b]
+        if not deltas:
+            return 0.0
+        return min(deltas) if self.direction == "higher" else max(deltas)
+
+
+@dataclasses.dataclass(frozen=True)
+class PerfCheck:
+    """One declarative check bound to one ``BENCH_*.json`` document."""
+
+    name: str
+    bench: str                                  # file name, e.g. BENCH_train.json
+    extract: tuple[Extractor, ...] = ()
+    sanity: tuple[str, ...] = ()
+    trends: tuple[Trend, ...] = ()
+    compare_keys: tuple[str, ...] = ()          # comparability fingerprint
+    required: bool = True                       # missing baseline file is an error
+
+
+@dataclasses.dataclass
+class CheckResult:
+    check: str
+    bench: str
+    status: str                     # ok | sanity_failed | regressed | skipped | missing
+    sanity_failures: list[str] = dataclasses.field(default_factory=list)
+    trend_rows: list[dict] = dataclasses.field(default_factory=list)
+    notes: list[str] = dataclasses.field(default_factory=list)
+    values: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def gating_failure(self) -> bool:
+        return self.status in ("sanity_failed", "regressed", "missing")
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _extract_all(doc, extractors) -> tuple[dict, list[str]]:
+    values, problems = {}, []
+    for ex in extractors:
+        try:
+            values[ex.var] = extract(doc, ex.expr)
+        except ExtractionError as e:
+            problems.append(f"extract {ex.var} = {ex.expr}: {e}")
+    return values, problems
+
+
+def evaluate_check(
+    check: PerfCheck,
+    current_doc,
+    baseline_doc=None,
+) -> CheckResult:
+    """Evaluate sanity on ``current_doc`` and trends vs ``baseline_doc``."""
+    res = CheckResult(check=check.name, bench=check.bench, status="ok")
+    values, problems = _extract_all(current_doc, check.extract)
+    res.values = {
+        k: v for k, v in values.items()
+        if isinstance(v, (int, float, bool, str, list))
+    }
+    if problems:
+        res.status = "sanity_failed"
+        res.sanity_failures.extend(problems)
+        return res
+
+    for cond in check.sanity:
+        try:
+            ok = _eval_condition(cond, values)
+        except Exception as e:
+            ok = False
+            res.sanity_failures.append(f"{cond!r} raised {type(e).__name__}: {e}")
+            continue
+        if not ok:
+            res.sanity_failures.append(cond)
+    if res.sanity_failures:
+        res.status = "sanity_failed"
+        return res
+
+    if baseline_doc is None or not check.trends:
+        return res
+
+    if baseline_doc is current_doc:
+        comparable = True
+    else:
+        comparable = True
+        for key_expr in check.compare_keys:
+            try:
+                cur = extract(current_doc, key_expr)
+                base = extract(baseline_doc, key_expr)
+            except ExtractionError:
+                comparable = False
+                break
+            if cur != base:
+                comparable = False
+                res.notes.append(
+                    f"baseline not comparable: {key_expr} differs "
+                    f"({cur!r} vs {base!r}) — trends skipped"
+                )
+                break
+    if not comparable:
+        return res
+
+    base_values, base_problems = _extract_all(baseline_doc, check.extract)
+    if base_problems:
+        res.notes.append(f"baseline extraction failed: {base_problems} — trends skipped")
+        return res
+
+    regressed = False
+    for trend in check.trends:
+        cur, base = values.get(trend.var), base_values.get(trend.var)
+        delta = trend.worst_delta(cur, base)
+        if delta is None:
+            res.notes.append(f"trend {trend.var}: non-numeric or "
+                             "mismatched shapes — skipped")
+            continue
+        bad = -delta if trend.direction == "higher" else delta
+        verdict = ("regressed" if bad > trend.tolerance
+                   else "improved" if bad < -trend.tolerance else "ok")
+        res.trend_rows.append({
+            "var": trend.var,
+            "current": cur,
+            "baseline": base,
+            "delta_frac": delta,
+            "tolerance": trend.tolerance,
+            "direction": trend.direction,
+            "mode": trend.mode,
+            "verdict": verdict,
+        })
+        if verdict == "regressed" and trend.mode == "gate":
+            regressed = True
+    if regressed:
+        res.status = "regressed"
+    return res
+
+
+def evaluate_all(
+    current_dir,
+    baseline_dir=None,
+    *,
+    checks=None,
+    require_all: bool = False,
+    only: Optional[str] = None,
+) -> list[CheckResult]:
+    """Run every check against ``current_dir`` (trend vs ``baseline_dir``).
+
+    A check whose bench file is missing from ``current_dir`` is *skipped*
+    (a smoke run does not produce every document) unless ``require_all`` —
+    then a missing ``required`` check is a gating failure.
+    """
+    current_dir = pathlib.Path(current_dir)
+    baseline_dir = pathlib.Path(baseline_dir) if baseline_dir else None
+    results = []
+    for check in checks if checks is not None else CHECKS:
+        if only and check.name != only:
+            continue
+        cur_path = current_dir / check.bench
+        if not cur_path.exists():
+            status = "missing" if (require_all and check.required) else "skipped"
+            results.append(CheckResult(
+                check=check.name, bench=check.bench, status=status,
+                notes=[f"{cur_path} not found"],
+            ))
+            continue
+        current_doc = json.loads(cur_path.read_text())
+        baseline_doc = None
+        if baseline_dir is not None:
+            base_path = baseline_dir / check.bench
+            if base_path == cur_path:
+                baseline_doc = current_doc
+            elif base_path.exists():
+                baseline_doc = json.loads(base_path.read_text())
+        results.append(evaluate_check(check, current_doc, baseline_doc))
+    return results
+
+
+# ---------------------------------------------------------------------------
+# The committed check suite — one check per BENCH document family.
+# ---------------------------------------------------------------------------
+
+_TRAIN_KEYS = ("meta.model", "meta.pattern", "meta.seq_len", "meta.batch",
+               "meta.device")
+
+CHECKS: tuple[PerfCheck, ...] = (
+    PerfCheck(
+        name="train_compressed_exec",
+        bench="BENCH_train.json",
+        extract=(
+            Extractor("bytes_ratio_bench", "headline.bytes_ratio_bench"),
+            Extractor("bytes_ratio_analytic", "headline.bytes_ratio_analytic"),
+            Extractor("loss_bit_identity", "headline.loss_bit_identity"),
+            Extractor("loss_abs_delta", "headline.loss_abs_delta"),
+            Extractor("tok_s_dense", "headline.tokens_per_sec.dense"),
+            Extractor("tok_s_compressed", "headline.tokens_per_sec.compressed"),
+            Extractor("footprint_ratio", "headline.param_footprint_ratio"),
+        ),
+        sanity=(
+            # The measured traffic must track the analytic compressed_bytes
+            # model — if it drifts, the bench is measuring the wrong thing.
+            "approx(bytes_ratio_bench, bytes_ratio_analytic, rel=0.1)",
+            # Compressed execution must stay numerically the dense path.
+            "loss_bit_identity or loss_abs_delta < 1e-4",
+            "footprint_ratio < 1.0",
+        ),
+        trends=(
+            Trend("tok_s_compressed", direction="higher", tolerance=0.15),
+            Trend("tok_s_dense", direction="higher", tolerance=0.15, mode="warn"),
+        ),
+        compare_keys=_TRAIN_KEYS,
+    ),
+    PerfCheck(
+        name="solver_fused_speedup",
+        bench="BENCH_solver.json",
+        extract=(
+            Extractor("objective_ratios", "headline.*.fused_best_objective_ratio"),
+            Extractor("speedups_vs_pallas", "headline.*.speedup_vs_pallas"),
+            Extractor("blocks_per_sec", "headline.*.fused_best_blocks_per_sec"),
+        ),
+        sanity=(
+            # Early-exit may trade a sliver of objective for speed, bounded.
+            "min(objective_ratios) >= 0.99",
+            # The fused kernel must never lose to the split pipeline.
+            "min(speedups_vs_pallas) >= 1.0",
+        ),
+        trends=(
+            Trend("blocks_per_sec", direction="higher", tolerance=0.15, mode="warn"),
+        ),
+        compare_keys=("meta.iters", "meta.reps", "meta.device"),
+    ),
+    PerfCheck(
+        name="dst_refresh_overhead",
+        bench="BENCH_dst.json",
+        extract=(
+            Extractor("step_overhead_frac", "headline.step_overhead_frac"),
+            Extractor("stall_frac", "headline.stall_frac_of_step"),
+            Extractor("quality_delta", "headline.quality_delta"),
+            Extractor("dst_final_loss", "headline.dst_final_loss"),
+        ),
+        sanity=(
+            "step_overhead_frac < 0.05",
+            "stall_frac < 0.10",
+            # Decaying DST must end no worse than one-shot (small slack for
+            # seed-level noise).
+            "quality_delta <= 0.05",
+        ),
+        trends=(
+            Trend("dst_final_loss", direction="lower", tolerance=0.10),
+            Trend("step_overhead_frac", direction="lower", tolerance=0.5, mode="warn"),
+        ),
+        compare_keys=("meta.model", "meta.steps", "meta.refresh_every",
+                      "meta.device"),
+    ),
+    PerfCheck(
+        name="chaos_zero_loss",
+        bench="BENCH_chaos.json",
+        extract=(
+            Extractor("requests_lost_total", "headline.requests_lost_total"),
+            Extractor("bit_identical", "headline.bit_identical_everywhere"),
+            Extractor("flaky_lost", "scenarios.flaky_network.requests_lost"),
+            Extractor("restart_lost", "scenarios.kill_restart.requests_lost"),
+            Extractor("degraded_lost", "scenarios.degraded.requests_lost"),
+            Extractor("refresh_landed", "scenarios.dst_refresh.refresh_landed"),
+        ),
+        sanity=(
+            "requests_lost_total == 0",
+            "bit_identical",
+            "max(flaky_lost, restart_lost, degraded_lost) == 0",
+            "refresh_landed",
+        ),
+        compare_keys=("meta.tensors", "meta.solver_iters"),
+    ),
+    PerfCheck(
+        name="service_fairness",
+        bench="BENCH_service.json",
+        extract=(
+            Extractor("meta_bench", "meta.benchmark"),
+        ),
+        sanity=(
+            "meta_bench == 'service_load'",
+        ),
+        required=False,  # produced by the CI service job, not committed
+        compare_keys=("meta.benchmark",),
+    ),
+    PerfCheck(
+        name="kernel_autotune",
+        bench="BENCH_kernels.json",
+        extract=(
+            Extractor("speedups", "headline.*.speedup_vs_default"),
+            Extractor("decode_speedup",
+                      "headline.nm_spmm_fwd_gemv.speedup_vs_default"),
+        ),
+        sanity=(
+            # Autotuned tiles must be at least as fast as the fixed default
+            # on every shape class (the default is in the candidate set, so
+            # this can only fail if the table was written by a broken run).
+            "min(speedups) >= 1.0",
+            # ...and the decode GEMV — the shape the fixed tiles waste 31/32
+            # of their rows on — must be strictly faster.
+            "decode_speedup > 1.0",
+        ),
+        trends=(
+            Trend("decode_speedup", direction="higher", tolerance=0.25),
+        ),
+        compare_keys=("meta.device", "meta.shape_set"),
+    ),
+)

@@ -1,0 +1,240 @@
+"""Roofline cost model for the compressed hot-path kernels.
+
+The nm_spmm kernel's fixed ``(bt, kt, ft) = (256, 256, 256)`` tiles are a
+good fit for prefill GEMMs and a terrible one for decode GEMVs: at ``B = 8``
+decode rows, a 256-row batch tile pads 8 real rows to 256 — 31 wasted rows
+of MXU work and X traffic for every real one.  This module prices candidate
+tiles *analytically* (bytes moved from HBM, MXU flops, VPU decompress ops,
+per-grid-step overhead) against a per-device roofline
+(:class:`DeviceProfile`), so the autotuner only has to *measure* the handful
+of candidates the model says are worth measuring.
+
+The model is deliberately simple — it ranks candidates, it does not predict
+wall-clock.  Measurement (``repro.perf.autotune``) always has the final
+word, and the measured winner is what lands in the tuning table.
+
+VMEM feasibility is priced with the same accounting style as
+:func:`repro.kernels.vmem.vmem_plan` (live buffer bytes vs a fraction of the
+device's VMEM); the fused-solve candidate ladder is seeded directly from
+``vmem_plan``'s tile choice.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.kernels.vmem import (
+    _BUDGET_FRACTION,
+    VPU_ALIGN,
+    device_vmem_bytes,
+    vmem_plan,
+)
+
+__all__ = [
+    "DeviceProfile",
+    "TileCost",
+    "profile_for",
+    "nm_spmm_cost",
+    "nm_spmm_candidates",
+    "fused_solve_candidates",
+    "DEFAULT_TILES",
+]
+
+# The historic fixed tiles — always a member of every candidate set, so the
+# measured winner can never be slower than the default on the same run.
+DEFAULT_TILES = (256, 256, 256)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceProfile:
+    """Peak numbers one roofline is drawn against.
+
+    Conservative spec-sheet figures; the model only *ranks* tiles, so what
+    matters is the bandwidth/compute ratio, not absolute accuracy.
+    """
+
+    kind: str
+    hbm_bytes_per_s: float
+    mxu_flops_per_s: float   # f32-accumulated matmul throughput
+    vpu_ops_per_s: float     # element-wise f32 throughput (decompress select)
+    grid_step_overhead_s: float  # fixed cost per grid step (dispatch, DMA setup)
+
+
+# Keyed by device_kind prefix (same convention as kernels.vmem).
+_PROFILES = (
+    DeviceProfile("TPU v6", 1.6e12, 4.6e14, 1.5e13, 1e-6),
+    DeviceProfile("TPU v5p", 2.7e12, 2.3e14, 1.2e13, 1e-6),
+    DeviceProfile("TPU v5", 8.0e11, 1.0e14, 8.0e12, 1e-6),
+    DeviceProfile("TPU v4", 1.2e12, 1.4e14, 8.0e12, 1e-6),
+)
+# CPU / interpret-mode fallback.  Interpret mode pays per-element python/XLA
+# cost, which behaves like a very low-flop device with high per-step
+# overhead — the ratios below make the model prefer exactly what measurement
+# confirms there: tiles that minimize *total padded work* and grid steps.
+_FALLBACK = DeviceProfile("cpu", 4.0e10, 1.0e11, 5.0e10, 5e-5)
+
+
+def profile_for(device=None) -> DeviceProfile:
+    """Roofline profile for ``device`` (default: first local jax device)."""
+    kind = getattr(device, "device_kind", None)
+    if kind is None:
+        import jax
+
+        devices = jax.local_devices()
+        kind = devices[0].device_kind if devices else "cpu"
+    for prof in _PROFILES:
+        if str(kind).startswith(prof.kind):
+            return prof
+    return dataclasses.replace(_FALLBACK, kind=str(kind))
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+@dataclasses.dataclass(frozen=True)
+class TileCost:
+    """Analytic cost of one ``(bt, kt, ft)`` candidate at a concrete shape."""
+
+    bt: int
+    kt: int
+    ft: int
+    grid_steps: int
+    hbm_bytes: int       # X + compressed-W streamed + output written
+    mxu_flops: int       # 2 * padded B*K*F
+    vpu_ops: int         # one-hot decompress selects
+    vmem_bytes: int      # live tile set (x, vals, idx, dense, out)
+
+    @property
+    def tiles(self) -> tuple[int, int, int]:
+        return (self.bt, self.kt, self.ft)
+
+    def arithmetic_intensity(self) -> float:
+        return self.mxu_flops / max(self.hbm_bytes, 1)
+
+    def model_seconds(self, profile: DeviceProfile) -> float:
+        """Roofline time: bound by traffic OR compute, plus grid overhead."""
+        t_mem = self.hbm_bytes / profile.hbm_bytes_per_s
+        t_mxu = self.mxu_flops / profile.mxu_flops_per_s
+        t_vpu = self.vpu_ops / profile.vpu_ops_per_s
+        return max(t_mem, t_mxu + t_vpu) + self.grid_steps * profile.grid_step_overhead_s
+
+
+def nm_spmm_cost(
+    rows: int,
+    k: int,
+    f: int,
+    n: int,
+    m: int,
+    bt: int,
+    kt: int,
+    ft: int,
+    *,
+    x_bytes: int = 4,
+    val_bytes: int = 4,
+    idx_bytes: int = 1,
+) -> TileCost:
+    """Cost of ``nm_spmm`` at shape ``(rows, K) x compressed(K/M, N, F)``.
+
+    Mirrors the kernel's actual padding and BlockSpec revisit pattern
+    (forward grid ``(B/bt, F/ft, K/kt)``; the transposed product has the
+    same totals with K and F exchanging the reduction role, so one cost
+    function serves both ops).
+    """
+    if kt % m:
+        raise ValueError(f"kt must be a multiple of m, got kt={kt} m={m}")
+    pb = _round_up(rows, bt)
+    pk = _round_up(k, kt)
+    pf = _round_up(f, ft)
+    grid = (pb // bt) * (pf // ft) * (pk // kt)
+    # X tile is re-read once per output-column tile (index map ignores j's
+    # sibling); compressed W is re-read once per batch tile.
+    x_read = (pf // ft) * pb * pk * x_bytes
+    w_read = (pb // bt) * (pk // m) * n * pf * (val_bytes + idx_bytes)
+    out_write = pb * pf * 4  # f32 accumulator, resident across the k loop
+    mxu = 2 * pb * pk * pf
+    # Decompress: one select over (kt/m, m, n, ft) per (i, j, kk) step.
+    vpu = grid * kt * n * ft
+    g_tile = kt // m
+    vmem = (
+        bt * kt * x_bytes            # x tile
+        + g_tile * n * ft * (val_bytes + idx_bytes)  # vals + idx tiles
+        + kt * ft * 4                # decompressed dense tile
+        + bt * ft * 4                # output accumulator
+    )
+    return TileCost(
+        bt=bt, kt=kt, ft=ft, grid_steps=grid,
+        hbm_bytes=x_read + w_read + out_write,
+        mxu_flops=mxu, vpu_ops=vpu, vmem_bytes=vmem,
+    )
+
+
+def _pow2_range(lo: int, hi: int) -> list[int]:
+    out, v = [], lo
+    while v <= hi:
+        out.append(v)
+        v *= 2
+    return out
+
+
+def nm_spmm_candidates(
+    rows: int,
+    k: int,
+    f: int,
+    n: int,
+    m: int,
+    device=None,
+    *,
+    max_candidates: int = 8,
+) -> list[TileCost]:
+    """Legal tile candidates at a shape, best-first by the roofline model.
+
+    Constraints enforced:
+      * ``kt % m == 0`` (compressed groups never split a tile) and ``kt``
+        a multiple of the f32 sublane when possible;
+      * ``bt`` never exceeds the VPU-aligned padded row count (the decode
+        clamp — a 256-row tile at 8 decode rows is 31/32 padding);
+      * the live tile set fits the same VMEM budget ``vmem_plan`` uses.
+
+    The historic default ``(256, 256, 256)`` is always included (clamped to
+    legality), so a measured argmin over the returned list can never lose
+    to the default.
+    """
+    budget = int(device_vmem_bytes(device) * _BUDGET_FRACTION)
+    row_cap = max(VPU_ALIGN, _round_up(rows, VPU_ALIGN))
+    bts = [bt for bt in _pow2_range(VPU_ALIGN, 256) if bt <= row_cap]
+    if not bts:
+        bts = [VPU_ALIGN]
+    kt_step = max(m, VPU_ALIGN)
+    kts = sorted({
+        kt for kt in (128, 256, _round_up(min(k, 256), kt_step))
+        if kt % m == 0 and kt >= m
+    })
+    fts = sorted({ft for ft in (128, 256, 512) if ft <= _round_up(f, 128)} | {
+        min(_round_up(f, 128), 512)
+    })
+    seen: dict[tuple[int, int, int], TileCost] = {}
+    for bt in bts:
+        for kt in kts:
+            for ft in fts:
+                c = nm_spmm_cost(rows, k, f, n, m, bt, kt, ft)
+                if c.vmem_bytes <= budget:
+                    seen[c.tiles] = c
+    # The default tiles, clamped only where the kernel would reject them.
+    dbt, dkt, dft = DEFAULT_TILES
+    dkt = dkt if dkt % m == 0 else _round_up(dkt, m)
+    default = nm_spmm_cost(rows, k, f, n, m, dbt, dkt, dft)
+    seen.setdefault(default.tiles, default)
+    profile = profile_for(device)
+    ranked = sorted(seen.values(), key=lambda c: c.model_seconds(profile))
+    out = ranked[:max_candidates]
+    if default.tiles not in [c.tiles for c in out]:
+        out.append(default)
+    return out
+
+
+def fused_solve_candidates(m: int, device=None, *, live_buffers: int = 6) -> list[int]:
+    """Candidate ``block_b`` tiles for the fused solve kernel, seeded from
+    :func:`repro.kernels.vmem.vmem_plan` — the plan's tile is the ceiling;
+    smaller powers of two trade VMEM residency for scheduling granularity."""
+    top = vmem_plan(m, device, live_buffers=live_buffers).block_b
+    return list(reversed(_pow2_range(VPU_ALIGN, top)))

@@ -1,0 +1,238 @@
+"""Versioned tuning table: measured tile winners, consulted at trace time.
+
+The autotuner (``repro.perf.autotune`` / ``benchmarks/kernel_autotune.py``)
+measures candidate tiles on the live device and persists the winners here.
+At trace time, ``nm_spmm_pallas`` (via ``models.layers.proj`` →
+``nm_linear_nd``) and the fused solver backend look their shapes up and use
+the measured tiles when an entry matches; otherwise they fall back to the
+clamped defaults — an empty or missing table is always safe.
+
+Entries are keyed by ``(op, device_kind, m, shape_class)``:
+
+* ``op`` — ``"nm_spmm_fwd"``, ``"nm_spmm_tr"`` or ``"fused_solve"``;
+* ``device_kind`` — ``jax.Device.device_kind`` of the measuring device
+  (tiles tuned on this container's ``cpu`` interpret mode never leak onto a
+  TPU and vice versa);
+* ``m`` — the pattern's group size (tile legality depends on it);
+* ``shape_class`` — :func:`shape_class` string: ``gemv``/``gemm`` by row
+  count (decode GEMV vs prefill GEMM) plus power-of-two K and F buckets, so
+  an entry only ever applies to operand shapes of the size it was measured
+  at.  The fused solve uses the single class ``"solve"`` (block batches are
+  padded server-side; only ``m`` changes the kernel).
+
+The JSON document carries a ``version`` field; loading a newer major
+version than this module understands raises instead of silently
+misapplying tiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+import threading
+from typing import Iterable, Optional
+
+__all__ = [
+    "TABLE_VERSION",
+    "GEMV_MAX_ROWS",
+    "TableEntry",
+    "TuningTable",
+    "shape_class",
+    "device_kind_of",
+    "get_tuning_table",
+    "set_tuning_table",
+    "default_table_path",
+]
+
+TABLE_VERSION = 1
+
+# Row count at or below which a matmul is a "decode GEMV" for tuning
+# purposes: a handful of in-flight decode slots, far below one MXU tile.
+GEMV_MAX_ROWS = 32
+
+_DEFAULT_TABLE_FILE = "default_table.json"
+_ENV_OVERRIDE = "REPRO_TUNING_TABLE"
+
+
+def _pow2_bucket(x: int) -> int:
+    """Smallest power of two >= x (shape bucketing for entry keys)."""
+    return 1 << max(int(x) - 1, 0).bit_length()
+
+
+def shape_class(rows: int, k: int, f: int) -> str:
+    """Shape-class key for an ``(rows, K) x (K, F)`` matmul."""
+    kind = "gemv" if rows <= GEMV_MAX_ROWS else "gemm"
+    return f"{kind}/k{_pow2_bucket(k)}/f{_pow2_bucket(f)}"
+
+
+def device_kind_of(device=None) -> str:
+    """``device_kind`` of ``device`` (default: first local jax device)."""
+    kind = getattr(device, "device_kind", None)
+    if kind is None:
+        import jax
+
+        devices = jax.local_devices()
+        kind = devices[0].device_kind if devices else "cpu"
+    return str(kind)
+
+
+@dataclasses.dataclass(frozen=True)
+class TableEntry:
+    """One measured winner.  ``tiles`` is ``(bt, kt, ft)`` for the nm_spmm
+    ops and ``(block_b,)`` for the fused solve."""
+
+    op: str
+    device_kind: str
+    m: int
+    shape_class: str
+    tiles: tuple[int, ...]
+    measured_s: float = 0.0
+    default_s: float = 0.0
+    speedup_vs_default: float = 1.0
+    shape: tuple[int, ...] = ()   # the concrete shape the entry was tuned at
+
+    @property
+    def key(self) -> tuple[str, str, int, str]:
+        return (self.op, self.device_kind, self.m, self.shape_class)
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["tiles"] = list(self.tiles)
+        d["shape"] = list(self.shape)
+        return d
+
+    @classmethod
+    def from_json(cls, d: dict) -> "TableEntry":
+        return cls(
+            op=d["op"],
+            device_kind=d["device_kind"],
+            m=int(d["m"]),
+            shape_class=d["shape_class"],
+            tiles=tuple(int(t) for t in d["tiles"]),
+            measured_s=float(d.get("measured_s", 0.0)),
+            default_s=float(d.get("default_s", 0.0)),
+            speedup_vs_default=float(d.get("speedup_vs_default", 1.0)),
+            shape=tuple(int(s) for s in d.get("shape", ())),
+        )
+
+
+class TuningTable:
+    """In-memory view of the tuning table; load/save round-trips JSON."""
+
+    def __init__(self, entries: Iterable[TableEntry] = ()):
+        self._entries: dict[tuple, TableEntry] = {}
+        for e in entries:
+            self._entries[e.key] = e
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def entries(self) -> list[TableEntry]:
+        return sorted(self._entries.values(), key=lambda e: e.key)
+
+    def put(self, entry: TableEntry) -> None:
+        self._entries[entry.key] = entry
+
+    def lookup(
+        self, op: str, device_kind: str, m: int, shape_cls: str
+    ) -> Optional[TableEntry]:
+        return self._entries.get((op, device_kind, m, shape_cls))
+
+    # -- persistence --------------------------------------------------------
+
+    def to_json(self) -> dict:
+        return {
+            "version": TABLE_VERSION,
+            "entries": [e.to_json() for e in self.entries()],
+        }
+
+    def save(self, path) -> None:
+        path = pathlib.Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = path.with_suffix(path.suffix + ".tmp")
+        tmp.write_text(json.dumps(self.to_json(), indent=1) + "\n")
+        os.replace(tmp, path)
+
+    @classmethod
+    def load(cls, path) -> "TuningTable":
+        doc = json.loads(pathlib.Path(path).read_text())
+        version = int(doc.get("version", -1))
+        if version > TABLE_VERSION or version < 1:
+            raise ValueError(
+                f"tuning table {path} has version {version}; this build "
+                f"understands <= {TABLE_VERSION} — regenerate it with "
+                "benchmarks/kernel_autotune.py"
+            )
+        return cls(TableEntry.from_json(e) for e in doc.get("entries", ()))
+
+
+def default_table_path() -> pathlib.Path:
+    """The packaged default table (committed winners from the autotune bench)."""
+    return pathlib.Path(__file__).resolve().parent / _DEFAULT_TABLE_FILE
+
+
+_lock = threading.Lock()
+_active: Optional[TuningTable] = None
+_loaded = False
+
+
+def get_tuning_table() -> TuningTable:
+    """The process-wide active table.
+
+    Resolution order: a table installed via :func:`set_tuning_table`; a path
+    named by ``$REPRO_TUNING_TABLE``; the packaged default table; otherwise
+    an empty table (all lookups miss — callers fall back to defaults).
+    """
+    global _active, _loaded
+    with _lock:
+        if _loaded:
+            return _active  # type: ignore[return-value]
+        path = os.environ.get(_ENV_OVERRIDE) or default_table_path()
+        try:
+            _active = TuningTable.load(path)
+        except FileNotFoundError:
+            _active = TuningTable()
+        _loaded = True
+        return _active
+
+
+def set_tuning_table(table) -> None:
+    """Install ``table`` (a :class:`TuningTable`, a path, or ``None``).
+
+    ``None`` re-arms the lazy default resolution (env var / packaged file).
+    """
+    global _active, _loaded
+    with _lock:
+        if table is None:
+            _active, _loaded = None, False
+        elif isinstance(table, TuningTable):
+            _active, _loaded = table, True
+        else:
+            _active, _loaded = TuningTable.load(table), True
+
+
+# -- trace-time helpers consulted by the kernels ----------------------------
+
+
+def nm_spmm_tiles(
+    rows: int, k: int, f: int, m: int, transpose: bool, device=None
+) -> Optional[tuple[int, int, int]]:
+    """Measured ``(bt, kt, ft)`` for an nm_spmm shape, or ``None`` on miss."""
+    op = "nm_spmm_tr" if transpose else "nm_spmm_fwd"
+    entry = get_tuning_table().lookup(
+        op, device_kind_of(device), m, shape_class(rows, k, f)
+    )
+    if entry is None or len(entry.tiles) != 3:
+        return None
+    return entry.tiles  # type: ignore[return-value]
+
+
+def fused_solve_block_b(m: int, device=None) -> Optional[int]:
+    """Measured fused-solve ``block_b`` for group size ``m`` (None on miss)."""
+    entry = get_tuning_table().lookup(
+        "fused_solve", device_kind_of(device), m, "solve"
+    )
+    if entry is None or len(entry.tiles) != 1:
+        return None
+    return int(entry.tiles[0])

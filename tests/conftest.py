@@ -3,12 +3,11 @@ import sys
 
 # Tests see ONE device (the dry-run sets its own flags in a subprocess).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
-# On a single-core host the XLA CPU client has one execution thread, so the
-# io_callback escape hatch (solve_via="callback") deadlocks: the outer jitted
-# computation holds the only thread while the callback waits on a nested
-# dispatch.  A second host device gives that dispatch somewhere to run.
-if os.cpu_count() == 1:
-    os.environ.setdefault(
-        "XLA_FLAGS", "--xla_force_host_platform_device_count=2"
-    )
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Single-core hosts need a second XLA host device or solve_via="callback"
+# deadlocks — shared helper (repro.hostenv imports neither jax nor numpy),
+# also used by tools/check_docs.py.  Must run before the first jax import.
+from repro.hostenv import single_core_xla_workaround  # noqa: E402
+
+single_core_xla_workaround()

@@ -1,0 +1,341 @@
+"""repro.perf: roofline model, tuning table, autotuner, perf-check engine."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.kernels.vmem import VPU_ALIGN, vmem_plan
+from repro.perf.checks import (
+    CHECKS,
+    Extractor,
+    ExtractionError,
+    PerfCheck,
+    Trend,
+    evaluate_all,
+    evaluate_check,
+    extract,
+)
+from repro.perf.roofline import (
+    DEFAULT_TILES,
+    fused_solve_candidates,
+    nm_spmm_candidates,
+    nm_spmm_cost,
+    profile_for,
+)
+from repro.perf.table import (
+    GEMV_MAX_ROWS,
+    TABLE_VERSION,
+    TableEntry,
+    TuningTable,
+    fused_solve_block_b,
+    nm_spmm_tiles,
+    set_tuning_table,
+    shape_class,
+)
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+@pytest.fixture
+def scratch_table():
+    """Install an empty table for the test, restore lazy default after."""
+    table = TuningTable()
+    set_tuning_table(table)
+    yield table
+    set_tuning_table(None)
+
+
+# ---------------------------------------------------------------------------
+# Roofline cost model.
+# ---------------------------------------------------------------------------
+
+
+def test_cost_exact_fit_counts():
+    # 256x256x256 tiles on a 256/512/512 shape: no padding anywhere.
+    c = nm_spmm_cost(256, 512, 512, 8, 16, 256, 256, 256)
+    assert c.grid_steps == 1 * 2 * 2
+    assert c.mxu_flops == 2 * 256 * 512 * 512
+    # X re-read once per F tile; W re-read once per B tile.
+    assert c.hbm_bytes == (2 * 256 * 512 * 4) + (1 * 32 * 8 * 512 * 5) + 256 * 512 * 4
+
+
+def test_cost_padding_is_charged():
+    # 8 decode rows under a 256-row tile: padded work is 32x the real work.
+    fat = nm_spmm_cost(8, 512, 512, 8, 16, 256, 256, 256)
+    slim = nm_spmm_cost(8, 512, 512, 8, 16, 8, 256, 256)
+    assert fat.mxu_flops == 32 * slim.mxu_flops
+    prof = profile_for(object())  # unknown kind -> cpu fallback profile
+    assert slim.model_seconds(prof) < fat.model_seconds(prof)
+
+
+def test_cost_rejects_kt_not_multiple_of_m():
+    with pytest.raises(ValueError, match="multiple of m"):
+        nm_spmm_cost(8, 512, 512, 8, 16, 8, 100, 256)
+
+
+def test_candidates_legal_and_include_default():
+    for rows in (8, 1024):
+        cands = nm_spmm_candidates(rows, 384, 1536, 8, 16)
+        tiles = [c.tiles for c in cands]
+        assert DEFAULT_TILES in tiles  # argmin can never lose to the default
+        row_cap = max(VPU_ALIGN, -(-rows // VPU_ALIGN) * VPU_ALIGN)
+        for c in cands:
+            assert c.kt % 16 == 0
+            if c.tiles != DEFAULT_TILES:  # default exempt from the clamp
+                assert c.bt <= row_cap
+
+
+def test_candidates_prefer_slim_bt_for_decode():
+    best = nm_spmm_candidates(8, 384, 1536, 8, 16)[0]
+    assert best.bt <= VPU_ALIGN  # model agrees with measurement on decode
+
+
+def test_fused_solve_candidates_seeded_from_vmem_plan():
+    cands = fused_solve_candidates(16)
+    top = vmem_plan(16, live_buffers=6).block_b
+    assert cands[0] == top
+    assert cands[-1] == VPU_ALIGN
+    assert all(a == 2 * b for a, b in zip(cands, cands[1:]))
+
+
+# ---------------------------------------------------------------------------
+# Tuning table.
+# ---------------------------------------------------------------------------
+
+
+def test_shape_class_buckets():
+    assert shape_class(8, 384, 1536) == "gemv/k512/f2048"
+    assert shape_class(GEMV_MAX_ROWS, 512, 2048) == "gemv/k512/f2048"
+    assert shape_class(GEMV_MAX_ROWS + 1, 512, 2048) == "gemm/k512/f2048"
+    # Test-model shapes land in different buckets than the bench shapes, so
+    # committed cpu entries never retile the small bit-identity tests.
+    assert shape_class(16, 64, 96) != shape_class(8, 384, 1536)
+
+
+def test_table_round_trip(tmp_path):
+    e = TableEntry("nm_spmm_fwd", "cpu", 16, "gemv/k512/f2048", (8, 128, 512),
+                   measured_s=1e-3, default_s=2e-3, speedup_vs_default=2.0,
+                   shape=(8, 384, 1536, 8))
+    t = TuningTable([e])
+    path = tmp_path / "table.json"
+    t.save(path)
+    loaded = TuningTable.load(path)
+    assert loaded.entries() == [e]
+    assert loaded.lookup(*e.key) == e
+    assert loaded.lookup("nm_spmm_fwd", "cpu", 16, "gemm/k64/f128") is None
+
+
+def test_table_version_gate(tmp_path):
+    for bad in (TABLE_VERSION + 1, 0):
+        path = tmp_path / f"v{bad}.json"
+        path.write_text(json.dumps({"version": bad, "entries": []}))
+        with pytest.raises(ValueError, match="version"):
+            TuningTable.load(path)
+
+
+def test_put_overwrites_same_key():
+    t = TuningTable()
+    a = TableEntry("fused_solve", "cpu", 16, "solve", (512,))
+    b = TableEntry("fused_solve", "cpu", 16, "solve", (128,))
+    t.put(a)
+    t.put(b)
+    assert len(t) == 1 and t.lookup(*a.key).tiles == (128,)
+
+
+def test_trace_time_lookup_hits_and_misses(scratch_table):
+    scratch_table.put(TableEntry(
+        "nm_spmm_fwd", "cpu", 16, shape_class(8, 384, 1536), (8, 128, 512)))
+    scratch_table.put(TableEntry("fused_solve", "cpu", 16, "solve", (128,)))
+    dev = type("D", (), {"device_kind": "cpu"})()
+    assert nm_spmm_tiles(8, 384, 1536, 16, False, dev) == (8, 128, 512)
+    # Misses: wrong op variant, wrong shape class, wrong device kind.
+    assert nm_spmm_tiles(8, 384, 1536, 16, True, dev) is None
+    assert nm_spmm_tiles(64, 64, 96, 16, False, dev) is None
+    tpu = type("D", (), {"device_kind": "TPU v5p"})()
+    assert nm_spmm_tiles(8, 384, 1536, 16, False, tpu) is None
+    assert fused_solve_block_b(16, dev) == 128
+    assert fused_solve_block_b(8, dev) is None
+
+
+def test_env_var_override(tmp_path, monkeypatch):
+    path = tmp_path / "env_table.json"
+    TuningTable([TableEntry("fused_solve", "envkind", 4, "solve", (64,))]).save(path)
+    monkeypatch.setenv("REPRO_TUNING_TABLE", str(path))
+    set_tuning_table(None)  # re-arm lazy resolution so the env var is read
+    try:
+        dev = type("D", (), {"device_kind": "envkind"})()
+        assert fused_solve_block_b(4, dev) == 64
+    finally:
+        set_tuning_table(None)
+
+
+def test_committed_default_table_loads_and_gates():
+    table = TuningTable.load(REPO / "src" / "repro" / "perf" / "default_table.json")
+    assert len(table) >= 1
+    for entry in table.entries():
+        assert entry.speedup_vs_default >= 1.0, entry
+
+
+# ---------------------------------------------------------------------------
+# Autotuner (tiny live measurement — interpret mode, seconds not minutes).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_autotune_tiny_nm_spmm(scratch_table):
+    from repro.perf.autotune import autotune_nm_spmm
+
+    res = autotune_nm_spmm(8, 32, 64, 2, 4, max_candidates=3, reps=1)
+    assert res.speedup_vs_default >= 1.0  # default is in the measured set
+    assert res.best_seconds <= res.default_seconds
+    entry = res.table_entry()
+    assert entry.key == ("nm_spmm_fwd", res.device_kind, 4, res.shape_class)
+    scratch_table.put(entry)
+    dev = type("D", (), {"device_kind": res.device_kind})()
+    assert nm_spmm_tiles(8, 32, 64, 4, False, dev) == entry.tiles
+
+
+# ---------------------------------------------------------------------------
+# Declarative check engine.
+# ---------------------------------------------------------------------------
+
+DOC = {
+    "meta": {"device": "cpu", "model": "tiny"},
+    "headline": {
+        "cells": {"a": {"speedup": 1.5}, "b": {"speedup": 1.1}},
+        "tok_s": 100.0,
+        "per_m": [10.0, 20.0],
+    },
+    "results": [{"mode": "dense", "s": 1.0}, {"mode": "sparse", "s": 0.5}],
+}
+
+
+def test_extract_paths_fanout_and_selector():
+    assert extract(DOC, "headline.tok_s") == 100.0
+    assert sorted(extract(DOC, "headline.cells.*.speedup")) == [1.1, 1.5]
+    assert extract(DOC, "results.[mode=sparse].s") == 0.5
+    with pytest.raises(ExtractionError):
+        extract(DOC, "headline.nope")
+    with pytest.raises(ExtractionError):
+        extract(DOC, "results.[mode=missing].s")
+
+
+def _check(**kw):
+    base = dict(name="c", bench="BENCH_x.json",
+                extract=(Extractor("tok_s", "headline.tok_s"),
+                         Extractor("per_m", "headline.per_m")),
+                trends=(Trend("tok_s", tolerance=0.15),))
+    base.update(kw)
+    return PerfCheck(**base)
+
+
+def test_sanity_pass_fail_and_extraction_failure():
+    ok = evaluate_check(_check(sanity=("tok_s > 50", "min(per_m) >= 10")), DOC)
+    assert ok.status == "ok"
+    bad = evaluate_check(_check(sanity=("tok_s > 500",)), DOC)
+    assert bad.status == "sanity_failed" and bad.gating_failure
+    assert "tok_s > 500" in bad.sanity_failures
+    missing = evaluate_check(
+        _check(extract=(Extractor("v", "headline.gone"),)), DOC)
+    assert missing.status == "sanity_failed"
+
+
+def test_trend_gate_and_warn():
+    worse = json.loads(json.dumps(DOC))
+    worse["headline"]["tok_s"] = 70.0  # -30% < -15% band
+    res = evaluate_check(_check(), worse, DOC)
+    assert res.status == "regressed"
+    row = res.trend_rows[0]
+    assert row["verdict"] == "regressed" and row["mode"] == "gate"
+    warn = evaluate_check(
+        _check(trends=(Trend("tok_s", tolerance=0.15, mode="warn"),)), worse, DOC)
+    assert warn.status == "ok"  # warn trends report but never gate
+
+
+def test_trend_list_valued_worst_element():
+    worse = json.loads(json.dumps(DOC))
+    worse["headline"]["per_m"] = [10.0, 14.0]  # second element -30%
+    res = evaluate_check(
+        _check(trends=(Trend("per_m", tolerance=0.15),)), worse, DOC)
+    assert res.status == "regressed"
+    assert res.trend_rows[0]["delta_frac"] == pytest.approx(-0.3)
+
+
+def test_trend_lower_is_better():
+    t = Trend("loss", direction="lower", tolerance=0.10)
+    assert t.verdict(1.05, 1.0) == "ok"
+    assert t.verdict(1.2, 1.0) == "regressed"
+    assert t.verdict(0.8, 1.0) == "improved"
+
+
+def test_incomparable_baseline_skips_trends():
+    other = json.loads(json.dumps(DOC))
+    other["meta"]["model"] = "smoke"
+    other["headline"]["tok_s"] = 1.0  # would be a huge regression...
+    res = evaluate_check(_check(compare_keys=("meta.model",)), other, DOC)
+    assert res.status == "ok" and not res.trend_rows  # ...but isn't compared
+    assert any("not comparable" in n for n in res.notes)
+
+
+def test_evaluate_all_missing_vs_required(tmp_path):
+    checks = (_check(), _check(name="opt", required=False))
+    res = evaluate_all(tmp_path, checks=checks)
+    assert [r.status for r in res] == ["skipped", "skipped"]
+    res = evaluate_all(tmp_path, checks=checks, require_all=True)
+    assert [r.status for r in res] == ["missing", "skipped"]
+    assert res[0].gating_failure and not res[1].gating_failure
+
+
+# ---------------------------------------------------------------------------
+# The committed suite against the committed BENCH files + injected regression.
+# ---------------------------------------------------------------------------
+
+
+def test_committed_benches_pass_all_sanity():
+    results = evaluate_all(REPO, REPO)
+    by_name = {r.check: r for r in results}
+    assert len(by_name) == len(CHECKS)
+    for r in results:
+        assert not r.gating_failure, (r.check, r.sanity_failures, r.notes)
+    # Self-comparison trends are exactly flat.
+    for row in by_name["train_compressed_exec"].trend_rows:
+        assert row["verdict"] == "ok"
+
+
+def test_injected_regression_fails_named_check(tmp_path):
+    doc = json.loads((REPO / "BENCH_train.json").read_text())
+    for key in ("headline",):
+        doc[key]["tokens_per_sec"]["compressed"] *= 0.8  # -20% throughput
+    (tmp_path / "BENCH_train.json").write_text(json.dumps(doc))
+    results = evaluate_all(tmp_path, REPO)
+    train = next(r for r in results if r.check == "train_compressed_exec")
+    assert train.status == "regressed" and train.gating_failure
+    row = next(t for t in train.trend_rows if t["var"] == "tok_s_compressed")
+    assert row["verdict"] == "regressed"
+
+
+def _run_perfcheck(*args):
+    return subprocess.run(
+        [sys.executable, str(REPO / "tools" / "perfcheck.py"), *args],
+        capture_output=True, text=True,
+    )
+
+
+def test_perfcheck_cli_green_on_committed(tmp_path):
+    report = tmp_path / "report.json"
+    proc = _run_perfcheck("--report", str(report))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    doc = json.loads(report.read_text())
+    assert doc["failed"] == []
+
+
+def test_perfcheck_cli_exit_nonzero_names_regression(tmp_path):
+    doc = json.loads((REPO / "BENCH_train.json").read_text())
+    doc["headline"]["tokens_per_sec"]["compressed"] *= 0.8
+    (tmp_path / "BENCH_train.json").write_text(json.dumps(doc))
+    proc = _run_perfcheck("--current", str(tmp_path), "--baseline", str(REPO),
+                          "--only", "train_compressed_exec")
+    assert proc.returncode == 1
+    assert "train_compressed_exec" in proc.stdout  # the failed check is named

@@ -1,0 +1,170 @@
+"""nm_spmm property sweep: kernel vs oracle across tiles, patterns, shapes.
+
+Covers the tile-resolution refactor: autotuned/default-resolved tiles
+(``bt=kt=ft=None``) and adversarial explicit tiles must all agree bitwise
+with each other and numerically with the pure-jnp oracle, for every pattern
+the repo ships (2:4, 8:16, transposable 16:32), on square, non-square and
+tall/skinny decode shapes.  Hypothesis widens the sweep when installed; the
+parametrized cases below always run.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip cleanly; the rest of the module runs
+    def given(*args, **kwargs):
+        return lambda f: pytest.mark.skip(reason="hypothesis not installed")(f)
+
+    def settings(**kwargs):
+        return lambda f: f
+
+    class st:  # noqa: N801 - stand-in for hypothesis.strategies
+        sampled_from = staticmethod(lambda *a, **k: None)
+        integers = staticmethod(lambda *a, **k: None)
+
+from repro.kernels.nm_spmm.kernel import _resolve_tiles, nm_spmm_pallas
+from repro.kernels.nm_spmm.ref import nm_spmm_ref
+from repro.kernels.vmem import VPU_ALIGN
+from repro.sparsity.compressed import decompress_nm
+
+# (n, m) for every shipped pattern family; the kernel only sees (n, m) —
+# transposability (t16:32) constrains the mask, not the compressed layout.
+PATTERNS = [(2, 4), (8, 16), (16, 32)]
+
+# (B, K, F): square-ish GEMM, non-square, tall/skinny decode GEMV.
+SHAPES = [(16, 64, 64), (5, 96, 32), (8, 32, 160), (1, 64, 96), (3, 128, 64)]
+
+# Adversarial explicit tiles (scaled to the shape at use): minimum legal,
+# deliberately misaligned-to-shape, and oversized-everything.
+def adversarial_tiles(k, f, n, m):
+    return [
+        (VPU_ALIGN, m, 128),             # smallest legal everything
+        (256, max(m, 2 * m), 128),       # fat batch tile on small batches
+        (VPU_ALIGN, 4 * m, 512),         # kt and ft larger than K and F
+        (VPU_ALIGN, 2 * m, 512),         # same kt as above pair, wide ft
+        (256, 256 if 256 % m == 0 else 8 * m, 256),  # the historic default
+    ]
+
+
+def synth_compressed(k, f, n, m, seed=0):
+    """Random valid compressed operand: sorted distinct indices per group."""
+    rng = np.random.default_rng(seed)
+    g = k // m
+    vals = rng.normal(size=(g, n, f)).astype(np.float32)
+    idx = np.empty((g, n, f), dtype=np.int8)
+    for gi in range(g):
+        for fi in range(f):
+            idx[gi, :, fi] = np.sort(rng.choice(m, size=n, replace=False))
+    return jnp.asarray(vals), jnp.asarray(idx)
+
+
+def _check_shape(b, k, f, n, m, tiles, seed=0, transpose=False):
+    vals, idx = synth_compressed(k, f, n, m, seed)
+    cols = f if not transpose else k
+    x = jnp.asarray(
+        np.random.default_rng(seed + 1).normal(size=(b, k if not transpose else f))
+    ).astype(jnp.float32)
+    bt, kt, ft = tiles if tiles else (None, None, None)
+    got = np.array(nm_spmm_pallas(x, vals, idx, m, transpose=transpose,
+                                  bt=bt, kt=kt, ft=ft))
+    want = np.array(nm_spmm_ref(x, vals, idx, m, transpose=transpose))
+    assert got.shape == (b, cols)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    return got
+
+
+# ---------------------------------------------------------------------------
+# Always-run parametrized sweep (hypothesis is optional in this container).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,m", PATTERNS)
+@pytest.mark.parametrize("b,k,f", SHAPES)
+def test_forward_resolved_tiles_match_ref(b, k, f, n, m):
+    _check_shape(b, k, f, n, m, tiles=None)
+
+
+@pytest.mark.parametrize("n,m", PATTERNS)
+@pytest.mark.parametrize("b,k,f", [(16, 64, 64), (8, 32, 160), (1, 64, 96)])
+def test_transpose_resolved_tiles_match_ref(b, k, f, n, m):
+    _check_shape(b, k, f, n, m, tiles=None, transpose=True)
+
+
+@pytest.mark.parametrize("n,m", PATTERNS)
+def test_adversarial_tiles_consistent(n, m):
+    """Every legal tiling matches the oracle; tilings that keep the same
+    ``kt`` (identical K-reduction grouping, so identical f32 rounding) must
+    be *bit-identical* — bt and ft only move independent rows/columns."""
+    b, k, f = 5, 2 * m, 96
+    by_kt: dict[int, list[np.ndarray]] = {}
+    for bt, kt, ft in adversarial_tiles(k, f, n, m):
+        if kt % m:
+            continue
+        out = _check_shape(b, k, f, n, m, tiles=(bt, kt, ft), seed=7)
+        by_kt.setdefault(kt, []).append(out)
+    bt_r, kt_r, ft_r = _resolve_tiles(b, k, f, m, False, None, None, None)
+    by_kt.setdefault(kt_r, []).append(
+        _check_shape(b, k, f, n, m, tiles=None, seed=7))
+    assert any(len(v) > 1 for v in by_kt.values())  # the claim is exercised
+    for outs in by_kt.values():
+        for out in outs[1:]:
+            np.testing.assert_array_equal(out, outs[0])
+
+
+@pytest.mark.parametrize("transpose", [False, True])
+def test_decode_clamp_bit_identity(transpose):
+    """The bt clamp (None -> padded-rowcount tile at B=8 decode) must be a
+    pure scheduling change: bit-identical to the unclamped bt=256 grid."""
+    n, m, b, k, f = 8, 16, 8, 64, 128
+    vals, idx = synth_compressed(k, f, n, m, seed=3)
+    x = jnp.asarray(np.random.default_rng(4).normal(
+        size=(b, f if transpose else k))).astype(jnp.float32)
+    bt_resolved, kt, ft = _resolve_tiles(b, k, f, m, transpose, None, None, None)
+    assert bt_resolved <= VPU_ALIGN  # the clamp actually engaged
+    clamped = np.array(nm_spmm_pallas(x, vals, idx, m, transpose=transpose))
+    unclamped = np.array(nm_spmm_pallas(x, vals, idx, m, transpose=transpose,
+                                        bt=256, kt=kt, ft=ft))
+    np.testing.assert_array_equal(clamped, unclamped)
+
+
+@pytest.mark.parametrize("n,m", PATTERNS)
+def test_decompress_transpose_consistency(n, m):
+    """x @ decompress(vals, idx).T == kernel transpose product (numerics)."""
+    b, k, f = 4, 2 * m, 64
+    vals, idx = synth_compressed(k, f, n, m, seed=11)
+    w = np.array(decompress_nm(vals, idx, m))  # (K, F)
+    x = np.random.default_rng(12).normal(size=(b, f)).astype(np.float32)
+    got = np.array(nm_spmm_pallas(jnp.asarray(x), vals, idx, m, transpose=True))
+    np.testing.assert_allclose(got, x @ w.T, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis widening (runs only where hypothesis is installed).
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    nm=st.sampled_from(PATTERNS),
+    b=st.integers(min_value=1, max_value=17),
+    kg=st.integers(min_value=1, max_value=4),   # K = kg * m
+    f=st.sampled_from([32, 96, 160]),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_forward_property(nm, b, kg, f, seed):
+    n, m = nm
+    _check_shape(b, kg * m, f, n, m, tiles=None, seed=seed)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    nm=st.sampled_from(PATTERNS),
+    b=st.integers(min_value=1, max_value=9),
+    kg=st.integers(min_value=1, max_value=3),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_transpose_property(nm, b, kg, seed):
+    n, m = nm
+    _check_shape(b, kg * m, 64, n, m, tiles=None, seed=seed, transpose=True)

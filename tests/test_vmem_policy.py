@@ -1,0 +1,147 @@
+"""kernels.vmem planning + service BucketPolicy edge cases.
+
+The roofline autotuner seeds its candidate ladders from ``vmem_plan``, and
+the service scheduler's bucket ladder is built on the same plan — so the
+alignment/budget invariants here protect both the tuner and the scheduler.
+"""
+import pytest
+
+from repro.kernels.vmem import (
+    _BUDGET_FRACTION,
+    _DEFAULT_VMEM_BYTES,
+    VPU_ALIGN,
+    device_vmem_bytes,
+    vmem_plan,
+)
+from repro.service.scheduler import BucketPolicy, StreamStats
+
+
+def _dev(kind):
+    return type("D", (), {"device_kind": kind})()
+
+
+# ---------------------------------------------------------------------------
+# vmem_plan.
+# ---------------------------------------------------------------------------
+
+
+def test_plan_m1_caps_at_max_block_b():
+    # m=1 blocks are 4 bytes each: the budget allows millions, the cap wins.
+    plan = vmem_plan(1, _dev("cpu"))
+    assert plan.m == 1 and plan.block_b == 512
+    assert vmem_plan(1, _dev("cpu"), max_block_b=64).block_b == 64
+
+
+def test_plan_rejects_bad_args():
+    with pytest.raises(ValueError, match="m >= 1"):
+        vmem_plan(0)
+    with pytest.raises(ValueError, match="live_buffers"):
+        vmem_plan(8, live_buffers=0)
+
+
+@pytest.mark.parametrize("m", [1, 4, 8, 16, 32, 64])
+@pytest.mark.parametrize("live", [1, 4, 6, 16])
+def test_plan_invariants(m, live):
+    plan = vmem_plan(m, _dev("cpu"), live_buffers=live)
+    # Power of two, VPU-sublane aligned, never above the dispatch cap.
+    assert plan.block_b & (plan.block_b - 1) == 0
+    assert plan.block_b % VPU_ALIGN == 0
+    assert VPU_ALIGN <= plan.block_b <= 512
+    assert plan.budget_bytes == int(plan.vmem_bytes * _BUDGET_FRACTION)
+    assert plan.bytes_per_block == live * 4 * m * m
+    # Within budget whenever the budget admits at least one aligned tile.
+    if plan.block_b > VPU_ALIGN:
+        assert plan.tile_bytes() <= plan.budget_bytes
+
+
+def test_plan_tiny_budget_floors_at_vpu_align():
+    # Huge blocks + many live buffers blow any budget: the plan floors at
+    # one VPU sublane rather than going to zero (the kernel pads instead).
+    plan = vmem_plan(1024, _dev("cpu"), live_buffers=64)
+    assert plan.block_b == VPU_ALIGN
+    assert plan.tile_bytes() > plan.budget_bytes  # over budget by design
+
+
+def test_plan_large_live_buffers_shrinks_tile():
+    lean = vmem_plan(16, _dev("cpu"), live_buffers=2)
+    fat = vmem_plan(16, _dev("cpu"), live_buffers=32)
+    assert fat.block_b <= lean.block_b
+
+
+def test_device_vmem_kinds():
+    assert device_vmem_bytes(_dev("TPU v5p")) == 128 * 1024 * 1024
+    assert device_vmem_bytes(_dev("TPU v6 lite")) == 128 * 1024 * 1024
+    assert device_vmem_bytes(_dev("cpu")) == _DEFAULT_VMEM_BYTES
+    assert device_vmem_bytes(_dev("")) == _DEFAULT_VMEM_BYTES
+    # More VMEM -> at-least-as-large tiles at the same m.
+    assert (vmem_plan(32, _dev("TPU v5p")).block_b
+            >= vmem_plan(32, _dev("cpu")).block_b)
+
+
+# ---------------------------------------------------------------------------
+# BucketPolicy ladders.
+# ---------------------------------------------------------------------------
+
+
+def test_ladder_geometric_and_capped():
+    pol = BucketPolicy(base=512, growth=4, max_bucket=32768)
+    assert pol.ladder() == (512, 2048, 8192, 32768)
+    assert BucketPolicy(base=512, growth=4, max_bucket=512).ladder() == (512,)
+
+
+def test_sub_rungs_descend_to_min_bucket():
+    pol = BucketPolicy(base=512, min_bucket=8)
+    rungs = pol.sub_rungs()
+    assert rungs == (256, 128, 64, 32, 16, 8)
+    assert BucketPolicy(base=512, min_bucket=0).sub_rungs() == ()
+    # min_bucket at or above base means no sub-base rungs at all.
+    assert BucketPolicy(base=16, min_bucket=64).sub_rungs() == ()
+
+
+@pytest.mark.parametrize("total", [1, 7, 8, 511, 512, 513, 4096, 50000])
+def test_plan_covers_total(total):
+    for pol in (BucketPolicy(), BucketPolicy(tail_decompose=True, min_bucket=8)):
+        sizes = pol.plan(total)
+        assert sum(sizes) >= total
+        legal = set(pol.ladder()) | set(pol.sub_rungs())
+        assert set(sizes) <= legal
+        # Padding bound: one covering rung at most, and with sub-rungs the
+        # round-up is bounded by the smallest rung.
+        if pol.min_bucket:
+            assert sum(sizes) - total < pol.min_bucket
+
+
+def test_tail_decompose_beats_covering_bucket():
+    fat = BucketPolicy(tail_decompose=False)
+    lean = BucketPolicy(tail_decompose=True, min_bucket=8)
+    total = 512 + 9  # one base bucket + a 9-block tail
+    assert sum(fat.plan(total)) - total >= 512 - 9  # tail rounds up to base
+    assert sum(lean.plan(total)) - total < 8
+
+
+def test_for_device_base_is_fused_tile():
+    from repro.kernels.fused_solve import fused_block_b
+
+    for m in (8, 16, 32):
+        pol = BucketPolicy.for_device(m, _dev("cpu"))
+        assert pol.base == fused_block_b(m, _dev("cpu"))
+        assert pol.tail_decompose and pol.min_bucket == min(VPU_ALIGN, pol.base)
+        # Every rung is a whole number of kernel tiles: no partial-tile pad.
+        for rung in pol.ladder():
+            assert rung % pol.base == 0
+        assert pol.max_bucket * 4 * m * m <= 256 * 1024 * 1024 or \
+            pol.max_bucket == pol.base
+
+
+def test_for_device_waste_feedback_tightens_growth():
+    stats = StreamStats()
+    stats.note_batch(512, real=100, padded=412)  # 80% padding waste
+    tight = BucketPolicy.for_device(16, _dev("cpu"), stats=stats)
+    loose = BucketPolicy.for_device(16, _dev("cpu"))
+    assert loose.growth == 4 and tight.growth == 2
+
+
+def test_for_device_m1_edge():
+    pol = BucketPolicy.for_device(1, _dev("cpu"))
+    assert pol.base >= 1
+    assert pol.plan(3)  # tiny stream on the tiniest block size still plans

@@ -22,22 +22,19 @@ Exits non-zero with a per-finding report on any failure.
 from __future__ import annotations
 
 import argparse
-import os
 import pathlib
 import re
 import sys
 
-# Same workaround as tests/conftest.py: on a single-core host the XLA CPU
-# client has one execution thread, so doc examples using the io_callback
-# escape hatch (solve_via="callback") deadlock — the outer jitted
-# computation holds the only thread while the callback waits on a nested
-# dispatch.  Must be set before the examples import jax.
-if os.cpu_count() == 1:
-    os.environ.setdefault(
-        "XLA_FLAGS", "--xla_force_host_platform_device_count=2"
-    )
-
 REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+# Single-core hosts need a second XLA host device or doc examples using
+# solve_via="callback" deadlock — shared helper, also used by
+# tests/conftest.py.  Must run before the examples import jax.
+from repro.hostenv import single_core_xla_workaround  # noqa: E402
+
+single_core_xla_workaround()
 
 # [text](target) — excluding images' leading "!" is unnecessary: image
 # targets must exist just like link targets.

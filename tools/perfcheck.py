@@ -1,0 +1,128 @@
+"""Perf-regression gate: declarative checks over every ``BENCH_*.json``.
+
+Evaluates the check suite in :mod:`repro.perf.checks` — reframe-style
+declarative checks with extraction expressions, sanity conditions and trend
+references — against a *current* directory of benchmark documents, diffing
+trends against a *baseline* directory (by default both are the repo root,
+i.e. the committed files validate against themselves: sanity gates run,
+trend deltas are zero).
+
+CI usage (the ``perfcheck`` job)::
+
+    # 1. Validate the committed baselines: zero sanity failures required.
+    PYTHONPATH=src python tools/perfcheck.py --require-all --report report.json
+
+    # 2. Diff a fresh smoke run against the committed baselines.  Trend
+    #    comparisons only fire for comparable runs (same model/shape/device
+    #    fingerprint); smoke-vs-full mismatches skip the trend and keep the
+    #    sanity gates.
+    PYTHONPATH=src python tools/perfcheck.py --current perf_scratch --baseline .
+
+Exit status is non-zero — naming the failing check — on any sanity failure
+or gated trend regression.  ``--report`` writes the full trend report
+(per-check values, deltas, verdicts) for artifact upload.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.perf.checks import CHECKS, evaluate_all  # noqa: E402
+
+
+def format_result(res) -> str:
+    flag = {
+        "ok": "OK  ",
+        "skipped": "SKIP",
+        "missing": "MISS",
+        "sanity_failed": "FAIL",
+        "regressed": "FAIL",
+    }[res.status]
+    lines = [f"{flag} {res.check} [{res.bench}] {res.status}"]
+    for s in res.sanity_failures:
+        lines.append(f"       sanity: {s}")
+    for row in res.trend_rows:
+        def _fmt(v):
+            if isinstance(v, list):
+                return "[" + ", ".join(f"{x:.4g}" for x in v) + "]"
+            return f"{v:.6g}"
+        lines.append(
+            f"       trend {row['var']}: {_fmt(row['baseline'])} -> "
+            f"{_fmt(row['current'])} (worst {row['delta_frac']:+.1%}, "
+            f"band ±{row['tolerance']:.0%}, {row['direction']}-is-better) "
+            f"{row['verdict']}{' [warn-only]' if row['mode'] == 'warn' else ''}"
+        )
+    for note in res.notes:
+        lines.append(f"       note: {note}")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--current", default=str(REPO),
+                    help="directory holding the BENCH_*.json under test "
+                         "(default: repo root — the committed files)")
+    ap.add_argument("--baseline", default=str(REPO),
+                    help="directory holding the baseline BENCH_*.json trends "
+                         "are diffed against (default: repo root)")
+    ap.add_argument("--report", default=None,
+                    help="write the full JSON trend report here")
+    ap.add_argument("--only", default=None, metavar="CHECK",
+                    help="run a single check by name")
+    ap.add_argument("--require-all", action="store_true",
+                    help="a required check whose bench file is missing from "
+                         "--current fails instead of skipping")
+    ap.add_argument("--list", action="store_true", help="list checks and exit")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for check in CHECKS:
+            gates = sum(1 for t in check.trends if t.mode == "gate")
+            print(f"{check.name:24s} {check.bench:22s} "
+                  f"{len(check.sanity)} sanity, {len(check.trends)} trends "
+                  f"({gates} gating){'' if check.required else ' [optional]'}")
+        return 0
+
+    results = evaluate_all(
+        args.current, args.baseline,
+        require_all=args.require_all, only=args.only,
+    )
+    if args.only and not results:
+        print(f"FAIL no check named {args.only!r}", file=sys.stderr)
+        return 2
+
+    failed = []
+    for res in results:
+        print(format_result(res))
+        if res.gating_failure:
+            failed.append(res.check)
+
+    if args.report:
+        report = {
+            "current": str(args.current),
+            "baseline": str(args.baseline),
+            "failed": failed,
+            "checks": [r.to_json() for r in results],
+        }
+        path = pathlib.Path(args.report)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(report, indent=1) + "\n")
+        print(f"wrote {path}")
+
+    n_ok = sum(1 for r in results if r.status == "ok")
+    n_skip = sum(1 for r in results if r.status == "skipped")
+    if failed:
+        print(f"perfcheck: {len(failed)} check(s) FAILED: "
+              f"{', '.join(failed)}", file=sys.stderr)
+        return 1
+    print(f"perfcheck OK: {n_ok} check(s) passed, {n_skip} skipped")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
