@@ -35,7 +35,12 @@ import jax
 
 from benchmarks.common import emit
 from repro.kernels import default_interpret
-from repro.perf.autotune import autotune_fused_solve, autotune_nm_spmm
+from repro.perf.autotune import (
+    autotune_fused_solve,
+    autotune_nm_sparsify,
+    autotune_nm_spmm,
+    autotune_nm_spmm_cc,
+)
 from repro.perf.table import TuningTable, default_table_path, device_kind_of
 
 # Shape classes mirror BENCH_train.json's bench-30m (t8:16, seq 128, batch 8:
@@ -46,12 +51,25 @@ FULL_CELLS = {
     "nm_spmm_tr_gemm": dict(rows=1024, k=384, f=1536, n=8, m=16, transpose=True),
     "nm_spmm_fwd_gemv": dict(rows=8, k=384, f=1536, n=8, m=16),
     "fused_solve_m16": dict(op="fused", m=16, n=8, batch=512, iters=40),
+    # Structured-sparse backward (BENCH_backward.json shapes): 8:16 gradient
+    # sparsify over the wide cotangent, and the compressed x compressed dX
+    # GEMM at the ffn down-projection (the tall-K case the cc default row
+    # tile targets) plus the d_model-K case.
+    "nm_sparsify_gemm": dict(op="sparsify", rows=1024, f=1536, n=8, m=16),
+    "nm_sparsify_narrow": dict(op="sparsify", rows=1024, f=384, n=8, m=16),
+    "nm_spmm_cc_gemm": dict(op="cc", rows=1024, k=384, f=1536,
+                            n_g=8, m_g=16, n_w=8, m_w=16),
+    "nm_spmm_cc_tallk": dict(op="cc", rows=1024, k=1536, f=384,
+                             n_g=8, m_g=16, n_w=8, m_w=16),
 }
 SMOKE_CELLS = {
     "nm_spmm_fwd_gemm": dict(rows=128, k=64, f=128, n=8, m=16),
     "nm_spmm_tr_gemm": dict(rows=128, k=64, f=128, n=8, m=16, transpose=True),
     "nm_spmm_fwd_gemv": dict(rows=8, k=64, f=128, n=8, m=16),
     "fused_solve_m8": dict(op="fused", m=8, n=4, batch=64, iters=10),
+    "nm_sparsify_gemm": dict(op="sparsify", rows=128, f=128, n=8, m=16),
+    "nm_spmm_cc_gemm": dict(op="cc", rows=128, k=64, f=128,
+                            n_g=8, m_g=16, n_w=8, m_w=16),
 }
 
 
@@ -60,11 +78,16 @@ def run(cells: dict, shape_set: str, reps: int, out_path: str,
     results, headline = {}, {}
     for name, cell in cells.items():
         cell = dict(cell)
-        if cell.pop("op", None) == "fused":
+        op = cell.pop("op", None)
+        if op == "fused":
             res = autotune_fused_solve(
                 cell["m"], cell["n"], batch=cell["batch"],
                 iters=cell["iters"], reps=reps,
             )
+        elif op == "sparsify":
+            res = autotune_nm_sparsify(reps=reps, **cell)
+        elif op == "cc":
+            res = autotune_nm_spmm_cc(reps=reps, **cell)
         else:
             res = autotune_nm_spmm(reps=reps, **cell)
         results[name] = res

@@ -1,0 +1,11 @@
+"""In-flight N:M sparsification of activation gradients (MVU rounding).
+
+Kernel/ref/ops triple, same layout as ``repro.kernels.nm_spmm``:
+
+* :mod:`kernel` — Pallas kernels: ``nm_sparsify_pallas`` (top-(N-1) +
+  minimum-variance-unbiased stochastic survivor per M-block, counter-based
+  PRNG) and ``nm_spmm_cc_pallas`` (both operands compressed).
+* :mod:`ref` — pure-jnp oracles + the analytic MVU variance.
+* :mod:`ops` — ``nm_linear_sg`` custom-VJP and the trace-time
+  ``sparse_grad_context`` that :func:`repro.models.layers.proj` consults.
+"""

@@ -1,0 +1,353 @@
+"""Pallas kernels: MVU N:M gradient sparsification + compressed-x-compressed GEMM.
+
+``nm_sparsify_pallas`` turns a dense activation-gradient tile ``dY`` into the
+``(values, int8 indices)`` compressed layout ``nm_spmm`` consumes, N:M along
+the *row* (token) dimension: per M-block of rows in each column, the top
+``N-1`` magnitudes are kept verbatim and ONE more survivor is drawn from the
+residual with probability proportional to its magnitude, rescaled so the
+estimate is unbiased (Chmiel et al., "Minimum Variance Unbiased N:M Sparsity
+for the Neural Gradients").  Drawing position ``j`` with ``p_j = a_j / S``
+(``S`` = residual magnitude mass) and emitting ``x_j / p_j = sign(x_j) * S``
+is the minimum-variance unbiased one-point estimator of the residual — see
+``docs/solver_math.md`` for the derivation and the analytic variance
+``a_j (S - a_j)`` the property tests pin.
+
+Blocks with at most N nonzeros round-trip exactly (the residual holds one
+nonzero, drawn with p=1 and rescaled to itself), so sparse gradients of an
+already-N:M-sparse ``dY`` are bit-exact.
+
+Randomness is **counter-based**: each (M-block row, column) hashes
+``(seed, salt, block, col)`` through a murmur3-style finalizer built from
+plain ``uint32`` jnp ops — no backend PRNG primitive — so interpret-mode CPU
+runs and TPU runs draw the same numbers, the result is independent of the
+grid tiling (counters are *global* coordinates), and a fixed seed replays
+bit-identically.  ``salt`` decorrelates call sites (one per traced
+projection), the layer index is folded into ``seed`` by the ops layer.
+
+An optional stochastic cast to bf16 (``out_dtype=jnp.bfloat16``) rounds each
+survivor to a neighbouring bf16 value with probability proportional to
+proximity (add 16 random mantissa bits, truncate) — also unbiased, and it is
+what makes the compressed-``dY`` byte ratio 3/8 of dense f32 at 8:16 instead
+of 5/8 (see ``roofline.nm_grad_cost``).
+
+``nm_spmm_cc_pallas`` is the dX GEMM with BOTH operands compressed:
+``dY`` N:M along rows (pattern ``n_g:m_g``), ``W`` N:M along K (pattern
+``n_w:m_w``, the transposable weight buffer).  Each grid step decompresses a
+``(bt, ft)`` dY tile and a ``(kt, ft)`` W tile in VMEM and accumulates
+``dot(dY, Wᵀ)`` on the MXU — dense dY never exists in HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import default_interpret
+from repro.kernels.nm_spmm.kernel import (
+    _decompress_tile,
+    _pad_dim,
+    _round_up,
+)
+from repro.kernels.vmem import VPU_ALIGN
+
+_U32 = jnp.uint32
+
+
+def counter_uniform(seed, salt: int, block, col, stream: int = 0):
+    """Deterministic uniform in [0, 1) per (block, col) counter pair.
+
+    ``seed`` is a traced int32 scalar; ``salt``/``stream`` are static ints
+    (call site / draw index); ``block``/``col`` are int32 arrays of global
+    coordinates.  murmur3-finalizer quality is plenty for rounding noise and
+    — unlike ``pltpu.prng_random_bits`` — runs identically under interpret.
+    """
+    h = counter_bits(seed, salt, block, col, stream)
+    # Top 24 bits -> [0, 1): exactly representable in f32.
+    return (h >> _U32(8)).astype(jnp.float32) * jnp.float32(2.0**-24)
+
+
+def counter_bits(seed, salt: int, block, col, stream: int = 0):
+    """The raw uint32 hash behind :func:`counter_uniform`."""
+    h = block.astype(_U32) * _U32(0x9E3779B9)
+    h = h ^ (col.astype(_U32) * _U32(0x85EBCA6B))
+    h = h ^ (jnp.asarray(seed).astype(_U32) * _U32(0xC2B2AE35))
+    h = h ^ _U32((salt * 0x27D4EB2F + stream * 0x165667B1) & 0xFFFFFFFF)
+    h = h ^ (h >> _U32(16))
+    h = h * _U32(0x85EBCA6B)
+    h = h ^ (h >> _U32(13))
+    h = h * _U32(0xC2B2AE35)
+    h = h ^ (h >> _U32(16))
+    return h
+
+
+def _stochastic_bf16(x: jnp.ndarray, rbits: jnp.ndarray) -> jnp.ndarray:
+    """Unbiased f32 -> bf16: add 16 random low bits, truncate the mantissa."""
+    bits = jax.lax.bitcast_convert_type(x, _U32)
+    bits = bits + (rbits & _U32(0xFFFF))
+    trunc = jax.lax.bitcast_convert_type(bits & _U32(0xFFFF0000), jnp.float32)
+    return trunc.astype(jnp.bfloat16)
+
+
+def _mvu_select(dyb: jnp.ndarray, u: jnp.ndarray, n: int):
+    """Core MVU selection on one (G, m, ft) block stack.
+
+    Returns ``(out_dense, keep)``: the rescaled survivor values (f32, zeros
+    at dropped positions) and the boolean survivor mask (<= n per (g, col)).
+    Shared by the Pallas kernel and the pure-jnp oracle so the *selection*
+    spec lives in exactly one place; the oracle re-derives the ranking with
+    an independent argsort (see ``ref.py``).
+    """
+    g, m, ft = dyb.shape
+    a = jnp.abs(dyb)
+    # Rank by magnitude desc, position asc (stable): pairwise comparison on
+    # the VPU — no in-kernel sort, Mosaic-friendly (m^2 bools per element).
+    ai = a[:, :, None, :]
+    aj = a[:, None, :, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (1, m, m, 1), 1)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (1, m, m, 1), 2)
+    beats = (aj > ai) | ((aj == ai) & (jj < ii))
+    rank = jnp.sum(beats.astype(jnp.int32), axis=2)  # (g, m, ft)
+
+    keep_det = (rank < n - 1) & (a > 0)
+    elig = (rank >= n - 1) & (a > 0)
+    a_e = jnp.where(elig, a, 0.0)
+    # Position-ordered running mass; its last row is the residual mass S.
+    # Deriving S from the SAME cumsum that defines the inverse-CDF intervals
+    # keeps the emitted value bit-consistent with the interval endpoints
+    # (a separate jnp.sum may reduce in a different order, off by an ULP —
+    # and the numpy oracle could not reproduce it).
+    cum = jnp.cumsum(a_e, axis=1)
+    s_mass = cum[:, m - 1 : m, :]  # (g, 1, ft)
+
+    # Inverse-CDF draw over the residual, in position order.
+    t = (u * s_mass[:, 0, :])[:, None, :]  # (g, 1, ft)
+    sel = elig & ((cum - a_e) <= t) & (t < cum)
+    # Float rounding can make adjacent intervals overlap or leave t == S
+    # uncovered: keep the first hit, else fall back to the last eligible.
+    sel = sel & (jnp.cumsum(sel.astype(jnp.int32), axis=1) == 1)
+    has = jnp.any(sel, axis=1)  # (g, ft)
+    pos = jax.lax.broadcasted_iota(jnp.int32, (g, m, ft), 1)
+    last = jnp.max(jnp.where(elig, pos, -1), axis=1)  # (g, ft)
+    sel = sel | (elig & (pos == last[:, None, :]) & ~has[:, None, :])
+
+    sgn = jnp.where(dyb >= 0, 1.0, -1.0)
+    out = jnp.where(keep_det, dyb, 0.0) + jnp.where(sel, sgn * s_mass, 0.0)
+    return out.astype(jnp.float32), keep_det | sel
+
+
+def _pack_slots(out_dense: jnp.ndarray, keep: jnp.ndarray, n: int):
+    """(G, m, ft) survivors -> (G, n, ft) slots, ascending position order,
+    dead slots idx=-1/val=0 — the exact ``compress_nm`` layout."""
+    g, m, ft = out_dense.shape
+    r = jnp.cumsum(keep.astype(jnp.int32), axis=1) - 1  # slot per position
+    s_iota = jax.lax.broadcasted_iota(jnp.int32, (g, n, m, ft), 1)
+    eq = (r[:, None, :, :] == s_iota) & keep[:, None, :, :]
+    vals = jnp.sum(jnp.where(eq, out_dense[:, None, :, :], 0.0), axis=2)
+    posm = jax.lax.broadcasted_iota(jnp.int32, (g, n, m, ft), 2)
+    idx = jnp.sum(jnp.where(eq, posm, 0), axis=2)
+    count = jnp.sum(keep.astype(jnp.int32), axis=1)  # (g, ft)
+    live = jax.lax.broadcasted_iota(jnp.int32, (g, n, ft), 1) < count[:, None, :]
+    return jnp.where(live, vals, 0.0), jnp.where(live, idx, -1).astype(jnp.int8)
+
+
+def _sparsify_kernel(
+    seed_ref, dy_ref, vals_ref, idx_ref, *, n: int, m: int, salt: int,
+    out_dtype,
+):
+    bt, ft = dy_ref.shape
+    g = bt // m
+    dyb = dy_ref[...].astype(jnp.float32).reshape(g, m, ft)
+    seed = seed_ref[0]
+
+    # GLOBAL counters -> randomness independent of the grid tiling.
+    gi = jax.lax.broadcasted_iota(jnp.int32, (g, ft), 0) + pl.program_id(0) * g
+    ci = jax.lax.broadcasted_iota(jnp.int32, (g, ft), 1) + pl.program_id(1) * ft
+    u = counter_uniform(seed, salt, gi, ci, stream=0)
+
+    out_dense, keep = _mvu_select(dyb, u, n)
+    if jnp.dtype(out_dtype) != jnp.float32:
+        ri = jax.lax.broadcasted_iota(jnp.int32, (g, m, ft), 0) * m
+        ri = ri + jax.lax.broadcasted_iota(jnp.int32, (g, m, ft), 1)
+        ri = ri + pl.program_id(0) * bt
+        cc = jax.lax.broadcasted_iota(jnp.int32, (g, m, ft), 2)
+        cc = cc + pl.program_id(1) * ft
+        rbits = counter_bits(seed, salt, ri, cc, stream=1)
+        out_dense = _stochastic_bf16(out_dense, rbits).astype(jnp.float32)
+    vals, idx = _pack_slots(out_dense, keep, n)
+    vals_ref[...] = vals.astype(out_dtype)
+    idx_ref[...] = idx
+
+
+def _resolve_sparsify_tiles(rows: int, f: int, m: int, bt, ft):
+    if bt is None or ft is None:
+        from repro.perf.table import nm_grad_tiles
+
+        tuned = nm_grad_tiles("nm_sparsify", rows, f, f, m)
+        tbt, _tkt, tft = tuned if tuned else (256, 256, 256)
+        row_cap = _round_up(max(rows, 1), max(m, VPU_ALIGN))
+        if bt is None:
+            bt = max(m, _round_up(min(tbt, row_cap), m))
+        if ft is None:
+            ft = min(tft, _round_up(f, 128))
+    assert bt % m == 0, (bt, m)
+    return bt, ft
+
+
+def nm_sparsify_pallas(
+    dy: jnp.ndarray,
+    n: int,
+    m: int,
+    seed,
+    salt: int = 0,
+    out_dtype=jnp.float32,
+    bt: int | None = None,
+    ft: int | None = None,
+    interpret: bool | None = None,
+):
+    """Sparsify ``dy`` (R, F) to N:M along rows.
+
+    Returns ``(values, indices)`` of shape ``(ceil(R/m), n, F)`` — rows are
+    zero-padded to a whole number of M-blocks; padded rows are exact zeros
+    and can never be selected, so consumers just crop output rows to R.
+    ``seed`` may be a python int or a traced int32 scalar.
+    """
+    rows, f = dy.shape
+    bt, ft = _resolve_sparsify_tiles(rows, f, m, bt, ft)
+    seed_arr = jnp.asarray(seed, jnp.int32).reshape(1)
+    return _nm_sparsify_call(
+        seed_arr, dy, n, m, salt, jnp.dtype(out_dtype).name, bt, ft, interpret
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n", "m", "salt", "out_dtype", "bt", "ft", "interpret"),
+)
+def _nm_sparsify_call(seed_arr, dy, n, m, salt, out_dtype, bt, ft, interpret):
+    if interpret is None:
+        interpret = default_interpret()
+    rows, f = dy.shape
+    out_dtype = jnp.dtype(out_dtype)
+    dyp = _pad_dim(_pad_dim(dy, 0, bt), 1, ft)
+    pr, pf = dyp.shape
+    grid = (pr // bt, pf // ft)
+    vals, idx = pl.pallas_call(
+        functools.partial(
+            _sparsify_kernel, n=n, m=m, salt=salt, out_dtype=out_dtype
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((bt, ft), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt // m, n, ft), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((bt // m, n, ft), lambda i, j: (i, 0, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((pr // m, n, pf), out_dtype),
+            jax.ShapeDtypeStruct((pr // m, n, pf), jnp.int8),
+        ],
+        interpret=interpret,
+    )(seed_arr, dyp)
+    g_out = -(-rows // m)
+    return vals[:g_out, :, :f], idx[:g_out, :, :f]
+
+
+# ---------------------------------------------------------------------------
+# Compressed x compressed: dX = dY_sparse · Wᵀ.
+# ---------------------------------------------------------------------------
+
+
+def _cc_kernel(gv_ref, gi_ref, wv_ref, wi_ref, o_ref, *, m_g: int, m_w: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    dy = _decompress_tile(gv_ref[...], gi_ref[...], m_g)  # (bt, ft)
+    w = _decompress_tile(wv_ref[...], wi_ref[...], m_w)  # (kt, ft)
+    o_ref[...] += jnp.dot(dy, w.T, preferred_element_type=jnp.float32)
+
+
+def _resolve_cc_tiles(b: int, k: int, f: int, m_g: int, m_w: int, bt, kt, ft):
+    if bt is None or kt is None or ft is None:
+        from repro.perf.table import nm_grad_tiles
+
+        # Default row tile is 4x nm_spmm's: with BOTH operands compressed the
+        # VMEM-resident tile set is tiny, and a taller dY tile divides the
+        # W-operand revisit count (see roofline.nm_spmm_cc_cost).
+        tuned = nm_grad_tiles("nm_spmm_cc", b, k, f, max(m_g, m_w))
+        tbt, tkt, tft = tuned if tuned else (1024, 256, 256)
+        if bt is None:
+            row_cap = _round_up(max(b, 1), max(m_g, VPU_ALIGN))
+            bt = max(m_g, _round_up(min(tbt, row_cap), m_g))
+        if kt is None:
+            kt = max(m_w, _round_up(min(tkt, _round_up(k, m_w)), m_w))
+        if ft is None:
+            ft = min(tft, _round_up(f, 128))
+    assert bt % m_g == 0 and kt % m_w == 0, (bt, m_g, kt, m_w)
+    return bt, kt, ft
+
+
+def nm_spmm_cc_pallas(
+    gvals: jnp.ndarray,
+    gidx: jnp.ndarray,
+    wvals: jnp.ndarray,
+    widx: jnp.ndarray,
+    m_g: int,
+    m_w: int,
+    bt: int | None = None,
+    kt: int | None = None,
+    ft: int | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """dX = decompress(dY) · decompress(W)ᵀ with both operands compressed.
+
+    ``gvals/gidx``: (B/m_g, n_g, F) gradient compressed along rows;
+    ``wvals/widx``: (K/m_w, n_w, F) weight compressed along K.  Returns
+    (B, K) float32; neither dense operand ever exists outside VMEM tiles.
+    """
+    b = gvals.shape[0] * m_g
+    k = wvals.shape[0] * m_w
+    f = gvals.shape[2]
+    assert wvals.shape[2] == f, (gvals.shape, wvals.shape)
+    bt, kt, ft = _resolve_cc_tiles(b, k, f, m_g, m_w, bt, kt, ft)
+    return _nm_spmm_cc_call(
+        gvals, gidx, wvals, widx, m_g, m_w, bt, kt, ft, interpret
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("m_g", "m_w", "bt", "kt", "ft", "interpret"),
+)
+def _nm_spmm_cc_call(gvals, gidx, wvals, widx, m_g, m_w, bt, kt, ft, interpret):
+    if interpret is None:
+        interpret = default_interpret()
+    b = gvals.shape[0] * m_g
+    k = wvals.shape[0] * m_w
+    n_g, n_w = gvals.shape[1], wvals.shape[1]
+    gv = _pad_dim(_pad_dim(gvals, 0, bt // m_g), 2, ft)
+    gi = _pad_dim(_pad_dim(gidx, 0, bt // m_g), 2, ft)
+    wv = _pad_dim(_pad_dim(wvals, 0, kt // m_w), 2, ft)
+    wi = _pad_dim(_pad_dim(widx, 0, kt // m_w), 2, ft)
+    pb = gv.shape[0] * m_g
+    pk = wv.shape[0] * m_w
+    pf = gv.shape[2]
+    grid = (pb // bt, pk // kt, pf // ft)
+    out = pl.pallas_call(
+        functools.partial(_cc_kernel, m_g=m_g, m_w=m_w),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt // m_g, n_g, ft), lambda i, j, kk: (i, 0, kk)),
+            pl.BlockSpec((bt // m_g, n_g, ft), lambda i, j, kk: (i, 0, kk)),
+            pl.BlockSpec((kt // m_w, n_w, ft), lambda i, j, kk: (j, 0, kk)),
+            pl.BlockSpec((kt // m_w, n_w, ft), lambda i, j, kk: (j, 0, kk)),
+        ],
+        out_specs=pl.BlockSpec((bt, kt), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pb, pk), jnp.float32),
+        interpret=interpret,
+    )(gv, gi, wv, wi)
+    return out[:b, :k]

@@ -1,0 +1,157 @@
+"""Structured-sparse backward: custom-VJP linear op + trace-time context.
+
+``nm_linear_sg`` computes the SAME forward as
+:func:`repro.kernels.nm_spmm.ops.nm_linear` (one compressed weight buffer),
+but its backward sparsifies the incoming cotangent ``dY`` to N:M along rows
+(``nm_sparsify_pallas``, MVU stochastic rounding) and streams the compressed
+result through BOTH backward GEMMs:
+
+  dX = compressed-dY · Wᵀ   (``nm_spmm_cc_pallas`` — both operands compressed)
+  dW = Xᵀ · compressed-dY   (``nm_spmm_pallas`` with dY as the sparse operand)
+
+Dense ``dY`` never reaches HBM-resident GEMM operands — the byte accounting
+lives in ``repro.perf.roofline.nm_grad_cost``.
+
+The gradient pattern is independent of the weight pattern (e.g. 8:16 grads
+over t16:32 weights) and need not be transposable — dY is only ever consumed
+in one orientation per GEMM.
+
+Seed plumbing (``sparse_grad_context``): the train step derives one int32
+seed per microbatch (step * accum + microbatch) and installs a trace-time
+context around the loss; :func:`repro.models.layers.proj` consults it and
+routes compressed leaves through ``nm_linear_sg_nd``.  Each traced call site
+takes a fresh static ``salt``; the scanned layer index is folded into the
+seed (``sparse_grad_layer`` — installed by the ``models.lm`` stack runners)
+so every (layer, call site, microbatch) triple draws an independent counter
+stream while remaining bit-reproducible for a fixed step.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.nm_grad.kernel import nm_sparsify_pallas, nm_spmm_cc_pallas
+from repro.kernels.nm_spmm.kernel import nm_spmm_pallas
+from repro.patterns import PatternSpec
+
+_LAYER_MIX = 1000003  # odd prime; decorrelates scanned layers in the seed
+
+
+@dataclasses.dataclass
+class SparseGradContext:
+    """Trace-time state for one loss evaluation under sparse gradients."""
+
+    spec: PatternSpec
+    seed: Any                      # int or traced int32 scalar
+    dtype: str = "bfloat16"        # compressed-dY value dtype (SR cast)
+    layer: Any = None              # traced layer index inside lax.scan
+    _salt: int = 0
+
+    def call_key(self):
+        """(effective seed, fresh per-call-site salt) for one projection."""
+        seed = jnp.asarray(self.seed, jnp.int32)
+        if self.layer is not None:
+            seed = seed + (jnp.asarray(self.layer, jnp.int32) + 1) * jnp.int32(
+                _LAYER_MIX
+            )
+        salt = self._salt
+        self._salt += 1
+        return seed, salt
+
+
+_ACTIVE: list[SparseGradContext] = []
+
+
+def current_sparse_grad() -> Optional[SparseGradContext]:
+    """The innermost active context, or None (dense-gradient path)."""
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+@contextlib.contextmanager
+def sparse_grad_context(pattern, seed, dtype=jnp.bfloat16):
+    """Route every compressed ``proj`` traced inside to ``nm_linear_sg``."""
+    ctx = SparseGradContext(
+        PatternSpec.coerce(pattern), seed, jnp.dtype(dtype).name
+    )
+    _ACTIVE.append(ctx)
+    try:
+        yield ctx
+    finally:
+        _ACTIVE.pop()
+
+
+@contextlib.contextmanager
+def sparse_grad_layer(layer):
+    """Fold a (possibly traced) layer index into the active context's seed.
+
+    No-op when no context is active, so the model stack runners install it
+    unconditionally without perturbing the dense path.
+    """
+    ctx = current_sparse_grad()
+    if ctx is None:
+        yield
+        return
+    prev = ctx.layer
+    ctx.layer = layer
+    try:
+        yield
+    finally:
+        ctx.layer = prev
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
+def nm_linear_sg(x, vals, idx, seed, m, n_g, m_g, salt, grad_dtype):
+    """Forward identical to ``nm_linear``; backward streams N:M-sparse dY."""
+    del seed  # backward-only
+    return nm_spmm_pallas(x, vals, idx, m).astype(x.dtype)
+
+
+def _sg_fwd(x, vals, idx, seed, m, n_g, m_g, salt, grad_dtype):
+    y = nm_spmm_pallas(x, vals, idx, m).astype(x.dtype)
+    return y, (x, vals, idx, seed)
+
+
+def _sg_bwd(m, n_g, m_g, salt, grad_dtype, res, dy):
+    x, vals, idx, seed = res
+    rows = dy.shape[0]
+    gvals, gidx = nm_sparsify_pallas(
+        dy, n_g, m_g, seed, salt=salt, out_dtype=jnp.dtype(grad_dtype)
+    )
+    rp = gvals.shape[0] * m_g  # rows padded to whole M-blocks
+
+    # dX: both operands compressed; crop the row padding back off.
+    dx = nm_spmm_cc_pallas(gvals, gidx, vals, idx, m_g, m)[:rows]
+
+    # dW restricted to the weight support, with compressed dY as the sparse
+    # operand (reduction over the padded rows; pad X to match — zero rows
+    # contribute exactly nothing).
+    xp = x.astype(jnp.float32)
+    if rp != rows:
+        xp = jnp.pad(xp, ((0, rp - rows), (0, 0)))
+    dw = nm_spmm_pallas(xp.T, gvals, gidx, m_g)  # (K, F) dense-on-support
+    g, _n, f = vals.shape
+    dwg = dw.reshape(g, m, f)
+    gathered = jnp.take_along_axis(
+        dwg, jnp.maximum(idx.astype(jnp.int32), 0), axis=1
+    )
+    dvals = jnp.where(idx >= 0, gathered, 0.0).astype(vals.dtype)
+    return dx.astype(x.dtype), dvals, None, None
+
+
+nm_linear_sg.defvjp(_sg_fwd, _sg_bwd)
+
+
+def nm_linear_sg_nd(x, vals, idx, m, ctx: SparseGradContext):
+    """``nm_linear_sg`` over activations with arbitrary leading dims."""
+    seed, salt = ctx.call_key()
+    lead = x.shape[:-1]
+    y = nm_linear_sg(
+        x.reshape(-1, x.shape[-1]), vals, idx, seed,
+        m, ctx.spec.n, ctx.spec.m, salt, ctx.dtype,
+    )
+    return y.reshape(*lead, y.shape[-1])

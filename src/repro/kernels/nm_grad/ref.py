@@ -1,0 +1,122 @@
+"""Pure-jnp oracles for the MVU gradient-sparsify + cc-GEMM kernels.
+
+``nm_sparsify_ref`` re-derives the survivor set with an *independent*
+implementation (stable argsort ranking instead of the kernel's pairwise
+comparison network; gather-based slot packing instead of one-hot sums) while
+sharing only the counter-PRNG spec (:func:`..kernel.counter_uniform`) — the
+randomness is part of the op's contract, the selection logic is what the
+oracle cross-checks.
+
+``mvu_variance_ref`` is the analytic per-element variance of the estimator,
+``a_j (S - a_j)`` on residual positions and 0 on deterministic ones (see
+``docs/solver_math.md``) — the bound the property tests compare Monte-Carlo
+variance against.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.nm_grad.kernel import counter_bits, counter_uniform
+from repro.sparsity.compressed import decompress_nm
+
+
+def _rank_desc_stable(a: np.ndarray, axis: int) -> np.ndarray:
+    """rank[i] = position of i in a stable descending sort along ``axis``."""
+    order = np.argsort(-a, axis=axis, kind="stable")
+    return np.argsort(order, axis=axis, kind="stable")
+
+
+def nm_sparsify_ref(dy, n: int, m: int, seed, salt: int = 0,
+                    out_dtype=jnp.float32):
+    """Oracle for ``nm_sparsify_pallas``: same (values, indices) bit-layout.
+
+    numpy implementation over (ceil(R/m), m, F) blocks; rows are zero-padded
+    to whole M-blocks exactly like the kernel.
+    """
+    dy = np.asarray(dy, np.float32)
+    rows, f = dy.shape
+    g = -(-rows // m)
+    pad = g * m - rows
+    if pad:
+        dy = np.concatenate([dy, np.zeros((pad, f), np.float32)])
+    dyb = dy.reshape(g, m, f)
+    a = np.abs(dyb)
+
+    rank = _rank_desc_stable(a, axis=1)
+    keep_det = (rank < n - 1) & (a > 0)
+    elig = (rank >= n - 1) & (a > 0)
+    a_e = np.where(elig, a, 0.0)
+    # The position-ordered running mass (S = last row) is part of the op's
+    # bit-contract, like the counter PRNG: XLA's scan associates additions
+    # differently from np.cumsum (ULP-level), which would shift S and could
+    # even flip a draw landing within ULPs of an interval boundary — so the
+    # oracle shares the scan primitive and re-derives everything else.
+    cum = np.asarray(jnp.cumsum(jnp.asarray(a_e, jnp.float32), axis=1))
+    s_mass = cum[:, -1:, :]
+
+    gi = np.broadcast_to(np.arange(g)[:, None], (g, f)).astype(np.int32)
+    ci = np.broadcast_to(np.arange(f)[None, :], (g, f)).astype(np.int32)
+    u = np.asarray(counter_uniform(
+        jnp.asarray(seed, jnp.int32), salt, jnp.asarray(gi), jnp.asarray(ci)
+    ))
+
+    t = (u * s_mass[:, 0, :])[:, None, :]
+    sel = elig & ((cum - a_e) <= t) & (t < cum)
+    sel &= np.cumsum(sel, axis=1) == 1
+    has = sel.any(axis=1)
+    pos = np.broadcast_to(np.arange(m)[None, :, None], (g, m, f))
+    last = np.max(np.where(elig, pos, -1), axis=1)
+    sel |= elig & (pos == last[:, None, :]) & ~has[:, None, :]
+
+    out = np.where(keep_det, dyb, 0.0) + np.where(
+        sel, np.where(dyb >= 0, 1.0, -1.0) * s_mass, 0.0
+    )
+    if jnp.dtype(out_dtype) != jnp.float32:
+        ri = (np.arange(g * m)[:, None] + np.zeros((1, f))).astype(np.int32)
+        cc = (np.zeros((g * m, 1)) + np.arange(f)[None, :]).astype(np.int32)
+        rbits = np.asarray(counter_bits(
+            jnp.asarray(seed, jnp.int32), salt,
+            jnp.asarray(ri), jnp.asarray(cc), stream=1,
+        )).reshape(g, m, f)
+        bits = out.astype(np.float32).view(np.uint32)
+        bits = bits + (rbits & np.uint32(0xFFFF))
+        out = (bits & np.uint32(0xFFFF0000)).view(np.float32)
+    keep = keep_det | sel
+
+    # Independent packing: gather kept positions in ascending order.
+    vals = np.zeros((g, n, f), np.float32)
+    idx = np.full((g, n, f), -1, np.int8)
+    for gg in range(g):
+        for ff in range(f):
+            where = np.nonzero(keep[gg, :, ff])[0]
+            assert len(where) <= n, (gg, ff, where)
+            vals[gg, : len(where), ff] = out[gg, where, ff]
+            idx[gg, : len(where), ff] = where.astype(np.int8)
+    return (jnp.asarray(vals).astype(out_dtype), jnp.asarray(idx))
+
+
+def mvu_variance_ref(dy, n: int, m: int) -> np.ndarray:
+    """Analytic per-element variance of the MVU estimator, shape = dy.shape.
+
+    Residual position j (not among the top N-1 magnitudes): Var = a_j(S-a_j);
+    deterministic survivors and zeros: Var = 0.  Exact in infinite precision;
+    the Monte-Carlo property test budgets its own sampling error on top.
+    """
+    dy = np.asarray(dy, np.float32)
+    rows, f = dy.shape
+    assert rows % m == 0
+    a = np.abs(dy.reshape(-1, m, f))
+    rank = _rank_desc_stable(a, axis=1)
+    elig = (rank >= n - 1) & (a > 0)
+    a_e = np.where(elig, a, 0.0)
+    s_mass = a_e.sum(axis=1, keepdims=True)
+    var = np.where(elig, a_e * np.maximum(s_mass - a_e, 0.0), 0.0)
+    return var.reshape(rows, f)
+
+
+def nm_spmm_cc_ref(gvals, gidx, wvals, widx, m_g: int, m_w: int):
+    """Oracle for the compressed-x-compressed GEMM: decompress both, f32."""
+    dy = decompress_nm(gvals, gidx, m_g).astype(jnp.float32)  # (B, F)
+    w = decompress_nm(wvals, widx, m_w).astype(jnp.float32)  # (K, F)
+    return dy @ w.T

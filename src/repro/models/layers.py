@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import shard
+from repro.kernels.nm_grad.ops import current_sparse_grad, nm_linear_sg_nd
 from repro.kernels.nm_spmm.ops import nm_linear_nd
 from repro.sparsity.params import NMCompressed
 
@@ -22,10 +23,39 @@ def proj(x: jnp.ndarray, w) -> jnp.ndarray:
     The isinstance branch resolves at trace time, so under ``jit`` each leaf
     compiles to exactly one of the two paths — mixed trees (pruned
     projections compressed, embeddings dense) cost nothing extra.
+
+    When a :func:`repro.kernels.nm_grad.ops.sparse_grad_context` is active
+    (``StepConfig(grad_sparsity=...)``), compressed leaves route through the
+    structured-sparse-backward op instead: the forward is identical, the
+    backward N:M-sparsifies ``dY`` in-flight so BOTH backward GEMMs stream
+    compressed operands.  Dense leaves are unaffected either way.
     """
     if isinstance(w, NMCompressed):
+        ctx = current_sparse_grad()
+        if ctx is not None:
+            return nm_linear_sg_nd(x, w.values, w.indices, w.m, ctx)
         return nm_linear_nd(x, w.values, w.indices, w.m)
     return x @ w.astype(x.dtype)
+
+
+def expert_einsum(eq: str, xe: jnp.ndarray, w) -> jnp.ndarray:
+    """Per-expert einsum (``"gecd,edf->gecf"`` / ``"gecf,efd->gecd"``) with
+    compressed-dispatch support.
+
+    Dense leaves keep the exact historical ``jnp.einsum`` (bit-identical).
+    ``NMCompressed`` leaves — stacked ``(E, G, N, F)`` buffers — unroll over
+    the expert axis and route each expert's ``(g, c, d) @ (d, f)`` through
+    :func:`proj`, so expert FFNs inherit compressed execution AND sparse
+    gradients from the same dispatch point as the dense projections.
+    """
+    if not isinstance(w, NMCompressed):
+        return jnp.einsum(eq, xe, w.astype(xe.dtype))
+    e = xe.shape[1]
+    outs = [
+        proj(xe[:, ei], NMCompressed(w.values[ei], w.indices[ei], w.m))
+        for ei in range(e)
+    ]
+    return jnp.stack(outs, axis=1)
 
 
 def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:

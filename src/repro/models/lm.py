@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import shard
+from repro.kernels.nm_grad.ops import sparse_grad_layer
 from repro.models import transformer as tf
 from repro.models.attention import init_kv_cache
 from repro.models.config import ModelConfig
@@ -88,13 +89,18 @@ def _run_attn_stack(params, x, cfg, positions, caches):
     each layer is a handful of GEMV ops.
     """
 
-    def body_nocache(x, lp):
+    def body_nocache(x, xs):
+        lp, li = xs
         x = shard(x, "act_batch", "act_seq", "act_embed")
-        x, _ = tf.attn_block_apply(lp, x, cfg, positions, None)
+        with sparse_grad_layer(li):  # no-op unless sparse-grad ctx active
+            x, _ = tf.attn_block_apply(lp, x, cfg, positions, None)
         return x, None
 
     if caches is None:
-        x, _ = jax.lax.scan(_remat(body_nocache, cfg), x, params["blocks"])
+        x, _ = jax.lax.scan(
+            _remat(body_nocache, cfg), x,
+            (params["blocks"], jnp.arange(cfg.num_layers)),
+        )
         return x, None
     new_caches = []
     for l in range(cfg.num_layers):
@@ -107,13 +113,18 @@ def _run_attn_stack(params, x, cfg, positions, caches):
 
 
 def _run_ssm_stack(params, x, cfg, caches):
-    def body_nocache(x, lp):
+    def body_nocache(x, xs):
+        lp, li = xs
         x = shard(x, "act_batch", "act_seq", "act_embed")
-        x, _ = tf.ssm_block_apply(lp, x, cfg, None)
+        with sparse_grad_layer(li):
+            x, _ = tf.ssm_block_apply(lp, x, cfg, None)
         return x, None
 
     if caches is None:
-        x, _ = jax.lax.scan(_remat(body_nocache, cfg), x, params["blocks"])
+        x, _ = jax.lax.scan(
+            _remat(body_nocache, cfg), x,
+            (params["blocks"], jnp.arange(cfg.num_layers)),
+        )
         return x, None
     new_caches = []
     for l in range(cfg.num_layers):
@@ -144,9 +155,11 @@ def _run_hybrid_stack(params, x, cfg, positions, ssm_caches, kv_caches):
     """
     every, full, tail = _hybrid_groups(cfg)
 
-    def ssm_body_nocache(x, lp):
+    def ssm_body_nocache(x, xs):
+        lp, li = xs
         x = shard(x, "act_batch", "act_seq", "act_embed")
-        x, _ = tf.ssm_block_apply(lp, x, cfg, None)
+        with sparse_grad_layer(li):
+            x, _ = tf.ssm_block_apply(lp, x, cfg, None)
         return x, None
 
     groups = [(g * every, every) for g in range(full)]
@@ -157,7 +170,10 @@ def _run_hybrid_stack(params, x, cfg, positions, ssm_caches, kv_caches):
     for gidx, (start, count) in enumerate(groups):
         lp = _slice_blocks(params["blocks"], start, count)
         if ssm_caches is None:
-            x, _ = jax.lax.scan(_remat(ssm_body_nocache, cfg), x, lp)
+            x, _ = jax.lax.scan(
+                _remat(ssm_body_nocache, cfg), x,
+                (lp, jnp.arange(start, start + count)),
+            )
         else:
             for l in range(start, start + count):
                 x = shard(x, "act_batch", "act_seq", "act_embed")

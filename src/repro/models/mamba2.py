@@ -9,6 +9,10 @@ this is what makes the 500k-token decode cell trivial for SSM archs.
 Sharding: d_inner (heads) is TP-sharded on "model"; the SSM state tensors
 inherit it.  in/out projections are the FLOP carriers and are the matrices
 TSENOR prunes (DESIGN.md §4); conv/Δ/A/D params are exempt (1-D / tiny).
+Both projections go through :func:`repro.models.layers.proj`, so pruned
+``NMCompressed`` leaves execute compressed (and pick up sparse gradients)
+exactly like the attention/MLP projections; dense leaves compile to the
+same ``x @ w.astype`` as before.
 """
 from __future__ import annotations
 
@@ -99,9 +103,11 @@ def mamba_block(
     cache: Optional[SSMCache] = None,
 ):
     """Returns (out (B,S,d), new_cache)."""
+    from repro.models.layers import proj
+
     b, s, d = x.shape
     din, nh, hp, ns, conv_dim = _dims(cfg)
-    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    zxbcdt = proj(x, p["in_proj"])
     z, xbc, dt_raw = _split_in_proj(zxbcdt, cfg)
     a = -jnp.exp(p["a_log"])  # (H,) negative
 
@@ -116,7 +122,7 @@ def mamba_block(
         y = y + xs.astype(jnp.float32) * p["d_skip"][None, None, :, None]
         y = y.reshape(b, s, din)
         y = _gated_norm(y, z, p["norm_w"]).astype(x.dtype)
-        out = y @ p["out_proj"].astype(x.dtype)
+        out = proj(y, p["out_proj"])
         new_cache = None
         if cache is not None:
             new_cache = SSMCache(conv=new_tail.astype(cache.conv.dtype),
@@ -142,7 +148,7 @@ def mamba_block(
     y = y + xf * p["d_skip"][None, :, None]
     y = y.reshape(b, 1, din)
     y = _gated_norm(y, z, p["norm_w"]).astype(x.dtype)
-    out = y @ p["out_proj"].astype(x.dtype)
+    out = proj(y, p["out_proj"])
     return out, SSMCache(conv=new_conv.astype(cache.conv.dtype),
                          state=state.astype(cache.state.dtype))
 

@@ -83,13 +83,16 @@ def moe_ffn(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
     dispatch = (combine > 0).astype(x.dtype)
     combine = combine.astype(x.dtype)
 
-    # Dispatch -> expert compute -> combine.
+    # Dispatch -> expert compute -> combine.  Expert weights go through the
+    # compressed-aware dispatch (dense leaves: the same einsum as always).
+    from repro.models.layers import expert_einsum
+
     xe = jnp.einsum("gtec,gtd->gecd", dispatch, xs)
     xe = shard(xe, "act_batch", "act_exp", None, None)
-    hg = jnp.einsum("gecd,edf->gecf", xe, p["gate"].astype(x.dtype))
-    hu = jnp.einsum("gecd,edf->gecf", xe, p["up"].astype(x.dtype))
+    hg = expert_einsum("gecd,edf->gecf", xe, p["gate"])
+    hu = expert_einsum("gecd,edf->gecf", xe, p["up"])
     hidden = jax.nn.silu(hg) * hu
     hidden = shard(hidden, "act_batch", "act_exp", None, None)
-    ye = jnp.einsum("gecf,efd->gecd", hidden, p["down"].astype(x.dtype))
+    ye = expert_einsum("gecf,efd->gecd", hidden, p["down"])
     y = jnp.einsum("gtec,gecd->gtd", combine, ye)
     return y.reshape(b, s, d)

@@ -11,6 +11,16 @@ projection's moments live on its ``(G, N, F)`` values — N/M of the dense
 optimizer memory — and its integer ``indices`` leaf gets a size-0
 placeholder and passes through every update untouched.
 
+Structured-sparse backward (``StepConfig(grad_sparsity="nm")``) feeds this
+optimizer MVU-sparsified gradients: unbiased elementwise, so the first
+moment ``mu`` converges to the same EMA as under dense gradients, but with
+extra variance ``a_j(S - a_j)`` per residual element (see
+``docs/solver_math.md``).  That variance inflates ``nu`` (it estimates
+``E[g^2] = E[g]^2 + Var``), which *shrinks* the effective per-element step —
+a mild, self-regularising damping rather than an instability.  No optimizer
+changes are needed; keep ``b2`` at its default so the inflated second
+moment averages over many independent MVU draws.
+
 Dynamic sparse training swaps the support under a live optimizer:
 :func:`remap_moments` relays ``mu``/``nu`` across a
 :func:`~repro.sparsity.params.recompress` — a slot that keeps its dense

@@ -22,7 +22,14 @@ import numpy as np
 from repro.perf import roofline
 from repro.perf.table import TableEntry, device_kind_of, shape_class
 
-__all__ = ["CandidateTiming", "AutotuneResult", "autotune_nm_spmm", "autotune_fused_solve"]
+__all__ = [
+    "CandidateTiming",
+    "AutotuneResult",
+    "autotune_nm_spmm",
+    "autotune_nm_sparsify",
+    "autotune_nm_spmm_cc",
+    "autotune_fused_solve",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -152,6 +159,128 @@ def autotune_nm_spmm(
         op="nm_spmm_tr" if transpose else "nm_spmm_fwd",
         m=m,
         shape=(rows, k, f, n),
+        shape_class=shape_class(rows, k, f),
+        device_kind=device_kind_of(device),
+        default_tiles=default_tiles,
+        best_tiles=best.tiles,
+        default_seconds=default_sec,
+        best_seconds=best.seconds,
+        candidates=tuple(timings),
+    )
+
+
+def autotune_nm_sparsify(
+    rows: int,
+    f: int,
+    n: int,
+    m: int,
+    *,
+    out_dtype="bfloat16",
+    device=None,
+    max_candidates: int = 5,
+    reps: int = 3,
+    seed: int = 0,
+) -> AutotuneResult:
+    """Tune ``nm_sparsify`` tiles at one cotangent shape ``(rows, F)``."""
+    import jax.numpy as jnp
+
+    from repro.kernels.nm_grad.kernel import nm_sparsify_pallas
+
+    rng = np.random.default_rng(seed)
+    dy = jnp.asarray(rng.normal(size=(rows, f)).astype(np.float32))
+
+    cands = roofline.nm_sparsify_candidates(
+        rows, f, n, m, device, max_candidates=max_candidates
+    )
+    profile = roofline.profile_for(device)
+    timings: list[CandidateTiming] = []
+    for c in cands:
+        sec = _median_seconds(
+            lambda c=c: nm_sparsify_pallas(
+                dy, n, m, seed, out_dtype=jnp.dtype(out_dtype),
+                bt=c.bt, ft=c.ft,
+            )[0],
+            reps=reps,
+        )
+        timings.append(CandidateTiming(c.tiles, sec, c.model_seconds(profile)))
+
+    dbt = max(m, (roofline.DEFAULT_TILES[0] // m) * m)
+    dft = min(256, -(-f // 128) * 128)
+    default_tiles = (dbt, m, dft)
+    default_sec = next(
+        (t.seconds for t in timings if t.tiles == default_tiles),
+        min(t.seconds for t in timings),
+    )
+    best = min(timings, key=lambda t: t.seconds)
+    return AutotuneResult(
+        op="nm_sparsify",
+        m=m,
+        shape=(rows, f, n),
+        shape_class=shape_class(rows, f, f),
+        device_kind=device_kind_of(device),
+        default_tiles=default_tiles,
+        best_tiles=best.tiles,
+        default_seconds=default_sec,
+        best_seconds=best.seconds,
+        candidates=tuple(timings),
+    )
+
+
+def autotune_nm_spmm_cc(
+    rows: int,
+    k: int,
+    f: int,
+    n_g: int,
+    m_g: int,
+    n_w: int,
+    m_w: int,
+    *,
+    g_dtype="bfloat16",
+    device=None,
+    max_candidates: int = 6,
+    reps: int = 3,
+    seed: int = 0,
+) -> AutotuneResult:
+    """Tune ``nm_spmm_cc`` tiles at one dX shape (``(rows, K)`` over ``F``)."""
+    import jax.numpy as jnp
+
+    from repro.kernels.nm_grad.kernel import nm_spmm_cc_pallas
+
+    if rows % m_g or k % m_w:
+        raise ValueError(f"rows%m_g and K%m_w must be 0: {(rows, m_g, k, m_w)}")
+    gvals, gidx = _synth_compressed(rows, f, n_g, m_g, seed)
+    gvals = gvals.astype(jnp.dtype(g_dtype))
+    wvals, widx = _synth_compressed(k, f, n_w, m_w, seed + 1)
+
+    cands = roofline.nm_spmm_cc_candidates(
+        rows, k, f, n_g, m_g, n_w, m_w, device, max_candidates=max_candidates
+    )
+    profile = roofline.profile_for(device)
+    timings: list[CandidateTiming] = []
+    for c in cands:
+        sec = _median_seconds(
+            lambda c=c: nm_spmm_cc_pallas(
+                gvals, gidx, wvals, widx, m_g, m_w, bt=c.bt, kt=c.kt, ft=c.ft
+            ),
+            reps=reps,
+        )
+        timings.append(CandidateTiming(c.tiles, sec, c.model_seconds(profile)))
+
+    dbt, dkt, dft = roofline.CC_DEFAULT_TILES
+    row_cap = -(-rows // m_g) * m_g
+    dbt = max(m_g, (min(dbt, row_cap) // m_g) * m_g)
+    dkt = max(m_w, (dkt // m_w) * m_w)
+    default_tiles = (dbt, dkt, dft)
+    default_sec = next(
+        (t.seconds for t in timings if t.tiles == default_tiles),
+        min(t.seconds for t in timings),
+    )
+    best = min(timings, key=lambda t: t.seconds)
+    m_key = max(m_g, m_w)
+    return AutotuneResult(
+        op="nm_spmm_cc",
+        m=m_key,
+        shape=(rows, k, f, n_g, n_w),
         shape_class=shape_class(rows, k, f),
         device_kind=device_kind_of(device),
         default_tiles=default_tiles,

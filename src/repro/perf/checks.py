@@ -335,8 +335,11 @@ def evaluate_all(
 # The committed check suite — one check per BENCH document family.
 # ---------------------------------------------------------------------------
 
+# meta.accounting fences the bytes-accounting schema: "train-v2" added the
+# activation-gradient traffic terms, and a v1 baseline extracts differently —
+# documents across the bump are not trend-comparable.
 _TRAIN_KEYS = ("meta.model", "meta.pattern", "meta.seq_len", "meta.batch",
-               "meta.device")
+               "meta.device", "meta.accounting")
 
 CHECKS: tuple[PerfCheck, ...] = (
     PerfCheck(
@@ -345,6 +348,7 @@ CHECKS: tuple[PerfCheck, ...] = (
         extract=(
             Extractor("bytes_ratio_bench", "headline.bytes_ratio_bench"),
             Extractor("bytes_ratio_analytic", "headline.bytes_ratio_analytic"),
+            Extractor("bytes_ratio_total", "headline.bytes_ratio_total"),
             Extractor("loss_bit_identity", "headline.loss_bit_identity"),
             Extractor("loss_abs_delta", "headline.loss_abs_delta"),
             Extractor("tok_s_dense", "headline.tokens_per_sec.dense"),
@@ -355,6 +359,9 @@ CHECKS: tuple[PerfCheck, ...] = (
             # The measured traffic must track the analytic compressed_bytes
             # model — if it drifts, the bench is measuring the wrong thing.
             "approx(bytes_ratio_bench, bytes_ratio_analytic, rel=0.1)",
+            # Actgrad traffic is mode-invariant: the weight+actgrad total
+            # ratio sits strictly between the weights-only ratio and 1.
+            "bytes_ratio_bench < bytes_ratio_total < 1.0",
             # Compressed execution must stay numerically the dense path.
             "loss_bit_identity or loss_abs_delta < 1e-4",
             "footprint_ratio < 1.0",
@@ -437,6 +444,43 @@ CHECKS: tuple[PerfCheck, ...] = (
         ),
         required=False,  # produced by the CI service job, not committed
         compare_keys=("meta.benchmark",),
+    ),
+    PerfCheck(
+        name="backward_sparse",
+        bench="BENCH_backward.json",
+        extract=(
+            Extractor("bytes_ratio_model", "headline.bytes_ratio_model"),
+            Extractor("model_measured_err", "headline.model_measured_err"),
+            Extractor("forward_bit_identity", "headline.forward_bit_identity"),
+            Extractor("grad_rel_err_max", "headline.grad_rel_err_max"),
+            Extractor("tok_s_sparse", "headline.tokens_per_sec.sparse-grad"),
+            Extractor("tok_s_dense_grad", "headline.tokens_per_sec.dense-grad"),
+            Extractor("sparse_vs_pr9", "headline.sparse_vs_pr9"),
+            Extractor("meta_model", "meta.model"),
+        ),
+        sanity=(
+            # The traffic re-accounted from the kernels' actual launch
+            # configuration must track the roofline nm_grad_cost model.
+            "model_measured_err <= 0.05",
+            # Gradient sparsification must not touch the forward pass.
+            "forward_bit_identity",
+            # MVU noise at its analytic scale (~2x per sparsification for
+            # near-uniform block magnitudes at 8:16, cascading a few-fold
+            # across the layer stack), not exploded.
+            "grad_rel_err_max < 10.0",
+            # The full bench-30m document must clear the 8:16 bytes gate and
+            # the committed PR-9 compressed-throughput floor; the CI smoke
+            # document (tiny, padding-bound shapes) skips both.
+            "meta_model != 'bench-30m' or bytes_ratio_model <= 0.8",
+            "meta_model != 'bench-30m' or sparse_vs_pr9 >= 1.0",
+        ),
+        trends=(
+            Trend("tok_s_sparse", direction="higher", tolerance=0.15),
+            Trend("tok_s_dense_grad", direction="higher", tolerance=0.15,
+                  mode="warn"),
+            Trend("bytes_ratio_model", direction="lower", tolerance=0.05),
+        ),
+        compare_keys=_TRAIN_KEYS + ("meta.grad_pattern", "meta.grad_dtype"),
     ),
     PerfCheck(
         name="kernel_autotune",

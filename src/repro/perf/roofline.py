@@ -21,6 +21,7 @@ device's VMEM); the fused-solve candidate ladder is seeded directly from
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 from repro.kernels.vmem import (
     _BUDGET_FRACTION,
@@ -35,13 +36,24 @@ __all__ = [
     "profile_for",
     "nm_spmm_cost",
     "nm_spmm_candidates",
+    "nm_sparsify_cost",
+    "nm_sparsify_candidates",
+    "nm_spmm_cc_cost",
+    "nm_spmm_cc_candidates",
+    "nm_grad_cost",
     "fused_solve_candidates",
     "DEFAULT_TILES",
+    "CC_DEFAULT_TILES",
 ]
 
 # The historic fixed tiles — always a member of every candidate set, so the
 # measured winner can never be slower than the default on the same run.
 DEFAULT_TILES = (256, 256, 256)
+
+# nm_spmm_cc's fallback: both operands compressed -> the live tile set is a
+# fraction of nm_spmm's, so the default row tile is 4x taller (divides the
+# W-operand revisit count; mirrored in kernels.nm_grad._resolve_cc_tiles).
+CC_DEFAULT_TILES = (1024, 256, 256)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -230,6 +242,276 @@ def nm_spmm_candidates(
     if default.tiles not in [c.tiles for c in out]:
         out.append(default)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Structured-sparse backward (repro.kernels.nm_grad).
+# ---------------------------------------------------------------------------
+
+
+def nm_sparsify_cost(
+    rows: int,
+    f: int,
+    n: int,
+    m: int,
+    bt: int,
+    ft: int,
+    *,
+    val_bytes: int = 2,
+    idx_bytes: int = 1,
+) -> TileCost:
+    """Cost of ``nm_sparsify`` at ``dY`` shape ``(rows, F)``.
+
+    One pass: each ``(bt, ft)`` tile is read once and its ``(bt/m, n, ft)``
+    compressed slice written once — no revisits.  ``val_bytes`` defaults to
+    the bf16 stochastic-rounding output (the ratio-carrying configuration).
+    ``TileCost.kt`` carries ``m`` (there is no reduction tile).
+    """
+    if bt % m:
+        raise ValueError(f"bt must be a multiple of m, got bt={bt} m={m}")
+    pr = _round_up(rows, bt)
+    pf = _round_up(f, ft)
+    grid = (pr // bt) * (pf // ft)
+    read = pr * pf * 4
+    write = (pr // m) * n * pf * (val_bytes + idx_bytes)
+    # Rank is m^2 pairwise compares per (block, col) -> m per element; the
+    # cumsum/select/pack passes add a handful more.
+    vpu = pr * pf * (m + 8)
+    vmem = (
+        bt * ft * 4                    # dy tile
+        + bt * ft                      # pairwise-rank bool stack (m x bt/m rows)
+        + bt * ft * 4                  # survivor values
+        + (bt // m) * n * ft * (val_bytes + idx_bytes)
+    )
+    return TileCost(
+        bt=bt, kt=m, ft=ft, grid_steps=grid,
+        hbm_bytes=read + write, mxu_flops=0, vpu_ops=vpu, vmem_bytes=vmem,
+    )
+
+
+def nm_sparsify_candidates(
+    rows: int,
+    f: int,
+    n: int,
+    m: int,
+    device=None,
+    *,
+    max_candidates: int = 6,
+) -> list[TileCost]:
+    """Legal ``(bt, ft)`` candidates for ``nm_sparsify``, best-first.
+
+    ``bt`` must hold whole M-blocks; the default ``(256, 256)`` is always in
+    the set (clamped to legality) so a measured argmin can never lose to it.
+    """
+    budget = int(device_vmem_bytes(device) * _BUDGET_FRACTION)
+    row_cap = _round_up(max(rows, 1), max(m, VPU_ALIGN))
+    bts = sorted({
+        bt for bt in (128, 256, 512, 1024)
+        if bt % m == 0 and bt <= max(row_cap, 256)
+    } | {max(m, min(256 // m * m, row_cap))})
+    fts = sorted({ft for ft in (128, 256, 512) if ft <= _round_up(f, 128)})
+    seen: dict[tuple[int, int, int], TileCost] = {}
+    for bt in bts:
+        for ft in fts:
+            c = nm_sparsify_cost(rows, f, n, m, bt, ft)
+            if c.vmem_bytes <= budget:
+                seen[c.tiles] = c
+    dbt = max(m, (DEFAULT_TILES[0] // m) * m)
+    default = nm_sparsify_cost(rows, f, n, m, dbt, min(256, _round_up(f, 128)))
+    seen.setdefault(default.tiles, default)
+    profile = profile_for(device)
+    ranked = sorted(seen.values(), key=lambda c: c.model_seconds(profile))
+    out = ranked[:max_candidates]
+    if default.tiles not in [c.tiles for c in out]:
+        out.append(default)
+    return out
+
+
+def nm_spmm_cc_cost(
+    b: int,
+    k: int,
+    f: int,
+    n_g: int,
+    m_g: int,
+    n_w: int,
+    m_w: int,
+    bt: int,
+    kt: int,
+    ft: int,
+    *,
+    g_val_bytes: int = 2,
+    w_val_bytes: int = 4,
+    idx_bytes: int = 1,
+) -> TileCost:
+    """Cost of ``nm_spmm_cc`` (dX = dY_sparse · Wᵀ, both operands compressed)
+    at output shape ``(B, K)`` reducing over ``F``.
+
+    Mirrors the kernel's grid ``(B/bt, K/kt, F/ft)``: the compressed dY tile
+    is re-read once per K tile, the compressed W tile once per B tile — a
+    taller ``bt`` divides W traffic, which is why ``CC_DEFAULT_TILES`` rows
+    are 4x nm_spmm's.
+    """
+    if bt % m_g or kt % m_w:
+        raise ValueError(f"bt%m_g and kt%m_w must be 0: {(bt, m_g, kt, m_w)}")
+    pb = _round_up(b, bt)
+    pk = _round_up(k, kt)
+    pf = _round_up(f, ft)
+    grid = (pb // bt) * (pk // kt) * (pf // ft)
+    g_bytes = (pb // m_g) * n_g * pf * (g_val_bytes + idx_bytes)
+    w_bytes = (pk // m_w) * n_w * pf * (w_val_bytes + idx_bytes)
+    g_read = (pk // kt) * g_bytes
+    w_read = (pb // bt) * w_bytes
+    out_write = pb * pk * 4
+    mxu = 2 * pb * pk * pf
+    vpu = grid * ft * (bt * n_g + kt * n_w)  # two one-hot decompress passes
+    vmem = (
+        (bt // m_g) * n_g * ft * (g_val_bytes + idx_bytes)
+        + bt * ft * 4                  # decompressed dY tile
+        + (kt // m_w) * n_w * ft * (w_val_bytes + idx_bytes)
+        + kt * ft * 4                  # decompressed W tile
+        + bt * kt * 4                  # output accumulator
+    )
+    return TileCost(
+        bt=bt, kt=kt, ft=ft, grid_steps=grid,
+        hbm_bytes=g_read + w_read + out_write,
+        mxu_flops=mxu, vpu_ops=vpu, vmem_bytes=vmem,
+    )
+
+
+def nm_spmm_cc_candidates(
+    b: int,
+    k: int,
+    f: int,
+    n_g: int,
+    m_g: int,
+    n_w: int,
+    m_w: int,
+    device=None,
+    *,
+    max_candidates: int = 8,
+) -> list[TileCost]:
+    """Legal tile candidates for ``nm_spmm_cc``, best-first by the model.
+
+    ``bt`` ranges up to 1024 (compressed operands keep even the tallest tile
+    set within VMEM); ``CC_DEFAULT_TILES`` is always included, clamped."""
+    budget = int(device_vmem_bytes(device) * _BUDGET_FRACTION)
+    row_cap = _round_up(max(b, 1), max(m_g, VPU_ALIGN))
+    bts = sorted({
+        bt for bt in (128, 256, 512, 1024)
+        if bt % m_g == 0 and bt <= max(row_cap, 256)
+    })
+    kts = sorted({
+        kt for kt in (128, 256, 512)
+        if kt % m_w == 0 and kt >= m_w
+    } | {max(m_w, _round_up(min(k, 256), m_w))})
+    fts = sorted({ft for ft in (128, 256, 512) if ft <= _round_up(f, 128)})
+    seen: dict[tuple[int, int, int], TileCost] = {}
+    for bt in bts:
+        for kt in kts:
+            for ft in fts:
+                c = nm_spmm_cc_cost(b, k, f, n_g, m_g, n_w, m_w, bt, kt, ft)
+                if c.vmem_bytes <= budget:
+                    seen[c.tiles] = c
+    dbt, dkt, dft = CC_DEFAULT_TILES
+    dbt = max(m_g, (min(dbt, row_cap) // m_g) * m_g)
+    dkt = max(m_w, (dkt // m_w) * m_w)
+    default = nm_spmm_cc_cost(b, k, f, n_g, m_g, n_w, m_w, dbt, dkt, dft)
+    seen.setdefault(default.tiles, default)
+    profile = profile_for(device)
+    ranked = sorted(seen.values(), key=lambda c: c.model_seconds(profile))
+    out = ranked[:max_candidates]
+    if default.tiles not in [c.tiles for c in out]:
+        out.append(default)
+    return out
+
+
+def nm_grad_cost(
+    rows: int,
+    k: int,
+    f: int,
+    n_g: int,
+    m_g: int,
+    n_w: int,
+    m_w: int,
+    *,
+    g_val_bytes: int = 2,
+    w_val_bytes: int = 4,
+    sparsify_tiles: Optional[tuple[int, int]] = None,
+    cc_tiles: Optional[tuple[int, int, int]] = None,
+    spmm_tiles: Optional[tuple[int, int, int]] = None,
+    tr_tiles: Optional[tuple[int, int, int]] = None,
+) -> dict:
+    """Backward HBM bytes for ONE compressed projection ``(K, F)`` at ``rows``
+    tokens: the structured-sparse path vs the dense-cotangent path.
+
+    Sparse path (``grad_sparsity`` on): ``dY`` is read ONCE (sparsify), and
+    both backward GEMMs stream its ``(values, int8)`` buffer —
+    ``g_val_bytes + 1`` per kept element instead of 4 per dense element, per
+    *revisit*.  Dense path (the PR-9 baseline): dX re-reads dense ``dY`` once
+    per K tile (``nm_spmm`` transpose) and dW once per output-row tile.
+    Weight traffic, X traffic, and output writes are common structure priced
+    identically on both sides.  Returns component maps plus
+    ``ratio = sparse_bytes / dense_bytes`` — the BENCH_backward gate.
+    """
+    bt, kt, ft = spmm_tiles if spmm_tiles else DEFAULT_TILES
+    kt = max(m_w, (kt // m_w) * m_w)
+    cbt, ckt, cft = cc_tiles if cc_tiles else CC_DEFAULT_TILES
+    cbt = max(m_g, (min(cbt, _round_up(rows, m_g)) // m_g) * m_g)
+    ckt = max(m_w, (ckt // m_w) * m_w)
+    sbt, sft = sparsify_tiles if sparsify_tiles else (
+        max(m_g, (256 // m_g) * m_g), 256
+    )
+
+    gb = g_val_bytes + 1  # compressed-dY bytes per kept element (+int8 idx)
+    wb = w_val_bytes + 1
+
+    # -- sparse path --------------------------------------------------------
+    sp = nm_sparsify_cost(rows, f, n_g, m_g, sbt, sft, val_bytes=g_val_bytes)
+    cc = nm_spmm_cc_cost(rows, k, f, n_g, m_g, n_w, m_w, cbt, ckt, cft,
+                         g_val_bytes=g_val_bytes, w_val_bytes=w_val_bytes)
+    # dW = Xᵀ·compressed-dY through nm_spmm: streamed operand is Xᵀ (K rows),
+    # reduction over the padded token rows, output (K, F).
+    rp = _round_up(rows, m_g)
+    pkw = _round_up(k, bt)          # streamed-row padding
+    prw = _round_up(rp, kt)         # reduction padding
+    pfw = _round_up(f, ft)
+    x_dw = (pfw // ft) * pkw * prw * 4
+    g_dw = (pkw // bt) * (prw // m_g) * n_g * pfw * gb
+    out_dw = pkw * pfw * 4
+    gather = k * f * 4 + (k // m_w) * n_w * f * 4  # support gather, both paths
+    sparse = {
+        "sparsify": sp.hbm_bytes,
+        "dx": cc.hbm_bytes,
+        "dw": x_dw + g_dw + out_dw,
+        "gather": gather,
+    }
+
+    # -- dense-cotangent path (nm_linear's backward) ------------------------
+    tbt, tkt, tft = tr_tiles if tr_tiles else (bt, kt, ft)
+    tkt = max(m_w, (tkt // m_w) * m_w)
+    pb = _round_up(rows, tbt)
+    pk = _round_up(k, tkt)
+    pf = _round_up(f, tft)
+    dy_dx = (pk // tkt) * pb * pf * 4         # dY re-read per K tile
+    w_dx = (pb // tbt) * (pk // m_w) * n_w * pf * wb
+    out_dx = pb * pk * 4
+    # dW = Xᵀ·dY as a dense GEMM at the same tiling.
+    dy_dw = (pkw // bt) * prw * pfw * 4       # dY re-read per output-row tile
+    dense = {
+        "dx": dy_dx + w_dx + out_dx,
+        "dw": x_dw + dy_dw + out_dw,
+        "gather": gather,
+    }
+
+    sparse_bytes = sum(sparse.values())
+    dense_bytes = sum(dense.values())
+    return {
+        "sparse": sparse,
+        "dense": dense,
+        "sparse_bytes": sparse_bytes,
+        "dense_bytes": dense_bytes,
+        "ratio": sparse_bytes / max(dense_bytes, 1),
+    }
 
 
 def fused_solve_candidates(m: int, device=None, *, live_buffers: int = 6) -> list[int]:

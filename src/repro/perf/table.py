@@ -9,7 +9,9 @@ clamped defaults — an empty or missing table is always safe.
 
 Entries are keyed by ``(op, device_kind, m, shape_class)``:
 
-* ``op`` — ``"nm_spmm_fwd"``, ``"nm_spmm_tr"`` or ``"fused_solve"``;
+* ``op`` — ``"nm_spmm_fwd"``, ``"nm_spmm_tr"``, ``"nm_sparsify"``,
+  ``"nm_spmm_cc"`` (gradient sparsification, see ``repro.kernels.nm_grad``)
+  or ``"fused_solve"``;
 * ``device_kind`` — ``jax.Device.device_kind`` of the measuring device
   (tiles tuned on this container's ``cpu`` interpret mode never leak onto a
   TPU and vice versa);
@@ -27,6 +29,7 @@ misapplying tiles.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import json
 import os
 import pathlib
@@ -201,9 +204,13 @@ def set_tuning_table(table) -> None:
     """Install ``table`` (a :class:`TuningTable`, a path, or ``None``).
 
     ``None`` re-arms the lazy default resolution (env var / packaged file).
+    Installing any table bumps the memo generation, so every cached tile
+    resolution (:func:`nm_spmm_tiles` / :func:`nm_grad_tiles`) re-resolves
+    against the new entries.
     """
-    global _active, _loaded
+    global _active, _loaded, _generation
     with _lock:
+        _generation += 1
         if table is None:
             _active, _loaded = None, False
         elif isinstance(table, TuningTable):
@@ -213,6 +220,39 @@ def set_tuning_table(table) -> None:
 
 
 # -- trace-time helpers consulted by the kernels ----------------------------
+#
+# Kernels resolve tiles on EVERY trace (shape_class string + device query +
+# table dict probe).  Traces are frequent — each distinct jit shape, each
+# bench rep — so the resolution is memoized per (op, device, m, shape class)
+# with the table generation in the key: ``set_tuning_table`` invalidates by
+# bumping ``_generation``, never by flushing (regression-tested in
+# tests/test_perf.py: one ``TuningTable.lookup`` per distinct shape class).
+
+_generation = 0
+
+
+@functools.lru_cache(maxsize=8192)
+def _class_of(rows: int, k: int, f: int) -> str:
+    return shape_class(rows, k, f)
+
+
+@functools.lru_cache(maxsize=8)
+def _default_device_kind() -> str:
+    return device_kind_of(None)
+
+
+@functools.lru_cache(maxsize=4096)
+def _tiles_cached(
+    op: str, device_kind: str, m: int, shape_cls: str, generation: int
+) -> Optional[tuple[int, ...]]:
+    del generation  # cache-key only: stale generations never hit again
+    entry = get_tuning_table().lookup(op, device_kind, m, shape_cls)
+    return None if entry is None else entry.tiles
+
+
+def _resolve_cached(op, rows, k, f, m, device):
+    kind = _default_device_kind() if device is None else device_kind_of(device)
+    return _tiles_cached(op, kind, m, _class_of(rows, k, f), _generation)
 
 
 def nm_spmm_tiles(
@@ -220,12 +260,21 @@ def nm_spmm_tiles(
 ) -> Optional[tuple[int, int, int]]:
     """Measured ``(bt, kt, ft)`` for an nm_spmm shape, or ``None`` on miss."""
     op = "nm_spmm_tr" if transpose else "nm_spmm_fwd"
-    entry = get_tuning_table().lookup(
-        op, device_kind_of(device), m, shape_class(rows, k, f)
-    )
-    if entry is None or len(entry.tiles) != 3:
+    tiles = _resolve_cached(op, rows, k, f, m, device)
+    if tiles is None or len(tiles) != 3:
         return None
-    return entry.tiles  # type: ignore[return-value]
+    return tiles  # type: ignore[return-value]
+
+
+def nm_grad_tiles(
+    op: str, rows: int, k: int, f: int, m: int, device=None
+) -> Optional[tuple[int, int, int]]:
+    """Measured ``(bt, kt, ft)`` for a gradient-sparsification op
+    (``"nm_sparsify"`` — kt unused — or ``"nm_spmm_cc"``), None on miss."""
+    tiles = _resolve_cached(op, rows, k, f, m, device)
+    if tiles is None or len(tiles) != 3:
+        return None
+    return tiles  # type: ignore[return-value]
 
 
 def fused_solve_block_b(m: int, device=None) -> Optional[int]:

@@ -269,20 +269,23 @@ def from_blocks_2d(blocks: np.ndarray, shape: tuple[int, int]) -> np.ndarray:
 
 
 def tensor_to_blocks(w: np.ndarray, m: int) -> tuple[np.ndarray, dict]:
-    """|w| -> one (B, M, M) float32 block stream for a 2-D or stacked 3-D
-    tensor, plus the geometry needed to reassemble the mask."""
+    """|w| -> one (B, M, M) float32 block stream for a 2-D or stacked
+    tensor (any leading dims: (L, R, C), (L, E, R, C), ...), plus the
+    geometry needed to reassemble the mask."""
     w_abs = np.abs(np.asarray(w)).astype(np.float32)
     if w_abs.ndim == 2:
         padded, orig = pad_blocks_2d(w_abs, m)
         return to_blocks_2d(padded, m), {
             "shape": orig, "padded": padded.shape, "layers": None,
         }
-    assert w_abs.ndim == 3, w_abs.shape
-    slices = [pad_blocks_2d(w_abs[i], m) for i in range(w_abs.shape[0])]
+    assert w_abs.ndim >= 3, w_abs.shape
+    lead = w_abs.shape[:-2]
+    flat = w_abs.reshape(-1, *w_abs.shape[-2:])
+    slices = [pad_blocks_2d(flat[i], m) for i in range(flat.shape[0])]
     blocks = np.concatenate([to_blocks_2d(p, m) for p, _ in slices], axis=0)
     return blocks, {
         "shape": slices[0][1], "padded": slices[0][0].shape,
-        "layers": w_abs.shape[0],
+        "layers": flat.shape[0], "lead": lead,
     }
 
 
@@ -292,10 +295,14 @@ def blocks_to_mask(mask_blocks: np.ndarray, geom: dict) -> np.ndarray:
     if geom["layers"] is None:
         return from_blocks_2d(mask_blocks, geom["padded"])[:r, :c]
     per = mask_blocks.shape[0] // geom["layers"]
-    return np.stack([
+    out = np.stack([
         from_blocks_2d(mask_blocks[i * per : (i + 1) * per], geom["padded"])[:r, :c]
         for i in range(geom["layers"])
     ])
+    lead = geom.get("lead")
+    if lead is not None and tuple(lead) != out.shape[:1]:
+        out = out.reshape(*lead, r, c)
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -43,12 +43,15 @@ def mask_sparsity(masks) -> float:
 
 
 def default_prunable(path: tuple, p: jnp.ndarray, m: int) -> bool:
-    """Prune 2-D (or stacked 3-D) projection weights divisible by M."""
-    if p.ndim == 2:
-        return p.shape[0] % m == 0 and p.shape[1] % m == 0
-    if p.ndim == 3:  # scan-stacked layers: (L, in, out)
-        return p.shape[1] % m == 0 and p.shape[2] % m == 0
-    return False
+    """Prune projection weights whose matmul dims divide M.
+
+    Any leading stack dims are allowed: plain 2-D ``(in, out)``, scan-stacked
+    3-D ``(L, in, out)``, and stacked MoE expert weights ``(L, E, in, out)``
+    all qualify — only the trailing matmul dims carry the N:M constraint.
+    """
+    if p.ndim < 2:
+        return False
+    return p.shape[-2] % m == 0 and p.shape[-1] % m == 0
 
 
 def sparsify_pytree(
@@ -83,13 +86,13 @@ def sparsify_pytree(
         for path, p in flat[0]:
             if not prunable(path, p, spec.m):
                 masks.append(None)
-            elif p.ndim == 3:
-                masks.append(
-                    jnp.stack([
-                        nm_mask(p[i], spec.n, spec.m, axis=0)
-                        for i in range(p.shape[0])
-                    ])
-                )
+            elif p.ndim >= 3:  # stacked: (L, R, C), (L, E, R, C), ...
+                flat_p = p.reshape(-1, *p.shape[-2:])
+                stacked = jnp.stack([
+                    nm_mask(flat_p[i], spec.n, spec.m, axis=0)
+                    for i in range(flat_p.shape[0])
+                ])
+                masks.append(stacked.reshape(p.shape))
             else:
                 masks.append(nm_mask(p, spec.n, spec.m, axis=0))
         return jax.tree_util.tree_unflatten(flat[1], masks)

@@ -82,10 +82,12 @@ class NMCompressed:
 
     def decompress(self) -> jnp.ndarray:
         """Dense ``(..., K, F)`` weights (zeros off-support), bit-exact."""
-        if self.values.ndim == 4:  # scan-stacked (L, G, N, F)
-            return jax.vmap(lambda v, i: decompress_nm(v, i, self.m))(
-                self.values, self.indices
-            )
+        if self.values.ndim > 3:  # stacked: (L, G, N, F), (L, E, G, N, F), ...
+            lead = self.values.shape[:-3]
+            v = self.values.reshape(-1, *self.values.shape[-3:])
+            i = self.indices.reshape(-1, *self.indices.shape[-3:])
+            out = jax.vmap(lambda vi, ii: decompress_nm(vi, ii, self.m))(v, i)
+            return out.reshape(*lead, *out.shape[-2:])
         return decompress_nm(self.values, self.indices, self.m)
 
     def nbytes(self) -> int:
@@ -115,7 +117,8 @@ def is_sparse_params(tree) -> bool:
 
 
 def compress_leaf(w: jnp.ndarray, mask: jnp.ndarray, pattern) -> NMCompressed:
-    """Compress one 2-D ``(K, F)`` or scan-stacked 3-D ``(L, K, F)`` weight."""
+    """Compress one 2-D ``(K, F)`` weight or a stacked one with any leading
+    dims — scan-stacked ``(L, K, F)``, stacked MoE experts ``(L, E, K, F)``."""
     spec = PatternSpec.coerce(pattern)
     k = w.shape[-2]
     if k % spec.m != 0:
@@ -125,20 +128,28 @@ def compress_leaf(w: jnp.ndarray, mask: jnp.ndarray, pattern) -> NMCompressed:
             "indices) layout has no partial groups (the mask solve pads, "
             "compressed storage cannot)"
         )
-    if w.ndim == 3:
+    if w.ndim > 2:
+        lead = w.shape[:-2]
+        wf = w.reshape(-1, *w.shape[-2:])
+        mf = mask.astype(bool).reshape(-1, *mask.shape[-2:])
         vals, idx = jax.vmap(
             lambda wi, mi: compress_nm(wi, mi, spec.n, spec.m)
-        )(w, mask.astype(bool))
+        )(wf, mf)
+        vals = vals.reshape(*lead, *vals.shape[-3:])
+        idx = idx.reshape(*lead, *idx.shape[-3:])
     else:
         vals, idx = compress_nm(w, mask.astype(bool), spec.n, spec.m)
     return NMCompressed(vals, idx, spec.m)
 
 
 # Projection leaves the model layers actually dispatch through
-# :func:`repro.models.layers.proj` — only these may be compressed.  The
-# embedding table (consumed by ``jnp.take``) and the unembedding/logit
-# matmul stay dense even when a mask exists for them.
-PROJ_KEYS = frozenset({"wq", "wk", "wv", "wo", "gate", "up", "down"})
+# :func:`repro.models.layers.proj` (incl. the MoE expert einsums and the
+# Mamba in/out projections) — only these may be compressed.  The embedding
+# table (consumed by ``jnp.take``) and the unembedding/logit matmul stay
+# dense even when a mask exists for them.
+PROJ_KEYS = frozenset(
+    {"wq", "wk", "wv", "wo", "gate", "up", "down", "in_proj", "out_proj"}
+)
 
 
 def default_compressible(path, p) -> bool:
@@ -226,10 +237,14 @@ def remap_slots(slots: jnp.ndarray, old_idx: jnp.ndarray,
     support inherits that position's value; a position that just *entered*
     the support gets 0; dead slots (``new_idx == -1``) stay 0.
     """
-    if slots.ndim == 4:
-        return jax.vmap(lambda s, o, ni: remap_slots(s, o, ni, m))(
-            slots, old_idx, new_idx
+    if slots.ndim > 3:  # stacked: flatten leading dims, recurse per matrix
+        lead = slots.shape[:-3]
+        out = jax.vmap(lambda s, o, ni: remap_slots(s, o, ni, m))(
+            slots.reshape(-1, *slots.shape[-3:]),
+            old_idx.reshape(-1, *old_idx.shape[-3:]),
+            new_idx.reshape(-1, *new_idx.shape[-3:]),
         )
+        return out.reshape(*lead, *out.shape[-3:])
     dense = decompress_nm(slots, old_idx, m)           # (G*m, F), zeros off-support
     g, _n, f = slots.shape
     dense = dense.reshape(g, m, f)

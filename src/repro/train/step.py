@@ -113,6 +113,13 @@ class StepConfig:
     # which may swap the SparseParams support (see repro/dst/controller.py).
     # Compressed mode only: the other modes' masks are baked into the trace.
     refresh: Optional[Any] = None
+    # Structured-sparse backward: "off" (default — bit-identical to the
+    # historical compressed path), or an N:M gradient pattern (PatternSpec /
+    # string like "8:16") independent of the weight pattern.  Compressed
+    # leaves then sparsify their incoming cotangent dY in-flight (MVU
+    # stochastic rounding, seed = step * accum + microbatch) so BOTH backward
+    # GEMMs stream compressed operands.  Compressed mode only.
+    grad_sparsity: Any = "off"
 
 
 def _split_microbatches(batch: dict, accum: int) -> dict:
@@ -152,6 +159,17 @@ def build_train_step(
             "mask_mode='compressed': the refresh swaps NMCompressed support; "
             f"got mask_mode={step_cfg.mask_mode!r}"
         )
+    sg_spec = None
+    if step_cfg.grad_sparsity != "off":
+        if step_cfg.mask_mode != "compressed":
+            raise ValueError(
+                "StepConfig.grad_sparsity sparsifies the cotangents of "
+                "compressed projections; it requires mask_mode='compressed' "
+                f"(got mask_mode={step_cfg.mask_mode!r})"
+            )
+        from repro.patterns import PatternSpec
+
+        sg_spec = PatternSpec.coerce(step_cfg.grad_sparsity)
 
     def apply_masks(params, mask_tree):
         if mask_tree is None:
@@ -163,30 +181,42 @@ def build_train_step(
             is_leaf=lambda x: x is None,
         )
 
-    def loss_of(params, microbatch, mask_tree):
+    def loss_of(params, microbatch, mask_tree, seed=None):
         if step_cfg.mask_mode in ("post", "compressed"):
             mask_tree = None  # support already enforced by the params
-        return lm.loss_fn(apply_masks(params, mask_tree), cfg, microbatch)
+        if sg_spec is None:
+            return lm.loss_fn(apply_masks(params, mask_tree), cfg, microbatch)
+        from repro.kernels.nm_grad.ops import sparse_grad_context
 
-    def grads_of(params, batch, mask_tree):
+        with sparse_grad_context(sg_spec, seed):
+            return lm.loss_fn(apply_masks(params, mask_tree), cfg, microbatch)
+
+    def grads_of(params, batch, mask_tree, step):
         # allow_int: compressed params carry int8 index leaves; their
         # float0 cotangents are stripped to size-0 placeholders right away.
         vag = jax.value_and_grad(loss_of, allow_int=True)
+        # One seed per microbatch: deterministic for a fixed step, distinct
+        # across microbatches and steps (only consulted when sg_spec is set).
+        base = step.astype(jnp.int32) * step_cfg.accum
         if step_cfg.accum == 1:
-            loss, g = vag(params, batch, mask_tree)
+            loss, g = vag(params, batch, mask_tree, base)
             return loss, _strip_float0(g)
         micro = _split_microbatches(batch, step_cfg.accum)
+        seeds = base + jnp.arange(step_cfg.accum, dtype=jnp.int32)
 
-        def body(carry, mb):
+        def body(carry, xs):
+            mb, seed = xs
             loss_acc, grad_acc = carry
-            loss, g = vag(params, mb, mask_tree)
+            loss, g = vag(params, mb, mask_tree, seed)
             return (
                 loss_acc + loss,
                 jax.tree.map(jnp.add, grad_acc, _strip_float0(g)),
             ), None
 
         zeros = jax.tree.map(_diff_zeros_like, params)
-        (loss_sum, grad_sum), _ = jax.lax.scan(body, (0.0, zeros), micro)
+        (loss_sum, grad_sum), _ = jax.lax.scan(
+            body, (0.0, zeros), (micro, seeds)
+        )
         k = float(step_cfg.accum)
         return loss_sum / k, jax.tree.map(lambda g: g / k, grad_sum)
 
@@ -204,7 +234,7 @@ def build_train_step(
                     "leaves) — prune with emit='compressed' or call "
                     "compress_params; got an all-dense tree"
                 )
-        loss, grads = grads_of(state.params, batch, mask_tree)
+        loss, grads = grads_of(state.params, batch, mask_tree, state.step)
         ef = state.ef
         if step_cfg.compression:
             grads, ef = compressed_psum(grads, ef, step_cfg.pod_axis)

@@ -18,9 +18,15 @@ from repro.perf.checks import (
     extract,
 )
 from repro.perf.roofline import (
+    CC_DEFAULT_TILES,
     DEFAULT_TILES,
     fused_solve_candidates,
+    nm_grad_cost,
+    nm_sparsify_candidates,
+    nm_sparsify_cost,
     nm_spmm_candidates,
+    nm_spmm_cc_candidates,
+    nm_spmm_cc_cost,
     nm_spmm_cost,
     profile_for,
 )
@@ -30,6 +36,7 @@ from repro.perf.table import (
     TableEntry,
     TuningTable,
     fused_solve_block_b,
+    nm_grad_tiles,
     nm_spmm_tiles,
     set_tuning_table,
     shape_class,
@@ -101,6 +108,78 @@ def test_fused_solve_candidates_seeded_from_vmem_plan():
 
 
 # ---------------------------------------------------------------------------
+# Structured-sparse backward cost model (nm_sparsify / nm_spmm_cc / nm_grad).
+# ---------------------------------------------------------------------------
+
+
+def test_nm_sparsify_cost_single_pass_counts():
+    # 256x512 dY under exact-fit tiles: one dense read, one compressed write.
+    c = nm_sparsify_cost(256, 512, 8, 16, 256, 256)
+    assert c.grid_steps == 1 * 2
+    read = 256 * 512 * 4
+    write = (256 // 16) * 8 * 512 * 3  # bf16 values + int8 idx
+    assert c.hbm_bytes == read + write
+    assert c.mxu_flops == 0  # pure VPU op
+
+
+def test_nm_sparsify_cost_rejects_partial_blocks():
+    with pytest.raises(ValueError, match="multiple of m"):
+        nm_sparsify_cost(256, 512, 8, 16, 200, 256)
+
+
+def test_nm_spmm_cc_cost_revisit_structure():
+    # Exact fit, single tile per axis: each operand read once, plus output.
+    c = nm_spmm_cc_cost(256, 256, 512, 8, 16, 8, 16, 256, 256, 512)
+    g = (256 // 16) * 8 * 512 * 3   # compressed dY: bf16 + idx
+    w = (256 // 16) * 8 * 512 * 5   # compressed W: f32 + idx
+    assert c.hbm_bytes == g + w + 256 * 256 * 4
+    # Halving ft doubles grid steps but not operand traffic (revisits are
+    # per B/K tile, not per F tile).
+    c2 = nm_spmm_cc_cost(256, 256, 512, 8, 16, 8, 16, 256, 256, 256)
+    assert c2.grid_steps == 2 * c.grid_steps
+    assert c2.hbm_bytes == c.hbm_bytes
+
+
+def test_nm_sparsify_candidates_legal_and_include_default():
+    for rows in (8, 1024):
+        cands = nm_sparsify_candidates(rows, 384, 8, 16)
+        tiles = [(c.bt, c.ft) for c in cands]
+        assert all(c.bt % 16 == 0 for c in cands)
+        # The clamped default is always present so argmin can't lose to it.
+        assert (256, 256) in tiles
+
+
+def test_nm_spmm_cc_candidates_legal_and_include_default():
+    cands = nm_spmm_cc_candidates(1024, 1536, 384, 8, 16, 8, 16)
+    assert all(c.bt % 16 == 0 and c.kt % 16 == 0 for c in cands)
+    assert CC_DEFAULT_TILES in [c.tiles for c in cands]
+
+
+def test_nm_grad_cost_hits_bench_gate():
+    # bench-30m down-proj at the BENCH_backward batch: the analytic model
+    # itself must clear the 0.8x bytes gate the benchmark enforces.
+    cost = nm_grad_cost(1024, 1536, 384, 8, 16, 8, 16)
+    assert cost["sparse_bytes"] < cost["dense_bytes"]
+    assert cost["ratio"] <= 0.8, cost["ratio"]
+    # Every component is positive and the totals are consistent.
+    assert cost["sparse_bytes"] == sum(cost["sparse"].values())
+    assert cost["dense_bytes"] == sum(cost["dense"].values())
+    assert all(v > 0 for v in cost["sparse"].values())
+    assert all(v > 0 for v in cost["dense"].values())
+
+
+def test_nm_grad_cost_honors_resolved_tiles():
+    # Passing explicit tiles changes the revisit counts (the benchmark's
+    # "measured" side evaluates the model at kernel-resolved tiles).
+    base = nm_grad_cost(1024, 1536, 384, 8, 16, 8, 16)
+    tall = nm_grad_cost(1024, 1536, 384, 8, 16, 8, 16,
+                        cc_tiles=(256, 256, 256))
+    # Shorter cc rows -> more W revisits -> strictly more sparse-path dX bytes.
+    assert tall["sparse"]["dx"] > base["sparse"]["dx"]
+    assert tall["dense"] == base["dense"]
+
+
+# ---------------------------------------------------------------------------
 # Tuning table.
 # ---------------------------------------------------------------------------
 
@@ -157,6 +236,67 @@ def test_trace_time_lookup_hits_and_misses(scratch_table):
     assert nm_spmm_tiles(8, 384, 1536, 16, False, tpu) is None
     assert fused_solve_block_b(16, dev) == 128
     assert fused_solve_block_b(8, dev) is None
+
+
+class _CountingTable(TuningTable):
+    """TuningTable that counts ``lookup`` calls (memoization regression)."""
+
+    def __init__(self, entries=()):
+        super().__init__(entries)
+        self.lookups = 0
+
+    def lookup(self, op, device_kind, m, shape_cls):
+        self.lookups += 1
+        return super().lookup(op, device_kind, m, shape_cls)
+
+
+def test_tile_resolution_one_lookup_per_shape_class():
+    # Kernels resolve tiles on every trace; the memo in table.py must hit
+    # the table exactly once per distinct (op, device, m, shape class).
+    dev = type("D", (), {"device_kind": "memo-kind"})()
+    cls = shape_class(1024, 384, 1536)
+    table = _CountingTable([
+        TableEntry("nm_spmm_fwd", "memo-kind", 16, cls, (512, 256, 256)),
+    ])
+    set_tuning_table(table)
+    try:
+        for _ in range(5):
+            assert nm_spmm_tiles(1024, 384, 1536, 16, False, dev) == (512, 256, 256)
+        assert table.lookups == 1
+        # Same shape class, different concrete rows: still the same memo slot.
+        assert nm_spmm_tiles(768, 384, 1536, 16, False, dev) == (512, 256, 256)
+        assert shape_class(768, 384, 1536) == cls
+        assert table.lookups == 1
+        # A new shape class costs exactly one more lookup — misses included.
+        for _ in range(3):
+            assert nm_spmm_tiles(8, 384, 1536, 16, False, dev) is None
+        assert table.lookups == 2
+        # Distinct ops are distinct memo slots.
+        for _ in range(3):
+            assert nm_grad_tiles("nm_sparsify", 1024, 384, 1536, 16, dev) is None
+        assert table.lookups == 3
+    finally:
+        set_tuning_table(None)
+
+
+def test_tile_resolution_invalidated_by_set_tuning_table():
+    # Installing a table bumps the memo generation: identical queries
+    # re-resolve against the new entries instead of serving stale tiles.
+    dev = type("D", (), {"device_kind": "memo-kind"})()
+    cls = shape_class(1024, 384, 1536)
+    first = _CountingTable()
+    set_tuning_table(first)
+    try:
+        assert nm_spmm_tiles(1024, 384, 1536, 16, False, dev) is None
+        assert first.lookups == 1
+        second = _CountingTable([
+            TableEntry("nm_spmm_fwd", "memo-kind", 16, cls, (256, 512, 256)),
+        ])
+        set_tuning_table(second)
+        assert nm_spmm_tiles(1024, 384, 1536, 16, False, dev) == (256, 512, 256)
+        assert second.lookups == 1 and first.lookups == 1
+    finally:
+        set_tuning_table(None)
 
 
 def test_env_var_override(tmp_path, monkeypatch):
